@@ -1,0 +1,18 @@
+//! Bench/regenerator for Figure 2 (Theorem 2.4 verification).
+//! Run: `cargo bench --bench fig2_sqnr_approx`
+
+use catquant::experiments::run_fig2;
+use catquant::runtime::Manifest;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let t0 = Instant::now();
+    let pts = run_fig2(&manifest, &["tiny", "small"], 0)?;
+    println!(
+        "\n[bench] fig2 regenerated: {} points in {:.2}s",
+        pts.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench/regenerator for Figure 5 (alignment under transforms vs optimum).
+//! Run: `cargo bench --bench fig5_alignment`
+
+use catquant::experiments::run_fig5;
+use catquant::runtime::Manifest;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let t0 = Instant::now();
+    let rows = run_fig5(&manifest, &["tiny", "small"], 0)?;
+    println!(
+        "\n[bench] fig5 regenerated: {} rows in {:.2}s",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Bench/regenerator for Figure 6 (W4A4 under transforms vs W6A6) and
+//! Figure 3 (the bit-width plane).
+//! Run: `cargo bench --bench fig6_joint_sqnr`
+
+use catquant::experiments::{run_fig3, run_fig6};
+use catquant::runtime::Manifest;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let t0 = Instant::now();
+    run_fig3(&manifest, "small", 0)?;
+    let rows = run_fig6(&manifest, &["tiny", "small"], 0)?;
+    println!(
+        "\n[bench] fig3+fig6 regenerated: {} rows in {:.2}s",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

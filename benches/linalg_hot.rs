@@ -1,0 +1,123 @@
+//! L3 hot-path microbenches: matmul, eigh, FWHT, geometric mean, GPTQ's
+//! Cholesky. (Plain harness — criterion is not in the offline vendor set.)
+//!
+//! Run: `cargo bench --bench linalg_hot`
+
+use catquant::linalg::{
+    eigh, fwht_inplace, geometric_mean, matmul, matmul_a_bt, matmul_at_b, Cholesky, Mat, Rng,
+};
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn main() {
+    println!("== linalg hot paths ==");
+    for &n in &[128usize, 256, 512] {
+        let a = random(n, n, 1);
+        let b = random(n, n, 2);
+        let gf = 2.0 * (n as f64).powi(3) / 1e9;
+        let per = time(&format!("matmul {n}×{n}"), 10.max(2048 / n), || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{:<44} {:>10.2} GFLOP/s", format!("  -> throughput {n}"), gf / per);
+    }
+    {
+        let x = random(2048, 256, 3);
+        time("Σ accumulation  XᵀX (2048×256)", 8, || {
+            std::hint::black_box(matmul_at_b(&x, &x));
+        });
+        let w = random(256, 256, 4);
+        time("layer fwd  X·Wᵀ (2048×256·256)", 8, || {
+            std::hint::black_box(matmul_a_bt(&x, &w));
+        });
+    }
+    for &n in &[64usize, 128, 256] {
+        let mut s = random(n + 8, n, 5);
+        s = matmul_at_b(&s, &s);
+        time(&format!("eigh (cyclic Jacobi) {n}×{n}"), if n > 128 { 2 } else { 6 }, || {
+            std::hint::black_box(eigh(&s));
+        });
+    }
+    {
+        let mut a = random(136, 128, 6);
+        a = matmul_at_b(&a, &a);
+        let mut b = random(136, 128, 7);
+        b = matmul_at_b(&b, &b);
+        time("geometric mean A#B 128×128 (CAT block)", 3, || {
+            std::hint::black_box(geometric_mean(&a, &b));
+        });
+        time("cholesky 128×128 (GPTQ factor)", 50, || {
+            std::hint::black_box(Cholesky::new(&a));
+        });
+    }
+    {
+        // A/B for the §Perf dot-product change: naive single-accumulator
+        // reduction vs the shipped 4-accumulator kernel (what
+        // matmul_a_bt / matvec use).
+        let mut rng = Rng::new(9);
+        let a: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let naive = |a: &[f64], b: &[f64]| -> f64 {
+            let mut acc = 0.0;
+            for (x, y) in a.iter().zip(b) {
+                acc += x * y;
+            }
+            acc
+        };
+        let iters = 100_000;
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for _ in 0..iters {
+            sink += naive(std::hint::black_box(&a), std::hint::black_box(&b));
+        }
+        let t_naive = t0.elapsed().as_secs_f64() / iters as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut acc = [0.0f64; 4];
+            let ca = a.chunks_exact(4);
+            let cb = b.chunks_exact(4);
+            for (xa, xb) in ca.zip(cb) {
+                acc[0] += xa[0] * xb[0];
+                acc[1] += xa[1] * xb[1];
+                acc[2] += xa[2] * xb[2];
+                acc[3] += xa[3] * xb[3];
+            }
+            sink += (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        }
+        let t_unrolled = t0.elapsed().as_secs_f64() / iters as f64;
+        std::hint::black_box(sink);
+        println!(
+            "{:<44} {:>10.3} µs naive vs {:.3} µs unrolled ({:.2}×)",
+            "dot product d=4096 (§Perf A/B)",
+            t_naive * 1e6,
+            t_unrolled * 1e6,
+            t_naive / t_unrolled
+        );
+    }
+    {
+        let mut rng = Rng::new(8);
+        let mut x: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+        let t0 = Instant::now();
+        let iters = 200_000;
+        for _ in 0..iters {
+            fwht_inplace(&mut x);
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("{:<44} {:>10.3} µs/iter", "FWHT d=512", per * 1e6);
+    }
+}

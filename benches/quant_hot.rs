@@ -1,0 +1,65 @@
+//! Quantizer hot paths: per-token activation quant, RTN, GPTQ, transform
+//! builders. Run: `cargo bench --bench quant_hot`
+
+use catquant::linalg::{matmul_at_b, Mat, Rng};
+use catquant::quant::{
+    gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, GptqConfig, QScheme,
+    WeightQuantCfg,
+};
+use catquant::transforms::{cat_block, kronecker_cat};
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<48} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    println!("== quantization hot paths ==");
+    let mut rng = Rng::new(1);
+    let x = Mat::from_fn(2048, 256, |_, _| rng.normal());
+    let per = time("per-token dyn-asym quant (2048×256, 4b)", 20, || {
+        std::hint::black_box(quantize_activations_per_token(&x, QScheme::asym(4), 1.0));
+    });
+    println!(
+        "{:<48} {:>10.1} Mtok/s",
+        "  -> token throughput",
+        2048.0 / per / 1e6
+    );
+
+    let w = Mat::from_fn(512, 256, |_, _| rng.normal() * 0.05);
+    time("RTN minmax (512×256, 4b)", 50, || {
+        std::hint::black_box(quantize_weights_rtn(&w, WeightQuantCfg::minmax(4)));
+    });
+    time("RTN L2.4 clip search (512×256, 4b)", 3, || {
+        std::hint::black_box(quantize_weights_rtn(&w, WeightQuantCfg::rtn_default(4)));
+    });
+
+    let sigma = {
+        let mut s = matmul_at_b(&x, &x).scale(1.0 / 2048.0);
+        s.add_diag(0.01);
+        s
+    };
+    time("GPTQ (512×256, Σ 256×256, 4b)", 3, || {
+        std::hint::black_box(gptq_quantize(
+            &w,
+            &sigma,
+            WeightQuantCfg::minmax(4),
+            GptqConfig::default(),
+        ));
+    });
+
+    let sigma_w = matmul_at_b(&w, &w);
+    time("CAT block build k=128 (d=256)", 3, || {
+        std::hint::black_box(cat_block(&sigma, &sigma_w, 128, 0));
+    });
+    time("FlatQuant kronecker build (d=256)", 3, || {
+        std::hint::black_box(kronecker_cat(&sigma, &sigma_w, 0));
+    });
+}

@@ -1,0 +1,109 @@
+//! Serving throughput/latency bench: FP vs CAT-W4A4 through the
+//! coordinator (batched prefill + KV-cache decode via PJRT).
+//! Run: `cargo bench --bench serve_throughput`
+
+use catquant::calib::Corpus;
+use catquant::coordinator::{
+    BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg, ServeMetrics,
+};
+use catquant::experiments::load_zoo;
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::transforms::TransformKind;
+use std::rc::Rc;
+
+fn serve(manifest: &Manifest, model: &str, quantized: bool, n: usize) -> ServeMetrics {
+    let manifest2 = manifest.clone();
+    let model2 = model.to_string();
+    let coord = Coordinator::start(
+        move || {
+            let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+            let zoo = load_zoo(&manifest2, &model2, 0).expect("zoo");
+            let sampling = SamplingCfg { temperature: 0.8, seed: 1 };
+            let g: Box<dyn GenEngine> = if quantized {
+                let (qc, _) = build_quant_config(
+                    &zoo.model,
+                    &zoo.calib,
+                    PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, 0),
+                );
+                Box::new(
+                    PjrtGenerator::quant(engine, &model2, &zoo.model.params, &qc, sampling)
+                        .expect("gen"),
+                )
+            } else {
+                Box::new(
+                    PjrtGenerator::fp(engine, &model2, &zoo.model.params, sampling).expect("gen"),
+                )
+            };
+            g
+        },
+        BatcherCfg::default(),
+    );
+    let corpus = Corpus::load(&manifest.corpus_eval).expect("corpus");
+    let prompts = corpus.sample_sequences(n, manifest.prompt_len, 3);
+    let rxs: Vec<_> = prompts.into_iter().map(|p| coord.submit(p, 24)).collect();
+    for rx in rxs {
+        rx.recv().expect("resp");
+    }
+    coord.shutdown()
+}
+
+/// §Perf A/B: per-decode-call cost with the weight pack passed as host
+/// literals (old path, re-uploaded every call) vs device-resident buffers.
+fn pack_upload_ab(manifest: &Manifest, model: &str) -> anyhow::Result<()> {
+    use catquant::model::NativeModel;
+    use catquant::runtime::token_literal;
+    let engine = PjrtEngine::new(manifest.clone())?;
+    let entry = manifest.model(model)?.clone();
+    let native = NativeModel::from_catw(entry.config.clone(), &entry.weights)?;
+    let pack = catquant::runtime::ArgPack::fp(&entry, &native.params)?;
+    let pack2 = catquant::runtime::ArgPack::fp(&entry, &native.params)?;
+    let dev = engine.device_pack(pack2)?;
+    let b = manifest.serve_batch;
+    let prompts: Vec<Vec<u8>> = (0..b).map(|_| vec![1u8; manifest.prompt_len]).collect();
+    let tok = token_literal(&prompts, manifest.prompt_len)?;
+    // Prefill once to get a kv cache.
+    let out = engine.run_b(model, "prefill_fp", &[&tok], &dev)?;
+    let (kc, vc) = (&out[1], &out[2]);
+    let ntok = token_literal(&vec![vec![1u8]; b], 1)?;
+    let pos = xla::Literal::vec1(&[manifest.prompt_len as i32]);
+
+    let iters = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let mut args: Vec<&xla::Literal> = vec![&ntok, &pos, kc, vc];
+        args.extend(pack.literals.iter());
+        std::hint::black_box(engine.run(model, "decode_fp", &args)?);
+    }
+    let t_lit = t0.elapsed().as_secs_f64() / iters as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(engine.run_b(model, "decode_fp", &[&ntok, &pos, kc, vc], &dev)?);
+    }
+    let t_dev = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{model:<6} decode step: {:.2} ms literal-pack vs {:.2} ms device-pack ({:.2}×)",
+        t_lit * 1e3,
+        t_dev * 1e3,
+        t_lit / t_dev
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    for model in ["tiny", "small", "base"] {
+        pack_upload_ab(&manifest, model)?;
+    }
+    for model in ["tiny", "small", "base"] {
+        for quantized in [false, true] {
+            let m = serve(&manifest, model, quantized, 16);
+            println!(
+                "{model:<6} {:<9} {}",
+                if quantized { "CAT-W4A4" } else { "FP" },
+                m.summary()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench/regenerator for Table 1 (end-to-end W4A4 grid).
+//!
+//! Default is the quick grid; pass `--full` for the full 3-model,
+//! 4-seed, RTN+GPTQ grid (tens of minutes on the single-core testbed).
+//! Run: `cargo bench --bench table1_e2e [-- --full]`
+
+use catquant::experiments::{run_table1, Table1Opts};
+use catquant::runtime::Manifest;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let opts = if full { Table1Opts::default() } else { Table1Opts::quick() };
+    let t0 = Instant::now();
+    let cells = run_table1(&manifest, &opts)?;
+    println!(
+        "\n[bench] table1 regenerated: {} cells in {:.1}s ({})",
+        cells.len(),
+        t0.elapsed().as_secs_f64(),
+        if full { "full" } else { "quick" }
+    );
+    Ok(())
+}

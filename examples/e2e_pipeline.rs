@@ -1,0 +1,117 @@
+//! End-to-end driver: the full system on a real (trained) model.
+//!
+//! Exercises every layer of the stack in one run, on the `base` model
+//! (d=256, 6 blocks, ~4.1M params, trained at build time on the synthetic
+//! corpus — see artifacts/train_log_base.json for the loss curve):
+//!
+//!   1. load weights (Rust loader ← python-trained .catw artifact)
+//!   2. calibrate on 128 corpus sequences (native engine probe)
+//!   3. PTQ pipeline: {None, QuaRot, CAT block} × RTN at W4A4
+//!   4. evaluate perplexity + 6-task 0-shot through the PJRT graphs
+//!      (L2 JAX-lowered HLO, L1 kernel-verified ops, weights as args)
+//!   5. serve a batch of generation requests on the CAT-W4A4 config
+//!      through the coordinator (batched prefill + KV-cache decode)
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example e2e_pipeline           # full (base model)
+//! cargo run --release --example e2e_pipeline -- small  # faster
+//! ```
+
+use catquant::calib::Corpus;
+use catquant::coordinator::{BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg};
+use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits, SeqLogits};
+use catquant::experiments::load_zoo;
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::transforms::TransformKind;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("base").to_string();
+
+    let t_all = Instant::now();
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let entry = manifest.model(&model)?;
+    println!(
+        "[1/5] loaded manifest; model {model}: d={} L={} params={}",
+        entry.config.d,
+        entry.config.n_layers,
+        entry.config.n_params()
+    );
+
+    let t0 = Instant::now();
+    let zoo = load_zoo(&manifest, &model, 0)?;
+    println!("[2/5] calibrated on 128 sequences in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let engine = Rc::new(PjrtEngine::new(manifest.clone())?);
+    let corpus = Corpus::load(&manifest.corpus_eval)?;
+    let windows = corpus.eval_windows(16, entry.config.seq);
+
+    // FP reference.
+    let fp = PjrtLogits::fp(engine.clone(), &model, &zoo.model.params)?;
+    let fp_ppl = perplexity(&fp, &windows)?;
+    let fp_acc = acc(&fp, &corpus)?;
+    println!("[3/5] FP reference: ppl {fp_ppl:.3}, 0-shot {fp_acc:.1}%");
+
+    let mut cat_qc = None;
+    for kind in [TransformKind::None, TransformKind::QuaRot, TransformKind::CatBlock] {
+        let t0 = Instant::now();
+        let (qc, rep) = build_quant_config(
+            &zoo.model,
+            &zoo.calib,
+            PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0),
+        );
+        let build_s = t0.elapsed().as_secs_f64();
+        let eng = PjrtLogits::quant(engine.clone(), &model, &zoo.model.params, &qc, 4)?;
+        let ppl = perplexity(&eng, &windows)?;
+        let a = acc(&eng, &corpus)?;
+        println!(
+            "[4/5] {:<14} W4A4: ppl {ppl:.3}  0-shot {a:.1}%  (layer SQNR {:.1} dB, built in {build_s:.1}s)",
+            kind.label(),
+            rep.mean_sqnr_db
+        );
+        if kind == TransformKind::CatBlock {
+            cat_qc = Some(qc);
+        }
+    }
+
+    // Serve the CAT-W4A4 config.
+    let qc = cat_qc.unwrap();
+    let manifest2 = manifest.clone();
+    let model2 = model.clone();
+    let coord = Coordinator::start(
+        move || {
+            let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+            let zoo = load_zoo(&manifest2, &model2, 0).expect("zoo");
+            Box::new(
+                PjrtGenerator::quant(
+                    engine,
+                    &model2,
+                    &zoo.model.params,
+                    &qc,
+                    SamplingCfg { temperature: 0.8, seed: 3 },
+                )
+                .expect("gen"),
+            ) as Box<dyn GenEngine>
+        },
+        BatcherCfg::default(),
+    );
+    let prompts = corpus.sample_sequences(12, manifest.prompt_len, 5);
+    let rxs: Vec<_> = prompts.into_iter().map(|p| coord.submit(p, 24)).collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let metrics = coord.shutdown();
+    println!("[5/5] served CAT-W4A4: {}", metrics.summary());
+    println!("\nE2E complete in {:.1}s", t_all.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn acc(engine: &dyn SeqLogits, corpus: &Corpus) -> anyhow::Result<f64> {
+    let res = zero_shot_suite(engine, corpus, 10, 0)?;
+    Ok(100.0 * res.iter().map(|r| r.accuracy).sum::<f64>() / res.len() as f64)
+}

@@ -1,0 +1,44 @@
+//! Quickstart: calibrate → CAT-quantize → evaluate, in ~40 lines of API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use catquant::calib::Corpus;
+use catquant::eval::{perplexity, PjrtLogits};
+use catquant::experiments::load_zoo;
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::transforms::TransformKind;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Artifacts: trained weights + AOT-compiled graphs + corpus.
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let model = "small";
+    let entry = manifest.model(model)?;
+    println!("model {model}: {} params", entry.config.n_params());
+
+    // 2. Calibrate on 128 corpus sequences (collects Σ_x per layer group).
+    let zoo = load_zoo(&manifest, model, 0)?;
+
+    // 3. Build the paper's transform — CAT (block) — and quantize W4A4.
+    let (qc, report) = build_quant_config(
+        &zoo.model,
+        &zoo.calib,
+        PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, 0),
+    );
+    println!("mean post-transform layer SQNR: {:.1} dB", report.mean_sqnr_db);
+
+    // 4. Evaluate perplexity through the compiled serving graphs.
+    let engine = Rc::new(PjrtEngine::new(manifest.clone())?);
+    let corpus = Corpus::load(&manifest.corpus_eval)?;
+    let windows = corpus.eval_windows(16, entry.config.seq);
+
+    let fp = PjrtLogits::fp(engine.clone(), model, &zoo.model.params)?;
+    let quant = PjrtLogits::quant(engine, model, &zoo.model.params, &qc, 4)?;
+    let ppl_fp = perplexity(&fp, &windows)?;
+    let ppl_q = perplexity(&quant, &windows)?;
+    println!("perplexity: FP {ppl_fp:.3}  |  CAT W4A4 {ppl_q:.3}");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT orchestrator: corpus -> trained weights -> HLO-text artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Idempotent: existing artifacts are kept unless
+--force. Python's job ends here — the Rust binary is self-contained
+afterwards.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as C
+from . import model as M
+from . import train as T
+from .catw import write_catw
+
+# Experiment-wide shape conventions (mirrored in rust/src/runtime).
+CALIB_BATCH = 8     # probe graph batch
+EVAL_BATCH = 4      # logits graph batch
+SERVE_BATCH = 4     # prefill/decode batch
+PROMPT_LEN = 32     # serving prompt length
+TRAIN_TOKENS = 1_000_000
+EVAL_TOKENS = 131_072
+
+# Per-model training budget (single-core CPU).
+TRAIN_PLAN = {
+    "tiny": dict(steps=800, batch=8),
+    "small": dict(steps=1200, batch=8),
+    "base": dict(steps=1600, batch=8),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str):
+    # keep_unused: the flat-argument convention with the Rust runtime
+    # requires every parameter to stay in the HLO signature even when XLA
+    # could DCE it (e.g. the probe graph never touches lm_head).
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec_args(cfg):
+    """ShapeDtypeStructs for params (+ transforms) in flat-arg order."""
+    p = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_spec(cfg)]
+    t = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.transform_spec(cfg)]
+    return p, t
+
+
+def build_graphs(cfg: M.Config, hlo_dir: str, force: bool) -> dict:
+    """Lower every graph variant for one model; returns manifest entries."""
+    p_spec, t_spec = spec_args(cfg)
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    graphs = {}
+
+    def emit(name, fn, args, extra):
+        path = os.path.join(hlo_dir, f"{cfg.name}_{name}.hlo.txt")
+        if force or not os.path.exists(path):
+            n = lower_to_file(fn, args, path)
+            print(f"  lowered {cfg.name}_{name} ({n} chars)", flush=True)
+        graphs[name] = {"file": f"hlo/{cfg.name}_{name}.hlo.txt", **extra}
+
+    # Calibration probe.
+    emit(
+        "probe",
+        M.make_probe_fn(cfg),
+        (tok(CALIB_BATCH, cfg.seq), *p_spec),
+        {"batch": CALIB_BATCH, "seq": cfg.seq, "args": "tokens,params",
+         "outputs": "attn_in,o_in,mlp_in,down_in"},
+    )
+    # Full-sequence logits: fp + per-activation-bit-width quant variants.
+    emit(
+        "logits_fp",
+        M.make_logits_fn(cfg),
+        (tok(EVAL_BATCH, cfg.seq), *p_spec),
+        {"batch": EVAL_BATCH, "seq": cfg.seq, "args": "tokens,params",
+         "outputs": "logits"},
+    )
+    for bits in (4, 6, 8):
+        emit(
+            f"logits_a{bits}",
+            M.make_logits_fn(cfg, bits=bits),
+            (tok(EVAL_BATCH, cfg.seq), *p_spec, *t_spec),
+            {"batch": EVAL_BATCH, "seq": cfg.seq, "bits": bits,
+             "args": "tokens,params,transforms", "outputs": "logits"},
+        )
+    # L1-kernel variant (tiny only: interpret-mode pallas lowers to a
+    # grid loop; used by the rust cross-check test, not the eval path).
+    if cfg.name == "tiny":
+        emit(
+            "logits_a4_kernel",
+            M.make_logits_fn(cfg, bits=4, use_kernel=True),
+            (tok(EVAL_BATCH, cfg.seq), *p_spec, *t_spec),
+            {"batch": EVAL_BATCH, "seq": cfg.seq, "bits": 4,
+             "args": "tokens,params,transforms", "outputs": "logits"},
+        )
+    # Serving path: prefill + decode, fp and W?A4.
+    pos = jax.ShapeDtypeStruct((1,), jnp.int32)
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, SERVE_BATCH, cfg.seq, cfg.d), jnp.float32)
+    emit(
+        "prefill_fp",
+        M.make_prefill_fn(cfg, PROMPT_LEN),
+        (tok(SERVE_BATCH, PROMPT_LEN), *p_spec),
+        {"batch": SERVE_BATCH, "prompt": PROMPT_LEN, "args": "tokens,params",
+         "outputs": "logits,k_cache,v_cache"},
+    )
+    emit(
+        "decode_fp",
+        _decode_wrapper(cfg, bits=None),
+        (tok(SERVE_BATCH, 1), pos, kv, kv, *p_spec),
+        {"batch": SERVE_BATCH, "args": "token,pos,k,v,params",
+         "outputs": "logits,k_cache,v_cache"},
+    )
+    emit(
+        "prefill_a4",
+        M.make_prefill_fn(cfg, PROMPT_LEN, bits=4),
+        (tok(SERVE_BATCH, PROMPT_LEN), *p_spec, *t_spec),
+        {"batch": SERVE_BATCH, "prompt": PROMPT_LEN, "bits": 4,
+         "args": "tokens,params,transforms", "outputs": "logits,k_cache,v_cache"},
+    )
+    emit(
+        "decode_a4",
+        _decode_wrapper(cfg, bits=4),
+        (tok(SERVE_BATCH, 1), pos, kv, kv, *p_spec, *t_spec),
+        {"batch": SERVE_BATCH, "bits": 4, "args": "token,pos,k,v,params,transforms",
+         "outputs": "logits,k_cache,v_cache"},
+    )
+    return graphs
+
+
+def _decode_wrapper(cfg, bits):
+    """Adapt make_decode_fn to take pos as a [1]-shaped array (PJRT-side
+    scalars are awkward in the rust Literal API)."""
+    inner = M.make_decode_fn(cfg, bits=bits)
+
+    def fn(token, pos, kc, vc, *args):
+        return inner(token, pos[0], kc, vc, *args)
+
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--force", action="store_true", help="re-emit everything")
+    ap.add_argument("--models", default="tiny,small,base")
+    ap.add_argument("--quick", action="store_true", help="1/10 training steps (CI smoke)")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    for sub in ("corpus", "weights", "hlo"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    # 1. Corpus.
+    train_path = os.path.join(out, "corpus", "train.bin")
+    eval_path = os.path.join(out, "corpus", "eval.bin")
+    if args.force or not (os.path.exists(train_path) and os.path.exists(eval_path)):
+        print("generating corpus ...", flush=True)
+        C.write_split(train_path, eval_path, TRAIN_TOKENS, EVAL_TOKENS)
+    corpus_train = np.fromfile(train_path, dtype=np.uint8)
+
+    manifest = {
+        "version": 1,
+        "corpus": {"train": "corpus/train.bin", "eval": "corpus/eval.bin",
+                   "vocab": C.VOCAB, "bos": C.BOS},
+        "conventions": {
+            "calib_batch": CALIB_BATCH, "eval_batch": EVAL_BATCH,
+            "serve_batch": SERVE_BATCH, "prompt_len": PROMPT_LEN,
+        },
+        "models": {},
+    }
+
+    for name in args.models.split(","):
+        cfg = M.ZOO[name]
+        print(f"=== model {name}: d={cfg.d} L={cfg.n_layers} ff={cfg.ff} ===", flush=True)
+        # 2. Train (or reuse) weights.
+        wpath = os.path.join(out, "weights", f"{name}.catw")
+        lpath = os.path.join(out, f"train_log_{name}.json")
+        if args.force or not os.path.exists(wpath):
+            plan = dict(TRAIN_PLAN[name])
+            if args.quick:
+                plan["steps"] = max(20, plan["steps"] // 10)
+            params, _ = T.train(cfg, corpus_train, plan["steps"], plan["batch"],
+                                seed=0, log_path=lpath)
+            write_catw(wpath, {k: np.asarray(v) for k, v in params.items()})
+            print(f"  wrote {wpath}", flush=True)
+        # 3. Lower graphs.
+        graphs = build_graphs(cfg, os.path.join(out, "hlo"), args.force)
+        manifest["models"][name] = {
+            "config": {"d": cfg.d, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                        "ff": cfg.ff, "seq": cfg.seq, "vocab": cfg.vocab},
+            "weights": f"weights/{name}.catw",
+            "train_log": f"train_log_{name}.json",
+            "params": [[n, list(s)] for n, s in M.param_spec(cfg)],
+            "transforms": [[n, list(s)] for n, s in M.transform_spec(cfg)],
+            "graphs": graphs,
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

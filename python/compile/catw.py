@@ -1,0 +1,52 @@
+"""CATW: the weight-artifact binary format shared with the Rust loader.
+
+Layout (little-endian):
+    magic   b"CATW"
+    u32     version (1)
+    u32     n_tensors
+    per tensor:
+        u32     name_len, then name bytes (utf-8)
+        u32     ndim, then ndim x u64 dims
+        f32[prod(dims)] row-major data
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CATW"
+VERSION = 1
+
+
+def write_catw(path: str, tensors: "dict[str, np.ndarray]") -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            f.write(arr.tobytes())
+
+
+def read_catw(path: str) -> "dict[str, np.ndarray]":
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * count), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused transform -> dynamic quantize -> matmul.
+
+This is the paper's online hot path (eq. 5): a CAT/Hadamard/FlatQuant
+transform applied to the activations, dynamic per-token asymmetric
+quantization, then the matmul against pre-fused, pre-quantized weights:
+
+    y = QDQ_bits(x @ T^T) @ Wq^T
+
+TPU mapping (DESIGN.md section "Hardware adaptation"): the kernel is tiled
+over token blocks; for each x-tile staged in VMEM, the transform product,
+the per-token min/max reduction (VPU), the fake-quantization, and the
+weight matmul (MXU) all happen before the tile leaves VMEM — the
+transformed activations never round-trip to HBM, which is how the GPU
+versions' fused epilogues are rethought for a scratchpad memory.
+
+CPU note: ``interpret=True`` everywhere — the image's CPU PJRT cannot run
+Mosaic custom-calls. Structure (BlockSpec tiling, fusion) is what we
+optimize; real-TPU numbers are estimated in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile height. 128 matches the MXU systolic dimension; the last tile
+# is padded by pallas via the grid ceil-division.
+BM = 128
+
+
+def _kernel(x_ref, t_ref, w_ref, o_ref, *, bits: int):
+    x = x_ref[...]            # [bm, d]   VMEM
+    t = t_ref[...]            # [d, d]    VMEM (block-diagonal in CAT; dense worst case)
+    w = w_ref[...]            # [out, d]  VMEM, pre-fused W' = W T^-1, fake-quantized
+    xt = jnp.dot(x, t.T, preferred_element_type=jnp.float32)   # MXU
+    # Dynamic per-token asymmetric quantization (VPU reductions).
+    qmax = float(2**bits - 1)
+    lo = jnp.minimum(jnp.min(xt, axis=-1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(xt, axis=-1, keepdims=True), 0.0)
+    rng = hi - lo
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    zp = jnp.clip(jnp.round(-lo / scale), 0.0, qmax)
+    q = jnp.clip(jnp.round(xt / scale) + zp, 0.0, qmax)
+    xq = (q - zp) * scale
+    o_ref[...] = jnp.dot(xq, w.T, preferred_element_type=jnp.float32)  # MXU
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def fused_qmm(x: jnp.ndarray, t: jnp.ndarray, wq: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """``y = QDQ(x @ T^T) @ Wq^T`` — see module docstring.
+
+    x: [tokens, d] float32; t: [d, d]; wq: [out, d]. Returns [tokens, out].
+    """
+    tokens, d = x.shape
+    out = wq.shape[0]
+    grid = (pl.cdiv(tokens, BM),)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, d), lambda i: (i, 0)),      # x tile: HBM -> VMEM per step
+            pl.BlockSpec((d, d), lambda i: (0, 0)),        # T resident across steps
+            pl.BlockSpec((out, d), lambda i: (0, 0)),      # Wq resident across steps
+        ],
+        out_specs=pl.BlockSpec((BM, out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, out), jnp.float32),
+        interpret=True,
+    )(x, t, wq)
+
+
+def vmem_bytes(d: int, out: int, bm: int = BM) -> int:
+    """Estimated VMEM footprint of one grid step (f32): the number the
+    DESIGN.md roofline table reports against the ~16 MiB/core budget."""
+    return 4 * (bm * d + d * d + out * d + bm * out)

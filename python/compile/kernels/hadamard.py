@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: blocked fast Walsh-Hadamard transform.
+
+The O(d log d) butterfly over VMEM-resident token tiles — the structured
+alternative to materializing H as a dense matrix (QuaRot's fused Hadamard
+CUDA kernel, rethought as a VPU butterfly on a VMEM tile). The stage loop
+is a *static* Python loop (d is known at trace time), so the lowered HLO
+is a fixed chain of reshapes/adds that XLA fuses into one pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _kernel(x_ref, o_ref, *, d: int):
+    y = x_ref[...]  # [bm, d]
+    bm = y.shape[0]
+    h = 1
+    while h < d:
+        y = y.reshape(bm, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(bm, d)
+        h *= 2
+    o_ref[...] = y * (1.0 / jnp.sqrt(float(d)))
+
+
+@jax.jit
+def fwht_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized FWHT over the last axis of ``x: [tokens, d]``."""
+    tokens, d = x.shape
+    assert d & (d - 1) == 0, "FWHT length must be a power of two"
+    grid = (pl.cdiv(tokens, BM),)
+    return pl.pallas_call(
+        functools.partial(_kernel, d=d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BM, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, d), jnp.float32),
+        interpret=True,
+    )(x)

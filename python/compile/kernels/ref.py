@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every L1 kernel has a reference here; pytest asserts allclose between the
+two over shape/dtype sweeps (python/tests/test_kernels.py). The Rust-side
+quantizers implement the same math in f64 — the three implementations
+triangulate each other.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_dequant_per_token_asym(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-token (per-row) asymmetric fake quantization.
+
+    Matches `catquant::quant::quantize_activations_per_token`: the range
+    is extended to include zero, the zero-point is rounded to the grid.
+    """
+    qmax = float(2**bits - 1)
+    lo = jnp.minimum(x.min(axis=-1, keepdims=True), 0.0)
+    hi = jnp.maximum(x.max(axis=-1, keepdims=True), 0.0)
+    rng = hi - lo
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    zp = jnp.clip(jnp.round(-lo / scale), 0.0, qmax)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0.0, qmax)
+    return (q - zp) * scale
+
+
+def fused_transform_quant_matmul(
+    x: jnp.ndarray, t: jnp.ndarray, wq: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Reference for the fused hot-path kernel:
+
+        y = QDQ(x @ T^T) @ Wq^T
+
+    with QDQ the dynamic per-token asymmetric fake-quantizer. ``x`` is
+    ``[tokens, d]``, ``t`` is ``[d, d]`` (acting on column vectors, so rows
+    of x transform via T^T), ``wq`` is ``[out, d]`` already fused+quantized.
+    """
+    xt = x @ t.T
+    xq = quant_dequant_per_token_asym(xt, bits)
+    return xq @ wq.T
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized fast Walsh-Hadamard transform over the last axis."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, "FWHT length must be a power of two"
+    h = 1
+    y = x
+    while h < d:
+        y = y.reshape(*x.shape[:-1], d // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2).reshape(*x.shape[:-1], d)
+        h *= 2
+    return y / jnp.sqrt(float(d))
+
+
+def block_diag_apply(x: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """Apply a block-diagonal transform: ``blocks`` is ``[nb, k, k]``,
+    ``x`` is ``[tokens, nb*k]``; returns rows transformed by
+    ``Diag(blocks)`` acting on column vectors (each k-chunk of a row is
+    multiplied by ``block^T``)."""
+    tokens, d = x.shape
+    nb, k, _ = blocks.shape
+    assert nb * k == d
+    xb = x.reshape(tokens, nb, k)
+    # y[t, b, i] = sum_j blocks[b, i, j] * xb[t, b, j]
+    yb = jnp.einsum("bij,tbj->tbi", blocks, xb)
+    return yb.reshape(tokens, d)

@@ -1,0 +1,342 @@
+"""L2: the JAX transformer (build-time only; never on the request path).
+
+A Llama-style decoder (pre-RMSNorm, MHA, SwiGLU, learned positions) sized
+for the single-core CPU testbed (DESIGN.md section 3: the model-zoo
+substitution for Llama/Qwen). All dims are powers of two so Hadamard
+transforms exist at every width.
+
+The *quantized* forward mirrors the paper's setup exactly:
+
+* every transformer-block linear gets an online transform ``T`` applied to
+  its input, then dynamic per-token asymmetric fake-quantization at
+  ``bits``, then a matmul against weights that Rust has already fused
+  (``W' = W T^{-1}``) and fake-quantized (RTN or GPTQ, symmetric
+  per-channel) — weights and transforms are *runtime arguments*, so a
+  single compiled graph serves every transform/quantizer config;
+* layers sharing an input (q/k/v, gate/up) share one transform;
+* the KV cache is fake-quantized per token at the same bits.
+
+Entry points lowered to HLO by aot.py:
+  - ``logits_fp`` / ``logits_quant``: full-sequence forward (perplexity,
+    0-shot eval);
+  - ``probe``: per-group linear inputs for Rust-side calibration;
+  - ``prefill`` / ``decode``: KV-cache serving path;
+  - ``loss_and_grads``: training (used by train.py only).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_qmm import fused_qmm
+from .kernels import ref
+
+VOCAB = 256
+EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    d: int
+    n_layers: int
+    n_heads: int
+    ff: int
+    seq: int = 128
+    vocab: int = VOCAB
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.n_heads
+
+
+# The model zoo (DESIGN.md section 3). Llama-substitute naming.
+ZOO = {
+    "tiny": Config("tiny", d=64, n_layers=2, n_heads=4, ff=128),
+    "small": Config("small", d=128, n_layers=4, n_heads=4, ff=256),
+    "base": Config("base", d=256, n_layers=6, n_heads=8, ff=512),
+}
+
+
+# --------------------------------------------------------------- parameters
+def param_spec(cfg: Config):
+    """Ordered (name, shape) list — the flat argument convention shared
+    with the Rust loader (runtime/artifact manifest)."""
+    spec = [("tok_emb", (cfg.vocab, cfg.d)), ("pos_emb", (cfg.seq, cfg.d))]
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        spec += [
+            (p + "ln1", (cfg.d,)),
+            (p + "q_proj", (cfg.d, cfg.d)),
+            (p + "k_proj", (cfg.d, cfg.d)),
+            (p + "v_proj", (cfg.d, cfg.d)),
+            (p + "o_proj", (cfg.d, cfg.d)),
+            (p + "ln2", (cfg.d,)),
+            (p + "gate_proj", (cfg.ff, cfg.d)),
+            (p + "up_proj", (cfg.ff, cfg.d)),
+            (p + "down_proj", (cfg.d, cfg.ff)),
+        ]
+    spec += [("ln_f", (cfg.d,)), ("lm_head", (cfg.vocab, cfg.d))]
+    return spec
+
+
+def transform_spec(cfg: Config):
+    """Ordered (name, shape) list of the per-block online transforms.
+    Layers sharing an input share a transform (paper section 3)."""
+    spec = []
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        spec += [
+            (p + "t_attn", (cfg.d, cfg.d)),   # q/k/v group input
+            (p + "t_o", (cfg.d, cfg.d)),      # o_proj input
+            (p + "t_mlp", (cfg.d, cfg.d)),    # gate/up group input
+            (p + "t_down", (cfg.ff, cfg.ff)), # down_proj input
+        ]
+    return spec
+
+
+def init_params(cfg: Config, key) -> dict:
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "pos_emb":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def params_to_flat(cfg: Config, params: dict):
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def flat_to_params(cfg: Config, flat):
+    return {name: x for (name, _), x in zip(param_spec(cfg), flat)}
+
+
+# ------------------------------------------------------------------- layers
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+def _linear(x, w, t=None, bits=None, use_kernel=False):
+    """One (possibly transformed + quantized) linear: flattens leading dims
+    to tokens, applies ``QDQ(x @ T^T) @ W^T``."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1])
+    if bits is None:
+        y = xt @ w.T
+    elif use_kernel:
+        y = fused_qmm(xt, t, w, bits=bits)
+    else:
+        y = ref.fused_transform_quant_matmul(xt, t, w, bits)
+    return y.reshape(*lead, w.shape[0])
+
+
+def _kv_quant(x, bits):
+    if bits is None:
+        return x
+    lead = x.shape[:-1]
+    q = ref.quant_dequant_per_token_asym(x.reshape(-1, x.shape[-1]), bits)
+    return q.reshape(*lead, x.shape[-1])
+
+
+def _attention(q, k, v, cfg: Config, mask):
+    b, s, _ = q.shape
+    sk = k.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, sk, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, sk, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _block(x, p, prefix, cfg: Config, tr, bits, use_kernel, probe=None):
+    g = lambda n: p[prefix + n]
+    t = (lambda n: tr[prefix + n]) if tr is not None else (lambda n: None)
+    h = rmsnorm(x, g("ln1"))
+    if probe is not None:
+        probe["attn_in"].append(h)
+    q = _linear(h, g("q_proj"), t("t_attn"), bits, use_kernel)
+    k = _linear(h, g("k_proj"), t("t_attn"), bits, use_kernel)
+    v = _linear(h, g("v_proj"), t("t_attn"), bits, use_kernel)
+    k = _kv_quant(k, bits)
+    v = _kv_quant(v, bits)
+    s = x.shape[1]
+    mask = jnp.tril(jnp.ones((s, s), bool))[None, None]
+    att = _attention(q, k, v, cfg, mask)
+    if probe is not None:
+        probe["o_in"].append(att)
+    x = x + _linear(att, g("o_proj"), t("t_o"), bits, use_kernel)
+    h = rmsnorm(x, g("ln2"))
+    if probe is not None:
+        probe["mlp_in"].append(h)
+    gate = _linear(h, g("gate_proj"), t("t_mlp"), bits, use_kernel)
+    up = _linear(h, g("up_proj"), t("t_mlp"), bits, use_kernel)
+    hidden = jax.nn.silu(gate) * up
+    if probe is not None:
+        probe["down_in"].append(hidden)
+    x = x + _linear(hidden, g("down_proj"), t("t_down"), bits, use_kernel)
+    return x
+
+
+def forward(cfg: Config, params: dict, tokens, transforms=None, bits=None,
+            use_kernel=False, probe=None):
+    """Full-sequence forward -> logits [B, S, V] (or probe dict)."""
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s]
+    for i in range(cfg.n_layers):
+        x = _block(x, params, f"blocks.{i}.", cfg, transforms, bits, use_kernel, probe)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["lm_head"].T
+
+
+# ------------------------------------------------------- lowering entry fns
+def make_logits_fn(cfg: Config, bits=None, use_kernel=False):
+    """fn(tokens, *params[, *transforms]) -> (logits,) for AOT lowering."""
+    n_p = len(param_spec(cfg))
+
+    def fn(tokens, *args):
+        params = flat_to_params(cfg, args[:n_p])
+        tr = None
+        if bits is not None:
+            tr = {name: x for (name, _), x in zip(transform_spec(cfg), args[n_p:])}
+        return (forward(cfg, params, tokens, tr, bits, use_kernel),)
+
+    return fn
+
+
+def make_probe_fn(cfg: Config):
+    """fn(tokens, *params) -> (attn_in, o_in, mlp_in, down_in), each
+    [L, B*S, dim] — the calibration capture for Rust."""
+
+    def fn(tokens, *args):
+        params = flat_to_params(cfg, args)
+        probe = {"attn_in": [], "o_in": [], "mlp_in": [], "down_in": []}
+        forward(cfg, params, tokens, probe=probe)
+        pack = lambda xs: jnp.stack([x.reshape(-1, x.shape[-1]) for x in xs])
+        return (
+            pack(probe["attn_in"]),
+            pack(probe["o_in"]),
+            pack(probe["mlp_in"]),
+            pack(probe["down_in"]),
+        )
+
+    return fn
+
+
+# ------------------------------------------------------------- serving path
+def _block_decode(x, kc, vc, pos, p, prefix, cfg: Config, tr, bits, use_kernel):
+    """One block, single-token decode against a fixed-size KV cache.
+    x: [B, 1, d]; kc/vc: [B, S_max, d]. Returns (x, kc, vc)."""
+    g = lambda n: p[prefix + n]
+    t = (lambda n: tr[prefix + n]) if tr is not None else (lambda n: None)
+    h = rmsnorm(x, g("ln1"))
+    q = _linear(h, g("q_proj"), t("t_attn"), bits, use_kernel)
+    k = _linear(h, g("k_proj"), t("t_attn"), bits, use_kernel)
+    v = _linear(h, g("v_proj"), t("t_attn"), bits, use_kernel)
+    k = _kv_quant(k, bits)
+    v = _kv_quant(v, bits)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0))
+    smax = kc.shape[1]
+    mask = (jnp.arange(smax) <= pos)[None, None, None, :]
+    att = _attention(q, kc, vc, cfg, mask)
+    x = x + _linear(att, g("o_proj"), t("t_o"), bits, use_kernel)
+    h = rmsnorm(x, g("ln2"))
+    gate = _linear(h, g("gate_proj"), t("t_mlp"), bits, use_kernel)
+    up = _linear(h, g("up_proj"), t("t_mlp"), bits, use_kernel)
+    hidden = jax.nn.silu(gate) * up
+    x = x + _linear(hidden, g("down_proj"), t("t_down"), bits, use_kernel)
+    return x, kc, vc
+
+
+def make_prefill_fn(cfg: Config, prompt_len: int, bits=None):
+    """fn(tokens[B,P], *params[, *transforms]) ->
+    (logits_last [B,V], k_cache [L,B,S,d], v_cache [L,B,S,d])."""
+    n_p = len(param_spec(cfg))
+
+    def fn(tokens, *args):
+        params = flat_to_params(cfg, args[:n_p])
+        tr = None
+        if bits is not None:
+            tr = {n: x for (n, _), x in zip(transform_spec(cfg), args[n_p:])}
+        b = tokens.shape[0]
+        x = params["tok_emb"][tokens] + params["pos_emb"][None, :prompt_len]
+        kcs, vcs = [], []
+        for i in range(cfg.n_layers):
+            prefix = f"blocks.{i}."
+            g = lambda n: params[prefix + n]
+            t = (lambda n: tr[prefix + n]) if tr is not None else (lambda n: None)
+            h = rmsnorm(x, g("ln1"))
+            q = _linear(h, g("q_proj"), t("t_attn"), bits)
+            k = _linear(h, g("k_proj"), t("t_attn"), bits)
+            v = _linear(h, g("v_proj"), t("t_attn"), bits)
+            k = _kv_quant(k, bits)
+            v = _kv_quant(v, bits)
+            mask = jnp.tril(jnp.ones((prompt_len, prompt_len), bool))[None, None]
+            att = _attention(q, k, v, cfg, mask)
+            x = x + _linear(att, g("o_proj"), t("t_o"), bits)
+            h = rmsnorm(x, g("ln2"))
+            gate = _linear(h, g("gate_proj"), t("t_mlp"), bits)
+            up = _linear(h, g("up_proj"), t("t_mlp"), bits)
+            x = x + _linear(jax.nn.silu(gate) * up, g("down_proj"), t("t_down"), bits)
+            pad = cfg.seq - prompt_len
+            kcs.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+            vcs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+        x = rmsnorm(x, params["ln_f"])
+        logits = x[:, -1] @ params["lm_head"].T
+        return (logits, jnp.stack(kcs), jnp.stack(vcs))
+
+    return fn
+
+
+def make_decode_fn(cfg: Config, bits=None):
+    """fn(token[B,1], pos[], k_cache[L,B,S,d], v_cache[L,B,S,d],
+    *params[, *transforms]) -> (logits [B,V], k_cache', v_cache')."""
+    n_p = len(param_spec(cfg))
+
+    def fn(token, pos, kc_all, vc_all, *args):
+        params = flat_to_params(cfg, args[:n_p])
+        tr = None
+        if bits is not None:
+            tr = {n: x for (n, _), x in zip(transform_spec(cfg), args[n_p:])}
+        x = params["tok_emb"][token] + params["pos_emb"][pos][None, None]
+        kcs, vcs = [], []
+        for i in range(cfg.n_layers):
+            x, kc, vc = _block_decode(
+                x, kc_all[i], vc_all[i], pos, params, f"blocks.{i}.", cfg, tr, bits, False
+            )
+            kcs.append(kc)
+            vcs.append(vc)
+        x = rmsnorm(x, params["ln_f"])
+        logits = x[:, 0] @ params["lm_head"].T
+        return (logits, jnp.stack(kcs), jnp.stack(vcs))
+
+    return fn
+
+
+# --------------------------------------------------------------- training
+def loss_fn(cfg: Config, params: dict, tokens):
+    """Next-token cross-entropy over a [B, S] batch."""
+    logits = forward(cfg, params, tokens)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def loss_and_grads(cfg: Config, params: dict, tokens):
+    return jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)

@@ -1,0 +1,73 @@
+"""Build-time training of the model zoo on the synthetic corpus.
+
+Hand-rolled AdamW (no optax in this environment) with cosine decay and
+linear warmup. Loss curves are written to artifacts/train_log_<model>.json
+and summarized in EXPERIMENTS.md. Deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[i : i + seq] for i in idx]).astype(np.int32)
+
+
+def adamw_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": 0}
+
+
+def adamw_step(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, steps, peak=3e-3, warmup=20):
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, steps - warmup)
+    return peak * 0.5 * (1 + np.cos(np.pi * frac))
+
+
+def train(cfg: M.Config, corpus: np.ndarray, steps: int, batch: int, seed: int = 0,
+          log_path: str | None = None, log_every: int = 10):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adamw_init(params)
+    log = []
+    t0 = time.time()
+    for step, tb in enumerate(batches(corpus, batch, cfg.seq, steps, seed + 1)):
+        loss, grads = M.loss_and_grads(cfg, params, jnp.asarray(tb))
+        lr = cosine_lr(step, steps)
+        params, opt = adamw_step(params, grads, opt, lr)
+        if step % log_every == 0 or step == steps - 1:
+            entry = {"step": step, "loss": float(loss), "lr": lr,
+                     "elapsed_s": round(time.time() - t0, 1)}
+            log.append(entry)
+            print(f"[{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                  f"lr {lr:.2e} ({entry['elapsed_s']}s)", flush=True)
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump({"model": cfg.name, "steps": steps, "batch": batch,
+                       "seq": cfg.seq, "log": log}, f, indent=1)
+    return params, log

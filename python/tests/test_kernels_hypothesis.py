@@ -1,0 +1,115 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/bit/distribution space.
+
+Complements the parametrized cases in test_kernels.py with randomized
+shapes and adversarial value patterns (constant rows, huge dynamic range,
+negative-only rows, sub-normal scales).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.fused_qmm import fused_qmm
+from compile.kernels.hadamard import fwht_rows
+from compile.kernels.block_diag import block_diag_apply
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def qmm_case(draw):
+    tokens = draw(st.integers(1, 160))
+    d = draw(st.sampled_from([8, 32, 64, 128]))
+    out = draw(st.sampled_from([8, 16, 64]))
+    bits = draw(st.sampled_from([2, 4, 8]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    return tokens, d, out, bits, seed, scale
+
+
+@given(qmm_case())
+@settings(**SETTINGS)
+def test_fused_qmm_matches_ref_random_shapes(case):
+    tokens, d, out, bits, seed, scale = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((tokens, d)) * scale, jnp.float32)
+    t = jnp.asarray(
+        np.eye(d) + 0.1 * rng.standard_normal((d, d)), jnp.float32
+    )
+    wq = jnp.asarray(rng.standard_normal((out, d)) * 0.05, jnp.float32)
+    got = np.asarray(fused_qmm(x, t, wq, bits=bits))
+    want = np.asarray(ref.fused_transform_quant_matmul(x, t, wq, bits))
+    tol = 2e-4 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, atol=tol, rtol=2e-4)
+
+
+@given(
+    tokens=st.integers(1, 200),
+    log_d=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_fwht_orthogonality_random(tokens, log_d, seed):
+    d = 1 << log_d
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((tokens, d)), jnp.float32)
+    y = fwht_rows(x)
+    # Norm preservation per row.
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=1),
+        np.linalg.norm(np.asarray(x), axis=1),
+        rtol=1e-4,
+    )
+    # Involution.
+    np.testing.assert_allclose(np.asarray(fwht_rows(y)), np.asarray(x), atol=1e-4)
+
+
+@given(
+    tokens=st.integers(1, 96),
+    nb=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_block_diag_random(tokens, nb, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((tokens, nb * k)), jnp.float32)
+    blocks = jnp.asarray(
+        np.eye(k)[None] + 0.2 * rng.standard_normal((nb, k, k)), jnp.float32
+    )
+    got = np.asarray(block_diag_apply(x, blocks))
+    want = np.asarray(ref.block_diag_apply(x, blocks))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@given(
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    pattern=st.sampled_from(["normal", "const", "negative", "one_hot", "huge_range"]),
+)
+@settings(**SETTINGS)
+def test_quantizer_oracle_edge_patterns(bits, seed, pattern):
+    rng = np.random.default_rng(seed)
+    if pattern == "normal":
+        x = rng.standard_normal((8, 32))
+    elif pattern == "const":
+        x = np.full((8, 32), rng.uniform(-5, 5))
+    elif pattern == "negative":
+        x = -np.abs(rng.standard_normal((8, 32))) - 0.5
+    elif pattern == "one_hot":
+        x = np.zeros((8, 32))
+        x[:, 3] = rng.uniform(1, 10)
+    else:  # huge_range
+        x = rng.standard_normal((8, 32))
+        x[:, 0] *= 1e4
+    x = jnp.asarray(x, jnp.float32)
+    q = np.asarray(ref.quant_dequant_per_token_asym(x, bits))
+    assert np.isfinite(q).all()
+    xn = np.asarray(x)
+    lo = np.minimum(xn.min(axis=1), 0)
+    hi = np.maximum(xn.max(axis=1), 0)
+    scale = (hi - lo) / (2**bits - 1)
+    err = np.abs(q - xn).max(axis=1)
+    assert (err <= scale * (1 + 1e-4) + 1e-6).all(), (pattern, err, scale)

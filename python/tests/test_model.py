@@ -1,0 +1,141 @@
+"""L2 model tests: shapes, quant-vs-fp consistency, serving-path parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.Config("test", d=32, n_layers=2, n_heads=4, ff=64, seq=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def toks(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)), jnp.int32)
+
+
+def identity_transforms(cfg):
+    return {n: jnp.eye(s[0], dtype=jnp.float32) for n, s in M.transform_spec(cfg)}
+
+
+def test_fp_logits_shape(params):
+    logits = M.forward(CFG, params, toks(3, 16))
+    assert logits.shape == (3, 16, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(params):
+    # Changing a future token must not change past logits.
+    t1 = toks(1, 16, seed=1)
+    t2 = t1.at[0, 10].set((t1[0, 10] + 1) % 256)
+    l1 = M.forward(CFG, params, t1)
+    l2 = M.forward(CFG, params, t2)
+    np.testing.assert_allclose(np.asarray(l1[0, :10]), np.asarray(l2[0, :10]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 10]), np.asarray(l2[0, 10]))
+
+
+def test_quant_high_bits_close_to_fp(params):
+    t = toks(2, 16, seed=2)
+    fp = M.forward(CFG, params, t)
+    q = M.forward(CFG, params, t, transforms=identity_transforms(CFG), bits=12)
+    err = np.abs(np.asarray(fp) - np.asarray(q)).max()
+    assert err < 0.15, f"12-bit quant should be near-fp, max err {err}"
+
+
+def test_quant_low_bits_degrades_monotonically(params):
+    t = toks(2, 16, seed=3)
+    fp = np.asarray(M.forward(CFG, params, t))
+    errs = []
+    for bits in (8, 4, 2):
+        q = M.forward(CFG, params, t, transforms=identity_transforms(CFG), bits=bits)
+        errs.append(np.abs(np.asarray(q) - fp).mean())
+    assert errs[0] < errs[1] < errs[2], errs
+
+
+def test_orthogonal_transform_function_preserving_at_high_bits(params):
+    # A Hadamard transform with fused weights changes nothing (up to
+    # quantization noise) — paper eq. 5.
+    from compile.kernels.ref import fwht
+
+    t = toks(2, 16, seed=4)
+    d, ff = CFG.d, CFG.ff
+    h_d = np.asarray(fwht(np.eye(d, dtype=np.float32)))
+    h_ff = np.asarray(fwht(np.eye(ff, dtype=np.float32)))
+    tr = {}
+    fused = dict(params)
+    for n, s in M.transform_spec(CFG):
+        tr[n] = jnp.asarray(h_ff if s[0] == ff else h_d)
+    for i in range(CFG.n_layers):
+        p = f"blocks.{i}."
+        for wname, tname in [
+            ("q_proj", "t_attn"), ("k_proj", "t_attn"), ("v_proj", "t_attn"),
+            ("o_proj", "t_o"), ("gate_proj", "t_mlp"), ("up_proj", "t_mlp"),
+            ("down_proj", "t_down"),
+        ]:
+            w = params[p + wname]
+            t_m = tr[p + tname]
+            fused[p + wname] = w @ t_m.T  # W T^{-1} = W Hᵀ for orthogonal H
+    fp = M.forward(CFG, params, t)
+    q = M.forward(CFG, fused, t, transforms=tr, bits=14)
+    err = np.abs(np.asarray(fp) - np.asarray(q)).max()
+    assert err < 0.1, f"transform should preserve function, err {err}"
+
+
+def test_probe_shapes(params):
+    fn = M.make_probe_fn(CFG)
+    flat = M.params_to_flat(CFG, params)
+    attn_in, o_in, mlp_in, down_in = fn(toks(2, 16), *flat)
+    assert attn_in.shape == (2, 32, CFG.d)
+    assert o_in.shape == (2, 32, CFG.d)
+    assert mlp_in.shape == (2, 32, CFG.d)
+    assert down_in.shape == (2, 32, CFG.ff)
+
+
+def test_prefill_decode_matches_full_forward(params):
+    # Greedy continuation via prefill+decode == argmax of full forward.
+    prompt_len = 8
+    t = toks(2, prompt_len, seed=5)
+    flat = M.params_to_flat(CFG, params)
+    prefill = M.make_prefill_fn(CFG, prompt_len)
+    logits, kc, vc = prefill(t, *flat)
+    # Full-forward reference.
+    full = M.forward(CFG, params, t)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full[:, -1]), rtol=1e-4, atol=1e-4
+    )
+    # One decode step == full forward on extended sequence.
+    decode = M.make_decode_fn(CFG)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    d_logits, kc, vc = decode(nxt, jnp.int32(prompt_len), kc, vc, *flat)
+    t_ext = jnp.concatenate([t, nxt], axis=1)
+    full_ext = M.forward(CFG, params, t_ext)
+    np.testing.assert_allclose(
+        np.asarray(d_logits), np.asarray(full_ext[:, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_loss_decreases_with_training_signal():
+    # A couple of SGD steps on repetitive data must reduce loss.
+    cfg = M.Config("t2", d=32, n_layers=1, n_heads=2, ff=64, seq=16)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    tokens = jnp.tile(jnp.arange(16, dtype=jnp.int32) % 7, (4, 1))
+    l0, grads = M.loss_and_grads(cfg, params, tokens)
+    for _ in range(20):
+        _, grads = M.loss_and_grads(cfg, params, tokens)
+        params = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
+    l1, _ = M.loss_and_grads(cfg, params, tokens)
+    assert float(l1) < float(l0) * 0.8, (float(l0), float(l1))
+
+
+def test_kernel_variant_matches_ref_variant(params):
+    t = toks(2, 16, seed=6)
+    tr = identity_transforms(CFG)
+    a = M.forward(CFG, params, t, transforms=tr, bits=4, use_kernel=False)
+    b = M.forward(CFG, params, t, transforms=tr, bits=4, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,81 @@
+//! Token-corpus access (raw uint8 streams written by
+//! `python/compile/corpus.py`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A loaded token stream with deterministic sequence sampling.
+pub struct Corpus {
+    tokens: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let tokens =
+            std::fs::read(path).with_context(|| format!("reading corpus {}", path.display()))?;
+        anyhow::ensure!(!tokens.is_empty(), "empty corpus");
+        Ok(Corpus { tokens })
+    }
+
+    pub fn from_tokens(tokens: Vec<u8>) -> Corpus {
+        Corpus { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// `n` sequences of length `seq`, sampled at deterministic offsets
+    /// (seeded) — the calibration-set draw.
+    pub fn sample_sequences(&self, n: usize, seq: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = crate::linalg::Rng::new(seed ^ 0x5EC5);
+        let max_start = self.tokens.len().saturating_sub(seq + 1);
+        (0..n)
+            .map(|_| {
+                let start = rng.below(max_start.max(1));
+                self.tokens[start..start + seq].to_vec()
+            })
+            .collect()
+    }
+
+    /// `n` non-overlapping evaluation windows of length `seq`, in order —
+    /// the held-out perplexity set (same windows for every config).
+    pub fn eval_windows(&self, n: usize, seq: usize) -> Vec<Vec<u8>> {
+        let avail = self.tokens.len() / seq;
+        (0..n.min(avail)).map(|i| self.tokens[i * seq..(i + 1) * seq].to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake() -> Corpus {
+        Corpus::from_tokens((0..10_000u32).map(|i| (i % 251) as u8).collect())
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let c = fake();
+        assert_eq!(c.sample_sequences(4, 16, 7), c.sample_sequences(4, 16, 7));
+        assert_ne!(c.sample_sequences(4, 16, 7), c.sample_sequences(4, 16, 8));
+    }
+
+    #[test]
+    fn eval_windows_non_overlapping() {
+        let c = fake();
+        let w = c.eval_windows(5, 100);
+        assert_eq!(w.len(), 5);
+        assert_eq!(w[1][0], c.tokens[100]);
+    }
+
+    #[test]
+    fn eval_windows_capped_by_length() {
+        let c = fake();
+        assert_eq!(c.eval_windows(1000, 128).len(), 10_000 / 128);
+    }
+}

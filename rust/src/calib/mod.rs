@@ -1,0 +1,16 @@
+//! Calibration: corpus access, activation-statistics collection, and the
+//! synthetic layer suites used by the figure experiments.
+//!
+//! The paper calibrates on 128 sequences of the calibration corpus (§6);
+//! [`calibrate`] runs the FP model over those sequences, streaming
+//! per-group autocorrelations `Σ_x = E[xxᵀ]` and retaining a bounded row
+//! subsample for the data-driven objectives (SmoothQuant maxima, seed
+//! search, measured SQNR).
+
+mod corpus;
+mod stats;
+mod synth;
+
+pub use corpus::Corpus;
+pub use stats::{calibrate, ActStats, CalibStats};
+pub use synth::{synth_layer, synth_suite, SynthLayer, SynthSpec};

@@ -1,0 +1,117 @@
+//! Dynamic batching policy.
+//!
+//! The classic continuous-serving tradeoff: wait a little to fill a batch
+//! (throughput) but never longer than `max_wait` (latency). The batcher is
+//! engine-agnostic and fully testable without a model — the property
+//! tests in `rust/tests/coordinator_props.rs` drive it with synthetic
+//! arrivals.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherCfg {
+    /// Hard cap on batch size (the compiled graph's batch dimension).
+    pub max_batch: usize,
+    /// Max time the first request in a batch may wait for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 4, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Pulls items off a channel according to the batching policy.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    cfg: BatcherCfg,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, cfg: BatcherCfg) -> Self {
+        assert!(cfg.max_batch >= 1);
+        DynamicBatcher { rx, cfg }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block indefinitely for the first item.
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_capped_at_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatcherCfg { max_batch: 4, max_wait: Duration::from_millis(5) });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn waits_at_most_max_wait() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(rx, BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(30) });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![1]);
+        assert!(waited >= Duration::from_millis(25), "returned too early: {waited:?}");
+        assert!(waited < Duration::from_millis(300), "waited too long: {waited:?}");
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatcherCfg::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+            drop(tx);
+        });
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherCfg { max_batch: 4, max_wait: Duration::from_millis(100) },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1]);
+        handle.join().unwrap();
+    }
+}

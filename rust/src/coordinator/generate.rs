@@ -1,0 +1,202 @@
+//! Batched generation engines.
+//!
+//! [`PjrtGenerator`] is the production path: batched prefill + KV-cache
+//! decode through the AOT-compiled executables, FP or quantized (the
+//! quantized variant takes the PTQ pipeline's [`QuantConfig`] products as
+//! runtime arguments — serving a CAT-W4A4 model is just a different
+//! `ArgPack`).
+
+use crate::linalg::Rng;
+use crate::model::QuantConfig;
+use crate::runtime::{token_literal, ArgPack, DevicePack, PjrtEngine};
+use anyhow::Result;
+
+/// Sampling policy for generation.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingCfg {
+    /// 0.0 = greedy; otherwise softmax temperature.
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for SamplingCfg {
+    fn default() -> Self {
+        SamplingCfg { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// A batched generator: prompts in, continuations out.
+///
+/// Not `Send`: PJRT engines hold raw C handles, so the coordinator
+/// constructs the engine on its worker thread via a factory.
+pub trait GenEngine {
+    /// Generate `max_new` tokens for each prompt. Prompts are padded /
+    /// truncated to the engine's prompt length internally.
+    fn generate_batch(&mut self, prompts: &[Vec<u8>], max_new: usize) -> Result<Vec<Vec<u8>>>;
+
+    /// The fixed batch width of the underlying executable.
+    fn max_batch(&self) -> usize;
+}
+
+/// PJRT prefill+decode generator.
+pub struct PjrtGenerator {
+    engine: std::rc::Rc<PjrtEngine>,
+    model: String,
+    prefill_graph: String,
+    decode_graph: String,
+    pack: DevicePack,
+    prompt_len: usize,
+    batch: usize,
+    seq_max: usize,
+    vocab: usize,
+    sampling: SamplingCfg,
+    rng: Rng,
+    bos: u8,
+}
+
+impl PjrtGenerator {
+    /// FP serving.
+    pub fn fp(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        params: &std::collections::HashMap<String, crate::linalg::Mat>,
+        sampling: SamplingCfg,
+    ) -> Result<PjrtGenerator> {
+        let entry = engine.manifest().model(model)?.clone();
+        let pack = ArgPack::fp(&entry, params)?;
+        Self::new(engine, model, "prefill_fp", "decode_fp", pack, sampling)
+    }
+
+    /// Quantized serving (W?A4 graphs + pipeline products).
+    pub fn quant(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        params: &std::collections::HashMap<String, crate::linalg::Mat>,
+        qc: &QuantConfig,
+        sampling: SamplingCfg,
+    ) -> Result<PjrtGenerator> {
+        let entry = engine.manifest().model(model)?.clone();
+        let pack = ArgPack::quant(&entry, params, qc)?;
+        Self::new(engine, model, "prefill_a4", "decode_a4", pack, sampling)
+    }
+
+    fn new(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        prefill_graph: &str,
+        decode_graph: &str,
+        pack: ArgPack,
+        sampling: SamplingCfg,
+    ) -> Result<PjrtGenerator> {
+        let m = engine.manifest().model(model)?;
+        let cfg = &m.config;
+        // §Perf: weights/transforms live on device across the whole
+        // serving session — only tokens/pos/kv cross the host boundary.
+        let pack = engine.device_pack(pack)?;
+        Ok(PjrtGenerator {
+            model: model.to_string(),
+            prefill_graph: prefill_graph.to_string(),
+            decode_graph: decode_graph.to_string(),
+            pack,
+            prompt_len: engine.manifest().prompt_len,
+            batch: engine.manifest().serve_batch,
+            seq_max: cfg.seq,
+            vocab: cfg.vocab,
+            sampling,
+            rng: Rng::new(sampling.seed ^ 0x5A111),
+            engine,
+            bos: 0,
+        })
+    }
+
+    /// Left-pad/truncate a prompt to exactly `prompt_len`.
+    fn fit_prompt(&self, p: &[u8]) -> Vec<u8> {
+        let pl = self.prompt_len;
+        if p.len() >= pl {
+            p[p.len() - pl..].to_vec()
+        } else {
+            let mut out = vec![self.bos; pl - p.len()];
+            out.extend_from_slice(p);
+            out
+        }
+    }
+
+    fn sample_row(&mut self, logits: &[f32]) -> u8 {
+        if self.sampling.temperature <= 0.0 {
+            let mut best = 0;
+            for (i, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = i;
+                }
+            }
+            return best as u8;
+        }
+        let t = self.sampling.temperature;
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let weights: Vec<f64> =
+            logits.iter().map(|&v| ((v as f64 - max) / t).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i as u8;
+            }
+        }
+        (self.vocab - 1) as u8
+    }
+}
+
+impl GenEngine for PjrtGenerator {
+    fn generate_batch(&mut self, prompts: &[Vec<u8>], max_new: usize) -> Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(!prompts.is_empty() && prompts.len() <= self.batch);
+        let real = prompts.len();
+        // Pad the batch with copies of the last prompt (fixed-shape graph).
+        let mut padded: Vec<Vec<u8>> =
+            prompts.iter().map(|p| self.fit_prompt(p)).collect();
+        while padded.len() < self.batch {
+            padded.push(padded[real - 1].clone());
+        }
+
+        let tok = token_literal(&padded, self.prompt_len)?;
+        let mut out =
+            self.engine.run_b(&self.model, &self.prefill_graph, &[&tok], &self.pack)?;
+        let mut vc = out.remove(2);
+        let mut kc = out.remove(1);
+        let mut logits = out.remove(0).to_vec::<f32>()?;
+
+        let budget = max_new.min(self.seq_max - self.prompt_len);
+        let mut results: Vec<Vec<u8>> = vec![Vec::new(); real];
+        for step in 0..budget {
+            // Sample next token per row.
+            let next: Vec<Vec<u8>> = (0..self.batch)
+                .map(|b| {
+                    let row = &logits[b * self.vocab..(b + 1) * self.vocab];
+                    vec![self.sample_row(row)]
+                })
+                .collect();
+            for (b, r) in results.iter_mut().enumerate() {
+                r.push(next[b][0]);
+            }
+            if step + 1 == budget {
+                break;
+            }
+            let ntok = token_literal(&next, 1)?;
+            let pos = xla::Literal::vec1(&[(self.prompt_len + step) as i32]);
+            let mut dout = self.engine.run_b(
+                &self.model,
+                &self.decode_graph,
+                &[&ntok, &pos, &kc, &vc],
+                &self.pack,
+            )?;
+            vc = dout.remove(2);
+            kc = dout.remove(1);
+            logits = dout.remove(0).to_vec::<f32>()?;
+        }
+        Ok(results)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+}

@@ -1,0 +1,151 @@
+//! Serving metrics: latency histogram + throughput counters.
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (microsecond resolution, ~7% buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // 1 µs → ~100 s, multiplicative step 1.25.
+        let mut buckets = Vec::new();
+        let mut b = 1.0_f64;
+        while b < 1e8 {
+            buckets.push(b as u64);
+            b *= 1.25;
+        }
+        let n = buckets.len();
+        Histogram { buckets, counts: vec![0; n + 1], total: 0, sum_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.buckets.partition_point(|&b| b <= us);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.total)
+    }
+
+    /// Upper bound of the bucket containing quantile `q`.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let us = if i < self.buckets.len() { self.buckets[i] } else { u64::MAX / 2 };
+                return Duration::from_micros(us);
+            }
+        }
+        Duration::from_micros(*self.buckets.last().unwrap())
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub request_latency: Histogram,
+    pub batch_sizes: Vec<usize>,
+    pub tokens_out: u64,
+    pub requests: u64,
+    pub elapsed: Duration,
+}
+
+impl ServeMetrics {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s mean_batch={:.2} p50={:?} p95={:?} mean={:?}",
+            self.requests,
+            self.tokens_out,
+            self.throughput_tok_s(),
+            self.mean_batch(),
+            self.request_latency.quantile(0.5),
+            self.request_latency.quantile(0.95),
+            self.request_latency.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        assert!(p50 <= p95);
+        assert!(p50 >= Duration::from_millis(35) && p50 <= Duration::from_millis(70), "{p50:?}");
+        assert!(p95 >= Duration::from_millis(80), "{p95:?}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = ServeMetrics {
+            tokens_out: 500,
+            elapsed: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.throughput_tok_s() - 250.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator (L3 request path).
+//!
+//! vLLM-router-shaped, sized to this testbed: clients submit generation
+//! requests; a dynamic batcher groups them under a max-batch/max-wait
+//! policy; a worker thread drives the batched prefill+decode executables
+//! through PJRT ([`PjrtGenerator`]); responses flow back over per-request
+//! channels with latency metrics recorded.
+//!
+//! No tokio in this environment (offline vendor set) — the runtime is
+//! `std::thread` + `mpsc`, which for a single-host, CPU-bound serving
+//! loop is the honest design anyway: one worker owns the PJRT client and
+//! the batcher is the only coordination point.
+
+mod batcher;
+mod generate;
+mod metrics;
+mod server;
+
+pub use batcher::{BatcherCfg, DynamicBatcher};
+pub use generate::{GenEngine, PjrtGenerator, SamplingCfg};
+pub use metrics::{Histogram, ServeMetrics};
+pub use server::{Coordinator, GenRequest, GenResponse};

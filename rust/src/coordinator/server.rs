@@ -1,0 +1,212 @@
+//! The coordinator: request intake → dynamic batcher → worker → responses.
+
+use super::{BatcherCfg, DynamicBatcher, GenEngine, ServeMetrics};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A generation request.
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+    enqueued: Instant,
+    reply: Sender<GenResponse>,
+}
+
+/// A generation response.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<u8>,
+    pub latency: std::time::Duration,
+    pub batch_size: usize,
+}
+
+/// Client handle + worker thread. Dropping the handle (or calling
+/// [`Coordinator::shutdown`]) stops the worker after the queue drains.
+pub struct Coordinator {
+    tx: Option<Sender<GenRequest>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+impl Coordinator {
+    /// Start the serving loop on a worker thread.
+    ///
+    /// Takes a *factory* rather than an engine: PJRT handles are not
+    /// `Send`, so the engine is constructed on the worker thread and
+    /// never crosses a thread boundary.
+    pub fn start<F>(make_engine: F, cfg: BatcherCfg) -> Coordinator
+    where
+        F: FnOnce() -> Box<dyn GenEngine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<GenRequest>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut engine = make_engine();
+            let started = Instant::now();
+            let batcher = DynamicBatcher::new(rx, cfg);
+            while let Some(batch) = batcher.next_batch() {
+                let bsz = batch.len();
+                let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
+                let prompts: Vec<Vec<u8>> = batch.iter().map(|r| r.prompt.clone()).collect();
+                // The graph batch width may be smaller than the batch the
+                // policy admitted; chunk.
+                let chunk = engine.max_batch();
+                let mut outputs: Vec<Vec<u8>> = Vec::with_capacity(bsz);
+                for c in prompts.chunks(chunk) {
+                    match engine.generate_batch(c, max_new) {
+                        Ok(mut o) => outputs.append(&mut o),
+                        Err(e) => {
+                            eprintln!("generation failed: {e:#}");
+                            outputs.extend(std::iter::repeat_with(Vec::new).take(c.len()));
+                        }
+                    }
+                }
+                let now = Instant::now();
+                let mut met = m2.lock().unwrap();
+                met.batch_sizes.push(bsz);
+                for (req, tokens) in batch.into_iter().zip(outputs) {
+                    let latency = now - req.enqueued;
+                    met.requests += 1;
+                    met.tokens_out += tokens.len().min(req.max_new) as u64;
+                    met.request_latency.record(latency);
+                    let _ = req.reply.send(GenResponse {
+                        id: req.id,
+                        tokens: tokens.into_iter().take(req.max_new).collect(),
+                        latency,
+                        batch_size: bsz,
+                    });
+                }
+                met.elapsed = now - started;
+            }
+        });
+        Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// Submit a request; the receiver yields the response when served.
+    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> Receiver<GenResponse> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = GenRequest { id, prompt, max_new, enqueued: Instant::now(), reply };
+        self.tx.as_ref().expect("coordinator running").send(req).expect("worker alive");
+        rx
+    }
+
+    /// Snapshot of the metrics.
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.tx.take(); // close the queue
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Result;
+
+    /// Echo engine: returns the prompt reversed, capped at max_new.
+    struct EchoEngine {
+        batch: usize,
+        calls: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl GenEngine for EchoEngine {
+        fn generate_batch(&mut self, prompts: &[Vec<u8>], max_new: usize) -> Result<Vec<Vec<u8>>> {
+            self.calls.lock().unwrap().push(prompts.len());
+            Ok(prompts
+                .iter()
+                .map(|p| p.iter().rev().cloned().take(max_new).collect())
+                .collect())
+        }
+
+        fn max_batch(&self) -> usize {
+            self.batch
+        }
+    }
+
+    #[test]
+    fn serves_and_answers() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let engine = EchoEngine { batch: 4, calls: calls.clone() };
+        let coord = Coordinator::start(move || Box::new(engine) as Box<dyn GenEngine>, BatcherCfg::default());
+        let rx = coord.submit(vec![1, 2, 3], 2);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.tokens, vec![3, 2]);
+        let met = coord.shutdown();
+        assert_eq!(met.requests, 1);
+        assert_eq!(met.tokens_out, 2);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let engine = EchoEngine { batch: 8, calls: calls.clone() };
+        let coord = Coordinator::start(
+            move || Box::new(engine) as Box<dyn GenEngine>,
+            BatcherCfg { max_batch: 8, max_wait: std::time::Duration::from_millis(50) },
+        );
+        let rxs: Vec<_> = (0..6).map(|i| coord.submit(vec![i as u8], 1)).collect();
+        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(resps.len(), 6);
+        let met = coord.shutdown();
+        assert_eq!(met.requests, 6);
+        // At least one multi-request batch formed.
+        assert!(met.batch_sizes.iter().any(|&b| b > 1), "{:?}", met.batch_sizes);
+    }
+
+    #[test]
+    fn oversize_batches_chunked_to_engine_width() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let engine = EchoEngine { batch: 2, calls: calls.clone() };
+        let coord = Coordinator::start(
+            move || Box::new(engine) as Box<dyn GenEngine>,
+            BatcherCfg { max_batch: 5, max_wait: std::time::Duration::from_millis(60) },
+        );
+        let rxs: Vec<_> = (0..5).map(|i| coord.submit(vec![i as u8; 3], 3)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        coord.shutdown();
+        let seen = calls.lock().unwrap();
+        assert!(seen.iter().all(|&c| c <= 2), "engine saw oversize chunk: {seen:?}");
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let engine = EchoEngine { batch: 4, calls };
+        let coord = Coordinator::start(move || Box::new(engine) as Box<dyn GenEngine>, BatcherCfg::default());
+        let rxs: Vec<_> = (0..3).map(|_| coord.submit(vec![9, 9], 1)).collect();
+        let met = coord.shutdown();
+        assert_eq!(met.requests, 3);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Logits engines: the abstraction the evaluators run on.
+
+use crate::linalg::Mat;
+use crate::model::{NativeModel, QuantConfig};
+use crate::runtime::{token_literal, ArgPack, DevicePack, PjrtEngine};
+use anyhow::Result;
+
+/// Anything that maps token sequences to per-position logits.
+pub trait SeqLogits {
+    /// Full-sequence logits for each input (each `[len, vocab]`).
+    /// Implementations may pad internally; outputs match input lengths.
+    fn logits(&self, seqs: &[Vec<u8>]) -> Result<Vec<Mat>>;
+
+    fn vocab(&self) -> usize;
+}
+
+/// Native-engine logits (FP or quantized).
+pub struct NativeLogits<'a> {
+    pub model: &'a NativeModel,
+    pub qc: Option<&'a QuantConfig>,
+}
+
+impl SeqLogits for NativeLogits<'_> {
+    fn logits(&self, seqs: &[Vec<u8>]) -> Result<Vec<Mat>> {
+        Ok(seqs
+            .iter()
+            .map(|s| match self.qc {
+                None => self.model.forward(s),
+                Some(qc) => self.model.forward_quant(s, qc),
+            })
+            .collect())
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+}
+
+/// PJRT logits through a compiled full-sequence graph
+/// (`logits_fp` / `logits_a{bits}`), batching to the graph width and
+/// padding sequences to the graph length (causality makes padding safe).
+pub struct PjrtLogits {
+    engine: std::rc::Rc<PjrtEngine>,
+    model: String,
+    graph: String,
+    pack: DevicePack,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl PjrtLogits {
+    pub fn fp(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        params: &std::collections::HashMap<String, Mat>,
+    ) -> Result<PjrtLogits> {
+        let entry = engine.manifest().model(model)?.clone();
+        let pack = ArgPack::fp(&entry, params)?;
+        Self::new(engine, model, "logits_fp", pack)
+    }
+
+    /// Quantized graph at the pipeline's activation bit width.
+    pub fn quant(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        params: &std::collections::HashMap<String, Mat>,
+        qc: &QuantConfig,
+        bits_a: u32,
+    ) -> Result<PjrtLogits> {
+        let entry = engine.manifest().model(model)?.clone();
+        let pack = ArgPack::quant(&entry, params, qc)?;
+        Self::new(engine, model, &format!("logits_a{bits_a}"), pack)
+    }
+
+    fn new(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        graph: &str,
+        pack: ArgPack,
+    ) -> Result<PjrtLogits> {
+        let m = engine.manifest().model(model)?;
+        let g = m
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("graph {graph} missing for {model}"))?;
+        // §Perf: upload the weight pack once per eval config.
+        let pack = engine.device_pack(pack)?;
+        Ok(PjrtLogits {
+            model: model.to_string(),
+            graph: graph.to_string(),
+            pack,
+            batch: g.batch,
+            seq: m.config.seq,
+            vocab: m.config.vocab,
+            engine,
+        })
+    }
+}
+
+impl SeqLogits for PjrtLogits {
+    fn logits(&self, seqs: &[Vec<u8>]) -> Result<Vec<Mat>> {
+        let mut out = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(self.batch) {
+            // Pad sequences to graph length, batch to graph width.
+            let mut padded: Vec<Vec<u8>> = chunk
+                .iter()
+                .map(|s| {
+                    anyhow::ensure!(s.len() <= self.seq, "sequence longer than graph");
+                    let mut p = s.clone();
+                    p.resize(self.seq, 0);
+                    Ok(p)
+                })
+                .collect::<Result<_>>()?;
+            while padded.len() < self.batch {
+                padded.push(vec![0; self.seq]);
+            }
+            let tok = token_literal(&padded, self.seq)?;
+            let res = self.engine.run_b(&self.model, &self.graph, &[&tok], &self.pack)?;
+            let flat: Vec<f32> = res[0].to_vec()?;
+            for (i, s) in chunk.iter().enumerate() {
+                let full = &flat[i * self.seq * self.vocab..(i + 1) * self.seq * self.vocab];
+                out.push(Mat::from_f32(s.len(), self.vocab, &full[..s.len() * self.vocab]));
+            }
+        }
+        Ok(out)
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn native_logits_shapes() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 32,
+            n_layers: 1,
+            n_heads: 2,
+            ff: 64,
+            seq: 16,
+            vocab: 256,
+        };
+        let model = NativeModel::init_random(cfg, 1);
+        let eng = NativeLogits { model: &model, qc: None };
+        let out = eng.logits(&[vec![1, 2, 3], vec![4, 5, 6, 7]]).unwrap();
+        assert_eq!(out[0].rows(), 3);
+        assert_eq!(out[1].rows(), 4);
+        assert_eq!(out[0].cols(), 256);
+    }
+}

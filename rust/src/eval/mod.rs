@@ -1,0 +1,10 @@
+//! Evaluation harnesses: perplexity + the six zero-shot tasks
+//! (the WikiText / LM-harness substitutes — DESIGN.md §3).
+
+mod engines;
+mod perplexity;
+mod tasks;
+
+pub use engines::{NativeLogits, PjrtLogits, SeqLogits};
+pub use perplexity::{perplexity, perplexity_subset};
+pub use tasks::{zero_shot_suite, TaskResult, TASK_SPECS};

@@ -1,0 +1,89 @@
+//! Perplexity evaluation (the WikiText-2 column of Table 1).
+
+use super::SeqLogits;
+use crate::model::softmax_row;
+use anyhow::Result;
+
+/// Next-token perplexity over evaluation windows:
+/// `exp( − mean_t log p(x_{t+1} | x_{≤t}) )`.
+pub fn perplexity(engine: &dyn SeqLogits, windows: &[Vec<u8>]) -> Result<f64> {
+    anyhow::ensure!(!windows.is_empty(), "no evaluation windows");
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    for batch in windows.chunks(8) {
+        let logits = engine.logits(batch)?;
+        for (w, l) in batch.iter().zip(&logits) {
+            for t in 0..w.len() - 1 {
+                let mut row = l.row(t).to_vec();
+                softmax_row(&mut row);
+                let p = row[w[t + 1] as usize].max(1e-30);
+                nll -= p.ln();
+                count += 1;
+            }
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// Perplexity over the first `n` windows (the experiment grid's quick
+/// setting).
+pub fn perplexity_subset(
+    engine: &dyn SeqLogits,
+    windows: &[Vec<u8>],
+    n: usize,
+) -> Result<f64> {
+    perplexity(engine, &windows[..n.min(windows.len())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::NativeLogits;
+    use crate::model::{ModelConfig, NativeModel};
+
+    fn tiny() -> NativeModel {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 32,
+            n_layers: 1,
+            n_heads: 2,
+            ff: 64,
+            seq: 16,
+            vocab: 256,
+        };
+        NativeModel::init_random(cfg, 1)
+    }
+
+    #[test]
+    fn random_model_near_uniform_ppl() {
+        let model = tiny();
+        let eng = NativeLogits { model: &model, qc: None };
+        let windows: Vec<Vec<u8>> = (0..4)
+            .map(|i| (0..16).map(|t| ((i * 37 + t * 11) % 256) as u8).collect())
+            .collect();
+        let ppl = perplexity(&eng, &windows).unwrap();
+        // An untrained model should sit near vocab-size perplexity.
+        assert!(ppl > 100.0 && ppl < 600.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn perplexity_deterministic() {
+        let model = tiny();
+        let eng = NativeLogits { model: &model, qc: None };
+        let windows: Vec<Vec<u8>> = vec![vec![1; 16], vec![2; 16]];
+        assert_eq!(
+            perplexity(&eng, &windows).unwrap(),
+            perplexity(&eng, &windows).unwrap()
+        );
+    }
+
+    #[test]
+    fn subset_uses_fewer_windows() {
+        let model = tiny();
+        let eng = NativeLogits { model: &model, qc: None };
+        let windows: Vec<Vec<u8>> = (0..6).map(|i| vec![(i * 3) as u8; 16]).collect();
+        let full = perplexity(&eng, &windows).unwrap();
+        let sub = perplexity_subset(&eng, &windows, 2).unwrap();
+        assert!(full.is_finite() && sub.is_finite());
+    }
+}

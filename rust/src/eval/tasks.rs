@@ -1,0 +1,163 @@
+//! Six synthetic zero-shot tasks — the LM-harness substitute.
+//!
+//! Each task is multiple-choice continuation ranking (the mechanics of
+//! PIQA/HellaSwag/LAMBADA): given a context from the held-out corpus,
+//! score the true continuation against 3 distractors by total
+//! log-likelihood under the model; accuracy = fraction where the truth
+//! ranks first. The six variants differ in context/continuation lengths —
+//! longer contexts reward models whose long-range statistics survive
+//! quantization, mirroring how the real suite spans difficulty.
+
+use super::SeqLogits;
+use crate::calib::Corpus;
+use crate::linalg::Rng;
+use crate::model::softmax_row;
+use anyhow::Result;
+
+/// (name, context length, continuation length).
+pub const TASK_SPECS: [(&str, usize, usize); 6] = [
+    ("ctx16-c4", 16, 4),
+    ("ctx32-c4", 32, 4),
+    ("ctx32-c8", 32, 8),
+    ("ctx48-c8", 48, 8),
+    ("ctx64-c4", 64, 4),
+    ("ctx64-c8", 64, 8),
+];
+
+/// One task's outcome.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub n_items: usize,
+}
+
+/// Build and score all six tasks. `n_items` questions per task,
+/// deterministic per seed (the same items are used for every model
+/// configuration — paired comparison, as with a fixed benchmark).
+pub fn zero_shot_suite(
+    engine: &dyn SeqLogits,
+    corpus: &Corpus,
+    n_items: usize,
+    seed: u64,
+) -> Result<Vec<TaskResult>> {
+    let mut results = Vec::new();
+    for (ti, (name, ctx_len, cont_len)) in TASK_SPECS.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ ((ti as u64 + 1) * 0x7A5C5));
+        let mut correct = 0usize;
+        // Build all items, score in batches.
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let windows = corpus.sample_sequences(5, ctx_len + cont_len, rng.next_u64());
+            let context = windows[0][..*ctx_len].to_vec();
+            let truth = windows[0][*ctx_len..].to_vec();
+            // Distractors: continuations harvested from elsewhere.
+            let distractors: Vec<Vec<u8>> =
+                windows[1..4].iter().map(|w| w[*ctx_len..].to_vec()).collect();
+            items.push((context, truth, distractors));
+        }
+        for (context, truth, distractors) in &items {
+            let mut seqs = Vec::with_capacity(4);
+            let mut full = context.clone();
+            full.extend(truth);
+            seqs.push(full);
+            for d in distractors {
+                let mut f = context.clone();
+                f.extend(d);
+                seqs.push(f);
+            }
+            let logits = engine.logits(&seqs)?;
+            let scores: Vec<f64> = seqs
+                .iter()
+                .zip(&logits)
+                .map(|(s, l)| continuation_ll(s, l, context.len()))
+                .collect();
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if best == 0 {
+                correct += 1;
+            }
+        }
+        results.push(TaskResult {
+            name: name.to_string(),
+            accuracy: correct as f64 / n_items as f64,
+            n_items,
+        });
+    }
+    Ok(results)
+}
+
+/// Total log-likelihood of `seq[ctx..]` under the logits.
+fn continuation_ll(seq: &[u8], logits: &crate::linalg::Mat, ctx: usize) -> f64 {
+    let mut ll = 0.0;
+    for t in ctx - 1..seq.len() - 1 {
+        let mut row = logits.row(t).to_vec();
+        softmax_row(&mut row);
+        ll += row[seq[t + 1] as usize].max(1e-30).ln();
+    }
+    ll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::NativeLogits;
+    use crate::model::{ModelConfig, NativeModel};
+
+    fn corpus() -> Corpus {
+        // Deterministic structured stream: next = prev + 1 mod 199, with
+        // occasional jumps — learnable-ish, definitely non-uniform.
+        let mut t = Vec::with_capacity(30_000);
+        let mut v = 1u32;
+        for i in 0..30_000 {
+            v = if i % 97 == 0 { (v * 7 + 3) % 199 } else { (v + 1) % 199 };
+            t.push(v as u8);
+        }
+        Corpus::from_tokens(t)
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 32,
+            n_layers: 1,
+            n_heads: 2,
+            ff: 64,
+            seq: 128,
+            vocab: 256,
+        };
+        let model = NativeModel::init_random(cfg, 2);
+        let eng = NativeLogits { model: &model, qc: None };
+        let res = zero_shot_suite(&eng, &corpus(), 12, 0).unwrap();
+        assert_eq!(res.len(), 6);
+        let mean: f64 = res.iter().map(|r| r.accuracy).sum::<f64>() / 6.0;
+        // Chance is 0.25; a random model should not be systematically
+        // far above it.
+        assert!(mean < 0.7, "mean {mean}");
+    }
+
+    #[test]
+    fn suite_deterministic_given_seed() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 32,
+            n_layers: 1,
+            n_heads: 2,
+            ff: 64,
+            seq: 128,
+            vocab: 256,
+        };
+        let model = NativeModel::init_random(cfg, 3);
+        let eng = NativeLogits { model: &model, qc: None };
+        let a = zero_shot_suite(&eng, &corpus(), 6, 1).unwrap();
+        let b = zero_shot_suite(&eng, &corpus(), 6, 1).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.accuracy, y.accuracy);
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **CAT block size `k`** — alignment/SQNR vs transform cost
+//!    (the paper's accuracy–efficiency knob, §4).
+//! 2. **Calibration-set size** — robustness of the Σ-based transforms.
+//! 3. **RHT seed sensitivity** — the spread that motivates SpinQuant.
+//! 4. **Channel permutation** — the paper's §7 future-work item
+//!    ([`crate::transforms::permuted_cat_block`]).
+//! 5. **Dynamic vs static activation ranges** — Lemma 2.2's `r(x)` choice.
+
+use super::common::{load_zoo, mean_std, print_table};
+use crate::calib::{calibrate, Corpus};
+use crate::linalg::{matmul_a_bt, Mat};
+use crate::model::ALL_GROUPS;
+use crate::pipeline::group_transform;
+use crate::quant::{
+    percentile_range, quantize_activations_static, quantize_weights_rtn, ActQuantCfg, QScheme,
+    WeightQuantCfg,
+};
+use crate::runtime::Manifest;
+use crate::sqnr::{alignment_data, db, measured_sqnr_joint};
+use crate::transforms::{cat_block, permuted_cat_block, TransformKind};
+use anyhow::Result;
+
+pub fn run_ablations(manifest: &Manifest, model: &str, seed: u64) -> Result<()> {
+    let zoo = load_zoo(manifest, model, seed)?;
+    let cfg = zoo.model.cfg.clone();
+    let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+    let wq = WeightQuantCfg::minmax(4);
+
+    // Collect the group bundles once.
+    struct G {
+        _name: String,
+        x: Mat,
+        sigma_x: Mat,
+        ws: Vec<Mat>,
+    }
+    let mut groups = Vec::new();
+    for block in 0..cfg.n_layers {
+        for g in ALL_GROUPS {
+            let stats = zoo.calib.sigma(&g.t_name(block));
+            groups.push(G {
+                _name: format!("{block}.{}", g.label()),
+                x: stats.sample(),
+                sigma_x: stats.sigma(),
+                ws: g
+                    .linears()
+                    .iter()
+                    .map(|lin| zoo.model.params[&format!("blocks.{block}.{lin}")].clone())
+                    .collect(),
+            });
+        }
+    }
+    let mean_sqnr = |t_of: &dyn Fn(&G) -> crate::transforms::Transform| -> (f64, f64) {
+        let mut dbs = Vec::new();
+        let t0 = std::time::Instant::now();
+        for g in &groups {
+            let t = t_of(g);
+            let xt = t.apply_acts(&g.x);
+            for w in &g.ws {
+                let wt = t.fuse_weights(w);
+                dbs.push(db(measured_sqnr_joint(&xt, &wt, act, wq)));
+            }
+        }
+        (mean_std(&dbs).0, t0.elapsed().as_secs_f64())
+    };
+
+    // ---- 1. block size sweep -------------------------------------------
+    println!("\n== Ablation 1: CAT block size k ({model}, W4A4) ==");
+    let mut rows = Vec::new();
+    for k in [1usize, 8, 32, 128, 512] {
+        let (sq, secs) = mean_sqnr(&|g: &G| {
+            let sigma_w = sum_wtw(&g.ws);
+            cat_block(&g.sigma_x, &sigma_w, k.min(g.sigma_x.rows()), seed)
+        });
+        rows.push(vec![
+            format!("k={k}"),
+            format!("{sq:.2}"),
+            format!("{:.2}", secs),
+        ]);
+    }
+    print_table(&["block size", "mean joint SQNR dB", "build time s"], &rows);
+
+    // ---- 2. calibration size -------------------------------------------
+    println!("\n== Ablation 2: calibration-set size (CAT block k=128) ==");
+    let corpus = Corpus::load(&manifest.corpus_train)?;
+    let mut rows = Vec::new();
+    for n_seqs in [4usize, 16, 64, 128] {
+        let seqs = corpus.sample_sequences(n_seqs, cfg.seq, seed ^ 0xCA11B);
+        let calib = calibrate(&zoo.model, &seqs, 2048, seed);
+        let mut dbs = Vec::new();
+        for block in 0..cfg.n_layers {
+            for g in ALL_GROUPS {
+                let stats = calib.sigma(&g.t_name(block));
+                let sigma_small = stats.sigma();
+                let ws: Vec<Mat> = g
+                    .linears()
+                    .iter()
+                    .map(|lin| zoo.model.params[&format!("blocks.{block}.{lin}")].clone())
+                    .collect();
+                let t = cat_block(&sigma_small, &sum_wtw(&ws), 128, seed);
+                // Score on the FULL calibration sample (held-out wrt the
+                // small draw) for an honest estimate.
+                let full = zoo.calib.sigma(&g.t_name(block)).sample();
+                let xt = t.apply_acts(&full);
+                for w in &ws {
+                    dbs.push(db(measured_sqnr_joint(&xt, &t.fuse_weights(w), act, wq)));
+                }
+            }
+        }
+        rows.push(vec![format!("{n_seqs} seqs"), format!("{:.2}", mean_std(&dbs).0)]);
+    }
+    print_table(&["calibration", "mean joint SQNR dB"], &rows);
+
+    // ---- 3. RHT seed sensitivity ---------------------------------------
+    println!("\n== Ablation 3: randomized-Hadamard seed spread (QuaRot) ==");
+    let mut per_seed = Vec::new();
+    for s in 0..16u64 {
+        let (sq, _) = mean_sqnr(&|g: &G| {
+            let ws_ref: Vec<&Mat> = g.ws.iter().collect();
+            group_transform(
+                TransformKind::QuaRot,
+                &g.x,
+                &g.sigma_x,
+                &ws_ref,
+                act,
+                wq,
+                128,
+                s,
+            )
+        });
+        per_seed.push(sq);
+    }
+    let (m, sd) = mean_std(&per_seed);
+    let lo = per_seed.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = per_seed.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "16 seeds: mean {m:.2} dB, std {sd:.2} dB, range [{lo:.2}, {hi:.2}] dB\n\
+         (nonzero spread is SpinQuant's motivation for rotation selection)"
+    );
+
+    // ---- 4. permutation (paper §7 future work) -------------------------
+    println!("\n== Ablation 4: channel permutation + block CAT ==");
+    let mut rows = Vec::new();
+    for k in [8usize, 32] {
+        let (plain, _) = mean_sqnr(&|g: &G| {
+            cat_block(&g.sigma_x, &sum_wtw(&g.ws), k, seed)
+        });
+        let (perm, _) = mean_sqnr(&|g: &G| {
+            permuted_cat_block(&g.sigma_x, &sum_wtw(&g.ws), k, seed)
+        });
+        // Alignment-only comparison too.
+        let mut a_plain = Vec::new();
+        let mut a_perm = Vec::new();
+        for g in &groups {
+            let tp = cat_block(&g.sigma_x, &sum_wtw(&g.ws), k, seed);
+            let tq = permuted_cat_block(&g.sigma_x, &sum_wtw(&g.ws), k, seed);
+            let w_all = vstack(&g.ws);
+            a_plain.push(db(alignment_data(&tp.apply_acts(&g.x), &tp.fuse_weights(&w_all))));
+            a_perm.push(db(alignment_data(&tq.apply_acts(&g.x), &tq.fuse_weights(&w_all))));
+        }
+        rows.push(vec![
+            format!("k={k}"),
+            format!("{plain:.2}"),
+            format!("{perm:.2}"),
+            format!("{:.2}", mean_std(&a_plain).0),
+            format!("{:.2}", mean_std(&a_perm).0),
+        ]);
+    }
+    print_table(
+        &["block", "SQNR plain dB", "SQNR perm dB", "align plain dB", "align perm dB"],
+        &rows,
+    );
+
+    // ---- 5. dynamic vs static activation ranges ------------------------
+    println!("\n== Ablation 5: dynamic per-token vs static activation ranges (A4) ==");
+    let mut rows = Vec::new();
+    for (label, pct) in [("static minmax", 1.0), ("static p99.9", 0.999), ("static p99", 0.99)] {
+        let mut dbs = Vec::new();
+        for g in &groups {
+            for w in &g.ws {
+                let (lo, hi) = percentile_range(&g.x, pct);
+                let (xq, _) = quantize_activations_static(&g.x, lo, hi, act.scheme);
+                let wqd = quantize_weights_rtn(w, wq).deq;
+                let y = matmul_a_bt(&g.x, w);
+                let yq = matmul_a_bt(&xq, &wqd);
+                let noise = y.sub(&yq).fro_norm2();
+                dbs.push(db(y.fro_norm2() / noise.max(1e-30)));
+            }
+        }
+        rows.push(vec![label.to_string(), format!("{:.2}", mean_std(&dbs).0)]);
+    }
+    let mut dyn_dbs = Vec::new();
+    for g in &groups {
+        for w in &g.ws {
+            dyn_dbs.push(db(measured_sqnr_joint(&g.x, w, act, wq)));
+        }
+    }
+    rows.push(vec!["dynamic per-token".into(), format!("{:.2}", mean_std(&dyn_dbs).0)]);
+    print_table(&["activation ranges", "mean joint SQNR dB"], &rows);
+    Ok(())
+}
+
+fn sum_wtw(ws: &[Mat]) -> Mat {
+    let d = ws[0].cols();
+    let mut s = Mat::zeros(d, d);
+    for w in ws {
+        s = s.add(&crate::linalg::matmul_at_b(w, w));
+    }
+    s
+}
+
+fn vstack(ws: &[Mat]) -> Mat {
+    let cols = ws[0].cols();
+    let rows: usize = ws.iter().map(|w| w.rows()).sum();
+    let mut out = Mat::zeros(rows, cols);
+    let mut r = 0;
+    for w in ws {
+        out.set_block(r, 0, w);
+        r += w.rows();
+    }
+    out
+}

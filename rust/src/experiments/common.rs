@@ -1,0 +1,103 @@
+//! Shared experiment plumbing: load the model zoo, calibrate, and expose
+//! per-linear-layer (x, W) pairs.
+
+use crate::calib::{calibrate, CalibStats, Corpus};
+use crate::linalg::Mat;
+use crate::model::{NativeModel, ALL_GROUPS};
+use crate::runtime::Manifest;
+use anyhow::Result;
+
+/// Number of calibration sequences (matches the paper's 128).
+pub const CALIB_SEQS: usize = 128;
+/// Row budget retained per group for data-driven objectives.
+pub const CALIB_SAMPLE_ROWS: usize = 2048;
+
+/// A loaded + calibrated model.
+pub struct ZooModel {
+    pub model: NativeModel,
+    pub calib: CalibStats,
+}
+
+/// One linear layer's analysis bundle.
+pub struct LayerData {
+    /// e.g. `small.blocks.2.down_proj`.
+    pub name: String,
+    /// Short layer kind, e.g. `down_proj`.
+    pub kind: String,
+    /// Group input sample (`tokens × d`, pre-transform).
+    pub x: Mat,
+    /// `Σ_x` of the group input.
+    pub sigma_x: Mat,
+    /// The weight (`out × d`).
+    pub w: Mat,
+}
+
+/// Load one model and run the calibration pass.
+pub fn load_zoo(manifest: &Manifest, name: &str, seed: u64) -> Result<ZooModel> {
+    let entry = manifest.model(name)?;
+    let model = NativeModel::from_catw(entry.config.clone(), &entry.weights)?;
+    let corpus = Corpus::load(&manifest.corpus_train)?;
+    let seqs = corpus.sample_sequences(CALIB_SEQS, entry.config.seq, seed ^ 0xCA11B);
+    let calib = calibrate(&model, &seqs, CALIB_SAMPLE_ROWS, seed);
+    Ok(ZooModel { model, calib })
+}
+
+/// Flatten a calibrated model into per-linear-layer analysis bundles.
+pub fn load_layers(zoo: &ZooModel) -> Vec<LayerData> {
+    let cfg = &zoo.model.cfg;
+    let mut out = Vec::new();
+    for block in 0..cfg.n_layers {
+        for g in ALL_GROUPS {
+            let stats = zoo.calib.sigma(&g.t_name(block));
+            let x = stats.sample();
+            let sigma_x = stats.sigma();
+            for lin in g.linears() {
+                let pname = format!("blocks.{block}.{lin}");
+                out.push(LayerData {
+                    name: format!("{}.{}", cfg.name, pname),
+                    kind: lin.to_string(),
+                    x: x.clone(),
+                    sigma_x: sigma_x.clone(),
+                    w: zoo.model.params[&pname].clone(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Markdown-ish table printer used by every generator.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        println!("{s}");
+    };
+    line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for r in rows {
+        line(r);
+    }
+}
+
+/// mean ± std over replicate values.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    if values.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}

@@ -1,0 +1,108 @@
+//! Figure 2: empirical verification of the Theorem 2.4 approximation.
+//!
+//! For every linear layer of the loaded models, at W4A4 / W4A8 / W8A8,
+//! with and without a Hadamard transform, plot (print) measured joint
+//! SQNR against the closed-form approximation. The paper's claim: the two
+//! agree for almost all layers in the 5–50 dB band.
+
+use super::common::{load_layers, load_zoo, print_table};
+use crate::linalg::{hadamard_matrix, is_pow2, random_orthogonal, Rng};
+use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+use crate::runtime::Manifest;
+use crate::sqnr::{approx_sqnr_joint, db, measured_sqnr_joint};
+use crate::transforms::Transform;
+use anyhow::Result;
+
+/// One scatter point.
+#[derive(Clone, Debug)]
+pub struct Fig2Point {
+    pub layer: String,
+    pub bits: (u32, u32),
+    pub hadamard: bool,
+    pub measured_db: f64,
+    pub approx_db: f64,
+}
+
+pub fn run_fig2(manifest: &Manifest, models: &[&str], seed: u64) -> Result<Vec<Fig2Point>> {
+    let mut points = Vec::new();
+    for mname in models {
+        let zoo = load_zoo(manifest, mname, seed)?;
+        let layers = load_layers(&zoo);
+        for layer in &layers {
+            let d = layer.x.cols();
+            let h = if is_pow2(d) {
+                Transform::orthogonal("H", hadamard_matrix(d))
+            } else {
+                let mut rng = Rng::new(seed);
+                Transform::orthogonal("R", random_orthogonal(d, &mut rng))
+            };
+            for &(ba, bw) in &[(4u32, 4u32), (8, 4), (8, 8)] {
+                let act = ActQuantCfg { scheme: QScheme::asym(ba), clip_ratio: 1.0 };
+                let wq = WeightQuantCfg::minmax(bw);
+                for (hadamard, x, w) in [
+                    (false, layer.x.clone(), layer.w.clone()),
+                    (true, h.apply_acts(&layer.x), h.fuse_weights(&layer.w)),
+                ] {
+                    points.push(Fig2Point {
+                        layer: layer.name.clone(),
+                        bits: (bw, ba),
+                        hadamard,
+                        measured_db: db(measured_sqnr_joint(&x, &w, act, wq)),
+                        approx_db: db(approx_sqnr_joint(&x, &w, act, wq)),
+                    });
+                }
+            }
+        }
+    }
+    print_fig2(&points);
+    Ok(points)
+}
+
+fn print_fig2(points: &[Fig2Point]) {
+    println!("\n== Figure 2: Theorem 2.4 approximation vs measured SQNR ==");
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.layer.clone(),
+                format!("W{}A{}", p.bits.0, p.bits.1),
+                if p.hadamard { "yes" } else { "no" }.into(),
+                format!("{:.2}", p.measured_db),
+                format!("{:.2}", p.approx_db),
+                format!("{:+.2}", p.approx_db - p.measured_db),
+            ]
+        })
+        .collect();
+    print_table(
+        &["layer", "bits", "hadamard", "measured dB", "approx dB", "err dB"],
+        &rows,
+    );
+    // The figure's headline statistic.
+    let in_band: Vec<&Fig2Point> =
+        points.iter().filter(|p| p.measured_db > 5.0 && p.measured_db < 50.0).collect();
+    let mean_abs: f64 = in_band
+        .iter()
+        .map(|p| (p.approx_db - p.measured_db).abs())
+        .sum::<f64>()
+        / in_band.len().max(1) as f64;
+    let within3 = in_band
+        .iter()
+        .filter(|p| (p.approx_db - p.measured_db).abs() < 3.0)
+        .count();
+    println!(
+        "\n[fig2] {} points in 5–50 dB band: mean |err| = {:.2} dB, {}/{} within 3 dB",
+        in_band.len(),
+        mean_abs,
+        within3,
+        in_band.len()
+    );
+}
+
+/// Aggregate accuracy statistic for tests/benches.
+#[allow(dead_code)]
+pub fn fig2_mean_abs_err(points: &[Fig2Point]) -> f64 {
+    let in_band: Vec<&Fig2Point> =
+        points.iter().filter(|p| p.measured_db > 5.0 && p.measured_db < 50.0).collect();
+    in_band.iter().map(|p| (p.approx_db - p.measured_db).abs()).sum::<f64>()
+        / in_band.len().max(1) as f64
+}

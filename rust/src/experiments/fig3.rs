@@ -1,0 +1,63 @@
+//! Figure 3: the activation-SQNR × weight-SQNR plane with iso-joint-SQNR
+//! structure.
+//!
+//! For each layer of one model, measure `SQNR(Wx̃)` (activation-only) and
+//! `SQNR(W̃x)` (weight-only) at bit widths {4, 6, 8} each, and report how
+//! the joint SQNR follows the harmonic sum — including the paper's
+//! observation that raising the bit width of the *better* side barely
+//! moves the joint (the `r(x,W) < 1` regime).
+
+use super::common::{load_layers, load_zoo, mean_std, print_table};
+use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+use crate::runtime::Manifest;
+use crate::sqnr::{db, measured_sqnr_act_only, measured_sqnr_joint, measured_sqnr_weight_only};
+use anyhow::Result;
+
+pub fn run_fig3(manifest: &Manifest, model: &str, seed: u64) -> Result<()> {
+    let zoo = load_zoo(manifest, model, seed)?;
+    let layers = load_layers(&zoo);
+    println!("\n== Figure 3: activation vs weight SQNR plane ({model}) ==");
+
+    let bit_grid = [4u32, 6, 8];
+    let mut rows = Vec::new();
+    // Per (ba, bw): mean over layers of act-only, weight-only, joint.
+    for &ba in &bit_grid {
+        for &bw in &bit_grid {
+            let act = ActQuantCfg { scheme: QScheme::asym(ba), clip_ratio: 1.0 };
+            let wq = WeightQuantCfg::minmax(bw);
+            let mut a_dbs = Vec::new();
+            let mut w_dbs = Vec::new();
+            let mut j_dbs = Vec::new();
+            for l in &layers {
+                a_dbs.push(db(measured_sqnr_act_only(&l.x, &l.w, act)));
+                w_dbs.push(db(measured_sqnr_weight_only(&l.x, &l.w, wq)));
+                j_dbs.push(db(measured_sqnr_joint(&l.x, &l.w, act, wq)));
+            }
+            let (am, _) = mean_std(&a_dbs);
+            let (wm, _) = mean_std(&w_dbs);
+            let (jm, _) = mean_std(&j_dbs);
+            rows.push(vec![
+                format!("W{bw}A{ba}"),
+                format!("{am:.1}"),
+                format!("{wm:.1}"),
+                format!("{jm:.1}"),
+            ]);
+        }
+    }
+    print_table(&["bits", "act-only dB", "weight-only dB", "joint dB"], &rows);
+
+    // Paper §2.1: +4 weight bits ⇒ ≈ +24 dB horizontal shift.
+    let act = ActQuantCfg { scheme: QScheme::asym(8), clip_ratio: 1.0 };
+    let mut shifts = Vec::new();
+    for l in &layers {
+        let w4 = db(measured_sqnr_weight_only(&l.x, &l.w, WeightQuantCfg::minmax(4)));
+        let w8 = db(measured_sqnr_weight_only(&l.x, &l.w, WeightQuantCfg::minmax(8)));
+        shifts.push(w8 - w4);
+        let _ = act;
+    }
+    let (sm, ss) = mean_std(&shifts);
+    println!(
+        "[fig3] weight-only shift for +4 bits: {sm:.1} ± {ss:.1} dB (paper: ≈24 dB)"
+    );
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Figure 4: concentration distributions of weights and activations under
+//! different transforms, with Normal/Laplace reference levels.
+//!
+//! Expected shape (paper §3): raw activations sit at or below the Laplace
+//! line (heavy tails / outliers); channel scaling improves activation
+//! concentration at the cost of weight concentration; Hadamard and CAT
+//! push both toward the Gaussian reference.
+
+use super::common::{load_zoo, mean_std, print_table};
+use crate::model::ALL_GROUPS;
+use crate::pipeline::group_transform;
+use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+use crate::runtime::Manifest;
+use crate::sqnr::{concentration_act, concentration_weights, db, laplace_concentration, normal_concentration};
+use crate::transforms::TransformKind;
+use anyhow::Result;
+
+/// One (model, group, transform) measurement.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub layer: String,
+    pub transform: TransformKind,
+    pub c_act_db: f64,
+    pub c_w_db: f64,
+    pub normal_ref_db: f64,
+    pub laplace_ref_db: f64,
+}
+
+const KINDS: [TransformKind; 4] = [
+    TransformKind::None,
+    TransformKind::SmoothQuant,
+    TransformKind::QuaRot,
+    TransformKind::CatBlock,
+];
+
+pub fn run_fig4(manifest: &Manifest, models: &[&str], seed: u64) -> Result<Vec<Fig4Row>> {
+    let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+    let wq = WeightQuantCfg::minmax(4);
+    let mut rows = Vec::new();
+    for mname in models {
+        let zoo = load_zoo(manifest, mname, seed)?;
+        let cfg = &zoo.model.cfg;
+        for block in 0..cfg.n_layers {
+            for g in ALL_GROUPS {
+                let stats = zoo.calib.sigma(&g.t_name(block));
+                let x = stats.sample();
+                let sigma_x = stats.sigma();
+                let ws: Vec<&crate::linalg::Mat> = g
+                    .linears()
+                    .iter()
+                    .map(|lin| &zoo.model.params[&format!("blocks.{block}.{lin}")])
+                    .collect();
+                let d = g.dim(cfg);
+                let n_ref = db(normal_concentration(d, act.scheme, 1024, 7));
+                let l_ref = db(laplace_concentration(d, act.scheme, 1024, 7));
+                for kind in KINDS {
+                    let t = group_transform(kind, &x, &sigma_x, &ws, act, wq, 128, seed);
+                    let xt = t.apply_acts(&x);
+                    let mut ca = db(concentration_act(&xt, act));
+                    // Average weight concentration across the group.
+                    let mut cws = Vec::new();
+                    for w in &ws {
+                        cws.push(db(concentration_weights(&t.fuse_weights(w), wq)));
+                    }
+                    if !ca.is_finite() {
+                        ca = 60.0;
+                    }
+                    rows.push(Fig4Row {
+                        layer: format!("{}.{}.{}", cfg.name, block, g.label()),
+                        transform: kind,
+                        c_act_db: ca,
+                        c_w_db: cws.iter().sum::<f64>() / cws.len() as f64,
+                        normal_ref_db: n_ref,
+                        laplace_ref_db: l_ref,
+                    });
+                }
+            }
+        }
+    }
+    print_fig4(&rows);
+    Ok(rows)
+}
+
+fn print_fig4(rows: &[Fig4Row]) {
+    println!("\n== Figure 4: concentration under transforms (dB; higher = better) ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layer.clone(),
+                r.transform.label().into(),
+                format!("{:.1}", r.c_act_db),
+                format!("{:.1}", r.c_w_db),
+                format!("{:.1}", r.normal_ref_db),
+                format!("{:.1}", r.laplace_ref_db),
+            ]
+        })
+        .collect();
+    print_table(
+        &["layer group", "transform", "C(x) dB", "C(W) dB", "Normal ref", "Laplace ref"],
+        &table,
+    );
+    println!("\n[fig4] per-transform means:");
+    for kind in KINDS {
+        let sel: Vec<&Fig4Row> = rows.iter().filter(|r| r.transform == kind).collect();
+        let (ca, _) = mean_std(&sel.iter().map(|r| r.c_act_db).collect::<Vec<_>>());
+        let (cw, _) = mean_std(&sel.iter().map(|r| r.c_w_db).collect::<Vec<_>>());
+        println!("  {:<22} C(x) {:>6.1} dB   C(W) {:>6.1} dB", kind.label(), ca, cw);
+    }
+}

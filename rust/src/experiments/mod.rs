@@ -1,0 +1,23 @@
+//! Experiment generators: one module per paper figure/table.
+//!
+//! Each generator prints the figure's series/rows to stdout (the format
+//! EXPERIMENTS.md records) and returns structured data so the criterion-
+//! style benches in `benches/` can re-run them programmatically.
+
+mod ablations;
+mod common;
+mod fig2;
+mod fig3;
+mod fig4;
+mod fig5;
+mod fig6;
+mod table1;
+
+pub use ablations::run_ablations;
+pub use common::{load_layers, load_zoo, LayerData, ZooModel};
+pub use fig2::{run_fig2, Fig2Point};
+pub use fig3::run_fig3;
+pub use fig4::{run_fig4, Fig4Row};
+pub use fig5::{run_fig5, Fig5Row};
+pub use fig6::{run_fig6, Fig6Row};
+pub use table1::{run_table1, Table1Cell, Table1Opts};

@@ -1,0 +1,161 @@
+//! Table 1: end-to-end W4A4 comparison — perplexity + zero-shot accuracy,
+//! models × {RTN, GPTQ} × transforms, mean ± std over seeds.
+//!
+//! Each cell runs the full pipeline (calibrate → transform → quantize)
+//! and evaluates through the AOT-compiled PJRT graphs — the same
+//! serving-path executables, so the numbers measure what a deployment
+//! would see.
+
+use super::common::{load_zoo, mean_std, print_table};
+use crate::calib::Corpus;
+use crate::eval::{perplexity, zero_shot_suite, PjrtLogits, SeqLogits};
+use crate::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use crate::runtime::{Manifest, PjrtEngine};
+use crate::transforms::TransformKind;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// One Table 1 cell (already aggregated over seeds).
+#[derive(Clone, Debug)]
+pub struct Table1Cell {
+    pub model: String,
+    pub quantizer: &'static str,
+    pub transform: String,
+    pub ppl_mean: f64,
+    pub ppl_std: f64,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+}
+
+/// Grid options.
+#[derive(Clone, Debug)]
+pub struct Table1Opts {
+    pub models: Vec<String>,
+    pub seeds: u64,
+    pub eval_windows: usize,
+    pub task_items: usize,
+    pub quantizers: Vec<WeightQuantizer>,
+}
+
+impl Default for Table1Opts {
+    fn default() -> Self {
+        Table1Opts {
+            models: vec!["tiny".into(), "small".into(), "base".into()],
+            seeds: 4,
+            eval_windows: 24,
+            task_items: 12,
+            quantizers: vec![WeightQuantizer::Rtn, WeightQuantizer::Gptq],
+        }
+    }
+}
+
+impl Table1Opts {
+    pub fn quick() -> Table1Opts {
+        Table1Opts {
+            models: vec!["tiny".into(), "small".into()],
+            seeds: 2,
+            eval_windows: 8,
+            task_items: 6,
+            quantizers: vec![WeightQuantizer::Rtn],
+        }
+    }
+}
+
+pub fn run_table1(manifest: &Manifest, opts: &Table1Opts) -> Result<Vec<Table1Cell>> {
+    let engine = Rc::new(PjrtEngine::new(manifest.clone())?);
+    let eval_corpus = Corpus::load(&manifest.corpus_eval)?;
+    let mut cells = Vec::new();
+
+    for mname in &opts.models {
+        let entry = manifest.model(mname)?;
+        let windows = eval_corpus.eval_windows(opts.eval_windows, entry.config.seq);
+        eprintln!("[table1] model {mname}: FP reference ...");
+
+        // FP row (seed-independent).
+        let zoo0 = load_zoo(manifest, mname, 0)?;
+        let fp_engine = PjrtLogits::fp(engine.clone(), mname, &zoo0.model.params)?;
+        let fp_ppl = perplexity(&fp_engine, &windows)?;
+        let fp_acc = mean_acc(&fp_engine, &eval_corpus, opts.task_items, 0)?;
+        cells.push(Table1Cell {
+            model: mname.clone(),
+            quantizer: "—",
+            transform: "FP".into(),
+            ppl_mean: fp_ppl,
+            ppl_std: 0.0,
+            acc_mean: fp_acc,
+            acc_std: 0.0,
+        });
+
+        for &wq in &opts.quantizers {
+            for &kind in TransformKind::table1_rows() {
+                let mut ppls = Vec::new();
+                let mut accs = Vec::new();
+                for seed in 0..opts.seeds {
+                    // Seed affects calibration draw + rotation seeds.
+                    let zoo = if seed == 0 {
+                        None // reuse zoo0 below
+                    } else {
+                        Some(load_zoo(manifest, mname, seed)?)
+                    };
+                    let z = zoo.as_ref().unwrap_or(&zoo0);
+                    let (qc, _rep) = build_quant_config(
+                        &z.model,
+                        &z.calib,
+                        PipelineCfg::w4a4(kind, wq, seed),
+                    );
+                    let qeng =
+                        PjrtLogits::quant(engine.clone(), mname, &z.model.params, &qc, 4)?;
+                    ppls.push(perplexity(&qeng, &windows)?);
+                    accs.push(mean_acc(&qeng, &eval_corpus, opts.task_items, seed)?);
+                }
+                let (pm, ps) = mean_std(&ppls);
+                let (am, asd) = mean_std(&accs);
+                eprintln!(
+                    "[table1] {mname} {} {}: ppl {pm:.2}±{ps:.2} acc {am:.1}±{asd:.1}",
+                    wq.label(),
+                    kind.label()
+                );
+                cells.push(Table1Cell {
+                    model: mname.clone(),
+                    quantizer: wq.label(),
+                    transform: kind.label().into(),
+                    ppl_mean: pm,
+                    ppl_std: ps,
+                    acc_mean: am,
+                    acc_std: asd,
+                });
+            }
+        }
+    }
+    print_table1(&cells);
+    Ok(cells)
+}
+
+/// Average zero-shot accuracy (%) across the six tasks — the same items
+/// for every config at a given seed (paired, like a fixed benchmark).
+fn mean_acc(
+    engine: &dyn SeqLogits,
+    corpus: &Corpus,
+    items: usize,
+    seed: u64,
+) -> Result<f64> {
+    let res = zero_shot_suite(engine, corpus, items, seed ^ 0x7A5)?;
+    Ok(100.0 * res.iter().map(|r| r.accuracy).sum::<f64>() / res.len() as f64)
+}
+
+fn print_table1(cells: &[Table1Cell]) {
+    println!("\n== Table 1: W4A4 perplexity (↓) and 0-shot accuracy (↑) ==");
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.model.clone(),
+                c.quantizer.to_string(),
+                c.transform.clone(),
+                format!("{:.2}±{:.2}", c.ppl_mean, c.ppl_std),
+                format!("{:.1}±{:.1}", c.acc_mean, c.acc_std),
+            ]
+        })
+        .collect();
+    print_table(&["model", "wquant", "transform", "ppl", "0-shot avg %"], &rows);
+}

@@ -1,0 +1,36 @@
+//! # catquant
+//!
+//! A production-oriented reproduction of *"Dissecting Quantization Error:
+//! A Concentration-Alignment Perspective"* (Federici et al., 2026).
+//!
+//! The crate implements the paper's full stack as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the quantization *coordinator*: the
+//!   post-training-quantization pipeline (calibrate → transform → quantize →
+//!   evaluate), a batched serving loop, and every substrate the paper
+//!   depends on (dense linear algebra, uniform quantizers, GPTQ, transform
+//!   zoo, a Llama-style transformer, evaluation harnesses).
+//! * **Layer 2** — a JAX transformer (`python/compile/model.py`) lowered
+//!   once to HLO text and executed from Rust through PJRT
+//!   ([`runtime::PjrtEngine`]). Weights are runtime arguments, so the Rust
+//!   pipeline's products (fused transforms, fake-quantized weights) feed the
+//!   compiled graph without recompilation.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the fused
+//!   transform → dynamic-quantize → matmul hot path, verified against a
+//!   pure-`jnp` oracle at build time.
+//!
+//! The scientific core is [`sqnr`] (the paper's Theorem 2.4 decomposition
+//! into *concentration* and *alignment*) and [`transforms`] (SmoothQuant
+//! scaling, Hadamard, rotations, and the paper's CAT family).
+
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod sqnr;
+pub mod transforms;

@@ -1,0 +1,188 @@
+//! Cholesky decomposition of symmetric positive-definite matrices.
+//!
+//! Used by GPTQ (inverse-Hessian factor), SPD inversion, and the
+//! transform builders' numerical safeguards.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Returns `None` if a non-positive pivot is
+    /// encountered (matrix not positive definite to working precision).
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert!(a.is_square(), "Cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[(i, i)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Factor with escalating diagonal damping until the matrix becomes
+    /// positive definite. Returns the factor and the damping actually used.
+    /// This mirrors GPTQ's `percdamp` treatment of rank-deficient Hessians.
+    pub fn new_damped(a: &Mat, base_damp: f64) -> (Cholesky, f64) {
+        let n = a.rows();
+        let mean_diag = (0..n).map(|i| a[(i, i)]).sum::<f64>() / n as f64;
+        let mut damp = base_damp * mean_diag.max(1e-12);
+        loop {
+            let mut m = a.clone();
+            m.add_diag(damp);
+            if let Some(c) = Cholesky::new(&m) {
+                return (c, damp);
+            }
+            damp *= 10.0;
+            assert!(damp.is_finite(), "Cholesky damping diverged");
+        }
+    }
+
+    /// The lower-triangular factor `L`.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        // Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Full inverse `A⁻¹` (column-by-column solve).
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = x[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// Upper-triangular Cholesky factor of the *inverse*, `U` with
+    /// `A⁻¹ = Uᵀ U` — the factor GPTQ iterates over.
+    pub fn inverse_upper_factor(&self) -> Mat {
+        // A⁻¹ = L⁻ᵀ L⁻¹; its upper Cholesky-like factor used by GPTQ is
+        // obtained from the Cholesky of the explicit inverse.
+        let inv = self.inverse();
+        let c = Cholesky::new_damped(&inv, 1e-12).0;
+        c.l.transpose()
+    }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b, Rng};
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n + 4, n, |_, _| rng.normal());
+        let mut s = matmul_at_b(&g, &g);
+        s.add_diag(0.5);
+        s
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(16, 1);
+        let c = Cholesky::new(&a).unwrap();
+        let rec = matmul(c.l(), &c.l().transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(12, 2);
+        let c = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let x = c.solve(&b);
+        let ax = crate::linalg::matvec(&a, &x);
+        for i in 0..12 {
+            assert!((ax[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(10, 3);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Mat::eye(10)) < 1e-8);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = Mat::eye(4);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn damped_recovers_semidefinite() {
+        // Rank-1 PSD matrix: plain Cholesky fails, damped succeeds.
+        let v = [1.0, 2.0, 3.0];
+        let a = Mat::from_fn(3, 3, |i, j| v[i] * v[j]);
+        assert!(Cholesky::new(&a).is_none());
+        let (c, damp) = Cholesky::new_damped(&a, 0.01);
+        assert!(damp > 0.0);
+        let rec = matmul(c.l(), &c.l().transpose());
+        // Reconstruction is within the damping.
+        assert!(rec.max_abs_diff(&a) < damp * 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn inverse_upper_factor_reconstructs_inverse() {
+        let a = random_spd(8, 5);
+        let c = Cholesky::new(&a).unwrap();
+        let u = c.inverse_upper_factor();
+        let rec = matmul_at_b(&u, &u); // Uᵀ U
+        assert!(rec.max_abs_diff(&c.inverse()) < 1e-7);
+    }
+}

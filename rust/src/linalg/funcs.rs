@@ -1,0 +1,150 @@
+//! Matrix functions on symmetric positive-(semi)definite matrices, and the
+//! matrix geometric mean that defines the paper's alignment-optimal
+//! transform.
+//!
+//! All functions go through the spectral decomposition ([`super::eigh`]),
+//! with eigenvalues clamped at a relative floor so that nearly-singular
+//! covariance estimates (e.g. from a small calibration set) stay usable —
+//! the same role the paper's damping plays.
+
+use super::{eigh, matmul, Mat};
+
+/// Relative eigenvalue floor for SPD matrix functions.
+const EIG_FLOOR_REL: f64 = 1e-12;
+
+/// `A^p` for symmetric PSD `A` via the spectral decomposition, clamping
+/// eigenvalues at `max_eig · EIG_FLOOR_REL`.
+pub fn spd_pow(a: &Mat, p: f64) -> Mat {
+    let e = eigh(a);
+    let max_eig = e.values.iter().fold(0.0_f64, |m, &v| m.max(v.abs())).max(1e-300);
+    let floor = max_eig * EIG_FLOOR_REL;
+    let powd: Vec<f64> = e.values.iter().map(|&v| v.max(floor).powf(p)).collect();
+    // V diag(λ^p) Vᵀ
+    let n = a.rows();
+    let mut vl = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            vl[(i, j)] = e.vectors[(i, j)] * powd[j];
+        }
+    }
+    matmul(&vl, &e.vectors.transpose())
+}
+
+/// Symmetric PSD square root `A^{1/2}`.
+pub fn spd_sqrt(a: &Mat) -> Mat {
+    spd_pow(a, 0.5)
+}
+
+/// Symmetric PSD inverse square root `A^{-1/2}`.
+pub fn spd_inv_sqrt(a: &Mat) -> Mat {
+    spd_pow(a, -0.5)
+}
+
+/// Symmetric PSD inverse `A^{-1}` (spectral, clamped).
+pub fn spd_inv(a: &Mat) -> Mat {
+    spd_pow(a, -1.0)
+}
+
+/// Matrix geometric mean `A # B = A^{1/2} (A^{-1/2} B A^{-1/2})^{1/2} A^{1/2}`
+/// (Pusz & Woronowicz, 1975).
+///
+/// This is the closed form behind the paper's eq. 7: the alignment-optimal
+/// transform is `M̂ = (Σ_w # Σ_x⁻¹)^{1/2}`. Key properties (tested below):
+/// `A # A = A`, `A # B = B # A`, and for commuting operands
+/// `A # B = (AB)^{1/2}`.
+pub fn geometric_mean(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "geometric_mean shape mismatch");
+    let a_half = spd_sqrt(a);
+    let a_ihalf = spd_inv_sqrt(a);
+    let mut inner = matmul(&matmul(&a_ihalf, b), &a_ihalf);
+    inner.symmetrize();
+    let inner_half = spd_sqrt(&inner);
+    let mut out = matmul(&matmul(&a_half, &inner_half), &a_half);
+    out.symmetrize();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_at_b, Rng};
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n + 8, n, |_, _| rng.normal());
+        let mut s = matmul_at_b(&g, &g).scale(1.0 / (n + 8) as f64);
+        s.add_diag(0.05);
+        s
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let a = random_spd(20, 1);
+        let r = spd_sqrt(&a);
+        assert!(matmul(&r, &r).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn inv_sqrt_whitens() {
+        let a = random_spd(16, 2);
+        let w = spd_inv_sqrt(&a);
+        let white = matmul(&matmul(&w, &a), &w);
+        assert!(white.max_abs_diff(&Mat::eye(16)) < 1e-8);
+    }
+
+    #[test]
+    fn inv_is_inverse() {
+        let a = random_spd(14, 3);
+        assert!(matmul(&a, &spd_inv(&a)).max_abs_diff(&Mat::eye(14)) < 1e-8);
+    }
+
+    #[test]
+    fn pow_composes() {
+        let a = random_spd(10, 4);
+        let p1 = spd_pow(&a, 0.3);
+        let p2 = spd_pow(&a, 0.7);
+        assert!(matmul(&p1, &p2).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn geomean_idempotent() {
+        let a = random_spd(12, 5);
+        assert!(geometric_mean(&a, &a).max_abs_diff(&a) < 1e-7);
+    }
+
+    #[test]
+    fn geomean_symmetric_in_arguments() {
+        let a = random_spd(10, 6);
+        let b = random_spd(10, 7);
+        let ab = geometric_mean(&a, &b);
+        let ba = geometric_mean(&b, &a);
+        assert!(ab.max_abs_diff(&ba) < 1e-7, "diff {}", ab.max_abs_diff(&ba));
+    }
+
+    #[test]
+    fn geomean_of_identity_is_sqrt() {
+        let a = random_spd(9, 8);
+        let g = geometric_mean(&a, &Mat::eye(9));
+        assert!(g.max_abs_diff(&spd_sqrt(&a)) < 1e-8);
+    }
+
+    #[test]
+    fn geomean_diagonal_case() {
+        // For diagonal matrices the geometric mean is elementwise sqrt(ab).
+        let a = Mat::diag(&[1.0, 4.0, 9.0]);
+        let b = Mat::diag(&[4.0, 1.0, 16.0]);
+        let g = geometric_mean(&a, &b);
+        let want = Mat::diag(&[2.0, 2.0, 12.0]);
+        assert!(g.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn geomean_satisfies_riccati() {
+        // G = A # B is the unique SPD solution of G A⁻¹ G = B.
+        let a = random_spd(8, 9);
+        let b = random_spd(8, 10);
+        let g = geometric_mean(&a, &b);
+        let lhs = matmul(&matmul(&g, &spd_inv(&a)), &g);
+        assert!(lhs.max_abs_diff(&b) < 1e-6, "diff {}", lhs.max_abs_diff(&b));
+    }
+}

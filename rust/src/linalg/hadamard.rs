@@ -1,0 +1,152 @@
+//! Walsh–Hadamard transforms.
+//!
+//! The paper (following QuaRot / QuIP#) uses Hadamard rotations to spread
+//! outlier channels: `H/√d` is orthogonal, so it leaves alignment invariant
+//! (paper eq. 4) while pushing per-channel distributions toward Normal by
+//! the central limit theorem (paper §3).
+//!
+//! We provide the `O(d log d)` in-place fast transform (the form the L1
+//! Pallas kernel mirrors) and dense matrix constructors for fusing into
+//! weights. Dimensions must be powers of two — the model zoo is designed
+//! that way (see DESIGN.md §3).
+
+use super::{Mat, Rng};
+
+/// `true` if `n` is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// In-place fast Walsh–Hadamard transform, normalized by `1/√n` so the
+/// overall operator is orthogonal. `data.len()` must be a power of two.
+pub fn fwht_inplace(data: &mut [f64]) {
+    let n = data.len();
+    assert!(is_pow2(n), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = data[j];
+                let y = data[j + h];
+                data[j] = x + y;
+                data[j + h] = x - y;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    for v in data.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Dense normalized Hadamard matrix `H/√n` (Sylvester construction).
+pub fn hadamard_matrix(n: usize) -> Mat {
+    assert!(is_pow2(n), "Hadamard size must be a power of two, got {n}");
+    let mut h = Mat::zeros(n, n);
+    h[(0, 0)] = 1.0;
+    let mut size = 1;
+    while size < n {
+        for i in 0..size {
+            for j in 0..size {
+                let v = h[(i, j)];
+                h[(i, j + size)] = v;
+                h[(i + size, j)] = v;
+                h[(i + size, j + size)] = -v;
+            }
+        }
+        size *= 2;
+    }
+    h.scale(1.0 / (n as f64).sqrt())
+}
+
+/// Randomized Hadamard: `H · diag(s)` with random signs `s ∈ {±1}ⁿ`
+/// (the RHT of QuaRot; different seeds give different rotations, which is
+/// what SpinQuant's seed sensitivity is about).
+pub fn randomized_hadamard(n: usize, rng: &mut Rng) -> Mat {
+    let h = hadamard_matrix(n);
+    let signs: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    // H · diag(s): scale columns.
+    Mat::from_fn(n, n, |i, j| h[(i, j)] * signs[j])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_at_b, matvec};
+
+    #[test]
+    fn fwht_matches_dense() {
+        for n in [2usize, 4, 8, 32, 128] {
+            let h = hadamard_matrix(n);
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+            let dense = matvec(&h, &x);
+            let mut fast = x.clone();
+            fwht_inplace(&mut fast);
+            for i in 0..n {
+                assert!((dense[i] - fast[i]).abs() < 1e-10, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        for n in [2usize, 16, 64] {
+            let h = hadamard_matrix(n);
+            let hth = matmul_at_b(&h, &h);
+            assert!(hth.max_abs_diff(&Mat::eye(n)) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        // Normalized FWHT is its own inverse.
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        fwht_inplace(&mut y);
+        for i in 0..n {
+            assert!((x[i] - y[i]).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn randomized_hadamard_orthogonal() {
+        let mut rng = Rng::new(99);
+        let q = randomized_hadamard(32, &mut rng);
+        let qtq = matmul_at_b(&q, &q);
+        assert!(qtq.max_abs_diff(&Mat::eye(32)) < 1e-11);
+    }
+
+    #[test]
+    fn randomized_hadamard_varies_with_seed() {
+        let a = randomized_hadamard(16, &mut Rng::new(1));
+        let b = randomized_hadamard(16, &mut Rng::new(2));
+        assert!(a.max_abs_diff(&b) > 0.1);
+    }
+
+    #[test]
+    fn fwht_spreads_spike() {
+        // A single spike becomes perfectly flat — the outlier-spreading
+        // mechanism the paper attributes to Hadamard transforms.
+        let n = 128;
+        let mut x = vec![0.0; n];
+        x[17] = 1.0;
+        fwht_inplace(&mut x);
+        let expect = 1.0 / (n as f64).sqrt();
+        for v in &x {
+            assert!((v.abs() - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_panics() {
+        let mut x = vec![0.0; 24];
+        fwht_inplace(&mut x);
+    }
+}

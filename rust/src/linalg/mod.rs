@@ -1,0 +1,31 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the paper's math needs, implemented from scratch:
+//! a dense row-major matrix type, blocked matrix multiplication, Cholesky,
+//! a cyclic-Jacobi symmetric eigendecomposition, SPD matrix functions
+//! (square root, inverse square root, powers), the **matrix geometric
+//! mean** `A # B = A^{1/2} (A^{-1/2} B A^{-1/2})^{1/2} A^{1/2}`
+//! (Pusz & Woronowicz, 1975) that defines the paper's alignment-optimal
+//! transform (eq. 7), fast Walsh–Hadamard transforms, random orthogonal
+//! matrices, and a deterministic PRNG.
+//!
+//! Analysis math runs in `f64`; the model substrate uses `f32` tensors
+//! (see [`crate::model::tensor`]).
+
+mod chol;
+mod eigen;
+mod funcs;
+mod hadamard;
+mod mat;
+mod matmul;
+mod orthogonal;
+mod rng;
+
+pub use chol::Cholesky;
+pub use eigen::{eigh, Eigh};
+pub use funcs::{geometric_mean, spd_inv, spd_inv_sqrt, spd_pow, spd_sqrt};
+pub use hadamard::{fwht_inplace, hadamard_matrix, is_pow2, randomized_hadamard};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matvec};
+pub use orthogonal::random_orthogonal;
+pub use rng::Rng;

@@ -1,0 +1,121 @@
+//! Random orthogonal matrices.
+//!
+//! Haar-distributed rotations via QR (Householder) of a Gaussian matrix
+//! with the sign correction of Mezzadri (2007). These are the "rotation"
+//! transforms of QuaRot/SpinQuant in their unstructured form; the paper
+//! proves they cannot change alignment (eq. 4), which our property tests
+//! verify numerically.
+
+use super::{Mat, Rng};
+
+/// Haar-random orthogonal `n×n` matrix.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+    // Householder QR, accumulating Q explicitly.
+    let mut q = Mat::eye(n);
+    let mut v = vec![0.0; n];
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..n {
+            norm2 += a[(i, k)] * a[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if a[(k, k)] >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0;
+        for i in k..n {
+            v[i] = a[(i, k)];
+            if i == k {
+                v[i] -= alpha;
+            }
+            vnorm2 += v[i] * v[i];
+        }
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // A ← (I - β v vᵀ) A  (rows k..n, cols k..n)
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..n {
+                dot += v[i] * a[(i, j)];
+            }
+            let f = beta * dot;
+            for i in k..n {
+                a[(i, j)] -= f * v[i];
+            }
+        }
+        // Q ← Q (I - β v vᵀ)  (all rows, cols k..n)
+        for i in 0..n {
+            let mut dot = 0.0;
+            for j in k..n {
+                dot += q[(i, j)] * v[j];
+            }
+            let f = beta * dot;
+            for j in k..n {
+                q[(i, j)] -= f * v[j];
+            }
+        }
+    }
+    // Sign correction: multiply column j of Q by sign(R_jj) so the
+    // distribution is exactly Haar.
+    for j in 0..n {
+        let s = if a[(j, j)] >= 0.0 { 1.0 } else { -1.0 };
+        if s < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b};
+
+    #[test]
+    fn orthogonality() {
+        for n in [3usize, 8, 33, 64] {
+            let mut rng = Rng::new(n as u64);
+            let q = random_orthogonal(n, &mut rng);
+            let qtq = matmul_at_b(&q, &q);
+            assert!(
+                qtq.max_abs_diff(&Mat::eye(n)) < 1e-10,
+                "n={n} diff={}",
+                qtq.max_abs_diff(&Mat::eye(n))
+            );
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Rng::new(7);
+        let q = random_orthogonal(16, &mut rng);
+        let x: Vec<f64> = (0..16).map(|i| (i as f64).sin()).collect();
+        let y = crate::linalg::matvec(&q, &x);
+        let nx: f64 = x.iter().map(|v| v * v).sum();
+        let ny: f64 = y.iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() < 1e-10);
+    }
+
+    #[test]
+    fn different_seeds_give_different_rotations() {
+        let a = random_orthogonal(8, &mut Rng::new(1));
+        let b = random_orthogonal(8, &mut Rng::new(2));
+        assert!(a.max_abs_diff(&b) > 0.1);
+    }
+
+    #[test]
+    fn composition_is_orthogonal() {
+        let mut rng = Rng::new(11);
+        let a = random_orthogonal(12, &mut rng);
+        let b = random_orthogonal(12, &mut rng);
+        let c = matmul(&a, &b);
+        assert!(matmul_at_b(&c, &c).max_abs_diff(&Mat::eye(12)) < 1e-10);
+    }
+}

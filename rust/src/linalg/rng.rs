@@ -1,0 +1,226 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! A small PCG-XSH-RR 64/32 generator (O'Neill, 2014) plus the sampling
+//! helpers the calibration suite needs (normal, Laplace, Student-t for
+//! heavy-tailed activations). No external dependencies; fully
+//! reproducible across platforms for a given seed — experiment tables in
+//! `EXPERIMENTS.md` cite seeds.
+
+/// Deterministic PCG-based random number generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// Cached second Box–Muller normal sample.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a seed (any value, including 0).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (seed << 1) | 1, spare_normal: None };
+        rng.state = rng.state.wrapping_add(seed ^ 0x9E37_79B9_7F4A_7C15);
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (for per-layer / per-seed replication).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64() ^ tag.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        Rng::new(s)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Random sign, ±1 with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Rejection-free polar-less Box–Muller; guard u1 > 0.
+        let mut u1 = self.uniform();
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Laplace(0, b) sample — the paper's reference heavy-ish tail.
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let u = self.uniform() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Student-t with `nu` degrees of freedom — models the severe
+    /// activation outliers the paper reports (worse-than-Laplace region
+    /// of Figure 4).
+    pub fn student_t(&mut self, nu: usize) -> f64 {
+        debug_assert!(nu >= 1);
+        let z = self.normal();
+        let mut chi2 = 0.0;
+        for _ in 0..nu {
+            let g = self.normal();
+            chi2 += g * g;
+        }
+        z / (chi2 / nu as f64).sqrt()
+    }
+
+    /// Fill a slice with i.i.d. standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let b = 1.5;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let z = r.laplace(b);
+            s2 += z * z;
+        }
+        // Var = 2 b^2
+        let var = s2 / n as f64;
+        assert!((var - 2.0 * b * b).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn student_t_heavier_tail_than_normal() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let thresh = 4.0;
+        let t_exceed = (0..n).filter(|_| r.student_t(3).abs() > thresh).count();
+        let n_exceed = (0..n).filter(|_| r.normal().abs() > thresh).count();
+        assert!(t_exceed > 10 * n_exceed.max(1) / 2, "t {t_exceed} vs n {n_exceed}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(9);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent_of_parent_consumption() {
+        let mut a = Rng::new(1234);
+        let mut f1 = a.fork(1);
+        let x: Vec<u64> = (0..8).map(|_| f1.next_u64()).collect();
+        // Same fork tag from the same parent state reproduces.
+        let mut b = Rng::new(1234);
+        let mut f2 = b.fork(1);
+        let y: Vec<u64> = (0..8).map(|_| f2.next_u64()).collect();
+        assert_eq!(x, y);
+    }
+}

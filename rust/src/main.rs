@@ -1,0 +1,314 @@
+//! catquant CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! catquant info
+//! catquant exp fig2|fig3|fig4|fig5|fig6|table1|ablations [--models tiny,small] [--seed N] [--seeds N] [--quick]
+//! catquant quantize --model small --transform cat [--wquant gptq]
+//! catquant eval --model small --transform cat [--wquant rtn] [--windows N]
+//! catquant serve --model small --mode fp|cat-w4a4 [--requests N] [--max-new N]
+//! ```
+//!
+//! Argument parsing is hand-rolled: the offline vendor set has no clap.
+
+use anyhow::{bail, Context, Result};
+use catquant::calib::Corpus;
+use catquant::coordinator::{BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg};
+use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits};
+use catquant::experiments as exp;
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::transforms::TransformKind;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Tiny flag parser: positionals plus `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_flag(&self, key: &str, default: usize) -> usize {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_flag(&self, key: &str, default: u64) -> u64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn parse_kind(name: &str) -> Result<TransformKind> {
+    Ok(match name.to_lowercase().as_str() {
+        "none" => TransformKind::None,
+        "smoothquant" | "sq" => TransformKind::SmoothQuant,
+        "quarot" | "hadamard" => TransformKind::QuaRot,
+        "spinquant" => TransformKind::SpinQuant,
+        "cat" | "cat-block" | "catblock" => TransformKind::CatBlock,
+        "cat-trained" | "cattrained" => TransformKind::CatBlockTrained,
+        "flatquant" => TransformKind::FlatQuant,
+        "cat-optimal" => TransformKind::CatOptimal,
+        other => bail!("unknown transform {other}"),
+    })
+}
+
+fn parse_wquant(name: &str) -> Result<WeightQuantizer> {
+    Ok(match name.to_lowercase().as_str() {
+        "rtn" => WeightQuantizer::Rtn,
+        "gptq" => WeightQuantizer::Gptq,
+        other => bail!("unknown weight quantizer {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let manifest = Manifest::load(&Manifest::default_dir()).context(
+        "loading artifact manifest (run `make artifacts` to build corpus/weights/graphs)",
+    )?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&manifest),
+        Some("exp") => cmd_exp(&manifest, &args),
+        Some("quantize") => cmd_quantize(&manifest, &args),
+        Some("eval") => cmd_eval(&manifest, &args),
+        Some("serve") => cmd_serve(&manifest, &args),
+        _ => {
+            eprintln!(
+                "usage: catquant <info|exp|quantize|eval|serve> [...]\n(see README / crate docs)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(manifest: &Manifest) -> Result<()> {
+    println!("artifacts: {}", manifest.dir.display());
+    println!(
+        "corpus: train={} eval={} vocab={}",
+        manifest.corpus_train.display(),
+        manifest.corpus_eval.display(),
+        manifest.vocab
+    );
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: d={} L={} heads={} ff={} seq={} params={} graphs=[{}]",
+            m.config.d,
+            m.config.n_layers,
+            m.config.n_heads,
+            m.config.ff,
+            m.config.seq,
+            m.config.n_params(),
+            m.graphs.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(manifest: &Manifest, args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let models_s = args.flag("models").unwrap_or("tiny,small");
+    let models: Vec<&str> = models_s.split(',').collect();
+    let seed = args.u64_flag("seed", 0);
+    match which {
+        "fig2" => {
+            exp::run_fig2(manifest, &models, seed)?;
+        }
+        "fig3" => {
+            exp::run_fig3(manifest, models.first().copied().unwrap_or("small"), seed)?;
+        }
+        "fig4" => {
+            exp::run_fig4(manifest, &models, seed)?;
+        }
+        "fig5" => {
+            exp::run_fig5(manifest, &models, seed)?;
+        }
+        "fig6" => {
+            exp::run_fig6(manifest, &models, seed)?;
+        }
+        "ablations" => {
+            exp::run_ablations(manifest, models.first().copied().unwrap_or("small"), seed)?;
+        }
+        "table1" => {
+            let mut opts = if args.flag("quick").is_some() {
+                exp::Table1Opts::quick()
+            } else {
+                exp::Table1Opts::default()
+            };
+            if let Some(m) = args.flag("models") {
+                opts.models = m.split(',').map(|s| s.to_string()).collect();
+            }
+            opts.seeds = args.u64_flag("seeds", opts.seeds);
+            opts.eval_windows = args.usize_flag("windows", opts.eval_windows);
+            opts.task_items = args.usize_flag("items", opts.task_items);
+            exp::run_table1(manifest, &opts)?;
+        }
+        "all" => {
+            exp::run_fig2(manifest, &models, seed)?;
+            exp::run_fig3(manifest, models.first().copied().unwrap_or("small"), seed)?;
+            exp::run_fig4(manifest, &models, seed)?;
+            exp::run_fig5(manifest, &models, seed)?;
+            exp::run_fig6(manifest, &models, seed)?;
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_quantize(manifest: &Manifest, args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small");
+    let kind = parse_kind(args.flag("transform").unwrap_or("cat"))?;
+    let wq = parse_wquant(args.flag("wquant").unwrap_or("rtn"))?;
+    let seed = args.u64_flag("seed", 0);
+    let zoo = exp::load_zoo(manifest, model, seed)?;
+    let t0 = std::time::Instant::now();
+    let (qc, rep) =
+        build_quant_config(&zoo.model, &zoo.calib, PipelineCfg::w4a4(kind, wq, seed));
+    println!(
+        "quantized {model} with {} + {} in {:.1}s",
+        kind.label(),
+        wq.label(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("  mean layer SQNR (approx): {:.1} dB", rep.mean_sqnr_db);
+    println!("  activation clip ratio:    {:.2}", rep.act_clip);
+    println!(
+        "  transforms: {}  fused weights: {}",
+        qc.transforms.len(),
+        qc.fused_weights.len()
+    );
+    if let Some((name, ms)) = rep
+        .transform_ms
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    {
+        println!("  slowest transform build: {name} ({ms:.1} ms)");
+    }
+    Ok(())
+}
+
+fn cmd_eval(manifest: &Manifest, args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small");
+    let kind_s = args.flag("transform").unwrap_or("cat");
+    let wq = parse_wquant(args.flag("wquant").unwrap_or("rtn"))?;
+    let seed = args.u64_flag("seed", 0);
+    let n_windows = args.usize_flag("windows", 24);
+    let items = args.usize_flag("items", 12);
+
+    let engine = Rc::new(PjrtEngine::new(manifest.clone())?);
+    let entry = manifest.model(model)?;
+    let corpus = Corpus::load(&manifest.corpus_eval)?;
+    let windows = corpus.eval_windows(n_windows, entry.config.seq);
+    let zoo = exp::load_zoo(manifest, model, seed)?;
+
+    if kind_s == "fp" {
+        let eng = PjrtLogits::fp(engine, model, &zoo.model.params)?;
+        let ppl = perplexity(&eng, &windows)?;
+        let tasks = zero_shot_suite(&eng, &corpus, items, seed)?;
+        report_eval(model, "FP", ppl, &tasks);
+        return Ok(());
+    }
+    let kind = parse_kind(kind_s)?;
+    let (qc, _) =
+        build_quant_config(&zoo.model, &zoo.calib, PipelineCfg::w4a4(kind, wq, seed));
+    let eng = PjrtLogits::quant(engine, model, &zoo.model.params, &qc, 4)?;
+    let ppl = perplexity(&eng, &windows)?;
+    let tasks = zero_shot_suite(&eng, &corpus, items, seed)?;
+    report_eval(model, kind.label(), ppl, &tasks);
+    Ok(())
+}
+
+fn report_eval(model: &str, label: &str, ppl: f64, tasks: &[catquant::eval::TaskResult]) {
+    println!("model={model} config={label}");
+    println!("  perplexity: {ppl:.3}");
+    for t in tasks {
+        println!("  task {:<10} acc {:.1}%", t.name, 100.0 * t.accuracy);
+    }
+    let mean = 100.0 * tasks.iter().map(|t| t.accuracy).sum::<f64>() / tasks.len() as f64;
+    println!("  0-shot avg: {mean:.1}%");
+}
+
+fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
+    let model = args.flag("model").unwrap_or("small").to_string();
+    let mode = args.flag("mode").unwrap_or("fp").to_string();
+    let n_requests = args.usize_flag("requests", 16);
+    let max_new = args.usize_flag("max-new", 24);
+    let temperature: f64 = args
+        .flag("temperature")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.8);
+    let seed = args.u64_flag("seed", 0);
+
+    let manifest2 = manifest.clone();
+    let model2 = model.clone();
+    let mode2 = mode.clone();
+    let coord = Coordinator::start(
+        move || {
+            let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+            let zoo = exp::load_zoo(&manifest2, &model2, seed).expect("zoo");
+            let sampling = SamplingCfg { temperature, seed };
+            let gen: Box<dyn GenEngine> = if mode2 == "fp" {
+                Box::new(
+                    PjrtGenerator::fp(engine, &model2, &zoo.model.params, sampling)
+                        .expect("generator"),
+                )
+            } else {
+                let (qc, _) = build_quant_config(
+                    &zoo.model,
+                    &zoo.calib,
+                    PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed),
+                );
+                Box::new(
+                    PjrtGenerator::quant(engine, &model2, &zoo.model.params, &qc, sampling)
+                        .expect("generator"),
+                )
+            };
+            gen
+        },
+        BatcherCfg::default(),
+    );
+
+    // Open-loop synthetic client: prompts drawn from the eval corpus.
+    let corpus = Corpus::load(&manifest.corpus_eval)?;
+    let prompts = corpus.sample_sequences(n_requests, manifest.prompt_len, seed ^ 0xC11E17);
+    println!("serving {n_requests} requests (model={model} mode={mode} max_new={max_new}) ...");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts.into_iter().map(|p| coord.submit(p, max_new)).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if i < 3 {
+            println!(
+                "  req {i}: {} tokens in {:?} (batch={}) -> {:?}...",
+                resp.tokens.len(),
+                resp.latency,
+                resp.batch_size,
+                &resp.tokens[..resp.tokens.len().min(8)]
+            );
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+    println!("wall time: {wall:?}");
+    println!("{}", metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Model configuration, mirroring `python/compile/model.py::Config`.
+
+/// Architecture hyperparameters of one model-zoo member.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.n_heads
+    }
+
+    /// The zoo defaults (kept in sync with `model.py::ZOO`; the manifest
+    /// is authoritative at runtime).
+    pub fn zoo(name: &str) -> Option<ModelConfig> {
+        let (d, n_layers, n_heads, ff) = match name {
+            "tiny" => (64, 2, 4, 128),
+            "small" => (128, 4, 4, 256),
+            "base" => (256, 6, 8, 512),
+            _ => return None,
+        };
+        Some(ModelConfig {
+            name: name.to_string(),
+            d,
+            n_layers,
+            n_heads,
+            ff,
+            seq: 128,
+            vocab: 256,
+        })
+    }
+
+    /// Parameter names and shapes in the flat-argument order shared with
+    /// the AOT graphs (must match `model.py::param_spec`).
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let mut spec = vec![
+            ("tok_emb".to_string(), vec![self.vocab, self.d]),
+            ("pos_emb".to_string(), vec![self.seq, self.d]),
+        ];
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            spec.push((format!("{p}ln1"), vec![self.d]));
+            spec.push((format!("{p}q_proj"), vec![self.d, self.d]));
+            spec.push((format!("{p}k_proj"), vec![self.d, self.d]));
+            spec.push((format!("{p}v_proj"), vec![self.d, self.d]));
+            spec.push((format!("{p}o_proj"), vec![self.d, self.d]));
+            spec.push((format!("{p}ln2"), vec![self.d]));
+            spec.push((format!("{p}gate_proj"), vec![self.ff, self.d]));
+            spec.push((format!("{p}up_proj"), vec![self.ff, self.d]));
+            spec.push((format!("{p}down_proj"), vec![self.d, self.ff]));
+        }
+        spec.push(("ln_f".to_string(), vec![self.d]));
+        spec.push(("lm_head".to_string(), vec![self.vocab, self.d]));
+        spec
+    }
+
+    /// Transform names and shapes (must match `model.py::transform_spec`).
+    pub fn transform_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let mut spec = Vec::new();
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            spec.push((format!("{p}t_attn"), vec![self.d, self.d]));
+            spec.push((format!("{p}t_o"), vec![self.d, self.d]));
+            spec.push((format!("{p}t_mlp"), vec![self.d, self.d]));
+            spec.push((format!("{p}t_down"), vec![self.ff, self.ff]));
+        }
+        spec
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_members_exist() {
+        for name in ["tiny", "small", "base"] {
+            let cfg = ModelConfig::zoo(name).unwrap();
+            assert_eq!(cfg.d % cfg.n_heads, 0);
+            assert!(cfg.d.is_power_of_two() && cfg.ff.is_power_of_two());
+        }
+        assert!(ModelConfig::zoo("llama-70b").is_none());
+    }
+
+    #[test]
+    fn spec_counts() {
+        let cfg = ModelConfig::zoo("base").unwrap();
+        assert_eq!(cfg.param_spec().len(), 2 + 6 * 9 + 2);
+        assert_eq!(cfg.transform_spec().len(), 6 * 4);
+    }
+
+    #[test]
+    fn param_counts_plausible() {
+        let tiny = ModelConfig::zoo("tiny").unwrap().n_params();
+        let base = ModelConfig::zoo("base").unwrap().n_params();
+        assert!(tiny > 50_000 && tiny < 500_000, "tiny {tiny}");
+        assert!(base > 3_000_000 && base < 10_000_000, "base {base}");
+    }
+}

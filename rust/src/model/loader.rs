@@ -1,0 +1,133 @@
+//! CATW weight-artifact loader (format documented in
+//! `python/compile/catw.py`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+
+/// One tensor from a `.catw` file.
+#[derive(Clone, Debug)]
+pub struct CatwTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl CatwTensor {
+    /// View as an analysis matrix (1-D tensors become `1×n`).
+    pub fn to_mat(&self) -> crate::linalg::Mat {
+        let (r, c) = match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            n => panic!("to_mat on {n}-d tensor"),
+        };
+        crate::linalg::Mat::from_f32(r, c, &self.data)
+    }
+}
+
+/// Load every tensor in a `.catw` file.
+pub fn load_catw(path: &std::path::Path) -> Result<HashMap<String, CatwTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_catw(&bytes)
+}
+
+fn parse_catw(bytes: &[u8]) -> Result<HashMap<String, CatwTensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"CATW" {
+        bail!("bad magic {:?}", magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("unsupported catw version {version}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let mut data = vec![0f32; count];
+        let mut buf = vec![0u8; count * 4];
+        r.read_exact(&mut buf)?;
+        for (i, ch) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        out.insert(name, CatwTensor { shape, data });
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_catw() -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend(b"CATW");
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        // tensor "a": shape [2,3]
+        b.extend(1u32.to_le_bytes());
+        b.extend(b"a");
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u64.to_le_bytes());
+        b.extend(3u64.to_le_bytes());
+        for i in 0..6 {
+            b.extend((i as f32).to_le_bytes());
+        }
+        // tensor "ln": shape [4]
+        b.extend(2u32.to_le_bytes());
+        b.extend(b"ln");
+        b.extend(1u32.to_le_bytes());
+        b.extend(4u64.to_le_bytes());
+        for _ in 0..4 {
+            b.extend(1.0f32.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let t = parse_catw(&synth_catw()).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t["a"].shape, vec![2, 3]);
+        assert_eq!(t["a"].data[5], 5.0);
+        assert_eq!(t["ln"].shape, vec![4]);
+        let m = t["a"].to_mat();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m[(1, 2)], 5.0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut b = synth_catw();
+        b[0] = b'X';
+        assert!(parse_catw(&b).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let b = synth_catw();
+        assert!(parse_catw(&b[..b.len() - 3]).is_err());
+    }
+}

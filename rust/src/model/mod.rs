@@ -1,0 +1,17 @@
+//! The transformer substrate (Llama-style), mirrored from
+//! `python/compile/model.py`.
+//!
+//! The native forward pass here is numerically cross-validated against the
+//! AOT-compiled JAX graphs (see `rust/tests/pjrt_parity.rs`): the PJRT
+//! executables are the serving hot path, the native engine is the
+//! calibration/analysis reference the tests trust.
+
+mod config;
+mod loader;
+mod native;
+mod quantized;
+
+pub use config::ModelConfig;
+pub use loader::{load_catw, CatwTensor};
+pub use native::{softmax_row, NativeModel, ProbeCapture};
+pub use quantized::{group_of_linear, LayerGroup, QuantConfig, QuantizedWeightsSet, ALL_GROUPS};

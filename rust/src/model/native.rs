@@ -1,0 +1,359 @@
+//! Pure-Rust transformer forward — the calibration/analysis engine and
+//! the reference the PJRT parity tests trust.
+//!
+//! Mirrors `python/compile/model.py` op for op (RMSNorm ε, SiLU, causal
+//! mask value, per-token KV fake-quant) so logits agree with the AOT
+//! graphs to f32 precision.
+
+use super::{ModelConfig, QuantConfig};
+use crate::linalg::{matmul_a_bt, Mat};
+use crate::quant::quantize_activations_per_token;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+const EPS: f64 = 1e-5;
+const MASK_VALUE: f64 = -1e30;
+
+/// Per-group activation capture for calibration (one entry per block).
+#[derive(Default)]
+pub struct ProbeCapture {
+    pub attn_in: Vec<Vec<Mat>>,
+    pub o_in: Vec<Vec<Mat>>,
+    pub mlp_in: Vec<Vec<Mat>>,
+    pub down_in: Vec<Vec<Mat>>,
+}
+
+impl ProbeCapture {
+    pub fn new(n_layers: usize) -> Self {
+        ProbeCapture {
+            attn_in: vec![Vec::new(); n_layers],
+            o_in: vec![Vec::new(); n_layers],
+            mlp_in: vec![Vec::new(); n_layers],
+            down_in: vec![Vec::new(); n_layers],
+        }
+    }
+
+    /// Concatenate the captured row blocks of one group/block into a
+    /// single `tokens × dim` matrix.
+    pub fn concat(parts: &[Mat]) -> Mat {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols();
+        let rows: usize = parts.iter().map(|m| m.rows()).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut r = 0;
+        for p in parts {
+            out.set_block(r, 0, p);
+            r += p.rows();
+        }
+        out
+    }
+}
+
+/// The native model: config + f64 parameter matrices.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub params: HashMap<String, Mat>,
+}
+
+impl NativeModel {
+    /// Load from a `.catw` artifact, validating shapes against the spec.
+    pub fn from_catw(cfg: ModelConfig, path: &std::path::Path) -> Result<Self> {
+        let tensors = super::load_catw(path)?;
+        let mut params = HashMap::new();
+        for (name, shape) in cfg.param_spec() {
+            let t = tensors
+                .get(&name)
+                .with_context(|| format!("missing tensor {name} in {}", path.display()))?;
+            if t.shape != shape && !(shape.len() == 1 && t.shape == vec![shape[0]]) {
+                bail!("tensor {name}: shape {:?} != spec {:?}", t.shape, shape);
+            }
+            params.insert(name, t.to_mat());
+        }
+        Ok(NativeModel { cfg, params })
+    }
+
+    /// Random-initialized model (tests, benches).
+    pub fn init_random(cfg: ModelConfig, seed: u64) -> Self {
+        let mut rng = crate::linalg::Rng::new(seed);
+        let mut params = HashMap::new();
+        for (name, shape) in cfg.param_spec() {
+            let m = if name.contains("ln") {
+                Mat::from_fn(1, shape[0], |_, _| 1.0)
+            } else if shape.len() == 1 {
+                Mat::from_fn(1, shape[0], |_, _| rng.normal() * 0.02)
+            } else {
+                let fan_in = shape[1] as f64;
+                Mat::from_fn(shape[0], shape[1], |_, _| rng.normal() / fan_in.sqrt())
+            };
+            params.insert(name, m);
+        }
+        NativeModel { cfg, params }
+    }
+
+    fn p(&self, name: &str) -> &Mat {
+        self.params.get(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    /// Full-sequence FP forward: logits `[S, vocab]` for one sequence.
+    pub fn forward(&self, tokens: &[u8]) -> Mat {
+        self.forward_opts(tokens, None, None)
+    }
+
+    /// FP forward capturing per-group linear inputs into `probe`.
+    pub fn forward_probed(&self, tokens: &[u8], probe: &mut ProbeCapture) -> Mat {
+        self.forward_opts(tokens, None, Some(probe))
+    }
+
+    /// Quantized forward (transforms + fused fake-quant weights + dynamic
+    /// activation quant, per `qc`).
+    pub fn forward_quant(&self, tokens: &[u8], qc: &QuantConfig) -> Mat {
+        self.forward_opts(tokens, Some(qc), None)
+    }
+
+    fn forward_opts(
+        &self,
+        tokens: &[u8],
+        qc: Option<&QuantConfig>,
+        mut probe: Option<&mut ProbeCapture>,
+    ) -> Mat {
+        let cfg = &self.cfg;
+        let s = tokens.len();
+        assert!(s <= cfg.seq, "sequence too long");
+        let tok_emb = self.p("tok_emb");
+        let pos_emb = self.p("pos_emb");
+        let mut x = Mat::zeros(s, cfg.d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            for j in 0..cfg.d {
+                x[(t, j)] = tok_emb[(tok as usize, j)] + pos_emb[(t, j)];
+            }
+        }
+        for i in 0..cfg.n_layers {
+            let pfx = format!("blocks.{i}.");
+            let h = rmsnorm(&x, self.p(&format!("{pfx}ln1")));
+            if let Some(pr) = probe.as_deref_mut() {
+                pr.attn_in[i].push(h.clone());
+            }
+            let q = self.linear(&h, &format!("{pfx}q_proj"), &format!("{pfx}t_attn"), qc);
+            let mut k = self.linear(&h, &format!("{pfx}k_proj"), &format!("{pfx}t_attn"), qc);
+            let mut v = self.linear(&h, &format!("{pfx}v_proj"), &format!("{pfx}t_attn"), qc);
+            if let Some(qc) = qc {
+                k = kv_quant(&k, qc);
+                v = kv_quant(&v, qc);
+            }
+            let att = causal_attention(&q, &k, &v, cfg.n_heads);
+            if let Some(pr) = probe.as_deref_mut() {
+                pr.o_in[i].push(att.clone());
+            }
+            let o = self.linear(&att, &format!("{pfx}o_proj"), &format!("{pfx}t_o"), qc);
+            x = x.add(&o);
+            let h = rmsnorm(&x, self.p(&format!("{pfx}ln2")));
+            if let Some(pr) = probe.as_deref_mut() {
+                pr.mlp_in[i].push(h.clone());
+            }
+            let gate = self.linear(&h, &format!("{pfx}gate_proj"), &format!("{pfx}t_mlp"), qc);
+            let up = self.linear(&h, &format!("{pfx}up_proj"), &format!("{pfx}t_mlp"), qc);
+            let mut hidden = Mat::zeros(s, cfg.ff);
+            for t in 0..s {
+                for j in 0..cfg.ff {
+                    hidden[(t, j)] = silu(gate[(t, j)]) * up[(t, j)];
+                }
+            }
+            if let Some(pr) = probe.as_deref_mut() {
+                pr.down_in[i].push(hidden.clone());
+            }
+            let down = self.linear(&hidden, &format!("{pfx}down_proj"), &format!("{pfx}t_down"), qc);
+            x = x.add(&down);
+        }
+        let x = rmsnorm(&x, self.p("ln_f"));
+        matmul_a_bt(&x, self.p("lm_head"))
+    }
+
+    /// One (possibly transformed + quantized) linear.
+    fn linear(&self, x: &Mat, wname: &str, tname: &str, qc: Option<&QuantConfig>) -> Mat {
+        match qc {
+            None => matmul_a_bt(x, self.p(wname)),
+            Some(qc) => {
+                let w = qc
+                    .fused_weights
+                    .get(wname)
+                    .unwrap_or_else(|| panic!("missing fused weight {wname}"));
+                match qc.transforms.get(tname) {
+                    Some(t) => {
+                        let xt = matmul_a_bt(x, t); // X Tᵀ
+                        let (xq, _) = quantize_activations_per_token(&xt, qc.act.scheme, qc.act.clip_ratio);
+                        matmul_a_bt(&xq, w)
+                    }
+                    None => {
+                        let (xq, _) = quantize_activations_per_token(x, qc.act.scheme, qc.act.clip_ratio);
+                        matmul_a_bt(&xq, w)
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn rmsnorm(x: &Mat, g: &Mat) -> Mat {
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    for t in 0..x.rows() {
+        let row = x.row(t);
+        let ms = row.iter().map(|v| v * v).sum::<f64>() / row.len() as f64;
+        let r = 1.0 / (ms + EPS).sqrt();
+        let orow = out.row_mut(t);
+        for j in 0..row.len() {
+            orow[j] = row[j] * r * g[(0, j)];
+        }
+    }
+    out
+}
+
+#[inline]
+fn silu(v: f64) -> f64 {
+    v / (1.0 + (-v).exp())
+}
+
+fn kv_quant(x: &Mat, qc: &QuantConfig) -> Mat {
+    quantize_activations_per_token(x, qc.act.scheme, qc.act.clip_ratio).0
+}
+
+/// Numerically-stable softmax over a mutable row.
+pub fn softmax_row(row: &mut [f64]) {
+    let max = row.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Multi-head causal attention over one sequence (`q,k,v: S×d`).
+fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
+    let s = q.rows();
+    let d = q.cols();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = Mat::zeros(s, d);
+    let mut scores = vec![0.0f64; s];
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        for t in 0..s {
+            // scores over keys 0..=t
+            for (j, sc) in scores.iter_mut().enumerate().take(s) {
+                if j <= t {
+                    let mut acc = 0.0;
+                    for c in c0..c0 + hd {
+                        acc += q[(t, c)] * k[(j, c)];
+                    }
+                    *sc = acc * scale;
+                } else {
+                    *sc = MASK_VALUE;
+                }
+            }
+            softmax_row(&mut scores[..s]);
+            for (j, &a) in scores.iter().enumerate().take(t + 1) {
+                if a == 0.0 {
+                    continue;
+                }
+                for c in c0..c0 + hd {
+                    out[(t, c)] += a * v[(j, c)];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantConfig;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d: 32,
+            n_layers: 2,
+            n_heads: 4,
+            ff: 64,
+            seq: 16,
+            vocab: 256,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let m = NativeModel::init_random(tiny_cfg(), 1);
+        let logits = m.forward(&[1, 2, 3, 4, 5]);
+        assert_eq!(logits.rows(), 5);
+        assert_eq!(logits.cols(), 256);
+        assert!(logits.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_native() {
+        let m = NativeModel::init_random(tiny_cfg(), 2);
+        let a = m.forward(&[5, 6, 7, 8, 9, 10]);
+        let b = m.forward(&[5, 6, 7, 8, 250, 10]);
+        for j in 0..256 {
+            for t in 0..4 {
+                assert!((a[(t, j)] - b[(t, j)]).abs() < 1e-12, "t={t} leaked");
+            }
+        }
+        assert!((0..256).any(|j| (a[(4, j)] - b[(4, j)]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn probe_captures_all_groups() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::init_random(cfg.clone(), 3);
+        let mut probe = ProbeCapture::new(cfg.n_layers);
+        m.forward_probed(&[1, 2, 3, 4], &mut probe);
+        m.forward_probed(&[9, 8, 7], &mut probe);
+        for i in 0..cfg.n_layers {
+            let attn = ProbeCapture::concat(&probe.attn_in[i]);
+            assert_eq!(attn.rows(), 7);
+            assert_eq!(attn.cols(), cfg.d);
+            let down = ProbeCapture::concat(&probe.down_in[i]);
+            assert_eq!(down.cols(), cfg.ff);
+        }
+    }
+
+    #[test]
+    fn quant_identity_transform_high_bits_close_to_fp() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::init_random(cfg.clone(), 4);
+        let qc = QuantConfig::identity_for_test(&m, 12);
+        let toks = [3u8, 1, 4, 1, 5, 9, 2, 6];
+        let fp = m.forward(&toks);
+        let q = m.forward_quant(&toks, &qc);
+        let max_rel = fp.max_abs_diff(&q) / fp.max_abs().max(1e-9);
+        assert!(max_rel < 0.05, "12-bit should be near-fp, rel {max_rel}");
+    }
+
+    #[test]
+    fn quant_fewer_bits_more_error() {
+        let cfg = tiny_cfg();
+        let m = NativeModel::init_random(cfg.clone(), 5);
+        let toks = [3u8, 1, 4, 1, 5, 9, 2, 6];
+        let fp = m.forward(&toks);
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 8] {
+            let qc = QuantConfig::identity_for_test(&m, bits);
+            let q = m.forward_quant(&toks, &qc);
+            let err = fp.sub(&q).fro_norm2();
+            assert!(err < prev, "bits {bits}: {err} !< {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut r = [1.0, 2.0, 3.0, -1e30];
+        softmax_row(&mut r);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(r[3] < 1e-300);
+    }
+}

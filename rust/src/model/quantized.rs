@@ -1,0 +1,158 @@
+//! Quantized-model configuration: transforms + fused fake-quant weights.
+//!
+//! A [`QuantConfig`] is the output of the PTQ pipeline
+//! ([`crate::pipeline`]) and the input to both engines (native forward and
+//! the PJRT graphs — the same matrices are fed as runtime arguments).
+
+use super::{ModelConfig, NativeModel};
+use crate::linalg::Mat;
+use crate::quant::{quantize_weights_rtn, ActQuantCfg, QScheme, WeightQuantCfg};
+use std::collections::HashMap;
+
+/// The four transform groups per block (layers sharing an input share a
+/// transform — paper §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerGroup {
+    /// q/k/v projections (post-ln1 input).
+    AttnIn,
+    /// o projection (attention output).
+    OIn,
+    /// gate/up projections (post-ln2 input).
+    MlpIn,
+    /// down projection (SwiGLU hidden).
+    DownIn,
+}
+
+pub const ALL_GROUPS: [LayerGroup; 4] =
+    [LayerGroup::AttnIn, LayerGroup::OIn, LayerGroup::MlpIn, LayerGroup::DownIn];
+
+impl LayerGroup {
+    /// The transform parameter name for block `i`.
+    pub fn t_name(&self, block: usize) -> String {
+        let suffix = match self {
+            LayerGroup::AttnIn => "t_attn",
+            LayerGroup::OIn => "t_o",
+            LayerGroup::MlpIn => "t_mlp",
+            LayerGroup::DownIn => "t_down",
+        };
+        format!("blocks.{block}.{suffix}")
+    }
+
+    /// The linear layers consuming this group's input.
+    pub fn linears(&self) -> &'static [&'static str] {
+        match self {
+            LayerGroup::AttnIn => &["q_proj", "k_proj", "v_proj"],
+            LayerGroup::OIn => &["o_proj"],
+            LayerGroup::MlpIn => &["gate_proj", "up_proj"],
+            LayerGroup::DownIn => &["down_proj"],
+        }
+    }
+
+    /// Input dimensionality of this group.
+    pub fn dim(&self, cfg: &ModelConfig) -> usize {
+        match self {
+            LayerGroup::DownIn => cfg.ff,
+            _ => cfg.d,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerGroup::AttnIn => "qkv_proj",
+            LayerGroup::OIn => "o_proj",
+            LayerGroup::MlpIn => "gate_up_proj",
+            LayerGroup::DownIn => "down_proj",
+        }
+    }
+}
+
+/// Map a linear layer's short name to its input group.
+pub fn group_of_linear(name: &str) -> LayerGroup {
+    match name {
+        "q_proj" | "k_proj" | "v_proj" => LayerGroup::AttnIn,
+        "o_proj" => LayerGroup::OIn,
+        "gate_proj" | "up_proj" => LayerGroup::MlpIn,
+        "down_proj" => LayerGroup::DownIn,
+        _ => panic!("unknown linear {name}"),
+    }
+}
+
+/// Everything a quantized forward needs beyond the FP weights.
+pub struct QuantConfig {
+    pub act: ActQuantCfg,
+    pub weight_bits: u32,
+    /// Transform name (`blocks.i.t_*`) → `T` (applied as `x·Tᵀ`).
+    pub transforms: HashMap<String, Mat>,
+    /// Full weight name (`blocks.i.*_proj`) → fused fake-quant `W·T⁻¹`.
+    pub fused_weights: HashMap<String, Mat>,
+}
+
+/// Bundle of `QuantConfig` + run metadata (which transform/quantizer built
+/// it) — what the experiment grid iterates over.
+pub struct QuantizedWeightsSet {
+    pub label: String,
+    pub qc: QuantConfig,
+}
+
+impl QuantConfig {
+    /// Identity transforms + RTN(minmax) weights at `bits` — the "None"
+    /// baseline and the tests' fixture.
+    pub fn identity_for_test(model: &NativeModel, bits: u32) -> QuantConfig {
+        let cfg = &model.cfg;
+        let mut transforms = HashMap::new();
+        for (name, shape) in cfg.transform_spec() {
+            transforms.insert(name, Mat::eye(shape[0]));
+        }
+        let mut fused = HashMap::new();
+        let wq = WeightQuantCfg::minmax(bits);
+        for i in 0..cfg.n_layers {
+            for lin in ["q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj"]
+            {
+                let name = format!("blocks.{i}.{lin}");
+                let w = &model.params[&name];
+                fused.insert(name, quantize_weights_rtn(w, wq).deq);
+            }
+        }
+        QuantConfig {
+            act: ActQuantCfg { scheme: QScheme::asym(bits), clip_ratio: 1.0 },
+            weight_bits: bits,
+            transforms,
+            fused_weights: fused,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_cover_all_linears() {
+        let mut count = 0;
+        for g in ALL_GROUPS {
+            for lin in g.linears() {
+                assert_eq!(group_of_linear(lin), g);
+                count += 1;
+            }
+        }
+        assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn t_names_match_transform_spec() {
+        let cfg = ModelConfig::zoo("tiny").unwrap();
+        let spec: Vec<String> = cfg.transform_spec().into_iter().map(|(n, _)| n).collect();
+        for i in 0..cfg.n_layers {
+            for g in ALL_GROUPS {
+                assert!(spec.contains(&g.t_name(i)), "{}", g.t_name(i));
+            }
+        }
+    }
+
+    #[test]
+    fn group_dims() {
+        let cfg = ModelConfig::zoo("small").unwrap();
+        assert_eq!(LayerGroup::AttnIn.dim(&cfg), cfg.d);
+        assert_eq!(LayerGroup::DownIn.dim(&cfg), cfg.ff);
+    }
+}

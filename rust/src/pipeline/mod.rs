@@ -1,0 +1,10 @@
+//! The post-training-quantization pipeline:
+//! calibrate → build per-group transforms → fuse into weights → quantize
+//! (RTN or GPTQ) → a [`QuantConfig`] both engines can execute.
+//!
+//! This is the L3 system the paper's §6 experiment grid drives: each
+//! Table 1 cell is one [`PipelineCfg`] run.
+
+mod build;
+
+pub use build::{build_quant_config, group_transform, PipelineCfg, PipelineReport, WeightQuantizer};

@@ -1,0 +1,27 @@
+//! Uniform integer quantization.
+//!
+//! Implements the paper's quantization setup (§6): activations quantized
+//! **dynamically per token, asymmetrically**; weights **per output channel,
+//! symmetrically**, with `L_{2.4}` range estimation (following GPTQ) and an
+//! optional learnable clip search. Both round-to-nearest (RTN) and GPTQ
+//! weight quantizers are provided.
+//!
+//! All quantizers are *fake-quant*: they return dequantized `f64` values on
+//! the original scale, which is what the SQNR analysis ([`crate::sqnr`])
+//! and the serving path (weights are runtime args to the compiled graph)
+//! consume. Integer codes are available for storage-size accounting.
+
+mod gptq;
+mod range;
+mod rtn;
+mod scheme;
+mod uniform;
+
+pub use gptq::{gptq_quantize, GptqConfig};
+pub use range::{lp_optimal_clip_sym, RangeEstimator};
+pub use rtn::{quantize_weights_rtn, QuantizedWeights};
+pub use scheme::{ActQuantCfg, QScheme, WeightQuantCfg};
+pub use uniform::{
+    fake_quant_asym, fake_quant_sym, percentile_range, quantize_activations_per_token,
+    quantize_activations_static, AffineParams,
+};

@@ -1,0 +1,99 @@
+//! Round-to-nearest weight quantization (per output channel, symmetric).
+
+use super::{AffineParams, WeightQuantCfg};
+use crate::linalg::Mat;
+
+/// A fake-quantized weight matrix plus its per-row grids.
+pub struct QuantizedWeights {
+    /// Dequantized weights, same shape as the input (`out × in`).
+    pub deq: Mat,
+    /// Per-output-channel scale.
+    pub scales: Vec<f64>,
+    /// Per-output-channel quantization range `r(w_i)` (for `C(W)`).
+    pub ranges: Vec<f64>,
+}
+
+/// RTN: independently round each output channel to its symmetric grid.
+pub fn quantize_weights_rtn(w: &Mat, cfg: WeightQuantCfg) -> QuantizedWeights {
+    let mut deq = Mat::zeros(w.rows(), w.cols());
+    let mut scales = Vec::with_capacity(w.rows());
+    let mut ranges = Vec::with_capacity(w.rows());
+    for i in 0..w.rows() {
+        let row = w.row(i);
+        let absmax = cfg.range.resolve_sym(row, cfg.scheme);
+        let p = AffineParams::symmetric(absmax, cfg.scheme);
+        scales.push(p.scale);
+        ranges.push(p.range());
+        let orow = deq.row_mut(i);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = p.fake_quant(v);
+        }
+    }
+    QuantizedWeights { deq, scales, ranges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::{QScheme, RangeEstimator};
+
+    fn random_w(out: usize, inp: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(out, inp, |_, _| rng.normal() * 0.05)
+    }
+
+    #[test]
+    fn rows_quantized_independently() {
+        let mut w = random_w(4, 64, 1);
+        // Blow up one row; others must be unaffected.
+        for v in w.row_mut(2) {
+            *v *= 100.0;
+        }
+        let q = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
+        assert!(q.scales[2] > 50.0 * q.scales[0]);
+        // Row 0 error stays at its own scale.
+        let err0: f64 = w
+            .row(0)
+            .iter()
+            .zip(q.deq.row(0))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err0 <= q.scales[0] / 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn error_bounded_at_8_bits() {
+        let w = random_w(16, 128, 2);
+        let q = quantize_weights_rtn(&w, WeightQuantCfg::minmax(8));
+        let rel = w.sub(&q.deq).fro_norm2() / w.fro_norm2();
+        assert!(rel < 1e-4, "rel err {rel}");
+    }
+
+    #[test]
+    fn lp_range_no_worse_than_minmax_l2() {
+        let mut rng = Rng::new(3);
+        let mut w = random_w(8, 256, 4);
+        // Add outliers to a few rows.
+        for i in 0..8 {
+            let j = rng.below(256);
+            w[(i, j)] = rng.sign() * 2.0;
+        }
+        let q_mm = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
+        let q_lp = quantize_weights_rtn(&w, WeightQuantCfg::rtn_default(4));
+        let e_mm = w.sub(&q_mm.deq).fro_norm2();
+        let e_lp = w.sub(&q_lp.deq).fro_norm2();
+        // L2.4 optimizes a close proxy of L2; allow small slack.
+        assert!(e_lp <= e_mm * 1.05, "lp {e_lp} vs mm {e_mm}");
+    }
+
+    #[test]
+    fn ranges_are_twice_absmax_for_minmax() {
+        let w = Mat::from_vec(1, 4, vec![0.5, -1.5, 1.0, 0.0]);
+        let q = quantize_weights_rtn(
+            &w,
+            WeightQuantCfg { scheme: QScheme::sym(4), range: RangeEstimator::MinMax },
+        );
+        assert!((q.ranges[0] - 3.0).abs() < 1e-12); // 2 · max|w| = 3
+    }
+}

@@ -1,0 +1,91 @@
+//! Quantization scheme descriptors.
+
+/// A uniform integer quantization grid.
+///
+/// `N(b) = 2^b − 1` is the number of quantization *intervals* the paper's
+/// bit-width term counts (Lemma 2.2/2.3): asymmetric quantization uses all
+/// `2^b` codes (`2^b − 1` intervals); symmetric quantization uses the
+/// zero-centered grid `{−(2^{b−1}−1), …, 2^{b−1}−1}`, also `2^b − 1`
+/// intervals over the range `2·max|x|`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QScheme {
+    /// Bit width `b`.
+    pub bits: u32,
+    /// Symmetric (zero-centered) vs asymmetric (min/max affine) grid.
+    pub symmetric: bool,
+}
+
+impl QScheme {
+    pub const fn sym(bits: u32) -> Self {
+        QScheme { bits, symmetric: true }
+    }
+
+    pub const fn asym(bits: u32) -> Self {
+        QScheme { bits, symmetric: false }
+    }
+
+    /// Number of quantization intervals `N(b) = 2^b − 1`.
+    #[inline]
+    pub fn n_intervals(&self) -> f64 {
+        (1u64 << self.bits) as f64 - 1.0
+    }
+
+    /// Largest positive code on the symmetric grid, `2^{b−1} − 1`.
+    #[inline]
+    pub fn sym_qmax(&self) -> f64 {
+        (1u64 << (self.bits - 1)) as f64 - 1.0
+    }
+
+    /// Largest code on the asymmetric grid, `2^b − 1`.
+    #[inline]
+    pub fn asym_qmax(&self) -> f64 {
+        (1u64 << self.bits) as f64 - 1.0
+    }
+}
+
+/// Activation quantization configuration (paper §6: dynamic, per-token,
+/// asymmetric).
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuantCfg {
+    pub scheme: QScheme,
+    /// Clip ratio applied to the dynamic range (1.0 = pure min/max).
+    pub clip_ratio: f64,
+}
+
+impl ActQuantCfg {
+    pub fn w4a4_default(bits: u32) -> Self {
+        ActQuantCfg { scheme: QScheme::asym(bits), clip_ratio: 1.0 }
+    }
+}
+
+/// Weight quantization configuration (paper §6: per-output-channel,
+/// symmetric, `L_{2.4}` range estimation).
+#[derive(Clone, Copy, Debug)]
+pub struct WeightQuantCfg {
+    pub scheme: QScheme,
+    pub range: super::RangeEstimator,
+}
+
+impl WeightQuantCfg {
+    pub fn rtn_default(bits: u32) -> Self {
+        WeightQuantCfg { scheme: QScheme::sym(bits), range: super::RangeEstimator::LpNorm { p: 2.4 } }
+    }
+
+    pub fn minmax(bits: u32) -> Self {
+        WeightQuantCfg { scheme: QScheme::sym(bits), range: super::RangeEstimator::MinMax }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_counts() {
+        assert_eq!(QScheme::sym(4).n_intervals(), 15.0);
+        assert_eq!(QScheme::asym(4).n_intervals(), 15.0);
+        assert_eq!(QScheme::sym(8).n_intervals(), 255.0);
+        assert_eq!(QScheme::sym(4).sym_qmax(), 7.0);
+        assert_eq!(QScheme::asym(4).asym_qmax(), 15.0);
+    }
+}

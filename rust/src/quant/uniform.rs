@@ -1,0 +1,315 @@
+//! Core affine uniform quantizer.
+
+use super::QScheme;
+use crate::linalg::Mat;
+
+/// Affine quantization parameters: `q = clamp(round(x/scale) + zp)`,
+/// `deq = (q − zp)·scale`.
+#[derive(Clone, Copy, Debug)]
+pub struct AffineParams {
+    pub scale: f64,
+    pub zero_point: f64,
+    pub qmin: f64,
+    pub qmax: f64,
+}
+
+impl AffineParams {
+    /// Parameters for a symmetric grid covering `[−absmax, absmax]`.
+    pub fn symmetric(absmax: f64, scheme: QScheme) -> Self {
+        debug_assert!(scheme.symmetric);
+        let qmax = scheme.sym_qmax();
+        let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+        AffineParams { scale, zero_point: 0.0, qmin: -qmax, qmax }
+    }
+
+    /// Parameters for an asymmetric grid covering `[lo, hi]`.
+    ///
+    /// The range is extended to include zero (standard affine convention):
+    /// otherwise the rounded zero-point clamps and the grid cannot reach
+    /// the data.
+    pub fn asymmetric(lo: f64, hi: f64, scheme: QScheme) -> Self {
+        debug_assert!(!scheme.symmetric);
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let qmax = scheme.asym_qmax();
+        let range = (hi - lo).max(0.0);
+        let scale = if range > 0.0 { range / qmax } else { 1.0 };
+        // Zero point rounded so that real zero is exactly representable
+        // (standard affine quantizer convention).
+        let zp = (-lo / scale).round().clamp(0.0, qmax);
+        AffineParams { scale, zero_point: zp, qmin: 0.0, qmax }
+    }
+
+    /// Quantize one value to its integer code.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        ((x / self.scale) + self.zero_point).round().clamp(self.qmin, self.qmax)
+    }
+
+    /// Fake-quantize one value (quantize then dequantize).
+    #[inline]
+    pub fn fake_quant(&self, x: f64) -> f64 {
+        (self.quantize(x) - self.zero_point) * self.scale
+    }
+
+    /// The quantization range `r` this grid covers (the paper's `r(x)`).
+    #[inline]
+    pub fn range(&self) -> f64 {
+        self.scale * (self.qmax - self.qmin)
+    }
+}
+
+/// Fake-quantize a slice symmetrically with a dynamic abs-max range,
+/// shrunk by `clip_ratio`.
+pub fn fake_quant_sym(x: &[f64], scheme: QScheme, clip_ratio: f64) -> Vec<f64> {
+    let absmax = x.iter().fold(0.0_f64, |m, &v| m.max(v.abs())) * clip_ratio;
+    let p = AffineParams::symmetric(absmax, scheme);
+    x.iter().map(|&v| p.fake_quant(v)).collect()
+}
+
+/// Fake-quantize a slice asymmetrically with a dynamic min/max range,
+/// shrunk toward the midpoint by `clip_ratio`.
+pub fn fake_quant_asym(x: &[f64], scheme: QScheme, clip_ratio: f64) -> Vec<f64> {
+    let (mut lo, mut hi) = minmax(x);
+    if clip_ratio < 1.0 {
+        let mid = 0.5 * (lo + hi);
+        lo = mid + (lo - mid) * clip_ratio;
+        hi = mid + (hi - mid) * clip_ratio;
+    }
+    let p = AffineParams::asymmetric(lo, hi, scheme);
+    x.iter().map(|&v| p.fake_quant(v)).collect()
+}
+
+/// Dynamic per-token (per-row) asymmetric fake quantization of an
+/// activation matrix `tokens × d` — the paper's activation setup.
+///
+/// Returns the fake-quantized matrix and the per-token quantization range
+/// `r(x)` (used by the concentration term `C(x)`).
+pub fn quantize_activations_per_token(
+    x: &Mat,
+    scheme: QScheme,
+    clip_ratio: f64,
+) -> (Mat, Vec<f64>) {
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    let mut ranges = Vec::with_capacity(x.rows());
+    for t in 0..x.rows() {
+        let row = x.row(t);
+        let p = if scheme.symmetric {
+            let absmax = row.iter().fold(0.0_f64, |m, &v| m.max(v.abs())) * clip_ratio;
+            // Paper: r(x) = 2·max|x_i| for symmetric quantization.
+            AffineParams::symmetric(absmax, scheme)
+        } else {
+            let (mut lo, mut hi) = minmax(row);
+            if clip_ratio < 1.0 {
+                let mid = 0.5 * (lo + hi);
+                lo = mid + (lo - mid) * clip_ratio;
+                hi = mid + (hi - mid) * clip_ratio;
+            }
+            AffineParams::asymmetric(lo, hi, scheme)
+        };
+        ranges.push(p.range());
+        let orow = out.row_mut(t);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = p.fake_quant(v);
+        }
+    }
+    (out, ranges)
+}
+
+/// *Static* asymmetric activation quantization: one calibrated `[lo, hi]`
+/// range for every token (the paper's "static" option in Lemma 2.2, vs
+/// the dynamic per-token default). Returns the fake-quantized matrix and
+/// the (constant) range.
+pub fn quantize_activations_static(
+    x: &Mat,
+    lo: f64,
+    hi: f64,
+    scheme: QScheme,
+) -> (Mat, f64) {
+    let p = if scheme.symmetric {
+        AffineParams::symmetric(lo.abs().max(hi.abs()), scheme)
+    } else {
+        AffineParams::asymmetric(lo, hi, scheme)
+    };
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    for t in 0..x.rows() {
+        let row = x.row(t);
+        let orow = out.row_mut(t);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = p.fake_quant(v);
+        }
+    }
+    (out, p.range())
+}
+
+/// Symmetric two-sided percentile range over all entries of a calibration
+/// sample: `pct = 1.0` is min/max; `pct = 0.999` clips the extreme 0.1%
+/// tails (standard static-range calibration).
+pub fn percentile_range(x: &Mat, pct: f64) -> (f64, f64) {
+    let mut vals: Vec<f64> = x.as_slice().to_vec();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = vals.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let tail = ((1.0 - pct) * n as f64).floor() as usize;
+    let lo = vals[tail.min(n - 1)];
+    let hi = vals[n - 1 - tail.min(n - 1)];
+    (lo.min(0.0), hi.max(0.0))
+}
+
+#[inline]
+pub(crate) fn minmax(x: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn grid_points_are_exact() {
+        // Values already on the grid survive fake-quant exactly.
+        let s = QScheme::sym(4);
+        let p = AffineParams::symmetric(7.0, s); // scale = 1
+        for q in -7..=7 {
+            assert_eq!(p.fake_quant(q as f64), q as f64);
+        }
+    }
+
+    #[test]
+    fn sym_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..1000).map(|_| rng.normal() * 3.0).collect();
+        let s = QScheme::sym(6);
+        let q = fake_quant_sym(&x, s, 1.0);
+        let absmax = x.iter().fold(0.0_f64, |m, &v| m.max(v.abs()));
+        let scale = absmax / s.sym_qmax();
+        for (a, b) in x.iter().zip(&q) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn asym_error_bounded_by_half_scale_no_clip() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..1000).map(|_| rng.normal() + 5.0).collect();
+        let s = QScheme::asym(6);
+        let q = fake_quant_asym(&x, s, 1.0);
+        let (lo, hi) = minmax(&x);
+        // The quantizer extends the range to include zero.
+        let scale = (hi.max(0.0) - lo.min(0.0)) / s.asym_qmax();
+        for (a, b) in x.iter().zip(&q) {
+            // +scale tolerance: zero-point rounding can shift the grid.
+            assert!((a - b).abs() <= scale + 1e-12);
+        }
+    }
+
+    #[test]
+    fn asym_handles_shifted_data_better_than_sym() {
+        // Post-ReLU-like data: all positive. Asymmetric halves the range.
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..4000).map(|_| rng.normal().abs()).collect();
+        let b = QScheme { bits: 4, symmetric: true };
+        let qs = fake_quant_sym(&x, b, 1.0);
+        let qa = fake_quant_asym(&x, QScheme::asym(4), 1.0);
+        let err = |q: &[f64]| -> f64 { x.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum() };
+        assert!(err(&qa) < err(&qs));
+    }
+
+    #[test]
+    fn higher_bits_reduce_error() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..2000).map(|_| rng.laplace(1.0)).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 6, 8] {
+            let q = fake_quant_sym(&x, QScheme::sym(bits), 1.0);
+            let err: f64 = x.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(err < prev);
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn per_token_ranges_match_paper_definitions() {
+        let x = Mat::from_vec(2, 4, vec![1.0, -3.0, 0.5, 2.0, 10.0, 0.0, -1.0, 4.0]);
+        // Asymmetric: r = max − min per token.
+        let (_, r_asym) =
+            quantize_activations_per_token(&x, QScheme::asym(8), 1.0);
+        assert!((r_asym[0] - 5.0).abs() < 1e-12);
+        assert!((r_asym[1] - 11.0).abs() < 1e-12);
+        // Symmetric: r = 2·max|x|.
+        let (_, r_sym) = quantize_activations_per_token(&x, QScheme::sym(8), 1.0);
+        assert!((r_sym[0] - 6.0).abs() < 1e-9);
+        assert!((r_sym[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_zero_row_is_noop() {
+        let x = Mat::zeros(1, 8);
+        let (q, _) = quantize_activations_per_token(&x, QScheme::asym(4), 1.0);
+        assert_eq!(q.as_slice(), x.as_slice());
+    }
+
+    #[test]
+    fn static_quant_uses_fixed_range() {
+        let x = Mat::from_vec(2, 3, vec![0.1, 0.5, -0.2, 5.0, -3.0, 0.0]);
+        let (q, r) = quantize_activations_static(&x, -1.0, 1.0, QScheme::asym(8));
+        assert!((r - 2.0).abs() < 1e-9);
+        // Values outside the static range clip to it (±½ grid step from
+        // zero-point rounding).
+        let step = 2.0 / 255.0;
+        assert!(q[(1, 0)] <= 1.0 + step);
+        assert!(q[(1, 1)] >= -1.0 - step);
+        // In-range values quantize with small error.
+        assert!((q[(0, 1)] - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentile_range_clips_tails() {
+        let mut rng = Rng::new(7);
+        let mut x = Mat::from_fn(64, 64, |_, _| rng.normal());
+        x[(0, 0)] = 1000.0;
+        let (_, hi_mm) = percentile_range(&x, 1.0);
+        let (_, hi_99) = percentile_range(&x, 0.999);
+        assert!(hi_mm >= 1000.0);
+        assert!(hi_99 < 100.0, "0.999 percentile should drop the outlier: {hi_99}");
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_scale_varying_tokens() {
+        // Tokens with wildly different scales: per-token (dynamic) ranges
+        // must win — the reason the paper's setup quantizes dynamically.
+        let mut rng = Rng::new(8);
+        let x = Mat::from_fn(64, 32, |t, _| rng.normal() * (1.0 + t as f64));
+        let s = QScheme::asym(4);
+        let (qd, _) = quantize_activations_per_token(&x, s, 1.0);
+        let (lo, hi) = percentile_range(&x, 1.0);
+        let (qs, _) = quantize_activations_static(&x, lo, hi, s);
+        let ed = x.sub(&qd).fro_norm2();
+        let es = x.sub(&qs).fro_norm2();
+        assert!(ed < es * 0.5, "dynamic {ed} vs static {es}");
+    }
+
+    #[test]
+    fn idempotent_fake_quant() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let q1 = fake_quant_sym(&x, QScheme::sym(4), 1.0);
+        let q2 = fake_quant_sym(&q1, QScheme::sym(4), 1.0);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate: HLO text → `HloModuleProto` → compile on the CPU
+//! PJRT client → execute. Graphs compile lazily and are cached; weights
+//! and transforms are packed once per quantization config ([`ArgPack`])
+//! and reused across calls, so the request-path cost is one host-to-device
+//! copy of the small activations plus the compiled computation.
+
+use super::manifest::{Manifest, ModelEntry};
+use crate::linalg::Mat;
+use crate::model::QuantConfig;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A pre-converted argument bundle (params [+ transforms]) in graph order.
+pub struct ArgPack {
+    pub literals: Vec<xla::Literal>,
+}
+
+impl ArgPack {
+    /// FP pack: the model parameters in `param_spec` order.
+    pub fn fp(model: &ModelEntry, params: &HashMap<String, Mat>) -> Result<ArgPack> {
+        let mut literals = Vec::new();
+        for (name, shape) in model.config.param_spec() {
+            let m = params
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("missing param {name}"))?;
+            literals.push(mat_literal(m, &shape)?);
+        }
+        Ok(ArgPack { literals })
+    }
+
+    /// Quantized pack: fused fake-quant weights where available (FP params
+    /// elsewhere) followed by the transforms in `transform_spec` order.
+    pub fn quant(
+        model: &ModelEntry,
+        params: &HashMap<String, Mat>,
+        qc: &QuantConfig,
+    ) -> Result<ArgPack> {
+        let mut literals = Vec::new();
+        for (name, shape) in model.config.param_spec() {
+            let m = qc
+                .fused_weights
+                .get(&name)
+                .or_else(|| params.get(&name))
+                .ok_or_else(|| anyhow::anyhow!("missing param {name}"))?;
+            literals.push(mat_literal(m, &shape)?);
+        }
+        for (name, shape) in model.config.transform_spec() {
+            let t = qc
+                .transforms
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("missing transform {name}"))?;
+            literals.push(mat_literal(t, &shape)?);
+        }
+        Ok(ArgPack { literals })
+    }
+}
+
+/// Convert an analysis matrix to an f32 literal of the given logical shape.
+fn mat_literal(m: &Mat, shape: &[usize]) -> Result<xla::Literal> {
+    let data = m.to_f32();
+    let expect: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == expect,
+        "literal size mismatch: {} vs shape {:?}",
+        data.len(),
+        shape
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+/// Tokens (`batch × seq`, u8 ids) as an i32 literal.
+pub fn token_literal(tokens: &[Vec<u8>], seq: usize) -> Result<xla::Literal> {
+    let b = tokens.len();
+    let mut flat = Vec::with_capacity(b * seq);
+    for row in tokens {
+        anyhow::ensure!(row.len() == seq, "token row length {} != {seq}", row.len());
+        flat.extend(row.iter().map(|&t| t as i32));
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[b as i64, seq as i64])?)
+}
+
+/// The PJRT engine: one CPU client, a lazy cache of compiled graphs.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    pub fn new(manifest: Manifest) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) a graph: key `"<model>/<graph>"`.
+    pub fn executable(
+        &self,
+        model: &str,
+        graph: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{model}/{graph}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.model(model)?;
+        let g = entry
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("graph {graph} not in manifest for {model}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&g.file)
+            .with_context(|| format!("parsing {}", g.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute a graph; returns the flattened tuple outputs.
+    pub fn run(
+        &self,
+        model: &str,
+        graph: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(model, graph)?;
+        // `execute` accepts any Borrow<Literal>, so borrowed args avoid
+        // re-copying the (large, cached) weight literals per call.
+        let bufs = exe.execute(inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Upload an argument pack to device buffers once (§Perf: the weight
+    /// pack dominates per-call host→device traffic; a `base` decode step
+    /// would otherwise re-upload ~16 MB of weights per generated token).
+    ///
+    /// Consumes the pack: the TFRT CPU client may *alias* the literal's
+    /// host memory instead of copying (zero-copy donation), so the
+    /// literals must stay alive as long as the buffers — [`DevicePack`]
+    /// owns both.
+    pub fn device_pack(&self, pack: ArgPack) -> Result<DevicePack> {
+        let buffers = pack
+            .literals
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DevicePack { buffers, _literals: pack })
+    }
+
+    /// Execute with per-call literals (`head`) + a device-resident tail
+    /// (the uploaded pack). Argument order: head first, pack after —
+    /// matching every graph's `tokens[, pos, kv...], params[, transforms]`
+    /// convention.
+    pub fn run_b(
+        &self,
+        model: &str,
+        graph: &str,
+        head: &[&xla::Literal],
+        pack: &DevicePack,
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(model, graph)?;
+        // `head` literals outlive the call (borrowed), so aliased
+        // host-memory buffers are safe here too.
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(head.len());
+        for l in head {
+            args.push(self.client.buffer_from_host_literal(None, l)?);
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        refs.extend(pack.buffers.iter());
+        let bufs = exe.execute_b(&refs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Device-resident argument pack: the uploaded buffers plus the host
+/// literals they may alias (TFRT CPU zero-copy).
+pub struct DevicePack {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    _literals: ArgPack,
+}
+
+/// Extract an output literal into a `rows × cols` matrix (f32 source).
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v: Vec<f32> = lit.to_vec()?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size {} != {rows}×{cols}", v.len());
+    Ok(Mat::from_f32(rows, cols, &v))
+}

@@ -1,0 +1,131 @@
+//! The artifact manifest (written by `python/compile/aot.py`).
+
+use super::json::Json;
+use crate::model::ModelConfig;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub bits: Option<u32>,
+}
+
+/// One model's artifact bundle.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub weights: PathBuf,
+    pub graphs: BTreeMap<String, GraphEntry>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub corpus_train: PathBuf,
+    pub corpus_eval: PathBuf,
+    pub vocab: usize,
+    pub calib_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub prompt_len: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let conv = j.at("conventions")?;
+        let corpus = j.at("corpus")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.at("models")?.as_obj()? {
+            let cj = mj.at("config")?;
+            let config = ModelConfig {
+                name: name.clone(),
+                d: cj.at("d")?.as_usize()?,
+                n_layers: cj.at("n_layers")?.as_usize()?,
+                n_heads: cj.at("n_heads")?.as_usize()?,
+                ff: cj.at("ff")?.as_usize()?,
+                seq: cj.at("seq")?.as_usize()?,
+                vocab: cj.at("vocab")?.as_usize()?,
+            };
+            let mut graphs = BTreeMap::new();
+            for (gname, gj) in mj.at("graphs")?.as_obj()? {
+                graphs.insert(
+                    gname.clone(),
+                    GraphEntry {
+                        name: gname.clone(),
+                        file: dir.join(gj.at("file")?.as_str()?),
+                        batch: gj.at("batch")?.as_usize()?,
+                        bits: gj.get("bits").map(|b| b.as_f64().unwrap_or(0.0) as u32),
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    config,
+                    weights: dir.join(mj.at("weights")?.as_str()?),
+                    graphs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            corpus_train: dir.join(corpus.at("train")?.as_str()?),
+            corpus_eval: dir.join(corpus.at("eval")?.as_str()?),
+            vocab: corpus.at("vocab")?.as_usize()?,
+            calib_batch: conv.at("calib_batch")?.as_usize()?,
+            eval_batch: conv.at("eval_batch")?.as_usize()?,
+            serve_batch: conv.at("serve_batch")?.as_usize()?,
+            prompt_len: conv.at("prompt_len")?.as_usize()?,
+            models,
+        })
+    }
+
+    /// Default artifact location (`./artifacts`, overridable via
+    /// `CATQUANT_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CATQUANT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-level check, skipped when artifacts are not built.
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("tiny"));
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.config.d, 64);
+        assert!(tiny.graphs.contains_key("logits_fp"));
+        assert!(tiny.graphs["logits_fp"].file.exists());
+        assert!(tiny.weights.exists());
+    }
+}

@@ -1,0 +1,14 @@
+//! Artifact runtime: manifest parsing + PJRT execution.
+//!
+//! The request path is `Rust → PJRT CPU client → compiled HLO`; python is
+//! build-time only. [`PjrtEngine`] loads `artifacts/hlo/*.hlo.txt` (HLO
+//! *text* — see `python/compile/aot.py` for why not serialized protos),
+//! compiles each graph once, and executes with weights/transforms as
+//! runtime arguments so one executable serves every quantization config.
+
+mod engine;
+pub mod json;
+mod manifest;
+
+pub use engine::{literal_to_mat, token_literal, ArgPack, DevicePack, PjrtEngine};
+pub use manifest::{GraphEntry, Manifest, ModelEntry};

@@ -1,0 +1,209 @@
+//! Measured (Monte-Carlo) SQNR — the quantities Theorem 2.4 approximates.
+//!
+//! These run the *actual* quantizers over calibration data and compute
+//! `E‖Wx‖² / E‖Wx − W̃x̃‖²` directly, which is what Figure 2 plots on the
+//! y-axis against the approximation on the x-axis.
+
+use super::{approx_sqnr_joint, db};
+use crate::linalg::{matmul_a_bt, Mat};
+use crate::quant::{
+    gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, ActQuantCfg, GptqConfig,
+    WeightQuantCfg,
+};
+
+/// Measured SQNR with only activations quantized: `SQNR(Wx̃)`.
+pub fn measured_sqnr_act_only(x: &Mat, w: &Mat, cfg: ActQuantCfg) -> f64 {
+    let (xq, _) = quantize_activations_per_token(x, cfg.scheme, cfg.clip_ratio);
+    let y = matmul_a_bt(x, w);
+    let yq = matmul_a_bt(&xq, w);
+    ratio(&y, &yq)
+}
+
+/// Measured SQNR with only weights quantized: `SQNR(W̃x)`.
+pub fn measured_sqnr_weight_only(x: &Mat, w: &Mat, cfg: WeightQuantCfg) -> f64 {
+    let wq = quantize_weights_rtn(w, cfg);
+    let y = matmul_a_bt(x, w);
+    let yq = matmul_a_bt(x, &wq.deq);
+    ratio(&y, &yq)
+}
+
+/// Measured joint SQNR: `SQNR(W̃x̃)` with RTN weights.
+pub fn measured_sqnr_joint(x: &Mat, w: &Mat, act: ActQuantCfg, wq_cfg: WeightQuantCfg) -> f64 {
+    let (xq, _) = quantize_activations_per_token(x, act.scheme, act.clip_ratio);
+    let wq = quantize_weights_rtn(w, wq_cfg);
+    let y = matmul_a_bt(x, w);
+    let yq = matmul_a_bt(&xq, &wq.deq);
+    ratio(&y, &yq)
+}
+
+fn ratio(y: &Mat, yq: &Mat) -> f64 {
+    let signal = y.fro_norm2();
+    let noise = y.sub(yq).fro_norm2();
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        signal / noise
+    }
+}
+
+/// A per-layer SQNR report row: everything Figures 2, 3, 5, 6 plot.
+#[derive(Clone, Debug)]
+pub struct LayerSqnrReport {
+    pub name: String,
+    pub measured_db: f64,
+    pub approx_db: f64,
+    pub act_only_db: f64,
+    pub weight_only_db: f64,
+    pub concentration_act_db: f64,
+    pub concentration_w_db: f64,
+    pub alignment_db: f64,
+    pub max_alignment_db: f64,
+}
+
+impl LayerSqnrReport {
+    /// Build the full report for one linear layer.
+    pub fn build(
+        name: &str,
+        x: &Mat,
+        w: &Mat,
+        act: ActQuantCfg,
+        wq: WeightQuantCfg,
+        use_gptq: bool,
+    ) -> LayerSqnrReport {
+        use crate::linalg::matmul_at_b;
+        use crate::sqnr::{
+            alignment_data, concentration_act, concentration_weights, max_alignment,
+        };
+        let measured = if use_gptq {
+            let sigma = matmul_at_b(x, x).scale(1.0 / x.rows() as f64);
+            let wq_m = gptq_quantize(w, &sigma, wq, GptqConfig::default());
+            let (xq, _) = quantize_activations_per_token(x, act.scheme, act.clip_ratio);
+            let y = matmul_a_bt(x, w);
+            let yq = matmul_a_bt(&xq, &wq_m.deq);
+            ratio(&y, &yq)
+        } else {
+            measured_sqnr_joint(x, w, act, wq)
+        };
+        let sigma_x = matmul_at_b(x, x).scale(1.0 / x.rows() as f64);
+        LayerSqnrReport {
+            name: name.to_string(),
+            measured_db: db(measured),
+            approx_db: db(approx_sqnr_joint(x, w, act, wq)),
+            act_only_db: db(measured_sqnr_act_only(x, w, act)),
+            weight_only_db: db(measured_sqnr_weight_only(x, w, wq)),
+            concentration_act_db: db(concentration_act(x, act)),
+            concentration_w_db: db(concentration_weights(w, wq)),
+            alignment_db: db(alignment_data(x, w)),
+            max_alignment_db: db(max_alignment(&sigma_x, w)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::QScheme;
+    use crate::sqnr::parallel;
+
+    fn setup(seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let d = 64;
+        let x = Mat::from_fn(512, d, |_, _| rng.normal());
+        let w = Mat::from_fn(32, d, |_, _| rng.normal() * 0.1);
+        (x, w)
+    }
+
+    fn cfgs(bx: u32, bw: u32) -> (ActQuantCfg, WeightQuantCfg) {
+        (
+            ActQuantCfg { scheme: QScheme::asym(bx), clip_ratio: 1.0 },
+            WeightQuantCfg::minmax(bw),
+        )
+    }
+
+    #[test]
+    fn lemma_2_1_harmonic_sum() {
+        // SQNR(W̃x̃) ≈ SQNR(Wx̃) ∥ SQNR(W̃x) within ~1.5 dB on Gaussian data.
+        let (x, w) = setup(1);
+        let (act, wq) = cfgs(4, 4);
+        let joint = measured_sqnr_joint(&x, &w, act, wq);
+        let a_only = measured_sqnr_act_only(&x, &w, act);
+        let w_only = measured_sqnr_weight_only(&x, &w, wq);
+        let pred = parallel(a_only, w_only);
+        let err_db = (db(joint) - db(pred)).abs();
+        assert!(err_db < 1.5, "harmonic sum off by {err_db:.2} dB");
+    }
+
+    #[test]
+    fn theorem_2_4_accurate_on_gaussian_layers() {
+        // Figure 2's claim: approximation within a few dB in the 5–50 dB
+        // band.
+        for seed in [2u64, 3, 4] {
+            let (x, w) = setup(seed);
+            for (bx, bw) in [(4, 4), (4, 8), (8, 8)] {
+                let (act, wq) = cfgs(bx, bw);
+                let measured = db(measured_sqnr_joint(&x, &w, act, wq));
+                let approx = db(crate::sqnr::approx_sqnr_joint(&x, &w, act, wq));
+                if measured > 5.0 && measured < 50.0 {
+                    assert!(
+                        (measured - approx).abs() < 3.0,
+                        "seed {seed} W{bw}A{bx}: measured {measured:.1} dB vs approx {approx:.1} dB"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_more_sqnr() {
+        let (x, w) = setup(5);
+        let mut prev = 0.0;
+        for b in [2u32, 4, 6, 8] {
+            let (act, wq) = cfgs(b, b);
+            let s = measured_sqnr_joint(&x, &w, act, wq);
+            assert!(s > prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn each_joint_bit_adds_about_6db() {
+        // Paper §2.1 (eq. 3): +1 bit on both ⇒ ≈ +6 dB.
+        let (x, w) = setup(6);
+        let (a4, w4) = cfgs(4, 4);
+        let (a6, w6) = cfgs(6, 6);
+        let gain = db(measured_sqnr_joint(&x, &w, a6, w6))
+            - db(measured_sqnr_joint(&x, &w, a4, w4));
+        assert!((gain - 12.0).abs() < 3.0, "2 bits should add ≈12 dB, got {gain:.1}");
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let (x, w) = setup(7);
+        let (act, wq) = cfgs(4, 4);
+        let r = LayerSqnrReport::build("test", &x, &w, act, wq, false);
+        assert!(r.alignment_db <= r.max_alignment_db + 1e-6);
+        assert!((r.measured_db - r.approx_db).abs() < 4.0);
+        // Joint is worse than either single-sided quantization.
+        assert!(r.measured_db <= r.act_only_db + 0.5);
+        assert!(r.measured_db <= r.weight_only_db + 0.5);
+    }
+
+    #[test]
+    fn gptq_report_at_least_rtn() {
+        let mut rng = Rng::new(8);
+        let d = 64;
+        let scales: Vec<f64> = (0..d).map(|j| 0.2 + 3.0 * (j as f64 / d as f64)).collect();
+        let x = Mat::from_fn(512, d, |_, j| rng.normal() * scales[j]);
+        let w = Mat::from_fn(32, d, |_, _| rng.normal() * 0.1);
+        let (act, wq) = cfgs(16, 3); // weight-dominated error
+        let rtn = LayerSqnrReport::build("rtn", &x, &w, act, wq, false);
+        let gptq = LayerSqnrReport::build("gptq", &x, &w, act, wq, true);
+        assert!(
+            gptq.measured_db >= rtn.measured_db - 0.1,
+            "gptq {:.2} vs rtn {:.2}",
+            gptq.measured_db,
+            rtn.measured_db
+        );
+    }
+}

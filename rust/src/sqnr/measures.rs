@@ -1,0 +1,238 @@
+//! Concentration, alignment, and the Theorem 2.4 approximation.
+
+use crate::linalg::{matmul, matmul_a_bt, spd_sqrt, Mat};
+use crate::quant::{
+    quantize_activations_per_token, ActQuantCfg, WeightQuantCfg,
+};
+
+/// Harmonic sum ("parallel") operator: `a ∥ b = (1/a + 1/b)⁻¹` (Lemma 2.1).
+#[inline]
+pub fn parallel(a: f64, b: f64) -> f64 {
+    1.0 / (1.0 / a + 1.0 / b)
+}
+
+/// Activation concentration `C(x) = E‖x‖² / E[r(x)²]` (Lemma 2.2).
+///
+/// `x` is `tokens × d`; the range `r` per token follows the activation
+/// scheme (max−min asymmetric, `2·max|x|` symmetric), including the clip
+/// ratio, exactly matching what the quantizer will do.
+pub fn concentration_act(x: &Mat, cfg: ActQuantCfg) -> f64 {
+    let (_, ranges) = quantize_activations_per_token(x, cfg.scheme, cfg.clip_ratio);
+    let e_norm2 = x.fro_norm2() / x.rows() as f64;
+    let e_r2 = ranges.iter().map(|r| r * r).sum::<f64>() / ranges.len() as f64;
+    if e_r2 == 0.0 {
+        return f64::INFINITY;
+    }
+    e_norm2 / e_r2
+}
+
+/// Weight concentration `C(W) = Σᵢ‖wᵢ‖² / Σᵢ r(wᵢ)²` (Lemma 2.3),
+/// with per-output-channel ranges from the configured estimator.
+pub fn concentration_weights(w: &Mat, cfg: WeightQuantCfg) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..w.rows() {
+        let row = w.row(i);
+        num += row.iter().map(|v| v * v).sum::<f64>();
+        let absmax = cfg.range.resolve_sym(row, cfg.scheme);
+        let r = 2.0 * absmax; // symmetric range r(w) = 2·max|w|
+        den += r * r;
+    }
+    if den == 0.0 {
+        return f64::INFINITY;
+    }
+    num / den
+}
+
+/// Alignment `A(x, W) = E‖Wx‖² / (‖W‖_F² · E‖x‖²)` from calibration data
+/// (`x`: `tokens × d`, `w`: `out × d`).
+pub fn alignment_data(x: &Mat, w: &Mat) -> f64 {
+    let y = matmul_a_bt(x, w); // tokens × out
+    let e_y = y.fro_norm2() / y.rows() as f64;
+    let e_x = x.fro_norm2() / x.rows() as f64;
+    e_y / (w.fro_norm2() * e_x)
+}
+
+/// Alignment from second-order statistics:
+/// `A = Tr(W Σ_x Wᵀ) / (‖W‖_F² · Tr(Σ_x))`.
+pub fn alignment_stats(sigma_x: &Mat, w: &Mat) -> f64 {
+    let sy = matmul(&matmul(w, sigma_x), &w.transpose());
+    sy.trace() / (w.fro_norm2() * sigma_x.trace())
+}
+
+/// The achievable alignment optimum (paper eq. 9):
+///
+/// `A(M̂x, WM̂⁻¹) = Tr(Σ_y) / Tr(Σ_y^{1/2})²` with `Σ_y = W Σ_x Wᵀ`
+/// — equivalently `Σσᵢ² / (Σσᵢ)²` over the singular values `σ` of
+/// `W Σ_x^{1/2}`.
+pub fn max_alignment(sigma_x: &Mat, w: &Mat) -> f64 {
+    let mut sy = matmul(&matmul(w, sigma_x), &w.transpose());
+    sy.symmetrize();
+    let sy_half = spd_sqrt(&sy);
+    let t = sy_half.trace();
+    sy.trace() / (t * t)
+}
+
+/// Lemma 2.2: `SQNR(Wx̃) ≈ 12·N(b_x)²·C(x)·A(x,W)`.
+pub fn approx_sqnr_act(x: &Mat, w: &Mat, cfg: ActQuantCfg) -> f64 {
+    let n = cfg.scheme.n_intervals();
+    12.0 * n * n * concentration_act(x, cfg) * alignment_data(x, w)
+}
+
+/// Lemma 2.3: `SQNR(W̃x) ≈ 12·N(b_w)²·C(W)·A(x,W)`.
+pub fn approx_sqnr_weight(x: &Mat, w: &Mat, cfg: WeightQuantCfg) -> f64 {
+    let n = cfg.scheme.n_intervals();
+    12.0 * n * n * concentration_weights(w, cfg) * alignment_data(x, w)
+}
+
+/// Theorem 2.4: the joint approximation.
+pub fn approx_sqnr_joint(x: &Mat, w: &Mat, act: ActQuantCfg, wq: WeightQuantCfg) -> f64 {
+    let na = act.scheme.n_intervals();
+    let nw = wq.scheme.n_intervals();
+    let ca = concentration_act(x, act);
+    let cw = concentration_weights(w, wq);
+    12.0 * parallel(na * na * ca, nw * nw * cw) * alignment_data(x, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b, random_orthogonal, Mat, Rng};
+    use crate::quant::QScheme;
+
+    fn gaussian_x(tokens: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(tokens, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn parallel_is_bounded_by_min() {
+        assert!((parallel(1.0, 1.0) - 0.5).abs() < 1e-12);
+        let p = parallel(3.0, 9.0);
+        assert!(p < 3.0 && p > 1.5);
+        // Dominated by the worse component (paper §2.1).
+        assert!((parallel(1.0, 1e9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alignment_is_scale_invariant() {
+        let x = gaussian_x(200, 16, 1);
+        let mut rng = Rng::new(2);
+        let w = Mat::from_fn(8, 16, |_, _| rng.normal());
+        let a1 = alignment_data(&x, &w);
+        let a2 = alignment_data(&x.scale(3.7), &w.scale(0.01));
+        assert!((a1 - a2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alignment_rotation_invariant() {
+        // Paper eq. 4: A(Rx, WRᵀ) = A(x, W) for any orthogonal R.
+        let d = 16;
+        let x = gaussian_x(300, d, 3);
+        let mut rng = Rng::new(4);
+        let w = Mat::from_fn(8, d, |_, _| rng.normal());
+        let r = random_orthogonal(d, &mut rng);
+        let xr = matmul(&x, &r.transpose()); // rows transform as Rx
+        let wr = matmul(&w, &r.transpose()); // W Rᵀ... (WRᵀ)(Rx) = Wx
+        let a0 = alignment_data(&x, &w);
+        let a1 = alignment_data(&xr, &wr);
+        assert!((a0 - a1).abs() < 1e-9, "{a0} vs {a1}");
+    }
+
+    #[test]
+    fn alignment_data_matches_stats_asymptotically() {
+        let d = 12;
+        let x = gaussian_x(20_000, d, 5);
+        let mut rng = Rng::new(6);
+        let w = Mat::from_fn(6, d, |_, _| rng.normal());
+        let sigma = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let a_data = alignment_data(&x, &w);
+        let a_stats = alignment_stats(&sigma, &w);
+        assert!((a_data - a_stats).abs() / a_data < 1e-9);
+    }
+
+    #[test]
+    fn alignment_at_most_max_alignment() {
+        let d = 10;
+        let mut rng = Rng::new(7);
+        // Anisotropic x.
+        let scales: Vec<f64> = (0..d).map(|i| 1.0 + i as f64).collect();
+        let x = Mat::from_fn(5000, d, |_, j| rng.normal() * scales[j]);
+        let w = Mat::from_fn(6, d, |_, _| rng.normal());
+        let sigma = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let a = alignment_stats(&sigma, &w);
+        let a_max = max_alignment(&sigma, &w);
+        assert!(a <= a_max * (1.0 + 1e-9), "a={a} max={a_max}");
+    }
+
+    #[test]
+    fn max_alignment_is_one_over_d_for_isotropic_full_rank() {
+        // If Σ_y ∝ I (e.g. W orthogonal, Σ_x = I), A_max = d/d² = 1/d,
+        // and plain alignment achieves it.
+        let d = 8;
+        let mut rng = Rng::new(8);
+        let w = random_orthogonal(d, &mut rng);
+        let sigma = Mat::eye(d);
+        let a_max = max_alignment(&sigma, &w);
+        assert!((a_max - 1.0 / d as f64).abs() < 1e-9);
+        assert!((alignment_stats(&sigma, &w) - a_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concentration_scale_invariant() {
+        let x = gaussian_x(100, 32, 9);
+        let cfg = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let c1 = concentration_act(&x, cfg);
+        let c2 = concentration_act(&x.scale(100.0), cfg);
+        assert!((c1 - c2).abs() / c1 < 1e-12);
+    }
+
+    #[test]
+    fn outliers_destroy_concentration() {
+        let x = gaussian_x(100, 64, 10);
+        let mut x_out = x.clone();
+        // One massive outlier channel (the paper's motivating pathology).
+        for t in 0..x_out.rows() {
+            x_out[(t, 7)] *= 50.0;
+        }
+        let cfg = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let c_clean = concentration_act(&x, cfg);
+        let c_out = concentration_act(&x_out, cfg);
+        assert!(
+            c_out < c_clean * 0.5,
+            "outliers should hurt concentration: {c_clean} -> {c_out}"
+        );
+    }
+
+    #[test]
+    fn concentration_lower_bounds() {
+        // Paper §2.1: asymmetric floor 1/2, symmetric floor 1/4
+        // (single-nonzero-value distribution).
+        let mut x = Mat::zeros(8, 16);
+        for t in 0..8 {
+            x[(t, 3)] = 5.0; // single constant nonzero channel
+        }
+        let c_asym = concentration_act(
+            &x,
+            ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 },
+        );
+        let c_sym = concentration_act(
+            &x,
+            ActQuantCfg { scheme: QScheme::sym(4), clip_ratio: 1.0 },
+        );
+        assert!((c_asym - 1.0).abs() < 1e-9 || c_asym >= 0.5); // r = max-min = 5 ⇒ 25/25
+        assert!((c_sym - 0.25).abs() < 1e-9, "sym floor: {c_sym}");
+    }
+
+    #[test]
+    fn weight_concentration_per_channel() {
+        // Two rows with very different scales: per-channel ranges keep
+        // concentration at the Gaussian level for both.
+        let mut rng = Rng::new(11);
+        let w = Mat::from_fn(2, 256, |i, _| rng.normal() * if i == 0 { 1.0 } else { 100.0 });
+        let cfg = WeightQuantCfg::minmax(4);
+        let c = concentration_weights(&w, cfg);
+        // A pathological shared-range scheme would be ≪ this.
+        assert!(c > 0.02, "c = {c}");
+    }
+}

@@ -1,0 +1,59 @@
+//! The paper's Concentration–Alignment framework (§2).
+//!
+//! For a quantized linear layer `W̃x̃`, Theorem 2.4 approximates
+//!
+//! ```text
+//! SQNR(W̃x̃) ≈ 12 · ( N(b_x)²·C(x)  ∥  N(b_w)²·C(W) ) · A(x, W)
+//! ```
+//!
+//! where `∥` is the harmonic-sum ("parallel resistor") operator,
+//! `N(b) = 2^b − 1` the interval count, `C(·)` **concentration** and
+//! `A(x, W)` **alignment**. This module computes every term, the measured
+//! (Monte-Carlo) SQNRs they approximate, and the achievable alignment
+//! optimum of eq. 9 — everything Figures 2–6 need.
+
+mod measures;
+mod measured;
+mod reference;
+
+pub use measures::{
+    alignment_data, alignment_stats, approx_sqnr_act, approx_sqnr_joint, approx_sqnr_weight,
+    concentration_act, concentration_weights, max_alignment, parallel,
+};
+pub use measured::{
+    measured_sqnr_act_only, measured_sqnr_joint, measured_sqnr_weight_only, LayerSqnrReport,
+};
+pub use reference::{laplace_concentration, normal_concentration};
+
+/// Convert a ratio to decibels: `10·log₁₀(x)`.
+#[inline]
+pub fn db(x: f64) -> f64 {
+    10.0 * x.log10()
+}
+
+/// Convert decibels back to a ratio.
+#[inline]
+pub fn from_db(d: f64) -> f64 {
+    10f64.powf(d / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_roundtrip() {
+        for x in [0.25, 1.0, 12.0, 4096.0] {
+            assert!((from_db(db(x)) - x).abs() < 1e-9 * x);
+        }
+    }
+
+    #[test]
+    fn six_db_per_bit() {
+        // Each extra bit quadruples N(b)² asymptotically ⇒ ≈ 6.02 dB.
+        let n4 = (2f64.powi(4) - 1.0).powi(2);
+        let n5 = (2f64.powi(5) - 1.0).powi(2);
+        let gain = db(n5 / n4);
+        assert!((gain - 6.02).abs() < 0.6, "gain {gain}");
+    }
+}

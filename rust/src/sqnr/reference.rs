@@ -1,0 +1,60 @@
+//! Reference concentrations of known distributions.
+//!
+//! Figure 4 annotates concentration distributions with the values a
+//! d-dimensional standard Normal and Laplace would attain (the "Gaussian
+//! band" Hadamard-transformed channels converge to by the CLT, and the
+//! "worse-than-Laplace" red region where raw LLM activations live).
+//! The values are dimension-dependent (the range of d samples grows with
+//! d); we estimate them by deterministic Monte Carlo.
+
+use crate::linalg::{Mat, Rng};
+use crate::quant::{ActQuantCfg, QScheme};
+
+/// Concentration of a `d`-dimensional standard Normal under the given
+/// activation quantization scheme (deterministic MC with `tokens` draws).
+pub fn normal_concentration(d: usize, scheme: QScheme, tokens: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let x = Mat::from_fn(tokens, d, |_, _| rng.normal());
+    crate::sqnr::concentration_act(&x, ActQuantCfg { scheme, clip_ratio: 1.0 })
+}
+
+/// Concentration of a `d`-dimensional Laplace(0, 1) under the given scheme.
+pub fn laplace_concentration(d: usize, scheme: QScheme, tokens: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let x = Mat::from_fn(tokens, d, |_, _| rng.laplace(1.0));
+    crate::sqnr::concentration_act(&x, ActQuantCfg { scheme, clip_ratio: 1.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sqnr::db;
+
+    #[test]
+    fn normal_beats_laplace() {
+        // Lighter tails ⇒ higher concentration, at every width.
+        for d in [64usize, 256] {
+            let n = normal_concentration(d, QScheme::asym(4), 2000, 1);
+            let l = laplace_concentration(d, QScheme::asym(4), 2000, 1);
+            assert!(n > l, "d={d}: normal {n} ≤ laplace {l}");
+        }
+    }
+
+    #[test]
+    fn concentration_increases_with_dimension() {
+        // E‖x‖² grows like d while the squared range grows only like
+        // 8·ln d, so Gaussian concentration *improves* with width — this
+        // is why Figure 4's reference lines depend on layer width and why
+        // Hadamard gains are largest for the biggest layers (paper §3).
+        let n64 = normal_concentration(64, QScheme::asym(4), 4000, 2);
+        let n1024 = normal_concentration(1024, QScheme::asym(4), 1000, 2);
+        assert!(db(n1024) > db(n64));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = normal_concentration(128, QScheme::asym(4), 500, 7);
+        let b = normal_concentration(128, QScheme::asym(4), 500, 7);
+        assert_eq!(a, b);
+    }
+}

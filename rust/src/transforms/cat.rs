@@ -1,0 +1,235 @@
+//! Concentration-Alignment Transforms (paper §4).
+//!
+//! * [`cat_m_hat`] — the alignment-optimal full-rank transform
+//!   `M̂ = (Σ_w # Σ_x⁻¹)^{1/2}` (eq. 7), `#` the matrix geometric mean.
+//! * [`cat_optimal`] — `T̂ = H·M̂`: compose with a Hadamard for
+//!   concentration (step 2 of the paper's recipe; alignment is
+//!   rotation-invariant so H is free).
+//! * [`cat_block`] — the practical **CAT (block)**: block-diagonal M̂ with
+//!   per-block geometric means (eq. 10), default `k = 128`.
+
+use super::Transform;
+use crate::linalg::{
+    geometric_mean, hadamard_matrix, is_pow2, random_orthogonal, spd_inv, spd_sqrt, Mat, Rng,
+};
+
+/// The alignment-optimal transform `M̂ = (Σ_w # Σ_x⁻¹)^{1/2}` (eq. 7).
+///
+/// `sigma_x = E[xxᵀ]` from calibration; `sigma_w = Σ WᵀW` summed over the
+/// weight matrices sharing this input. Both get a small relative ridge so
+/// ill-conditioned calibration estimates stay invertible.
+pub fn cat_m_hat(sigma_x: &Mat, sigma_w: &Mat) -> Mat {
+    let d = sigma_x.rows();
+    assert_eq!(sigma_w.rows(), d, "Σ_w / Σ_x dim mismatch");
+    let mut sx = sigma_x.clone();
+    let mut sw = sigma_w.clone();
+    ridge(&mut sx);
+    ridge(&mut sw);
+    let g = geometric_mean(&sw, &spd_inv(&sx));
+    spd_sqrt(&g)
+}
+
+fn ridge(s: &mut Mat) {
+    let d = s.rows();
+    let mean_diag = (0..d).map(|i| s[(i, i)]).sum::<f64>() / d as f64;
+    s.add_diag(1e-6 * mean_diag.max(1e-12));
+    s.symmetrize();
+}
+
+/// Full CAT: `T̂ = H·M̂` (alignment-optimal, concentration via Hadamard).
+/// Falls back to a Haar rotation when `d` is not a power of two.
+pub fn cat_optimal(sigma_x: &Mat, sigma_w: &Mat, seed: u64) -> Transform {
+    let d = sigma_x.rows();
+    let m = cat_m_hat(sigma_x, sigma_w);
+    let m_t = Transform::spd("cat-M̂", m);
+    m_t.then(&concentration_rotation(d, seed))
+}
+
+/// Block-diagonal M̂ (no Hadamard): `Diag(M̂_1 … M̂_{d/k})`, each block the
+/// geometric-mean optimum on its own coordinates (paper eq. 10's
+/// `M̂ᵏ_block`). Exposed separately for the Figure 5 ablation.
+pub fn cat_block_raw(sigma_x: &Mat, sigma_w: &Mat, k: usize) -> Transform {
+    let d = sigma_x.rows();
+    assert!(k >= 1 && k <= d);
+    let mut m = Mat::zeros(d, d);
+    let mut m_inv = Mat::zeros(d, d);
+    let mut start = 0;
+    while start < d {
+        let kb = k.min(d - start);
+        let sx_b = sigma_x.block(start, start, kb, kb);
+        let sw_b = sigma_w.block(start, start, kb, kb);
+        let mb = cat_m_hat(&sx_b, &sw_b);
+        m.set_block(start, start, &mb);
+        m_inv.set_block(start, start, &spd_inv(&mb));
+        start += kb;
+    }
+    Transform::new(format!("cat-block(k={k})"), m, m_inv)
+}
+
+/// **CAT (block)** — the paper's practical method (eq. 10):
+/// `T̂ᵏ_block = H · M̂ᵏ_block`, default `k = 128`.
+pub fn cat_block(sigma_x: &Mat, sigma_w: &Mat, k: usize, seed: u64) -> Transform {
+    let d = sigma_x.rows();
+    cat_block_raw(sigma_x, sigma_w, k).then(&concentration_rotation(d, seed))
+}
+
+/// The concentration rotation H (Hadamard when possible, Haar otherwise).
+fn concentration_rotation(d: usize, seed: u64) -> Transform {
+    if is_pow2(d) {
+        Transform::orthogonal("H", hadamard_matrix(d))
+    } else {
+        let mut rng = Rng::new(seed ^ 0x48414441);
+        Transform::orthogonal("R", random_orthogonal(d, &mut rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b, Rng};
+    use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+    use crate::sqnr::{
+        alignment_data, approx_sqnr_joint, concentration_act, max_alignment,
+    };
+
+    /// Anisotropic, correlated activations + weights with mismatched
+    /// principal directions — the regime where alignment is poor.
+    fn hard_layer(d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let tokens = 40 * d;
+        // Correlated x: x = z · Aᵀ with random A and spread spectrum.
+        let a = Mat::from_fn(d, d, |i, j| {
+            rng.normal() * (6.0_f64).powf(-(((i + j) % d) as f64) / d as f64)
+        });
+        let z = Mat::from_fn(tokens, d, |_, _| rng.normal());
+        let x = matmul(&z, &a.transpose());
+        let w = Mat::from_fn(d / 2, d, |i, j| {
+            rng.normal() * (5.0_f64).powf(((i + 2 * j) % d) as f64 / d as f64) * 0.01
+        });
+        (x, w)
+    }
+
+    fn stats(x: &Mat, w: &Mat) -> (Mat, Mat) {
+        let sigma_x = matmul_at_b(x, x).scale(1.0 / x.rows() as f64);
+        let sigma_w = matmul_at_b(w, w);
+        (sigma_x, sigma_w)
+    }
+
+    #[test]
+    fn m_hat_achieves_max_alignment() {
+        // The heart of the paper: M̂ attains the eq. 9 optimum.
+        let (x, w) = hard_layer(16, 1);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let m = cat_m_hat(&sigma_x, &sigma_w);
+        let t = Transform::spd("m̂", m);
+        let a_after = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let a_max = max_alignment(&sigma_x, &w);
+        assert!(
+            (a_after - a_max).abs() / a_max < 0.02,
+            "M̂ alignment {a_after} vs optimum {a_max}"
+        );
+    }
+
+    #[test]
+    fn m_hat_satisfies_eq_8_fixed_point() {
+        // M̂ Σ_x M̂ = M̂⁻¹ Σ_w M̂⁻¹: both sides map to the same matrix.
+        let (x, w) = hard_layer(12, 2);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let m = cat_m_hat(&sigma_x, &sigma_w);
+        let mi = spd_inv(&m);
+        let lhs = matmul(&matmul(&m, &sigma_x), &m);
+        let rhs = matmul(&matmul(&mi, &sigma_w), &mi);
+        let rel = lhs.max_abs_diff(&rhs) / lhs.max_abs().max(1e-12);
+        // Tolerance: the builder applies a 1e-6 relative ridge to both
+        // statistics before the geometric mean.
+        assert!(rel < 2e-3, "eq. 8 violated, rel err {rel}");
+    }
+
+    #[test]
+    fn hadamard_composition_preserves_alignment() {
+        // Step 2 of the CAT recipe is free for alignment.
+        let (x, w) = hard_layer(16, 3);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let m = Transform::spd("m̂", cat_m_hat(&sigma_x, &sigma_w));
+        let full = cat_optimal(&sigma_x, &sigma_w, 0);
+        let a_m = alignment_data(&m.apply_acts(&x), &m.fuse_weights(&w));
+        let a_full = alignment_data(&full.apply_acts(&x), &full.fuse_weights(&w));
+        assert!((a_m - a_full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_cat_interpolates_alignment() {
+        // k=1 ≤ k=4 ≤ k=d alignment (larger blocks, closer to optimal).
+        let d = 16;
+        let (x, w) = hard_layer(d, 4);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let a_of = |t: &Transform| alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let a0 = alignment_data(&x, &w);
+        let a1 = a_of(&cat_block_raw(&sigma_x, &sigma_w, 1));
+        let a4 = a_of(&cat_block_raw(&sigma_x, &sigma_w, 4));
+        let ad = a_of(&cat_block_raw(&sigma_x, &sigma_w, d));
+        let amax = max_alignment(&sigma_x, &w);
+        assert!(a1 >= a0 * 0.8, "k=1 should not destroy alignment: {a0} -> {a1}");
+        assert!(ad >= a4 * 0.99 && a4 >= a1 * 0.9, "monotone-ish: {a1} {a4} {ad}");
+        assert!((ad - amax).abs() / amax < 0.02, "full block = optimal");
+    }
+
+    #[test]
+    fn cat_block_improves_joint_sqnr_over_hadamard() {
+        // Figure 6's claim, on the hard synthetic layer.
+        let d = 32;
+        let (x, w) = hard_layer(d, 5);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let wq = WeightQuantCfg::minmax(4);
+        let h = Transform::orthogonal("H", hadamard_matrix(d));
+        let cat = cat_block(&sigma_x, &sigma_w, 8, 0);
+        let s_h = approx_sqnr_joint(&h.apply_acts(&x), &h.fuse_weights(&w), act, wq);
+        let s_cat = approx_sqnr_joint(&cat.apply_acts(&x), &cat.fuse_weights(&w), act, wq);
+        assert!(
+            s_cat > s_h,
+            "CAT ({:.1} dB) should beat Hadamard ({:.1} dB)",
+            10.0 * s_cat.log10(),
+            10.0 * s_h.log10()
+        );
+    }
+
+    #[test]
+    fn cat_keeps_concentration_near_hadamard() {
+        // Figure 4: CAT's Hadamard factor keeps channels near Gaussian.
+        let d = 32;
+        let (x, w) = hard_layer(d, 6);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let h = Transform::orthogonal("H", hadamard_matrix(d));
+        let cat = cat_block(&sigma_x, &sigma_w, 8, 0);
+        let c_h = concentration_act(&h.apply_acts(&x), act);
+        let c_cat = concentration_act(&cat.apply_acts(&x), act);
+        assert!(
+            c_cat > c_h * 0.4,
+            "CAT concentration {c_cat} far below Hadamard {c_h}"
+        );
+    }
+
+    #[test]
+    fn function_preserved_through_cat() {
+        let d = 16;
+        let (x, w) = hard_layer(d, 7);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let t = cat_block(&sigma_x, &sigma_w, 4, 0);
+        let y = crate::linalg::matmul_a_bt(&x, &w);
+        let y2 = crate::linalg::matmul_a_bt(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let rel = y.max_abs_diff(&y2) / y.max_abs().max(1e-12);
+        assert!(rel < 1e-6, "function not preserved, rel {rel}");
+    }
+
+    #[test]
+    fn k1_matches_diag_align_scale() {
+        let (x, w) = hard_layer(8, 8);
+        let (sigma_x, sigma_w) = stats(&x, &w);
+        let b1 = cat_block_raw(&sigma_x, &sigma_w, 1);
+        let ds = super::super::diag_align_scale(&sigma_x, &sigma_w);
+        let rel = b1.matrix().max_abs_diff(ds.matrix()) / ds.matrix().max_abs();
+        assert!(rel < 1e-3, "k=1 block CAT should equal the diagonal optimum, rel {rel}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Kronecker-factored transforms — the FlatQuant substitute.
+//!
+//! FlatQuant (Sun et al., 2025) parameterizes the transform as a Kronecker
+//! product `T = T₁ ⊗ T₂` of two small invertible matrices (cost
+//! `O(d(d₁+d₂))` online instead of `O(d²)`) and trains the factors.
+//! Offline-training-free substitute (DESIGN.md §3): build each factor as a
+//! CAT geometric-mean optimum on the *partial-trace* statistics of its
+//! axis, i.e. the best Kronecker-structured approximation of the CAT
+//! objective, then (optionally) refine by coordinate descent on the
+//! Theorem 2.4 SQNR proxy.
+
+use super::{cat_m_hat, Transform};
+use crate::linalg::{spd_inv, Mat};
+
+/// Split `d` into factor dims `d₁·d₂ = d` with `d₁ ≤ d₂` as balanced as
+/// possible (FlatQuant's setting).
+pub fn kronecker_factor_dims(d: usize) -> (usize, usize) {
+    let mut best = (1, d);
+    let mut i = 1;
+    while i * i <= d {
+        if d % i == 0 {
+            best = (i, d / i);
+        }
+        i += 1;
+    }
+    best
+}
+
+/// Partial traces of a `d×d` PSD matrix over a `d₁×d₂` index split
+/// (`i = i₁·d₂ + i₂`): returns `(Σ₁, Σ₂)` with
+/// `Σ₁[i₁,j₁] = (1/d₂)·Σ_{i₂} Σ[i₁d₂+i₂, j₁d₂+i₂]` and symmetrically for
+/// `Σ₂`. These are the axis-wise statistics the Kronecker factors see.
+pub fn partial_trace_factors(sigma: &Mat, d1: usize, d2: usize) -> (Mat, Mat) {
+    assert_eq!(sigma.rows(), d1 * d2);
+    let mut s1 = Mat::zeros(d1, d1);
+    for i1 in 0..d1 {
+        for j1 in 0..d1 {
+            let mut acc = 0.0;
+            for i2 in 0..d2 {
+                acc += sigma[(i1 * d2 + i2, j1 * d2 + i2)];
+            }
+            s1[(i1, j1)] = acc / d2 as f64;
+        }
+    }
+    let mut s2 = Mat::zeros(d2, d2);
+    for i2 in 0..d2 {
+        for j2 in 0..d2 {
+            let mut acc = 0.0;
+            for i1 in 0..d1 {
+                acc += sigma[(i1 * d2 + i2, i1 * d2 + j2)];
+            }
+            s2[(i2, j2)] = acc / d1 as f64;
+        }
+    }
+    s1.symmetrize();
+    s2.symmetrize();
+    (s1, s2)
+}
+
+/// Dense Kronecker product `A ⊗ B`.
+fn kron(a: &Mat, b: &Mat) -> Mat {
+    let (ar, ac) = (a.rows(), a.cols());
+    let (br, bc) = (b.rows(), b.cols());
+    Mat::from_fn(ar * br, ac * bc, |i, j| a[(i / br, j / bc)] * b[(i % br, j % bc)])
+}
+
+/// FlatQuant-style transform: `T = (H₁·M₁) ⊗ (H₂·M₂)` with each `Mᵢ` the
+/// CAT optimum of its axis statistics and `Hᵢ` the axis Hadamard/rotation.
+///
+/// `sigma_x`, `sigma_w`: full `d×d` statistics (as for [`cat_m_hat`]).
+pub fn kronecker_cat(sigma_x: &Mat, sigma_w: &Mat, seed: u64) -> Transform {
+    let d = sigma_x.rows();
+    let (d1, d2) = kronecker_factor_dims(d);
+    if d1 == 1 {
+        // d prime: degenerate split, fall back to diagonal + rotation.
+        return super::cat_block(sigma_x, sigma_w, 1, seed);
+    }
+    let (sx1, sx2) = partial_trace_factors(sigma_x, d1, d2);
+    let (sw1, sw2) = partial_trace_factors(sigma_w, d1, d2);
+    let m1 = cat_m_hat(&sx1, &sw1);
+    let m2 = cat_m_hat(&sx2, &sw2);
+    let h1 = rotation_factor(d1, seed);
+    let h2 = rotation_factor(d2, seed ^ 0x5EED);
+    let f1 = crate::linalg::matmul(&h1, &m1);
+    let f2 = crate::linalg::matmul(&h2, &m2);
+    let f1_inv = crate::linalg::matmul(&spd_inv(&m1), &h1.transpose());
+    let f2_inv = crate::linalg::matmul(&spd_inv(&m2), &h2.transpose());
+    Transform::new(
+        format!("flatquant({d1}×{d2})"),
+        kron(&f1, &f2),
+        kron(&f1_inv, &f2_inv),
+    )
+}
+
+fn rotation_factor(d: usize, seed: u64) -> Mat {
+    if crate::linalg::is_pow2(d) {
+        crate::linalg::hadamard_matrix(d)
+    } else {
+        let mut rng = crate::linalg::Rng::new(seed);
+        crate::linalg::random_orthogonal(d, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Rng};
+    use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+    use crate::sqnr::{alignment_data, approx_sqnr_joint};
+
+    #[test]
+    fn factor_dims_balanced() {
+        assert_eq!(kronecker_factor_dims(64), (8, 8));
+        assert_eq!(kronecker_factor_dims(128), (8, 16));
+        assert_eq!(kronecker_factor_dims(12), (3, 4));
+        assert_eq!(kronecker_factor_dims(7), (1, 7));
+    }
+
+    #[test]
+    fn kron_matches_definition() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::eye(2);
+        let k = kron(&a, &b);
+        assert_eq!(k.rows(), 4);
+        assert_eq!(k[(0, 0)], 1.0);
+        assert_eq!(k[(1, 1)], 1.0);
+        assert_eq!(k[(0, 2)], 2.0);
+        assert_eq!(k[(2, 0)], 3.0);
+        assert_eq!(k[(3, 3)], 4.0);
+    }
+
+    #[test]
+    fn partial_trace_of_kron_recovers_factors() {
+        // Σ = A ⊗ B ⇒ partial traces ∝ A·mean(diag B) and B·mean(diag A).
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.5, 0.5, 1.0]);
+        let b = Mat::from_vec(3, 3, vec![1.0, 0.2, 0.0, 0.2, 3.0, 0.1, 0.0, 0.1, 2.0]);
+        let s = kron(&a, &b);
+        let (s1, s2) = partial_trace_factors(&s, 2, 3);
+        let tb = b.trace() / 3.0;
+        let ta = a.trace() / 2.0;
+        assert!(s1.max_abs_diff(&a.scale(tb)) < 1e-12);
+        assert!(s2.max_abs_diff(&b.scale(ta)) < 1e-12);
+    }
+
+    fn kron_structured_layer(d1: usize, d2: usize, seed: u64) -> (Mat, Mat) {
+        // Activations with Kronecker-ish covariance so the factored
+        // transform has signal to exploit.
+        let d = d1 * d2;
+        let mut rng = Rng::new(seed);
+        let a1 = Mat::from_fn(d1, d1, |_, _| rng.normal());
+        let a2 = Mat::from_fn(d2, d2, |_, _| rng.normal() * 0.5);
+        let mix = kron(&a1, &a2);
+        let z = Mat::from_fn(30 * d, d, |_, _| rng.normal());
+        let x = matmul(&z, &mix.transpose());
+        let w = Mat::from_fn(d, d, |i, j| rng.normal() * (3.0_f64).powf(((i * j) % d) as f64 / d as f64) * 0.01);
+        (x, w)
+    }
+
+    #[test]
+    fn function_preserved() {
+        let (x, w) = kron_structured_layer(4, 8, 1);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma_w = matmul_at_b(&w, &w);
+        let t = kronecker_cat(&sigma_x, &sigma_w, 0);
+        let y = matmul_a_bt(&x, &w);
+        let y2 = matmul_a_bt(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let rel = y.max_abs_diff(&y2) / y.max_abs();
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+
+    #[test]
+    fn improves_over_identity() {
+        let (x, w) = kron_structured_layer(4, 8, 2);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma_w = matmul_at_b(&w, &w);
+        let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let wq = WeightQuantCfg::minmax(4);
+        let t = kronecker_cat(&sigma_x, &sigma_w, 0);
+        let s0 = approx_sqnr_joint(&x, &w, act, wq);
+        let s1 = approx_sqnr_joint(&t.apply_acts(&x), &t.fuse_weights(&w), act, wq);
+        assert!(s1 > s0, "flatquant should beat identity: {s0} vs {s1}");
+    }
+
+    #[test]
+    fn improves_alignment_unlike_rotations() {
+        let (x, w) = kron_structured_layer(4, 8, 3);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma_w = matmul_at_b(&w, &w);
+        let t = kronecker_cat(&sigma_x, &sigma_w, 0);
+        let a0 = alignment_data(&x, &w);
+        let a1 = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(a1 > a0, "kronecker CAT should improve alignment: {a0} -> {a1}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Function-preserving linear transforms (paper §3–4).
+//!
+//! A transform `T` rewrites a linear layer `Wx = (WT⁻¹)(Tx)` before
+//! quantization (paper eq. 5). The zoo:
+//!
+//! | builder | paper name | improves |
+//! |---|---|---|
+//! | [`Transform::identity`] | no transform | — |
+//! | [`smooth_quant_scale`] | SmoothQuant (Xiao et al.) | activation concentration (at weight cost) |
+//! | [`Transform::hadamard`] / [`Transform::randomized_hadamard`] | QuaRot (Ashkboos et al.) | concentration only — provably alignment-invariant |
+//! | [`seed_search_rotation`] | SpinQuant (substitute, see DESIGN.md §3) | concentration via rotation selection |
+//! | [`cat_optimal`] | CAT, full-rank M̂ (eq. 7) | alignment (optimally) + concentration via H |
+//! | [`cat_block`] | **CAT (block)** — the paper's method | alignment + concentration at block-diagonal cost |
+//! | [`kronecker_cat`] | FlatQuant substitute (Sun et al.) | both, via Kronecker-factored transform |
+
+mod cat;
+mod kronecker;
+mod permuted;
+mod rotation;
+mod scaling;
+mod transform;
+
+pub use cat::{cat_block, cat_block_raw, cat_m_hat, cat_optimal};
+pub use kronecker::{kronecker_cat, kronecker_factor_dims, partial_trace_factors};
+pub use permuted::{correlation_ordering, permuted_cat_block};
+pub use rotation::seed_search_rotation;
+pub use scaling::{smooth_quant_scale, diag_align_scale};
+pub use transform::Transform;
+
+/// Which transform family to build — the experiment grid's axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformKind {
+    None,
+    SmoothQuant,
+    QuaRot,
+    SpinQuant,
+    CatBlock,
+    CatBlockTrained,
+    FlatQuant,
+    CatOptimal,
+    /// Paper §7 future work: channel permutation + block CAT
+    /// (implemented in [`permuted_cat_block`]; see the ablation exp).
+    CatBlockPermuted,
+}
+
+impl TransformKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransformKind::None => "None",
+            TransformKind::SmoothQuant => "SmoothQuant",
+            TransformKind::QuaRot => "QuaRot",
+            TransformKind::SpinQuant => "SpinQuant",
+            TransformKind::CatBlock => "CAT (block)",
+            TransformKind::CatBlockTrained => "CAT (block) w/ train",
+            TransformKind::FlatQuant => "FlatQuant",
+            TransformKind::CatOptimal => "CAT (optimal)",
+            TransformKind::CatBlockPermuted => "CAT (perm-block)",
+        }
+    }
+
+    /// All Table 1 rows, in the paper's order.
+    pub fn table1_rows() -> &'static [TransformKind] {
+        &[
+            TransformKind::None,
+            TransformKind::SmoothQuant,
+            TransformKind::QuaRot,
+            TransformKind::CatBlock,
+            TransformKind::SpinQuant,
+            TransformKind::FlatQuant,
+            TransformKind::CatBlockTrained,
+        ]
+    }
+}

@@ -1,0 +1,179 @@
+//! Permuted block CAT — the paper's future-work direction (§7:
+//! "adding mergeable rotations or permutations that can improve the
+//! block-diagonal approximation").
+//!
+//! A block-diagonal M̂ can only exploit correlation structure *inside*
+//! each k-block. A channel permutation `P` (free at inference: it fuses
+//! into the surrounding weights exactly like the transform itself) can
+//! first gather strongly-interacting channels into the same block. We
+//! order channels by their loading on the principal eigenvector of the
+//! blended correlation matrix `|corr(Σ_x)| + |corr(Σ_w)|` — a spectral
+//! seriation heuristic that places correlated channels contiguously —
+//! then build the usual block CAT in the permuted basis:
+//!
+//! `T = H · M̂_block(P Σ P ᵀ) · P`.
+
+use super::{cat_block_raw, Transform};
+use crate::linalg::{eigh, hadamard_matrix, is_pow2, random_orthogonal, Mat, Rng};
+
+/// Channel ordering from spectral seriation of the blended correlations.
+pub fn correlation_ordering(sigma_x: &Mat, sigma_w: &Mat) -> Vec<usize> {
+    let d = sigma_x.rows();
+    let mut blend = Mat::zeros(d, d);
+    let dx: Vec<f64> = (0..d).map(|i| sigma_x[(i, i)].max(1e-12).sqrt()).collect();
+    let dw: Vec<f64> = (0..d).map(|i| sigma_w[(i, i)].max(1e-12).sqrt()).collect();
+    for i in 0..d {
+        for j in 0..d {
+            let cx = (sigma_x[(i, j)] / (dx[i] * dx[j])).abs();
+            let cw = (sigma_w[(i, j)] / (dw[i] * dw[j])).abs();
+            blend[(i, j)] = cx + cw;
+        }
+    }
+    blend.symmetrize();
+    let e = eigh(&blend);
+    // Principal eigenvector = last column (ascending order).
+    let v = e.vectors.col(d - 1);
+    let mut idx: Vec<usize> = (0..d).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    idx
+}
+
+/// Dense permutation matrix `P` with `(Px)_i = x_{perm[i]}`.
+fn permutation_matrix(perm: &[usize]) -> Mat {
+    let d = perm.len();
+    let mut p = Mat::zeros(d, d);
+    for (i, &src) in perm.iter().enumerate() {
+        p[(i, src)] = 1.0;
+    }
+    p
+}
+
+/// Permuted block CAT: `T = H · M̂_block^k(permuted stats) · P`.
+pub fn permuted_cat_block(sigma_x: &Mat, sigma_w: &Mat, k: usize, seed: u64) -> Transform {
+    let d = sigma_x.rows();
+    let perm = correlation_ordering(sigma_x, sigma_w);
+    let p = Transform::orthogonal("P", permutation_matrix(&perm));
+    let sx_p = p.conjugate_sigma(sigma_x);
+    let sw_p = p.conjugate_sigma(sigma_w);
+    let blocks = cat_block_raw(&sx_p, &sw_p, k.min(d));
+    let h = if is_pow2(d) {
+        Transform::orthogonal("H", hadamard_matrix(d))
+    } else {
+        let mut rng = Rng::new(seed ^ 0x9E12);
+        Transform::orthogonal("R", random_orthogonal(d, &mut rng))
+    };
+    let t = p.then(&blocks).then(&h);
+    Transform::new(format!("cat-perm-block(k={})", k.min(d)), t.matrix().clone(), t.inverse_matrix().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b};
+    use crate::sqnr::{alignment_data, max_alignment};
+
+    /// Structure where correlated channel *pairs* are scattered far
+    /// apart: channel i and i+d/2 are strongly coupled. Plain block CAT
+    /// with k = 2 can never see a pair; a permutation can.
+    fn scattered_pairs(d: usize, tokens: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let half = d / 2;
+        let mut x = Mat::zeros(tokens, d);
+        for t in 0..tokens {
+            for i in 0..half {
+                let z = rng.normal() * (1.0 + 9.0 * (i as f64) / half as f64);
+                let noise = rng.normal() * 0.05;
+                x[(t, i)] = z;
+                x[(t, i + half)] = -z + noise; // anti-correlated partner
+            }
+        }
+        let w = Mat::from_fn(d, d, |r, c| {
+            // Weights read each pair's *sum* (small signal) — alignment
+            // is poor unless the transform can rotate within the pair.
+            let base = rng.normal() * 0.01;
+            if c < half && (r % half) == c {
+                base + 1.0
+            } else if c >= half && (r % half) == c - half {
+                base + 1.0
+            } else {
+                base
+            }
+        });
+        (x, w)
+    }
+
+    #[test]
+    fn ordering_is_a_permutation() {
+        let mut rng = Rng::new(1);
+        let g = Mat::from_fn(40, 16, |_, _| rng.normal());
+        let s = matmul_at_b(&g, &g);
+        let perm = correlation_ordering(&s, &s);
+        let mut seen = vec![false; 16];
+        for &i in &perm {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn permutation_matrix_is_orthogonal() {
+        let p = permutation_matrix(&[2, 0, 3, 1]);
+        let ptp = matmul(&p.transpose(), &p);
+        assert!(ptp.max_abs_diff(&Mat::eye(4)) < 1e-12);
+    }
+
+    #[test]
+    fn function_preserved() {
+        let (x, w) = scattered_pairs(16, 400, 2);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / 400.0);
+        let sigma_w = matmul_at_b(&w, &w);
+        let t = permuted_cat_block(&sigma_x, &sigma_w, 4, 0);
+        let y = crate::linalg::matmul_a_bt(&x, &w);
+        let y2 = crate::linalg::matmul_a_bt(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(y.max_abs_diff(&y2) / y.max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn permutation_gathers_scattered_pairs() {
+        // The seriation must place partner channels (i, i+half) in the
+        // same k=2 neighborhood for most pairs.
+        let d = 16;
+        let (x, _w) = scattered_pairs(d, 2000, 3);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / 2000.0);
+        let perm = correlation_ordering(&sigma_x, &Mat::eye(d));
+        let pos: Vec<usize> = {
+            let mut p = vec![0; d];
+            for (slot, &ch) in perm.iter().enumerate() {
+                p[ch] = slot;
+            }
+            p
+        };
+        let half = d / 2;
+        let adjacent = (0..half)
+            .filter(|&i| pos[i].abs_diff(pos[i + half]) == 1)
+            .count();
+        assert!(
+            adjacent >= half - 2,
+            "only {adjacent}/{half} pairs adjacent after seriation"
+        );
+    }
+
+    #[test]
+    fn permuted_beats_plain_block_cat_on_scattered_structure() {
+        let d = 16;
+        let (x, w) = scattered_pairs(d, 2000, 4);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / 2000.0);
+        let sigma_w = matmul_at_b(&w, &w);
+        let k = 2;
+        let plain = super::super::cat_block(&sigma_x, &sigma_w, k, 0);
+        let perm = permuted_cat_block(&sigma_x, &sigma_w, k, 0);
+        let a = |t: &Transform| alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let a_plain = a(&plain);
+        let a_perm = a(&perm);
+        let a_opt = max_alignment(&sigma_x, &w);
+        assert!(
+            a_perm > a_plain * 1.5,
+            "permutation should help: plain {a_plain:.5} perm {a_perm:.5} opt {a_opt:.5}"
+        );
+    }
+}

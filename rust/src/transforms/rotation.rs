@@ -1,0 +1,119 @@
+//! Rotation transforms with seed search — the SpinQuant substitute.
+//!
+//! SpinQuant (Liu et al., 2024) observes that different randomized-Hadamard
+//! seeds give widely varying accuracy and trains rotations by gradient
+//! descent. Without GPU training, we reproduce the *rotation-selection*
+//! effect directly: draw `n_seeds` randomized Hadamard (or Haar) rotations
+//! and keep the one maximizing the Theorem 2.4 SQNR approximation on
+//! calibration data (substitution documented in DESIGN.md §3).
+//!
+//! Because rotations cannot change alignment (paper eq. 4), this can only
+//! improve the concentration terms — exactly the paper's point about the
+//! limits of rotation-based methods.
+
+use super::Transform;
+use crate::linalg::{is_pow2, random_orthogonal, randomized_hadamard, Mat, Rng};
+use crate::quant::{ActQuantCfg, WeightQuantCfg};
+use crate::sqnr::approx_sqnr_joint;
+
+/// Search `n_seeds` rotations, score each by the Thm 2.4 approximation of
+/// the post-transform joint SQNR (summed over the weight matrices sharing
+/// this input), return the best.
+pub fn seed_search_rotation(
+    x: &Mat,
+    ws: &[&Mat],
+    act: ActQuantCfg,
+    wq: WeightQuantCfg,
+    n_seeds: u64,
+    base_seed: u64,
+) -> Transform {
+    let d = x.cols();
+    let mut best: Option<(f64, Transform)> = None;
+    for s in 0..n_seeds {
+        let mut rng = Rng::new(base_seed.wrapping_add(s).wrapping_mul(0x9E3779B97F4A7C15));
+        let q = if is_pow2(d) {
+            randomized_hadamard(d, &mut rng)
+        } else {
+            random_orthogonal(d, &mut rng)
+        };
+        let t = Transform::orthogonal(format!("spinquant(seed={s})"), q);
+        let xt = t.apply_acts(x);
+        let mut score = 0.0;
+        for w in ws {
+            let wt = t.fuse_weights(w);
+            score += approx_sqnr_joint(&xt, &wt, act, wq).ln();
+        }
+        if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+            best = Some((score, t));
+        }
+    }
+    best.expect("n_seeds must be ≥ 1").1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::QScheme;
+    use crate::sqnr::alignment_data;
+
+    fn data(seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let d = 32;
+        let mut x = Mat::from_fn(128, d, |_, _| rng.student_t(3));
+        for t in 0..x.rows() {
+            x[(t, 5)] *= 20.0;
+        }
+        let w = Mat::from_fn(16, d, |_, _| rng.normal() * 0.1);
+        (x, w)
+    }
+
+    fn cfgs() -> (ActQuantCfg, WeightQuantCfg) {
+        (ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 }, WeightQuantCfg::minmax(4))
+    }
+
+    #[test]
+    fn seed_search_at_least_as_good_as_first_seed() {
+        let (x, w) = data(1);
+        let (act, wq) = cfgs();
+        let t1 = seed_search_rotation(&x, &[&w], act, wq, 1, 0);
+        let t8 = seed_search_rotation(&x, &[&w], act, wq, 8, 0);
+        let score = |t: &Transform| {
+            approx_sqnr_joint(&t.apply_acts(&x), &t.fuse_weights(&w), act, wq)
+        };
+        assert!(score(&t8) >= score(&t1) * 0.999);
+    }
+
+    #[test]
+    fn rotations_leave_alignment_invariant() {
+        // The paper's central negative result for rotation methods.
+        let (x, w) = data(2);
+        let (act, wq) = cfgs();
+        let t = seed_search_rotation(&x, &[&w], act, wq, 4, 7);
+        let a0 = alignment_data(&x, &w);
+        let a1 = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!((a0 - a1).abs() < 1e-9, "rotation changed alignment: {a0} vs {a1}");
+    }
+
+    #[test]
+    fn improves_concentration_on_outlier_data() {
+        use crate::sqnr::concentration_act;
+        let (x, w) = data(3);
+        let (act, wq) = cfgs();
+        let t = seed_search_rotation(&x, &[&w], act, wq, 4, 0);
+        let c0 = concentration_act(&x, act);
+        let c1 = concentration_act(&t.apply_acts(&x), act);
+        assert!(c1 > c0 * 1.5, "rotation should spread outliers: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn non_pow2_dims_fall_back_to_haar() {
+        let mut rng = Rng::new(4);
+        let d = 24; // not a power of two
+        let x = Mat::from_fn(64, d, |_, _| rng.normal());
+        let w = Mat::from_fn(8, d, |_, _| rng.normal());
+        let (act, wq) = cfgs();
+        let t = seed_search_rotation(&x, &[&w], act, wq, 2, 0);
+        assert!(t.inversion_error() < 1e-9);
+    }
+}

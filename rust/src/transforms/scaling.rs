@@ -1,0 +1,133 @@
+//! Channel-wise scaling transforms.
+//!
+//! SmoothQuant (Xiao et al., 2024): `T = Diag(1/s)` with
+//! `s_i = max|x_i|^α / max_j|w_{ji}|^{1−α}` — shifts activation outliers
+//! into the weights. The paper (§3) reads this as trading activation
+//! concentration against weight concentration, with a small alignment
+//! side-effect; CAT with block size 1 ([`diag_align_scale`]) is the
+//! alignment-optimal member of the same family.
+
+use super::Transform;
+use crate::linalg::Mat;
+
+/// SmoothQuant channel scaling from calibration data.
+///
+/// `x`: `tokens × d` calibration activations; `ws`: the weight matrices
+/// (`out × d`) sharing this input; `alpha`: migration strength (paper uses
+/// the original 0.5 default).
+pub fn smooth_quant_scale(x: &Mat, ws: &[&Mat], alpha: f64) -> Transform {
+    let d = x.cols();
+    let mut act_max = vec![0.0_f64; d];
+    for t in 0..x.rows() {
+        for (j, &v) in x.row(t).iter().enumerate() {
+            act_max[j] = act_max[j].max(v.abs());
+        }
+    }
+    let mut w_max = vec![0.0_f64; d];
+    for w in ws {
+        assert_eq!(w.cols(), d);
+        for i in 0..w.rows() {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                w_max[j] = w_max[j].max(v.abs());
+            }
+        }
+    }
+    let m: Vec<f64> = (0..d)
+        .map(|j| {
+            // s_j = a^α / w^{1−α}; transform multiplies x by 1/s.
+            let a = act_max[j].max(1e-8);
+            let w = w_max[j].max(1e-8);
+            let s = a.powf(alpha) / w.powf(1.0 - alpha);
+            1.0 / s.max(1e-8)
+        })
+        .collect();
+    Transform::diagonal(format!("smoothquant(α={alpha})"), &m)
+}
+
+/// CAT with block size 1 (paper §4): the *alignment-optimal diagonal*,
+/// `m_i = ( (Σ_w)_{ii} / (Σ_x)_{ii} )^{1/4}` — the diagonal case of
+/// `M̂ = (Σ_w # Σ_x⁻¹)^{1/2}`.
+pub fn diag_align_scale(sigma_x: &Mat, sigma_w: &Mat) -> Transform {
+    let d = sigma_x.rows();
+    assert_eq!(sigma_w.rows(), d);
+    let m: Vec<f64> = (0..d)
+        .map(|i| {
+            let sw = sigma_w[(i, i)].max(1e-12);
+            let sx = sigma_x[(i, i)].max(1e-12);
+            (sw / sx).powf(0.25)
+        })
+        .collect();
+    Transform::diagonal("cat(k=1)", &m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_at_b, Rng};
+    use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
+    use crate::sqnr::{alignment_data, concentration_act, concentration_weights};
+
+    /// Calibration-like data with outlier channels.
+    fn outlier_data(tokens: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::from_fn(tokens, d, |_, _| rng.normal());
+        for t in 0..tokens {
+            x[(t, 3)] *= 30.0; // persistent outlier channel
+            x[(t, 11 % d)] *= 12.0;
+        }
+        let w = Mat::from_fn(d / 2, d, |_, _| rng.normal() * 0.05);
+        (x, w)
+    }
+
+    #[test]
+    fn smoothquant_moves_outliers_into_weights() {
+        let (x, w) = outlier_data(256, 32, 1);
+        let t = smooth_quant_scale(&x, &[&w], 0.5);
+        let act = ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 };
+        let wq = WeightQuantCfg::minmax(4);
+        let ca_before = concentration_act(&x, act);
+        let cw_before = concentration_weights(&w, wq);
+        let ca_after = concentration_act(&t.apply_acts(&x), act);
+        let cw_after = concentration_weights(&t.fuse_weights(&w), wq);
+        assert!(ca_after > ca_before, "activation concentration should improve");
+        assert!(cw_after < cw_before, "weight concentration should degrade (Fig 4)");
+    }
+
+    #[test]
+    fn diag_align_improves_alignment_on_anisotropic_data() {
+        let d = 24;
+        let mut rng = Rng::new(2);
+        // Strongly anisotropic activations, weights uncorrelated with them.
+        let scales: Vec<f64> = (0..d).map(|j| (4.0_f64).powf(j as f64 / d as f64)).collect();
+        let x = Mat::from_fn(2000, d, |_, j| rng.normal() * scales[j]);
+        let w = Mat::from_fn(12, d, |_, j| rng.normal() / scales[j]);
+        let sigma_x = matmul_at_b(&x, &x).scale(1.0 / 2000.0);
+        let sigma_w = matmul_at_b(&w, &w);
+        let t = diag_align_scale(&sigma_x, &sigma_w);
+        let a0 = alignment_data(&x, &w);
+        let a1 = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(a1 > a0, "alignment {a0} -> {a1} should improve");
+    }
+
+    #[test]
+    fn alpha_zero_ignores_activations() {
+        let (x, w) = outlier_data(64, 16, 3);
+        let t = smooth_quant_scale(&x, &[&w], 0.0);
+        // α=0 ⇒ s_i = 1/max|w_i| — depends only on weights.
+        let mut w2 = x.clone(); // reuse shape; different "activations"
+        for v in w2.as_mut_slice() {
+            *v *= 5.0;
+        }
+        let t2 = smooth_quant_scale(&w2, &[&w], 0.0);
+        assert!(t.matrix().max_abs_diff(t2.matrix()) < 1e-12);
+    }
+
+    #[test]
+    fn function_preserved() {
+        let (x, w) = outlier_data(64, 16, 4);
+        let t = smooth_quant_scale(&x, &[&w], 0.5);
+        let y = crate::linalg::matmul_a_bt(&x, &w);
+        let y2 = crate::linalg::matmul_a_bt(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(y.max_abs_diff(&y2) < 1e-8);
+    }
+}

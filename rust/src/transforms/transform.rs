@@ -1,0 +1,164 @@
+//! The invertible linear transform type.
+
+use crate::linalg::{matmul, matmul_a_bt, spd_inv, Mat};
+
+/// An invertible transform `T` applied as `x' = Tx`, `W' = WT⁻¹`
+/// (paper eq. 5). Stores both directions explicitly so fusion into model
+/// weights never solves a system on the hot path.
+#[derive(Clone)]
+pub struct Transform {
+    pub name: String,
+    t: Mat,
+    t_inv: Mat,
+}
+
+impl Transform {
+    /// Wrap an explicit pair, validating `T·T⁻¹ ≈ I`.
+    pub fn new(name: impl Into<String>, t: Mat, t_inv: Mat) -> Transform {
+        debug_assert!(t.is_square() && t_inv.is_square());
+        let tr = Transform { name: name.into(), t, t_inv };
+        debug_assert!(
+            tr.inversion_error() < 1e-6,
+            "{}: T·T⁻¹ deviates from I by {}",
+            tr.name,
+            tr.inversion_error()
+        );
+        tr
+    }
+
+    /// The identity transform (the "None" baseline).
+    pub fn identity(d: usize) -> Transform {
+        Transform { name: "identity".into(), t: Mat::eye(d), t_inv: Mat::eye(d) }
+    }
+
+    /// An orthogonal transform: `T⁻¹ = Tᵀ`, no inversion needed.
+    pub fn orthogonal(name: impl Into<String>, q: Mat) -> Transform {
+        let t_inv = q.transpose();
+        Transform { name: name.into(), t: q, t_inv }
+    }
+
+    /// A diagonal transform from per-channel multipliers `m` (`x'_i = m_i·x_i`).
+    pub fn diagonal(name: impl Into<String>, m: &[f64]) -> Transform {
+        let inv: Vec<f64> = m
+            .iter()
+            .map(|&v| {
+                assert!(v != 0.0 && v.is_finite(), "singular diagonal transform");
+                1.0 / v
+            })
+            .collect();
+        Transform { name: name.into(), t: Mat::diag(m), t_inv: Mat::diag(&inv) }
+    }
+
+    /// A symmetric positive-definite transform (CAT's M̂): inverse via
+    /// clamped spectral inversion.
+    pub fn spd(name: impl Into<String>, m: Mat) -> Transform {
+        let inv = spd_inv(&m);
+        Transform { name: name.into(), t: m, t_inv: inv }
+    }
+
+    /// Compose: apply `self` first, then `outer` — `T = T_outer · T_self`.
+    pub fn then(&self, outer: &Transform) -> Transform {
+        Transform {
+            name: format!("{}∘{}", outer.name, self.name),
+            t: matmul(&outer.t, &self.t),
+            t_inv: matmul(&self.t_inv, &outer.t_inv),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.t.rows()
+    }
+
+    pub fn matrix(&self) -> &Mat {
+        &self.t
+    }
+
+    pub fn inverse_matrix(&self) -> &Mat {
+        &self.t_inv
+    }
+
+    /// Transform activations: rows of `x` (`tokens × d`) become `Tx`,
+    /// i.e. `X' = X·Tᵀ`.
+    pub fn apply_acts(&self, x: &Mat) -> Mat {
+        matmul_a_bt(x, &self.t)
+    }
+
+    /// Fuse into a weight matrix (`out × d`): `W' = W·T⁻¹`.
+    pub fn fuse_weights(&self, w: &Mat) -> Mat {
+        matmul(w, &self.t_inv)
+    }
+
+    /// Conjugate an activation autocorrelation: `Σ' = T·Σ·Tᵀ`.
+    pub fn conjugate_sigma(&self, sigma: &Mat) -> Mat {
+        let mut s = matmul(&matmul(&self.t, sigma), &self.t.transpose());
+        s.symmetrize();
+        s
+    }
+
+    /// `max|T·T⁻¹ − I|` — numerical health check.
+    pub fn inversion_error(&self) -> f64 {
+        matmul(&self.t, &self.t_inv).max_abs_diff(&Mat::eye(self.dim()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_orthogonal, Rng};
+
+    #[test]
+    fn function_preservation() {
+        // (WT⁻¹)(Tx) == Wx for any invertible T.
+        let d = 16;
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(40, d, |_, _| rng.normal());
+        let w = Mat::from_fn(8, d, |_, _| rng.normal());
+        let q = random_orthogonal(d, &mut rng);
+        let t = Transform::orthogonal("rot", q);
+        let y = matmul_a_bt(&x, &w);
+        let y2 = matmul_a_bt(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(y.max_abs_diff(&y2) < 1e-9);
+    }
+
+    #[test]
+    fn composition_order() {
+        let d = 8;
+        let mut rng = Rng::new(2);
+        let a = Transform::orthogonal("a", random_orthogonal(d, &mut rng));
+        let m: Vec<f64> = (0..d).map(|i| 1.0 + i as f64).collect();
+        let b = Transform::diagonal("b", &m);
+        let c = a.then(&b); // b·a
+        let x = Mat::from_fn(5, d, |_, _| rng.normal());
+        let want = b.apply_acts(&a.apply_acts(&x));
+        let got = c.apply_acts(&x);
+        assert!(want.max_abs_diff(&got) < 1e-9);
+        assert!(c.inversion_error() < 1e-9);
+    }
+
+    #[test]
+    fn diagonal_roundtrip() {
+        let m = [2.0, -0.5, 4.0];
+        let t = Transform::diagonal("d", &m);
+        assert!(t.inversion_error() < 1e-12);
+    }
+
+    #[test]
+    fn conjugate_sigma_matches_data() {
+        let d = 12;
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(500, d, |_, _| rng.normal() * (1.0 + rng.uniform()));
+        let q = random_orthogonal(d, &mut rng);
+        let t = Transform::orthogonal("rot", q);
+        let sigma = crate::linalg::matmul_at_b(&x, &x).scale(1.0 / 500.0);
+        let sigma_t = t.conjugate_sigma(&sigma);
+        let xt = t.apply_acts(&x);
+        let sigma_direct = crate::linalg::matmul_at_b(&xt, &xt).scale(1.0 / 500.0);
+        assert!(sigma_t.max_abs_diff(&sigma_direct) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn singular_diagonal_rejected() {
+        Transform::diagonal("bad", &[1.0, 0.0, 2.0]);
+    }
+}

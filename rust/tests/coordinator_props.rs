@@ -1,0 +1,199 @@
+//! Property tests (hand-rolled sweeps — proptest is not in the offline
+//! vendor set; `catquant::linalg::Rng` provides the deterministic input
+//! generation) over the coordinator, the math invariants, and the JSON
+//! substrate.
+
+use catquant::coordinator::{BatcherCfg, DynamicBatcher, Histogram};
+use catquant::linalg::{matmul, random_orthogonal, Mat, Rng};
+use catquant::quant::{fake_quant_asym, fake_quant_sym, QScheme};
+use catquant::runtime::json::Json;
+use catquant::sqnr::{alignment_data, parallel};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+// ------------------------------------------------------------- batcher
+
+#[test]
+fn prop_batcher_delivers_everything_once_in_order() {
+    let mut rng = Rng::new(100);
+    for case in 0..30 {
+        let n = 1 + rng.below(40);
+        let max_batch = 1 + rng.below(6);
+        let (tx, rx) = channel();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherCfg { max_batch, max_wait: Duration::from_millis(1) },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= max_batch, "case {case}: oversize batch");
+            assert!(!batch.is_empty());
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case}: loss or reorder");
+    }
+}
+
+#[test]
+fn prop_batcher_full_batches_when_queue_is_deep() {
+    let mut rng = Rng::new(200);
+    for _ in 0..10 {
+        let max_batch = 2 + rng.below(5);
+        let n = max_batch * (3 + rng.below(4));
+        let (tx, rx) = channel();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherCfg { max_batch, max_wait: Duration::from_millis(50) },
+        );
+        // With a full queue, every batch except possibly the last is full.
+        let mut batches = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            batches.push(batch.len());
+        }
+        for &sz in &batches[..batches.len() - 1] {
+            assert_eq!(sz, max_batch);
+        }
+    }
+}
+
+// ------------------------------------------------------------ histogram
+
+#[test]
+fn prop_histogram_quantiles_monotone_and_bounded() {
+    let mut rng = Rng::new(300);
+    for _ in 0..20 {
+        let mut h = Histogram::new();
+        let n = 50 + rng.below(500);
+        let mut max_us = 0u64;
+        for _ in 0..n {
+            let us = 1 + rng.below(2_000_000) as u64;
+            max_us = max_us.max(us);
+            h.record(Duration::from_micros(us));
+        }
+        let q25 = h.quantile(0.25);
+        let q50 = h.quantile(0.5);
+        let q99 = h.quantile(0.99);
+        assert!(q25 <= q50 && q50 <= q99);
+        // Bucket upper bounds over-estimate by ≤ one 1.25× bucket step.
+        assert!(q99.as_micros() as u64 <= max_us + max_us / 3 + 2);
+    }
+}
+
+// ------------------------------------------------------- math invariants
+
+#[test]
+fn prop_alignment_invariant_under_random_rotations() {
+    let mut rng = Rng::new(400);
+    for case in 0..12 {
+        let d = 4 + rng.below(24);
+        let tokens = 50 + rng.below(100);
+        let x = Mat::from_fn(tokens, d, |_, _| rng.student_t(4));
+        let w = Mat::from_fn(2 + rng.below(16), d, |_, _| rng.normal());
+        let r = random_orthogonal(d, &mut rng);
+        let xr = matmul(&x, &r.transpose());
+        let wr = matmul(&w, &r.transpose());
+        let a0 = alignment_data(&x, &w);
+        let a1 = alignment_data(&xr, &wr);
+        assert!(
+            (a0 - a1).abs() / a0.max(1e-12) < 1e-8,
+            "case {case}: rotation changed alignment {a0} -> {a1}"
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_operator_bounds() {
+    let mut rng = Rng::new(500);
+    for _ in 0..200 {
+        let a = rng.uniform_in(1e-6, 1e6);
+        let b = rng.uniform_in(1e-6, 1e6);
+        let p = parallel(a, b);
+        assert!(p <= a && p <= b, "parallel exceeds inputs");
+        assert!(p >= 0.5 * a.min(b) - 1e-12, "parallel below half the min");
+        assert!((parallel(a, b) - parallel(b, a)).abs() < 1e-9 * p);
+    }
+}
+
+#[test]
+fn prop_fake_quant_idempotent_and_bounded() {
+    let mut rng = Rng::new(600);
+    for case in 0..40 {
+        let n = 8 + rng.below(200);
+        let bits = 2 + rng.below(7) as u32;
+        let x: Vec<f64> =
+            (0..n).map(|_| rng.laplace(1.0) * rng.uniform_in(0.1, 50.0)).collect();
+        for sym in [true, false] {
+            let q1 = if sym {
+                fake_quant_sym(&x, QScheme::sym(bits), 1.0)
+            } else {
+                fake_quant_asym(&x, QScheme::asym(bits), 1.0)
+            };
+            let q2 = if sym {
+                fake_quant_sym(&q1, QScheme::sym(bits), 1.0)
+            } else {
+                fake_quant_asym(&q1, QScheme::asym(bits), 1.0)
+            };
+            for (a, b) in q1.iter().zip(&q2) {
+                assert!((a - b).abs() < 1e-9, "case {case} sym={sym}: not idempotent");
+            }
+            // Quantized values stay inside the data range plus one grid
+            // step (zero-point rounding can shift the grid by ≤ scale).
+            let absmax = x.iter().fold(0.0_f64, |m, &v| m.max(v.abs()));
+            let (lo, hi) = x.iter().fold((0.0_f64, 0.0_f64), |(l, h), &v| (l.min(v), h.max(v)));
+            let scale = (hi - lo) / ((1u64 << bits) as f64 - 1.0);
+            for &v in &q1 {
+                assert!(
+                    v.abs() <= absmax + scale + 1e-9,
+                    "case {case}: escaped range: |{v}| > {absmax} + {scale}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ json
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(700);
+    for _ in 0..50 {
+        let v = random_json(&mut rng, 0);
+        let text = v.dump();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let choice = if depth > 3 { rng.below(4) } else { rng.below(6) };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.below(2_000_001) as f64 - 1_000_000.0) / 64.0),
+        3 => {
+            let n = rng.below(12);
+            let s: String = (0..n).map(|_| (rng.below(94) as u8 + 32) as char).collect();
+            Json::Str(s)
+        }
+        4 => {
+            let n = rng.below(5);
+            Json::Arr((0..n).map(|_| random_json(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.below(5);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}

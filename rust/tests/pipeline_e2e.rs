@@ -1,0 +1,183 @@
+//! End-to-end pipeline integration over the built artifacts: calibrate →
+//! transform → quantize → evaluate, with the paper's expected orderings.
+//! Skips when artifacts are missing.
+
+use catquant::calib::Corpus;
+use catquant::eval::{perplexity, NativeLogits, PjrtLogits, SeqLogits};
+use catquant::experiments::{load_zoo, ZooModel};
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::transforms::TransformKind;
+use std::rc::Rc;
+
+/// The PJRT CPU client is not safe to create/destroy concurrently from
+/// multiple test threads (SIGSEGV observed under load); serialize every
+/// test that touches it.
+static PJRT_GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn pjrt_lock() -> std::sync::MutexGuard<'static, ()> {
+    PJRT_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(model: &str) -> Option<(Manifest, ZooModel)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let zoo = load_zoo(&manifest, model, 0).expect("zoo");
+    Some((manifest, zoo))
+}
+
+#[test]
+fn manifest_param_spec_matches_rust_spec() {
+    let _guard = pjrt_lock();
+    // The flat-argument ABI between the AOT graphs and the Rust runtime:
+    // python's param_spec/transform_spec must equal ModelConfig's.
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = catquant::runtime::json::Json::parse(&text).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    for (name, entry) in &manifest.models {
+        let mj = j.at("models").unwrap().at(name).unwrap();
+        for (key, rust_spec) in [
+            ("params", entry.config.param_spec()),
+            ("transforms", entry.config.transform_spec()),
+        ] {
+            let py: Vec<(String, Vec<usize>)> = mj
+                .at(key)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|e| {
+                    let pair = e.as_arr().unwrap();
+                    (
+                        pair[0].as_str().unwrap().to_string(),
+                        pair[1]
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect(),
+                    )
+                })
+                .collect();
+            assert_eq!(py, rust_spec, "{name}.{key} spec drift between python and rust");
+        }
+    }
+}
+
+#[test]
+fn trained_model_beats_uniform_ppl() {
+    let _guard = pjrt_lock();
+    let Some((manifest, zoo)) = setup("tiny") else { return };
+    let corpus = Corpus::load(&manifest.corpus_eval).unwrap();
+    let windows = corpus.eval_windows(6, zoo.model.cfg.seq);
+    let eng = NativeLogits { model: &zoo.model, qc: None };
+    let ppl = perplexity(&eng, &windows).unwrap();
+    // Uniform over 256 tokens would be 256; the trained tiny model must
+    // be far below (training reached loss ≈ 3.6 ⇒ ppl ≈ 36).
+    assert!(ppl < 120.0, "tiny fp ppl {ppl}");
+    assert!(ppl > 2.0);
+}
+
+#[test]
+fn cat_w4a4_ppl_closer_to_fp_than_naive() {
+    let _guard = pjrt_lock();
+    let Some((manifest, zoo)) = setup("tiny") else { return };
+    let corpus = Corpus::load(&manifest.corpus_eval).unwrap();
+    let windows = corpus.eval_windows(6, zoo.model.cfg.seq);
+    let engine = Rc::new(PjrtEngine::new(manifest.clone()).unwrap());
+
+    let fp = PjrtLogits::fp(engine.clone(), "tiny", &zoo.model.params).unwrap();
+    let fp_ppl = perplexity(&fp, &windows).unwrap();
+
+    let run = |kind: TransformKind| {
+        let (qc, _) = build_quant_config(
+            &zoo.model,
+            &zoo.calib,
+            PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0),
+        );
+        let eng =
+            PjrtLogits::quant(engine.clone(), "tiny", &zoo.model.params, &qc, 4).unwrap();
+        perplexity(&eng, &windows).unwrap()
+    };
+    let none_ppl = run(TransformKind::None);
+    let cat_ppl = run(TransformKind::CatBlock);
+    eprintln!("fp {fp_ppl:.2}  none-W4A4 {none_ppl:.2}  cat-W4A4 {cat_ppl:.2}");
+    assert!(fp_ppl < cat_ppl, "quantization can't improve ppl on average");
+    assert!(
+        cat_ppl < none_ppl,
+        "CAT ({cat_ppl:.2}) must beat no-transform ({none_ppl:.2})"
+    );
+}
+
+#[test]
+fn native_and_pjrt_ppl_agree() {
+    let _guard = pjrt_lock();
+    let Some((manifest, zoo)) = setup("tiny") else { return };
+    let corpus = Corpus::load(&manifest.corpus_eval).unwrap();
+    let windows = corpus.eval_windows(4, zoo.model.cfg.seq);
+    let engine = Rc::new(PjrtEngine::new(manifest.clone()).unwrap());
+    let native = NativeLogits { model: &zoo.model, qc: None };
+    let pjrt = PjrtLogits::fp(engine, "tiny", &zoo.model.params).unwrap();
+    let p_native = perplexity(&native, &windows).unwrap();
+    let p_pjrt = perplexity(&pjrt, &windows).unwrap();
+    let rel = (p_native - p_pjrt).abs() / p_native;
+    assert!(rel < 5e-3, "native {p_native} vs pjrt {p_pjrt} (rel {rel})");
+}
+
+#[test]
+fn gptq_no_worse_than_rtn_on_ppl() {
+    let _guard = pjrt_lock();
+    let Some((manifest, zoo)) = setup("tiny") else { return };
+    let corpus = Corpus::load(&manifest.corpus_eval).unwrap();
+    let windows = corpus.eval_windows(6, zoo.model.cfg.seq);
+    let engine = Rc::new(PjrtEngine::new(manifest.clone()).unwrap());
+    let run = |wq: WeightQuantizer| {
+        let (qc, _) = build_quant_config(
+            &zoo.model,
+            &zoo.calib,
+            PipelineCfg::w4a4(TransformKind::QuaRot, wq, 0),
+        );
+        let eng =
+            PjrtLogits::quant(engine.clone(), "tiny", &zoo.model.params, &qc, 4).unwrap();
+        perplexity(&eng, &windows).unwrap()
+    };
+    let rtn = run(WeightQuantizer::Rtn);
+    let gptq = run(WeightQuantizer::Gptq);
+    eprintln!("quarot rtn {rtn:.2} gptq {gptq:.2}");
+    // GPTQ should help (or at worst be a small wash) under rotations.
+    assert!(gptq < rtn * 1.10, "gptq {gptq} much worse than rtn {rtn}");
+}
+
+#[test]
+fn zero_shot_fp_beats_heavily_quantized() {
+    let _guard = pjrt_lock();
+    let Some((manifest, zoo)) = setup("tiny") else { return };
+    let corpus = Corpus::load(&manifest.corpus_eval).unwrap();
+    let engine = Rc::new(PjrtEngine::new(manifest.clone()).unwrap());
+    let fp = PjrtLogits::fp(engine.clone(), "tiny", &zoo.model.params).unwrap();
+    let acc = |eng: &dyn SeqLogits| {
+        let r = catquant::eval::zero_shot_suite(eng, &corpus, 10, 0).unwrap();
+        r.iter().map(|t| t.accuracy).sum::<f64>() / r.len() as f64
+    };
+    let fp_acc = acc(&fp);
+    // FP on a trained model must be clearly above 25% chance.
+    assert!(fp_acc > 0.3, "fp 0-shot {fp_acc}");
+    let (qc, _) = build_quant_config(
+        &zoo.model,
+        &zoo.calib,
+        PipelineCfg::w4a4(TransformKind::None, WeightQuantizer::Rtn, 0),
+    );
+    let q = PjrtLogits::quant(engine, "tiny", &zoo.model.params, &qc, 4).unwrap();
+    let q_acc = acc(&q);
+    eprintln!("0-shot: fp {fp_acc:.3} vs none-W4A4 {q_acc:.3}");
+    assert!(fp_acc >= q_acc - 0.05, "naive W4A4 should not beat FP");
+}
