@@ -4,7 +4,8 @@
 //! Run: `cargo bench --bench linalg_hot`
 
 use catquant::linalg::{
-    eigh, fwht_inplace, geometric_mean, matmul, matmul_a_bt, matmul_at_b, Cholesky, Mat, Rng,
+    eigh, fwht_inplace, geometric_mean, matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b,
+    matmul_at_b_serial, matmul_serial, par, Cholesky, Mat, Rng,
 };
 use std::time::Instant;
 
@@ -27,24 +28,44 @@ fn random(rows: usize, cols: usize, seed: u64) -> Mat {
 
 fn main() {
     println!("== linalg hot paths ==");
+    println!("workers: {} (CATQUANT_THREADS to override)\n", par::num_threads());
+    // Serial vs dispatched (parallel above the size threshold) A/B — the
+    // acceptance gate is ≥2× on matmul 512³ with ≥4 workers (PERF.md).
     for &n in &[128usize, 256, 512] {
         let a = random(n, n, 1);
         let b = random(n, n, 2);
         let gf = 2.0 * (n as f64).powi(3) / 1e9;
-        let per = time(&format!("matmul {n}×{n}"), 10.max(2048 / n), || {
+        let iters = 10.max(2048 / n);
+        let t_ser = time(&format!("matmul {n}×{n} serial"), iters, || {
+            std::hint::black_box(matmul_serial(&a, &b));
+        });
+        let t_par = time(&format!("matmul {n}×{n} dispatched"), iters, || {
             std::hint::black_box(matmul(&a, &b));
         });
-        println!("{:<44} {:>10.2} GFLOP/s", format!("  -> throughput {n}"), gf / per);
+        println!(
+            "{:<44} {:>10.2} GFLOP/s ({:.2}× vs serial)",
+            format!("  -> throughput {n}"),
+            gf / t_par,
+            t_ser / t_par
+        );
     }
     {
         let x = random(2048, 256, 3);
-        time("Σ accumulation  XᵀX (2048×256)", 8, || {
+        let t_ser = time("Σ accumulation  XᵀX (2048×256) serial", 8, || {
+            std::hint::black_box(matmul_at_b_serial(&x, &x));
+        });
+        let t_par = time("Σ accumulation  XᵀX (2048×256) dispatched", 8, || {
             std::hint::black_box(matmul_at_b(&x, &x));
         });
+        println!("{:<44} {:>9.2}× vs serial", "  -> XᵀX speedup", t_ser / t_par);
         let w = random(256, 256, 4);
-        time("layer fwd  X·Wᵀ (2048×256·256)", 8, || {
+        let t_ser = time("layer fwd  X·Wᵀ (2048×256·256) serial", 8, || {
+            std::hint::black_box(matmul_a_bt_serial(&x, &w));
+        });
+        let t_par = time("layer fwd  X·Wᵀ (2048×256·256) dispatched", 8, || {
             std::hint::black_box(matmul_a_bt(&x, &w));
         });
+        println!("{:<44} {:>9.2}× vs serial", "  -> X·Wᵀ speedup", t_ser / t_par);
     }
     for &n in &[64usize, 128, 256] {
         let mut s = random(n + 8, n, 5);

@@ -32,7 +32,9 @@ impl ActStats {
     /// Fold in a `tokens × dim` activation block.
     pub fn update(&mut self, x: &Mat) {
         assert_eq!(x.cols(), self.dim);
-        self.sum_outer = self.sum_outer.add(&matmul_at_b(x, x));
+        // `XᵀX` dispatches to the parallel kernels for big blocks; the
+        // in-place fold avoids a d×d allocation per update.
+        self.sum_outer.add_in_place(&matmul_at_b(x, x));
         self.count += x.rows();
         // Reservoir sampling keeps an unbiased row subsample.
         for t in 0..x.rows() {

@@ -97,6 +97,53 @@ mod tests {
     }
 
     #[test]
+    fn deadline_exactly_elapsed_returns_immediately() {
+        // max_wait = 0 means the deadline is already reached (`now >=
+        // deadline`) when the fill loop starts: the batcher must return
+        // the first item alone even with more items already queued, and
+        // must not spin or panic on the zero-length timeout.
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatcherCfg { max_batch: 4, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![0]);
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert_eq!(b.next_batch().unwrap(), vec![2]);
+        assert!(t0.elapsed() < Duration::from_millis(100), "zero wait must not block");
+    }
+
+    #[test]
+    fn disconnect_mid_batch_flushes_partial_batch_early() {
+        // The producer hangs up while a batch is still filling: the
+        // batcher must return what it has immediately instead of sitting
+        // out the remaining window, and the following call reports
+        // shutdown.
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(1).unwrap();
+            // tx dropped here — mid-batch disconnect.
+        });
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherCfg { max_batch: 8, max_wait: Duration::from_secs(10) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![0, 1]);
+        assert!(
+            waited < Duration::from_millis(1500),
+            "disconnect should flush early, waited {waited:?}"
+        );
+        assert!(b.next_batch().is_none(), "drained + disconnected ⇒ shutdown");
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn late_arrivals_join_within_window() {
         let (tx, rx) = channel();
         tx.send(0).unwrap();

@@ -22,13 +22,17 @@ pub struct NativeLogits<'a> {
 
 impl SeqLogits for NativeLogits<'_> {
     fn logits(&self, seqs: &[Vec<u8>]) -> Result<Vec<Mat>> {
-        Ok(seqs
-            .iter()
-            .map(|s| match self.qc {
-                None => self.model.forward(s),
-                Some(qc) => self.model.forward_quant(s, qc),
-            })
-            .collect())
+        // Sequences are independent full forwards — fan them out across
+        // the worker pool (perplexity batches run ~#workers× faster).
+        let jobs: Vec<usize> = (0..seqs.len()).collect();
+        Ok(crate::linalg::par::par_map(
+            jobs,
+            crate::linalg::par::num_threads(),
+            |i| match self.qc {
+                None => self.model.forward(&seqs[i]),
+                Some(qc) => self.model.forward_quant(&seqs[i], qc),
+            },
+        ))
     }
 
     fn vocab(&self) -> usize {

@@ -129,6 +129,14 @@ impl Mat {
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// `self += other` without allocating (streaming accumulators).
+    pub fn add_in_place(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
     /// `self - other`.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -288,6 +296,16 @@ mod tests {
                 assert_eq!(m[(i, j)], m[(j, i)]);
             }
         }
+    }
+
+    #[test]
+    fn add_in_place_matches_add() {
+        let a = Mat::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+        let b = Mat::from_fn(4, 5, |i, j| (i as f64) - (j as f64) * 0.5);
+        let want = a.add(&b);
+        let mut got = a.clone();
+        got.add_in_place(&b);
+        assert_eq!(got, want);
     }
 
     #[test]

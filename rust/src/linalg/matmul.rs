@@ -1,34 +1,37 @@
-//! Blocked matrix multiplication.
+//! Blocked matrix multiplication with threaded dispatch.
 //!
 //! The `f64` analysis path uses a straightforward i-k-j loop order (the
 //! inner loop is a contiguous AXPY over the output row, which LLVM
 //! auto-vectorizes) with k-blocking for cache reuse. This is the hot path
 //! of covariance estimation, GPTQ and the transform builders; see
-//! `benches/linalg_hot.rs` and EXPERIMENTS.md §Perf.
+//! `benches/linalg_hot.rs` and PERF.md.
+//!
+//! Every public kernel here is a *dispatcher*: below
+//! [`par::PAR_MIN_FMA`](super::par::PAR_MIN_FMA) fused multiply-adds it
+//! runs the serial kernel inline; above it, output rows are partitioned
+//! across a scoped thread pool ([`super::par`]). The split is over output
+//! rows only and each row keeps the exact serial accumulation order, so
+//! serial and parallel results are bit-identical — the property tests in
+//! `rust/tests/linalg_par_props.rs` pin this down.
 
-use super::Mat;
+use super::{par, Mat};
 
 const KC: usize = 256; // k-panel kept hot in L1/L2
 
-/// `C = A · B`.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.cols() * 0 + a.cols());
-    assert_eq!(
-        a.cols(),
-        b.rows(),
-        "matmul shape mismatch: {}×{} · {}×{}",
-        a.rows(),
-        a.cols(),
-        b.rows(),
-        b.cols()
-    );
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
+/// Compute output rows `r0 .. r0 + out.len()/b.cols()` of `C = A · B`
+/// into `out` (row-major, zero-initialized). Shared by the serial and
+/// parallel paths so both accumulate in the same order.
+pub(crate) fn matmul_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let (k, n) = (a.cols(), b.cols());
+    let rows = out.len() / n;
     for k0 in (0..k).step_by(KC) {
         let k1 = (k0 + KC).min(k);
-        for i in 0..m {
-            let arow = a.row(i);
-            let crow = c.row_mut(i);
+        for i in 0..rows {
+            let arow = a.row(r0 + i);
+            let crow = &mut out[i * n..(i + 1) * n];
             for kk in k0..k1 {
                 let aik = arow[kk];
                 if aik == 0.0 {
@@ -42,6 +45,86 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
+}
+
+/// Output rows of `C = Aᵀ · B`: row `i` of `C` is column `r0 + i` of `A`
+/// against all of `B`, accumulated in the serial `kk` order.
+pub(crate) fn matmul_at_b_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let (k, n) = (a.rows(), b.cols());
+    let rows = out.len() / n;
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..rows {
+            let aik = arow[r0 + i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Output rows of `C = A · Bᵀ` (row `r0 + i` of `A` dotted with every row
+/// of `B`).
+pub(crate) fn matmul_a_bt_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let n = b.rows();
+    let rows = out.len() / n;
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+}
+
+/// Output entries `r0 .. r0 + out.len()` of `y = A · x`.
+pub(crate) fn matvec_rows(a: &Mat, x: &[f64], r0: usize, out: &mut [f64]) {
+    for (i, y) in out.iter_mut().enumerate() {
+        *y = dot(a.row(r0 + i), x);
+    }
+}
+
+fn assert_matmul_shapes(a: &Mat, b: &Mat) {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul shape mismatch: {}×{} · {}×{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+}
+
+/// `C = A · B`. Dispatches to the parallel kernel above the size
+/// threshold (see [`super::par`]).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_matmul_shapes(a, b);
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let threads = par::threads_for(m.saturating_mul(k).saturating_mul(n), m);
+    if threads > 1 {
+        par::matmul_mt(a, b, threads)
+    } else {
+        matmul_serial(a, b)
+    }
+}
+
+/// `C = A · B` on the current thread (the parallel kernels' reference).
+pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_matmul_shapes(a, b);
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_rows(a, b, 0, c.as_mut_slice());
     c
 }
 
@@ -52,21 +135,19 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
-    for kk in 0..k {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
-        }
+    let threads = par::threads_for(k.saturating_mul(m).saturating_mul(n), m);
+    if threads > 1 {
+        par::matmul_at_b_mt(a, b, threads)
+    } else {
+        matmul_at_b_serial(a, b)
     }
+}
+
+/// Serial `C = Aᵀ · B`.
+pub fn matmul_at_b_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    matmul_at_b_rows(a, b, 0, c.as_mut_slice());
     c
 }
 
@@ -106,27 +187,40 @@ pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// operands.
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
-    let (m, _k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            crow[j] = dot(arow, b.row(j));
-        }
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let threads = par::threads_for(m.saturating_mul(k).saturating_mul(n), m);
+    if threads > 1 {
+        par::matmul_a_bt_mt(a, b, threads)
+    } else {
+        matmul_a_bt_serial(a, b)
     }
+}
+
+/// Serial `C = A · Bᵀ`.
+pub fn matmul_a_bt_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_a_bt_rows(a, b, 0, c.as_mut_slice());
     c
 }
 
 /// `y = A · x`.
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
-    (0..a.rows())
-        .map(|i| {
-            let row = a.row(i);
-            dot(row, x)
-        })
-        .collect()
+    let threads = par::threads_for(a.rows().saturating_mul(a.cols()), a.rows());
+    if threads > 1 {
+        par::matvec_mt(a, x, threads)
+    } else {
+        matvec_serial(a, x)
+    }
+}
+
+/// Serial `y = A · x`.
+pub fn matvec_serial(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    matvec_rows(a, x, 0, &mut y);
+    y
 }
 
 #[cfg(test)]
@@ -201,5 +295,17 @@ mod tests {
         let a = random(8, 8, 10);
         assert!(matmul(&a, &Mat::eye(8)).max_abs_diff(&a) < 1e-15);
         assert!(matmul(&Mat::eye(8), &a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn dispatcher_crosses_parallel_threshold_consistently() {
+        // 192³ ≈ 7.1 M FMA is above PAR_MIN_FMA, so `matmul` takes the
+        // threaded path (whenever >1 worker is available) and must agree
+        // with the serial reference exactly.
+        let a = random(192, 192, 11);
+        let b = random(192, 192, 12);
+        assert!(matmul(&a, &b).max_abs_diff(&matmul_serial(&a, &b)) < 1e-12);
+        assert!(matmul_at_b(&a, &b).max_abs_diff(&matmul_at_b_serial(&a, &b)) < 1e-12);
+        assert!(matmul_a_bt(&a, &b).max_abs_diff(&matmul_a_bt_serial(&a, &b)) < 1e-12);
     }
 }

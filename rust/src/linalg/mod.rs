@@ -11,6 +11,11 @@
 //!
 //! Analysis math runs in `f64`; the model substrate uses `f32` tensors
 //! (see [`crate::model::tensor`]).
+//!
+//! The four matmul kernels are *dispatchers*: large problems run on the
+//! scoped thread pool in [`par`] (worker count via `CATQUANT_THREADS`),
+//! small ones stay on the serial kernels (`*_serial`, also exported as
+//! the bit-exact reference for benches and property tests). See PERF.md.
 
 mod chol;
 mod eigen;
@@ -19,6 +24,7 @@ mod hadamard;
 mod mat;
 mod matmul;
 mod orthogonal;
+pub mod par;
 mod rng;
 
 pub use chol::Cholesky;
@@ -26,6 +32,9 @@ pub use eigen::{eigh, Eigh};
 pub use funcs::{geometric_mean, spd_inv, spd_inv_sqrt, spd_pow, spd_sqrt};
 pub use hadamard::{fwht_inplace, hadamard_matrix, is_pow2, randomized_hadamard};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matvec};
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b, matmul_at_b_serial, matmul_serial,
+    matvec, matvec_serial,
+};
 pub use orthogonal::random_orthogonal;
 pub use rng::Rng;

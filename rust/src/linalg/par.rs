@@ -1,0 +1,325 @@
+//! Dependency-free parallel execution layer.
+//!
+//! Everything compute-heavy in the crate funnels through the four
+//! dispatchers in [`super::matmul`]; this module supplies their threaded
+//! halves plus a generic task fan-out ([`par_map`]) used by the pipeline
+//! orchestrator, GPTQ, attention, and batched eval.
+//!
+//! Design constraints (see PERF.md):
+//!
+//! * **No dependencies.** Workers are `std::thread::scope` threads, so
+//!   borrowed inputs (`&Mat`) flow in without `Arc` or `'static` bounds.
+//! * **Determinism.** Kernels partition *output rows* only; each row is
+//!   accumulated in the exact serial order, so parallel results are
+//!   bit-identical to the serial reference at any worker count.
+//! * **Serial fallback.** Below [`PAR_MIN_FMA`] fused multiply-adds the
+//!   spawn cost (tens of µs) outweighs the win and dispatchers stay on
+//!   the serial kernels.
+//!
+//! Worker count: `CATQUANT_THREADS` env var if set (clamped to 1..=256),
+//! else the OS-reported parallelism (no `num_cpus` crate needed), else
+//! 4. Coarse compute-bound fan-outs — per-(block,group) pipeline builds,
+//! per-sequence eval forwards — pass [`num_threads`] to [`par_map`]
+//! directly and scale with cores. Jobs that stream shared matrices —
+//! the matmul kernels, GPTQ rows, attention heads — size themselves via
+//! [`threads_for`], which adds the [`KERNEL_MAX_THREADS`] bandwidth cap
+//! and the [`PAR_MIN_FMA`] serial-fallback gate.
+
+use super::matmul::{matmul_a_bt_rows, matmul_at_b_rows, matmul_rows, matvec_rows};
+use super::Mat;
+use std::cell::Cell;
+use std::sync::{mpsc, Mutex, OnceLock};
+
+thread_local! {
+    /// True while this thread is executing inside a parallel worker.
+    /// Nested fan-outs (a kernel inside a `par_map` job inside another
+    /// `par_map` job) then stay serial, so one level of parallelism uses
+    /// the machine instead of multiplying thread counts per level.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Marks the current thread as a worker for its lifetime scope; restores
+/// the previous state on drop (the calling thread can double as a
+/// worker and return to top-level afterwards).
+struct WorkerGuard {
+    prev: bool,
+}
+
+impl WorkerGuard {
+    fn enter() -> WorkerGuard {
+        WorkerGuard { prev: IN_WORKER.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_WORKER.with(|c| c.set(prev));
+    }
+}
+
+/// Minimum fused multiply-adds before the dispatchers go parallel.
+/// 4 Mi FMA ≈ a 160³ matmul ≈ 2–4 ms serial — roughly 30× the cost of
+/// spawning a scoped worker set, so the crossover has safety margin.
+pub const PAR_MIN_FMA: usize = 4 * 1024 * 1024;
+
+/// Worker cap applied by [`threads_for`]: jobs that sweep shared
+/// matrices (matmul rows, GPTQ rows, attention heads) saturate memory
+/// bandwidth around here on typical hosts. Coarse task fan-outs
+/// ([`par_map`] with [`num_threads`]) are compute-bound and uncapped.
+pub const KERNEL_MAX_THREADS: usize = 8;
+
+/// The configured worker count (resolved once per process).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("CATQUANT_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.clamp(1, 256);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(256)
+    })
+}
+
+/// Worker count for a *kernel* of `work_fma` fused multiply-adds
+/// splittable into `parts` independent pieces: 1 (stay serial) below
+/// the threshold or when already inside a parallel worker, otherwise
+/// `num_threads()` capped by [`KERNEL_MAX_THREADS`] and `parts`.
+pub fn threads_for(work_fma: usize, parts: usize) -> usize {
+    if in_worker() || work_fma < PAR_MIN_FMA || parts <= 1 {
+        1
+    } else {
+        num_threads().min(KERNEL_MAX_THREADS).min(parts).max(1)
+    }
+}
+
+/// Partition a row-major `rows × cols` buffer into contiguous row chunks
+/// and run `f(first_row, chunk)` on each: one scoped worker per chunk
+/// except the last, which the calling thread computes itself (one fewer
+/// spawn per kernel call, and the caller's core is never idle).
+fn par_rows(data: &mut [f64], cols: usize, threads: usize, f: impl Fn(usize, &mut [f64]) + Sync) {
+    if data.is_empty() {
+        return;
+    }
+    let rows = data.len() / cols;
+    let t = if in_worker() { 1 } else { threads.min(rows).max(1) };
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(t);
+    let mut chunks: Vec<(usize, &mut [f64])> =
+        data.chunks_mut(chunk_rows * cols).enumerate().collect();
+    let tail = chunks.pop();
+    std::thread::scope(|s| {
+        for (ci, chunk) in chunks {
+            let f = &f;
+            s.spawn(move || {
+                let _guard = WorkerGuard::enter();
+                f(ci * chunk_rows, chunk);
+            });
+        }
+        if let Some((ci, chunk)) = tail {
+            let _guard = WorkerGuard::enter();
+            f(ci * chunk_rows, chunk);
+        }
+    });
+}
+
+/// Threaded `C = A · B` (callers: use the dispatching [`super::matmul`]).
+pub fn matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    let cols = b.cols();
+    par_rows(c.as_mut_slice(), cols, threads, |r0, out| matmul_rows(a, b, r0, out));
+    c
+}
+
+/// Threaded `C = Aᵀ · B`.
+pub fn matmul_at_b_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    let cols = b.cols();
+    par_rows(c.as_mut_slice(), cols, threads, |r0, out| matmul_at_b_rows(a, b, r0, out));
+    c
+}
+
+/// Threaded `C = A · Bᵀ`.
+pub fn matmul_a_bt_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    let cols = b.rows();
+    par_rows(c.as_mut_slice(), cols, threads, |r0, out| matmul_a_bt_rows(a, b, r0, out));
+    c
+}
+
+/// Threaded `y = A · x`.
+pub fn matvec_mt(a: &Mat, x: &[f64], threads: usize) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    par_rows(&mut y, 1, threads, |r0, out| matvec_rows(a, x, r0, out));
+    y
+}
+
+/// Order-preserving parallel map over owned items.
+///
+/// Workers pull from a shared queue (so uneven item costs balance) and
+/// results come back in input order. The calling thread doubles as one
+/// of the workers. With `threads <= 1`, fewer than two items, or when
+/// already inside a parallel worker (nested fan-out) this degrades to a
+/// plain serial map — callers can pass [`threads_for`] and get the
+/// fallback for free. A panicking `f` propagates after all workers join
+/// (scoped-thread semantics).
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let t = if in_worker() { 1 } else { threads.min(n).max(1) };
+    if t <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue = Mutex::new(items.into_iter().enumerate());
+    let (tx, rx) = mpsc::channel();
+    std::thread::scope(|s| {
+        for _ in 0..t - 1 {
+            let tx = tx.clone();
+            let queue = &queue;
+            let f = &f;
+            s.spawn(move || drain_queue(queue, f, &tx));
+        }
+        drain_queue(&queue, &f, &tx);
+    });
+    drop(tx);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("par_map lost an item")).collect()
+}
+
+/// One `par_map` worker: pull items until the queue runs dry, sending
+/// `(index, result)` pairs back. Marks the thread as a worker so nested
+/// fan-outs inside `f` stay serial.
+fn drain_queue<T, R, F>(
+    queue: &Mutex<std::iter::Enumerate<std::vec::IntoIter<T>>>,
+    f: &F,
+    tx: &mpsc::Sender<(usize, R)>,
+) where
+    F: Fn(T) -> R,
+{
+    let _guard = WorkerGuard::enter();
+    loop {
+        let next = queue.lock().unwrap().next();
+        match next {
+            Some((i, item)) => {
+                let _ = tx.send((i, f(item)));
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_a_bt_serial, matmul_at_b_serial, matmul_serial, Rng};
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn threads_for_stays_serial_below_threshold() {
+        assert_eq!(threads_for(PAR_MIN_FMA - 1, 64), 1);
+        assert_eq!(threads_for(PAR_MIN_FMA, 1), 1);
+        let t = threads_for(PAR_MIN_FMA, 3);
+        assert!((1..=3).contains(&t));
+    }
+
+    #[test]
+    fn num_threads_is_sane() {
+        let n = num_threads();
+        assert!((1..=256).contains(&n), "num_threads {n}");
+    }
+
+    #[test]
+    fn mt_kernels_match_serial_exactly() {
+        let a = random(37, 53, 1);
+        let b = random(53, 29, 2);
+        for t in [1, 2, 5, 8] {
+            assert_eq!(
+                matmul_mt(&a, &b, t).max_abs_diff(&matmul_serial(&a, &b)),
+                0.0,
+                "matmul_mt t={t}"
+            );
+        }
+        let x = random(64, 37, 3);
+        let y = random(64, 41, 4);
+        for t in [2, 7] {
+            assert_eq!(
+                matmul_at_b_mt(&x, &y, t).max_abs_diff(&matmul_at_b_serial(&x, &y)),
+                0.0
+            );
+        }
+        let w = random(23, 53, 5);
+        assert_eq!(
+            matmul_a_bt_mt(&a, &w, 3).max_abs_diff(&matmul_a_bt_serial(&a, &w)),
+            0.0
+        );
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_items() {
+        let items: Vec<usize> = (0..100).collect();
+        let got = par_map(items, 8, |i| i * 3);
+        let want: Vec<usize> = (0..100).map(|i| i * 3).collect();
+        assert_eq!(got, want);
+        // Serial degenerate cases.
+        assert_eq!(par_map(vec![7usize], 8, |i| i + 1), vec![8]);
+        assert_eq!(par_map(Vec::<usize>::new(), 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn nested_fanouts_serialize() {
+        // Inside a par_map worker, further fan-outs must stay serial —
+        // one level of parallelism, not a multiplicative thread storm.
+        let inner: Vec<usize> =
+            par_map((0..4).collect(), 4, |_| threads_for(PAR_MIN_FMA * 2, 64));
+        assert_eq!(inner, vec![1, 1, 1, 1]);
+        // The calling thread (which doubled as a worker) is restored to
+        // top level afterwards.
+        assert!(threads_for(PAR_MIN_FMA * 2, 64) >= 1);
+        assert!(!super::in_worker());
+    }
+
+    #[test]
+    fn par_map_balances_uneven_work() {
+        // Items with wildly different costs still come back in order.
+        let items: Vec<usize> = (0..16).collect();
+        let got = par_map(items, 4, |i| {
+            let mut acc = 0.0f64;
+            let iters = if i % 4 == 0 { 20_000 } else { 10 };
+            for k in 0..iters {
+                acc += (k as f64).sqrt();
+            }
+            (i, acc > -1.0)
+        });
+        for (i, (gi, ok)) in got.iter().enumerate() {
+            assert_eq!(*gi, i);
+            assert!(ok);
+        }
+    }
+}

@@ -6,7 +6,7 @@
 //! graphs to f32 precision.
 
 use super::{ModelConfig, QuantConfig};
-use crate::linalg::{matmul_a_bt, Mat};
+use crate::linalg::{matmul_a_bt, par, Mat};
 use crate::quant::quantize_activations_per_token;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -230,36 +230,57 @@ pub fn softmax_row(row: &mut [f64]) {
 }
 
 /// Multi-head causal attention over one sequence (`q,k,v: S×d`).
+///
+/// Heads are independent (disjoint output column blocks), so long
+/// sequences fan heads out across the [`crate::linalg::par`] pool; the
+/// per-head math is shared with the serial path, so worker count never
+/// changes the result.
 fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
     let s = q.rows();
     let d = q.cols();
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f64).sqrt();
+    let threads = par::threads_for(s.saturating_mul(s).saturating_mul(d), n_heads);
+    let blocks: Vec<Vec<f64>> = par::par_map((0..n_heads).collect(), threads, |h| {
+        attention_head(q, k, v, h * hd, hd, scale)
+    });
     let mut out = Mat::zeros(s, d);
-    let mut scores = vec![0.0f64; s];
-    for h in 0..n_heads {
+    for (h, blk) in blocks.iter().enumerate() {
         let c0 = h * hd;
         for t in 0..s {
-            // scores over keys 0..=t
-            for (j, sc) in scores.iter_mut().enumerate().take(s) {
-                if j <= t {
-                    let mut acc = 0.0;
-                    for c in c0..c0 + hd {
-                        acc += q[(t, c)] * k[(j, c)];
-                    }
-                    *sc = acc * scale;
-                } else {
-                    *sc = MASK_VALUE;
-                }
-            }
-            softmax_row(&mut scores[..s]);
-            for (j, &a) in scores.iter().enumerate().take(t + 1) {
-                if a == 0.0 {
-                    continue;
-                }
+            out.row_mut(t)[c0..c0 + hd].copy_from_slice(&blk[t * hd..(t + 1) * hd]);
+        }
+    }
+    out
+}
+
+/// One attention head: the `S×hd` output block for columns
+/// `c0 .. c0 + hd` (row-major).
+fn attention_head(q: &Mat, k: &Mat, v: &Mat, c0: usize, hd: usize, scale: f64) -> Vec<f64> {
+    let s = q.rows();
+    let mut out = vec![0.0f64; s * hd];
+    let mut scores = vec![0.0f64; s];
+    for t in 0..s {
+        // scores over keys 0..=t
+        for (j, sc) in scores.iter_mut().enumerate().take(s) {
+            if j <= t {
+                let mut acc = 0.0;
                 for c in c0..c0 + hd {
-                    out[(t, c)] += a * v[(j, c)];
+                    acc += q[(t, c)] * k[(j, c)];
                 }
+                *sc = acc * scale;
+            } else {
+                *sc = MASK_VALUE;
+            }
+        }
+        softmax_row(&mut scores[..s]);
+        let orow = &mut out[t * hd..(t + 1) * hd];
+        for (j, &a) in scores.iter().enumerate().take(t + 1) {
+            if a == 0.0 {
+                continue;
+            }
+            for c in 0..hd {
+                orow[c] += a * v[(j, c0 + c)];
             }
         }
     }

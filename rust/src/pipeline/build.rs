@@ -1,7 +1,13 @@
 //! Pipeline implementation.
+//!
+//! Transform fitting + weight quantization is independent per
+//! (block, group), so [`build_quant_config`] fans the per-group builds
+//! out across the [`crate::linalg::par`] worker pool; result merging is
+//! index-ordered, so reports and maps are identical to the serial build.
 
 use crate::calib::CalibStats;
-use crate::linalg::{matmul_at_b, Mat};
+use crate::linalg::{matmul_at_b, par, Mat};
+use crate::model::LayerGroup;
 use crate::model::{NativeModel, QuantConfig, ALL_GROUPS};
 use crate::quant::{
     gptq_quantize, quantize_weights_rtn, ActQuantCfg, GptqConfig, QScheme, RangeEstimator,
@@ -83,7 +89,7 @@ pub fn group_transform(
     let sigma_w = {
         let mut s = Mat::zeros(d, d);
         for w in ws {
-            s = s.add(&matmul_at_b(w, w));
+            s.add_in_place(&matmul_at_b(w, w));
         }
         s
     };
@@ -129,53 +135,72 @@ pub fn build_quant_config(
     let mut report = PipelineReport::default();
     let mut sqnr_acc = Vec::new();
 
-    for block in 0..mcfg.n_layers {
-        for g in ALL_GROUPS {
-            let t_name = g.t_name(block);
-            let stats = calib.sigma(&t_name);
-            let sigma_x = stats.sigma();
-            let x_sample = stats.sample();
-            let ws: Vec<&Mat> = g
-                .linears()
-                .iter()
-                .map(|lin| &model.params[&format!("blocks.{block}.{lin}")])
-                .collect();
+    // One independent build job per (block, group); fanned out across the
+    // worker pool and merged back in job order below.
+    struct GroupBuild {
+        t_name: String,
+        timing: (String, f64),
+        t_mat: Mat,
+        weights: Vec<(String, Mat)>,
+        sqnrs: Vec<f64>,
+    }
 
-            let t0 = std::time::Instant::now();
-            let t = group_transform(
-                cfg.kind,
-                &x_sample,
-                &sigma_x,
-                &ws,
-                act,
-                wq,
-                cfg.cat_block,
-                cfg.seed.wrapping_add((block * 13) as u64),
-            );
-            report
-                .transform_ms
-                .push((format!("{block}.{}", g.label()), t0.elapsed().as_secs_f64() * 1e3));
+    let jobs: Vec<(usize, LayerGroup)> = (0..mcfg.n_layers)
+        .flat_map(|block| ALL_GROUPS.into_iter().map(move |g| (block, g)))
+        .collect();
 
-            // Fuse + quantize each weight of the group.
-            let xt_sample = t.apply_acts(&x_sample);
-            let sigma_xt = t.conjugate_sigma(&sigma_x);
-            for lin in g.linears() {
-                let name = format!("blocks.{block}.{lin}");
-                let w = &model.params[&name];
-                let w_fused = t.fuse_weights(w);
-                let deq = match cfg.weight_quantizer {
-                    WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, wq).deq,
-                    WeightQuantizer::Gptq => {
-                        gptq_quantize(&w_fused, &sigma_xt, wq, GptqConfig::default()).deq
-                    }
-                };
-                sqnr_acc.push(
-                    10.0 * approx_sqnr_joint(&xt_sample, &w_fused, act, wq).log10(),
-                );
-                fused_weights.insert(name, deq);
-            }
-            transforms.insert(t_name, t.matrix().clone());
+    let built: Vec<GroupBuild> = par::par_map(jobs, par::num_threads(), |(block, g)| {
+        let t_name = g.t_name(block);
+        let stats = calib.sigma(&t_name);
+        let sigma_x = stats.sigma();
+        let x_sample = stats.sample();
+        let ws: Vec<&Mat> = g
+            .linears()
+            .iter()
+            .map(|lin| &model.params[&format!("blocks.{block}.{lin}")])
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let t = group_transform(
+            cfg.kind,
+            &x_sample,
+            &sigma_x,
+            &ws,
+            act,
+            wq,
+            cfg.cat_block,
+            cfg.seed.wrapping_add((block * 13) as u64),
+        );
+        let timing = (format!("{block}.{}", g.label()), t0.elapsed().as_secs_f64() * 1e3);
+
+        // Fuse + quantize each weight of the group.
+        let xt_sample = t.apply_acts(&x_sample);
+        let sigma_xt = t.conjugate_sigma(&sigma_x);
+        let mut weights = Vec::new();
+        let mut sqnrs = Vec::new();
+        for lin in g.linears() {
+            let name = format!("blocks.{block}.{lin}");
+            let w = &model.params[&name];
+            let w_fused = t.fuse_weights(w);
+            let deq = match cfg.weight_quantizer {
+                WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, wq).deq,
+                WeightQuantizer::Gptq => {
+                    gptq_quantize(&w_fused, &sigma_xt, wq, GptqConfig::default()).deq
+                }
+            };
+            sqnrs.push(10.0 * approx_sqnr_joint(&xt_sample, &w_fused, act, wq).log10());
+            weights.push((name, deq));
         }
+        GroupBuild { t_name, timing, t_mat: t.matrix().clone(), weights, sqnrs }
+    });
+
+    for gb in built {
+        report.transform_ms.push(gb.timing);
+        sqnr_acc.extend(gb.sqnrs);
+        for (name, deq) in gb.weights {
+            fused_weights.insert(name, deq);
+        }
+        transforms.insert(gb.t_name, gb.t_mat);
     }
     report.mean_sqnr_db = sqnr_acc.iter().sum::<f64>() / sqnr_acc.len().max(1) as f64;
 

@@ -13,7 +13,7 @@
 //! `experiments::table1`.
 
 use super::{AffineParams, QuantizedWeights, WeightQuantCfg};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{par, Cholesky, Mat};
 
 /// GPTQ hyperparameters (defaults follow the reference implementation).
 #[derive(Clone, Copy, Debug)]
@@ -61,51 +61,68 @@ pub fn gptq_quantize(
         })
         .collect();
 
-    let mut work = w.clone(); // columns get error-compensated in place
-    let mut deq = Mat::zeros(rows, cols);
-
+    // Every output row carries its own grid and its own error flow (the
+    // Hessian couples *columns*, not rows), so rows quantize
+    // independently — the natural fan-out axis. Error-propagation work is
+    // ~cols²/2 FMA per row; below the kernel threshold this stays serial.
     let bs = gptq.block_size.max(1);
-    let mut b0 = 0;
-    while b0 < cols {
-        let b1 = (b0 + bs).min(cols);
-        // In-block: quantize column by column, propagating error within
-        // the block immediately.
-        let mut block_err = Mat::zeros(rows, b1 - b0);
-        for j in b0..b1 {
-            let d = hinv_u[(j, j)];
-            for i in 0..rows {
-                let v = work[(i, j)];
-                let q = params[i].fake_quant(v);
-                deq[(i, j)] = q;
-                let e = (v - q) / d;
-                block_err[(i, j - b0)] = e;
-                // Propagate within the rest of the block.
-                for k in (j + 1)..b1 {
-                    work[(i, k)] -= e * hinv_u[(j, k)];
-                }
-            }
-        }
-        // Lazy update of all remaining columns with the accumulated block
-        // error: W[:, b1:] -= E · U[b0:b1, b1:].
-        if b1 < cols {
-            for i in 0..rows {
-                for j in b0..b1 {
-                    let e = block_err[(i, j - b0)];
-                    if e == 0.0 {
-                        continue;
-                    }
-                    for k in b1..cols {
-                        work[(i, k)] -= e * hinv_u[(j, k)];
-                    }
-                }
-            }
-        }
-        b0 = b1;
+    let work_fma = rows.saturating_mul(cols).saturating_mul(cols) / 2;
+    let threads = par::threads_for(work_fma, rows);
+    let deq_rows: Vec<Vec<f64>> = par::par_map((0..rows).collect(), threads, |i| {
+        gptq_quantize_row(w.row(i), &params[i], &hinv_u, bs)
+    });
+    let mut deq = Mat::zeros(rows, cols);
+    for (i, r) in deq_rows.iter().enumerate() {
+        deq.row_mut(i).copy_from_slice(r);
     }
 
     let scales = params.iter().map(|p| p.scale).collect();
     let ranges = params.iter().map(|p| p.range()).collect();
     QuantizedWeights { deq, scales, ranges }
+}
+
+/// GPTQ over one weight row: quantize column by column in natural order,
+/// propagating error within the active block immediately and onto the
+/// remaining columns lazily per block (cache efficiency). Identical
+/// arithmetic order to the historical whole-matrix loop, so results are
+/// independent of the fan-out.
+fn gptq_quantize_row(row: &[f64], p: &AffineParams, hinv_u: &Mat, bs: usize) -> Vec<f64> {
+    let cols = row.len();
+    let mut work = row.to_vec(); // columns get error-compensated in place
+    let mut deq = vec![0.0; cols];
+    let mut block_err = vec![0.0; bs];
+    let mut b0 = 0;
+    while b0 < cols {
+        let b1 = (b0 + bs).min(cols);
+        // In-block: quantize column by column, propagating error within
+        // the block immediately.
+        for j in b0..b1 {
+            let d = hinv_u[(j, j)];
+            let v = work[j];
+            let q = p.fake_quant(v);
+            deq[j] = q;
+            let e = (v - q) / d;
+            block_err[j - b0] = e;
+            for k in (j + 1)..b1 {
+                work[k] -= e * hinv_u[(j, k)];
+            }
+        }
+        // Lazy update of all remaining columns with the accumulated block
+        // error: w[b1:] -= e · U[b0:b1, b1:].
+        if b1 < cols {
+            for j in b0..b1 {
+                let e = block_err[j - b0];
+                if e == 0.0 {
+                    continue;
+                }
+                for k in b1..cols {
+                    work[k] -= e * hinv_u[(j, k)];
+                }
+            }
+        }
+        b0 = b1;
+    }
+    deq
 }
 
 #[cfg(test)]

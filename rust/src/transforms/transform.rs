@@ -89,6 +89,10 @@ impl Transform {
     }
 
     /// Conjugate an activation autocorrelation: `Σ' = T·Σ·Tᵀ`.
+    ///
+    /// Kept as two `matmul`s (not the transpose-free `matmul_a_bt`): the
+    /// kernels' accumulation orders differ in the low bits, and serial
+    /// runs must stay bit-identical to the pre-parallel-layer baseline.
     pub fn conjugate_sigma(&self, sigma: &Mat) -> Mat {
         let mut s = matmul(&matmul(&self.t, sigma), &self.t.transpose());
         s.symmetrize();

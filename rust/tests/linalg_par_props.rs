@@ -1,0 +1,128 @@
+//! Property tests for the parallel kernel layer: at every worker count
+//! and for every shape family — degenerate (1×N, N×1), odd, straddling
+//! the KC cache block and the parallel-dispatch threshold — the threaded
+//! kernels must match the serial reference within 1e-12 max-abs-diff.
+//! (They are designed to be *bit-identical*: the fan-out partitions
+//! output rows only and keeps the serial per-row accumulation order.)
+
+use catquant::linalg::{
+    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b, matmul_at_b_serial, matmul_serial,
+    matvec, matvec_serial, par, Mat, Rng,
+};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const TOL: f64 = 1e-12;
+
+fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+#[test]
+fn matmul_parallel_matches_serial_across_shapes_and_threads() {
+    // (m, k, n): degenerate, odd, and KC-block-straddling (KC = 256).
+    let shapes = [
+        (1, 1, 1),
+        (1, 19, 1),
+        (7, 1, 9),
+        (1, 257, 5),
+        (3, 256, 4),
+        (5, 255, 3),
+        (33, 129, 65),
+        (64, 300, 2),
+    ];
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = random(m, k, 100 + si as u64);
+        let b = random(k, n, 200 + si as u64);
+        let want = matmul_serial(&a, &b);
+        for t in THREAD_COUNTS {
+            let got = par::matmul_mt(&a, &b, t);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= TOL, "matmul {m}×{k}·{k}×{n} t={t}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn matmul_at_b_parallel_matches_serial() {
+    // a: k×m, b: k×n — output m×n.
+    let shapes = [(1, 5, 7), (300, 33, 17), (257, 8, 9), (2, 1, 1)];
+    for (si, &(k, m, n)) in shapes.iter().enumerate() {
+        let a = random(k, m, 300 + si as u64);
+        let b = random(k, n, 400 + si as u64);
+        let want = matmul_at_b_serial(&a, &b);
+        for t in THREAD_COUNTS {
+            let got = par::matmul_at_b_mt(&a, &b, t);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= TOL, "at_b k={k} m={m} n={n} t={t}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn matmul_a_bt_parallel_matches_serial() {
+    // a: m×k, b: n×k — output m×n.
+    let shapes = [(1, 17, 1), (33, 65, 29), (8, 257, 5), (9, 4, 300)];
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = random(m, k, 500 + si as u64);
+        let b = random(n, k, 600 + si as u64);
+        let want = matmul_a_bt_serial(&a, &b);
+        for t in THREAD_COUNTS {
+            let got = par::matmul_a_bt_mt(&a, &b, t);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= TOL, "a_bt m={m} k={k} n={n} t={t}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn matvec_parallel_matches_serial() {
+    let shapes = [(1, 129), (301, 1), (65, 255)];
+    for (si, &(m, k)) in shapes.iter().enumerate() {
+        let a = random(m, k, 700 + si as u64);
+        let mut rng = Rng::new(800 + si as u64);
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let want = matvec_serial(&a, &x);
+        for t in THREAD_COUNTS {
+            let got = par::matvec_mt(&a, &x, t);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() <= TOL, "matvec {m}×{k} t={t} row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatchers_agree_across_the_parallel_threshold() {
+    // PAR_MIN_FMA = 4 Mi. 160³ ≈ 4.10 M sits just below (serial path);
+    // 164³ ≈ 4.41 M just above (threaded path when >1 worker is
+    // configured). Both must match the serial reference.
+    for n in [160usize, 164] {
+        let a = random(n, n, 900 + n as u64);
+        let b = random(n, n, 950 + n as u64);
+        let d1 = matmul(&a, &b).max_abs_diff(&matmul_serial(&a, &b));
+        assert!(d1 <= TOL, "matmul dispatch n={n}: diff {d1}");
+        let d2 = matmul_at_b(&a, &b).max_abs_diff(&matmul_at_b_serial(&a, &b));
+        assert!(d2 <= TOL, "at_b dispatch n={n}: diff {d2}");
+        let d3 = matmul_a_bt(&a, &b).max_abs_diff(&matmul_a_bt_serial(&a, &b));
+        assert!(d3 <= TOL, "a_bt dispatch n={n}: diff {d3}");
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let yv = matvec(&a, &x);
+        let yw = matvec_serial(&a, &x);
+        for (g, w) in yv.iter().zip(&yw) {
+            assert!((g - w).abs() <= TOL, "matvec dispatch n={n}");
+        }
+    }
+}
+
+#[test]
+fn oversubscribed_thread_counts_are_safe() {
+    // More workers than rows must clamp, not panic or corrupt.
+    let a = random(3, 40, 1);
+    let b = random(40, 5, 2);
+    let want = matmul_serial(&a, &b);
+    for t in [3, 4, 64] {
+        assert!(par::matmul_mt(&a, &b, t).max_abs_diff(&want) <= TOL);
+    }
+}

@@ -1,0 +1,229 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment is hermetic (no crates.io), so this in-repo shim
+//! provides exactly the surface catquant uses: [`Error`], [`Result`],
+//! [`Context`] on `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Like the real crate, [`Error`] deliberately does
+//! *not* implement `std::error::Error` — that is what allows both the
+//! blanket `From<E: std::error::Error>` conversion (for `?`) and a
+//! `Context` impl on `Result<T, Error>` to coexist.
+//!
+//! Unsupported (unused in this repo): downcasting, backtraces.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error: a cause chain of human-readable messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause-chain messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to the error arm of a `Result` (or a `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds. The bare form
+/// (no message) stringifies the condition, like the real crate.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err(
+                $crate::Error::msg(::std::concat!(
+                    "Condition failed: `",
+                    ::std::stringify!($cond),
+                    "`"
+                ))
+                .into(),
+            );
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading config").unwrap_err();
+        assert_eq!(e.root_message(), "loading config");
+        assert_eq!(e.chain().count(), 2);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        assert!(v.context("empty").is_err());
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_err());
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(200).is_err());
+        // Bare (message-less) ensure stringifies the condition.
+        fn g(x: u32) -> Result<u32> {
+            ensure!(x % 2 == 0);
+            Ok(x)
+        }
+        assert_eq!(g(4).unwrap(), 4);
+        let e = g(3).unwrap_err();
+        assert!(e.to_string().contains("Condition failed"), "{e}");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        let chain: Vec<_> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "inner"]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Offline stub of the `xla` crate surface catquant's PJRT layer uses.
+//!
+//! The hermetic build has no native XLA/PJRT libraries, so this shim
+//! keeps Layer-2 (`catquant::runtime::PjrtEngine` and everything above
+//! it) *compiling* while making the runtime state explicit:
+//!
+//! * [`Literal`] is fully functional in-memory (build/reshape/read-back) —
+//!   argument packing and token encoding work and are unit-testable.
+//! * [`PjRtClient::cpu`] returns an error, so `PjrtEngine::new` fails
+//!   with a clear message and every PJRT caller (parity tests, serving
+//!   examples) skips or reports cleanly instead of crashing.
+//!
+//! Swapping in a real `xla` build is a one-line change in the root
+//! `Cargo.toml` — the API here matches the call sites exactly.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (also what the real crate's fallible ops return).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime unavailable (catquant was built with the offline xla stub; \
+         native-engine paths are unaffected)"
+    )))
+}
+
+/// Element storage for [`Literal`]. Public only so the sealed
+/// [`NativeType`] trait can name it.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for i32 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: sealed::Sealed + Clone {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor literal (functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let n = v.len() as i64;
+        Literal { data: T::wrap(v.to_vec()), dims: vec![n] }
+    }
+
+    /// Same elements, new shape.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape: {have} elements do not fit shape {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out (row-major).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Flatten a tuple literal — only produced by execution, so
+    /// unreachable in the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::I32(v) => v.len(),
+            Data::F32(v) => v.len(),
+        }
+    }
+}
+
+/// Stub PJRT client: construction fails, so no downstream op can be
+/// reached with a live instance.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (opaque in the stub; parsing requires native XLA).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals_work() {
+        let l = Literal::vec1(&[7i32, 8, 9]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT runtime unavailable"), "{e}");
+    }
+}
