@@ -1,10 +1,11 @@
 //! Quantizer hot paths: per-token activation quant, RTN, GPTQ, transform
-//! builders. Run: `cargo bench --bench quant_hot`
+//! builders, and the packed-integer vs dense-f64 serving A/B.
+//! Run: `cargo bench --bench quant_hot`
 
-use catquant::linalg::{matmul_at_b, Mat, Rng};
+use catquant::linalg::{matmul_a_bt, matmul_at_b, qmatmul_a_bt, Mat, Rng};
 use catquant::quant::{
     gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, GptqConfig, QScheme,
-    WeightQuantCfg,
+    QuantizedTensor, WeightQuantCfg,
 };
 use catquant::transforms::{cat_block, kronecker_cat};
 use std::time::Instant;
@@ -62,4 +63,31 @@ fn main() {
     time("FlatQuant kronecker build (d=256)", 3, || {
         std::hint::black_box(kronecker_cat(&sigma, &sigma_w, 0));
     });
+
+    // ---- packed integer kernel vs dense f64 quant path (W4A4) ---------
+    // Both sides include the per-token activation quantization, so this
+    // A/B measures the full serving-path linear: dense = fake-quant f64
+    // matmul over dequantized weights; packed = integer codes through
+    // qmatmul_a_bt. Acceptance: packed beats dense at W4A4.
+    println!("\n== packed vs dense quant linear (W4A4, 2048×256 · 512×256ᵀ) ==");
+    let q4 = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
+    let wd = q4.deq();
+    let act4 = QScheme::asym(4);
+    let t_dense = time("dense: per-token quant + f64 matmul_a_bt", 10, || {
+        let (xq, _) = quantize_activations_per_token(&x, act4, 1.0);
+        std::hint::black_box(matmul_a_bt(&xq, &wd));
+    });
+    let t_packed = time("packed: quantize to codes + i32 qmatmul", 10, || {
+        let xq = QuantizedTensor::quantize_acts(&x, act4, 1.0);
+        std::hint::black_box(qmatmul_a_bt(&xq.view(), &q4.codes.view()));
+    });
+    println!("{:<48} {:>9.2}×", "  -> packed speedup vs dense", t_dense / t_packed);
+    let f64_bytes = w.rows() * w.cols() * 8;
+    println!(
+        "{:<48} {:>7} B vs {} B f64 ({:.1}× smaller)",
+        "  -> W4 packed weight footprint",
+        q4.codes.packed_bytes(),
+        f64_bytes,
+        f64_bytes as f64 / q4.codes.packed_bytes() as f64
+    );
 }

@@ -181,7 +181,7 @@ pub fn run_ablations(manifest: &Manifest, model: &str, seed: u64) -> Result<()> 
             for w in &g.ws {
                 let (lo, hi) = percentile_range(&g.x, pct);
                 let (xq, _) = quantize_activations_static(&g.x, lo, hi, act.scheme);
-                let wqd = quantize_weights_rtn(w, wq).deq;
+                let wqd = quantize_weights_rtn(w, wq).deq();
                 let y = matmul_a_bt(&g.x, w);
                 let yq = matmul_a_bt(&xq, &wqd);
                 let noise = y.sub(&yq).fro_norm2();

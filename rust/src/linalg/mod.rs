@@ -16,6 +16,10 @@
 //! scoped thread pool in [`par`] (worker count via `CATQUANT_THREADS`),
 //! small ones stay on the serial kernels (`*_serial`, also exported as
 //! the bit-exact reference for benches and property tests). See PERF.md.
+//!
+//! [`qmatmul_a_bt`] is the integer sibling: packed quantized codes in,
+//! i32/i64-accumulated dot products plus the affine correction out —
+//! the serving path's true low-bit kernel (see [`qkernel`](self)).
 
 mod chol;
 mod eigen;
@@ -25,6 +29,7 @@ mod mat;
 mod matmul;
 mod orthogonal;
 pub mod par;
+mod qkernel;
 mod rng;
 
 pub use chol::Cholesky;
@@ -37,4 +42,5 @@ pub use matmul::{
     matvec, matvec_serial,
 };
 pub use orthogonal::random_orthogonal;
+pub use qkernel::{qmatmul_a_bt, qmatmul_a_bt_serial, QCodes, QMatView};
 pub use rng::Rng;

@@ -105,7 +105,12 @@ pub fn threads_for(work_fma: usize, parts: usize) -> usize {
 /// and run `f(first_row, chunk)` on each: one scoped worker per chunk
 /// except the last, which the calling thread computes itself (one fewer
 /// spawn per kernel call, and the caller's core is never idle).
-fn par_rows(data: &mut [f64], cols: usize, threads: usize, f: impl Fn(usize, &mut [f64]) + Sync) {
+pub(crate) fn par_rows(
+    data: &mut [f64],
+    cols: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [f64]) + Sync,
+) {
     if data.is_empty() {
         return;
     }

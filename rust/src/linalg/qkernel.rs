@@ -1,0 +1,344 @@
+//! Integer-domain matmul kernels over packed quantized tensors.
+//!
+//! [`qmatmul_a_bt`] is the serving-path analogue of
+//! [`matmul_a_bt`](super::matmul_a_bt): per-token × per-output-channel dot
+//! products, but over *integer codes* with i32/i64 accumulation and the
+//! affine correction
+//!
+//! ```text
+//! y[t, o] = s_x·s_w·(Σ q_x·q_w − zp_x·Σ q_w − zp_w·Σ q_x + k·zp_x·zp_w)
+//! ```
+//!
+//! which is exact in integer arithmetic, so the packed path reproduces the
+//! dense fake-quant f64 path to fp rounding (the parity suite in
+//! `rust/tests/quant_parity_props.rs` pins this at 1e-9 relative).
+//!
+//! The kernel is a dispatcher like its f64 siblings: above
+//! [`par::PAR_MIN_FMA`](super::par::PAR_MIN_FMA) the output rows fan out
+//! across the scoped worker pool. Integer accumulation is exact, so the
+//! result is bit-identical at any worker count — a stronger guarantee than
+//! the f64 kernels need row-partitioning for.
+//!
+//! Storage layouts are produced by `crate::quant::QuantizedTensor`; this
+//! module only borrows them through [`QMatView`] so `linalg` stays below
+//! `quant` in the crate layering.
+
+use super::{par, Mat};
+
+/// Packed integer codes of one row-quantized matrix.
+#[derive(Clone, Copy)]
+pub enum QCodes<'a> {
+    /// Two 4-bit codes per byte (low nibble = even column); each row is
+    /// padded to a whole byte, so the row stride is `cols.div_ceil(2)`.
+    Nibble(&'a [u8]),
+    /// One code per byte (bit widths 5–8, centered so they fit `i8`).
+    Byte(&'a [i8]),
+    /// Raw wide codes (bit widths above 8 — analysis configs only).
+    Wide(&'a [i32]),
+}
+
+/// Borrowed view of a packed row-quantized matrix: integer codes plus the
+/// per-row affine grid. `zps` live in *stored-code* space (the packer may
+/// bias codes to fit the physical container; scale/zero-point are biased
+/// with them, so `value = (code − zp)·scale` always holds).
+#[derive(Clone, Copy)]
+pub struct QMatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: QCodes<'a>,
+    /// Per-row scale.
+    pub scales: &'a [f64],
+    /// Per-row zero point in stored-code space (integral).
+    pub zps: &'a [i32],
+    /// Per-row sum of stored codes (precomputed for the affine correction).
+    pub row_sums: &'a [i64],
+}
+
+impl QMatView<'_> {
+    fn fits_i16(&self) -> bool {
+        // Nibble codes are 0..=15 and Byte codes are −128..=127; Wide
+        // codes (bits > 8) may not fit.
+        !matches!(self.codes, QCodes::Wide(_))
+    }
+
+    /// Unpack row `i` into `out` (`cols` wide).
+    pub fn unpack_row_i32(&self, i: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        match self.codes {
+            QCodes::Nibble(data) => {
+                let stride = self.cols.div_ceil(2);
+                let row = &data[i * stride..(i + 1) * stride];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let b = row[j / 2];
+                    *o = if j % 2 == 0 { (b & 0x0F) as i32 } else { (b >> 4) as i32 };
+                }
+            }
+            QCodes::Byte(data) => {
+                let row = &data[i * self.cols..(i + 1) * self.cols];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = v as i32;
+                }
+            }
+            QCodes::Wide(data) => {
+                out.copy_from_slice(&data[i * self.cols..(i + 1) * self.cols]);
+            }
+        }
+    }
+
+    /// Unpack row `i` into an `i16` buffer (callers must have checked
+    /// [`fits_i16`](Self::fits_i16)).
+    fn unpack_row_i16(&self, i: usize, out: &mut [i16]) {
+        debug_assert_eq!(out.len(), self.cols);
+        match self.codes {
+            QCodes::Nibble(data) => {
+                let stride = self.cols.div_ceil(2);
+                let row = &data[i * stride..(i + 1) * stride];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let b = row[j / 2];
+                    *o = if j % 2 == 0 { (b & 0x0F) as i16 } else { (b >> 4) as i16 };
+                }
+            }
+            QCodes::Byte(data) => {
+                let row = &data[i * self.cols..(i + 1) * self.cols];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = v as i16;
+                }
+            }
+            QCodes::Wide(_) => unreachable!("wide codes do not fit i16"),
+        }
+    }
+}
+
+/// Upper bound on `k` for the i16/i32 fast path: stored codes are at most
+/// 128 in magnitude (nibble ≤ 15, centered byte ≤ 128), so each of the 8
+/// lane accumulators sees `k/8` products of magnitude ≤ 2^14; `k ≤ 2^19`
+/// keeps every lane at ≤ 2^30 < `i32::MAX` with 2× margin.
+const MAX_I16_PATH_COLS: usize = 1 << 19;
+
+/// `C = X · Wᵀ` over packed integer codes with the affine correction
+/// applied per `(token, output-channel)` pair. Dispatches to the worker
+/// pool above the [`par::PAR_MIN_FMA`] threshold; integer accumulation is
+/// exact, so worker count never changes the result.
+pub fn qmatmul_a_bt(x: &QMatView, w: &QMatView) -> Mat {
+    let threads = par::threads_for(
+        x.rows.saturating_mul(x.cols).saturating_mul(w.rows),
+        x.rows,
+    );
+    qmatmul_a_bt_t(x, w, threads)
+}
+
+/// Serial reference for [`qmatmul_a_bt`] (benches, parity property tests).
+pub fn qmatmul_a_bt_serial(x: &QMatView, w: &QMatView) -> Mat {
+    qmatmul_a_bt_t(x, w, 1)
+}
+
+fn qmatmul_a_bt_t(x: &QMatView, w: &QMatView, threads: usize) -> Mat {
+    assert_eq!(x.cols, w.cols, "qmatmul_a_bt shape mismatch");
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    if x.fits_i16() && w.fits_i16() && k <= MAX_I16_PATH_COLS {
+        // Unpack W once (i16 is 4× smaller than the f64 it replaces and
+        // amortized over all `m` tokens), then fan output rows out.
+        let mut wbuf = vec![0i16; n * k];
+        for j in 0..n {
+            w.unpack_row_i16(j, &mut wbuf[j * k..(j + 1) * k]);
+        }
+        par::par_rows(c.as_mut_slice(), n, threads, |r0, out| {
+            qmatmul_rows_i16(x, w, &wbuf, r0, out)
+        });
+    } else {
+        let mut wbuf = vec![0i32; n * k];
+        for j in 0..n {
+            w.unpack_row_i32(j, &mut wbuf[j * k..(j + 1) * k]);
+        }
+        par::par_rows(c.as_mut_slice(), n, threads, |r0, out| {
+            qmatmul_rows_wide(x, w, &wbuf, r0, out)
+        });
+    }
+    c
+}
+
+/// Output rows `r0..` of the fast path: i16 codes, i32 lane accumulators.
+fn qmatmul_rows_i16(x: &QMatView, w: &QMatView, wbuf: &[i16], r0: usize, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let (k, n) = (x.cols, w.rows);
+    let rows = out.len() / n;
+    let mut xbuf = vec![0i16; k];
+    for i in 0..rows {
+        let xi = r0 + i;
+        x.unpack_row_i16(xi, &mut xbuf);
+        let sx = x.scales[xi];
+        let zx = x.zps[xi] as i64;
+        let sumx = x.row_sums[xi];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let dot = qdot_i16(&xbuf, &wbuf[j * k..(j + 1) * k]);
+            let zw = w.zps[j] as i64;
+            let corr = dot - zx * w.row_sums[j] - zw * sumx + (k as i64) * zx * zw;
+            *cj = sx * w.scales[j] * corr as f64;
+        }
+    }
+}
+
+/// Output rows `r0..` of the wide path: i32 codes, i64 products (exact for
+/// any bit width ≤ 24).
+fn qmatmul_rows_wide(x: &QMatView, w: &QMatView, wbuf: &[i32], r0: usize, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let (k, n) = (x.cols, w.rows);
+    let rows = out.len() / n;
+    let mut xbuf = vec![0i32; k];
+    for i in 0..rows {
+        let xi = r0 + i;
+        x.unpack_row_i32(xi, &mut xbuf);
+        let sx = x.scales[xi];
+        let zx = x.zps[xi] as i64;
+        let sumx = x.row_sums[xi];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let wrow = &wbuf[j * k..(j + 1) * k];
+            let mut dot = 0i64;
+            for (&a, &b) in xbuf.iter().zip(wrow) {
+                dot += a as i64 * b as i64;
+            }
+            let zw = w.zps[j] as i64;
+            let corr = dot - zx * w.row_sums[j] - zw * sumx + (k as i64) * zx * zw;
+            *cj = sx * w.scales[j] * corr as f64;
+        }
+    }
+}
+
+/// Eight-lane i16×i16→i32 dot product. Like the f64 `dot` in
+/// `super::matmul`, independent accumulators break the dependency chain
+/// so LLVM emits SIMD integer lanes; unlike f64, integer addition is
+/// associative, so the lane split cannot perturb the result.
+#[inline]
+fn qdot_i16(a: &[i16], b: &[i16]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += xa[l] as i32 * xb[l] as i32;
+        }
+    }
+    let mut tail = 0i32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        tail += x as i32 * y as i32;
+    }
+    acc.iter().map(|&v| v as i64).sum::<i64>() + tail as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nibble_unpack_handles_odd_cols() {
+        // Codes 1..=5 packed low-nibble-first; the 5th code sits in the
+        // low nibble of a padded final byte.
+        let data = [0x21u8, 0x43, 0x05];
+        let scales = [1.0];
+        let zps = [0];
+        let sums = [15i64];
+        let v = QMatView {
+            rows: 1,
+            cols: 5,
+            codes: QCodes::Nibble(&data),
+            scales: &scales,
+            zps: &zps,
+            row_sums: &sums,
+        };
+        let mut out = [0i32; 5];
+        v.unpack_row_i32(0, &mut out);
+        assert_eq!(out, [1, 2, 3, 4, 5]);
+        let mut out16 = [0i16; 5];
+        v.unpack_row_i16(0, &mut out16);
+        assert_eq!(out16, [1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn qmatmul_matches_dequantized_f64_reference() {
+        // 2×3 codes on each side, with non-trivial scales and zero points.
+        let xc: [i8; 6] = [1, -2, 3, 0, 4, -1];
+        let wc: [i8; 6] = [2, 1, 0, -3, 2, 2];
+        let xs = [0.5, 0.25];
+        let ws = [2.0, 1.5];
+        let xz = [1i32, 0];
+        let wz = [0i32, -1];
+        let xsum = [2i64, 3];
+        let wsum = [3i64, 1];
+        let x = QMatView {
+            rows: 2,
+            cols: 3,
+            codes: QCodes::Byte(&xc),
+            scales: &xs,
+            zps: &xz,
+            row_sums: &xsum,
+        };
+        let w = QMatView {
+            rows: 2,
+            cols: 3,
+            codes: QCodes::Byte(&wc),
+            scales: &ws,
+            zps: &wz,
+            row_sums: &wsum,
+        };
+        let c = qmatmul_a_bt(&x, &w);
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut want = 0.0;
+                for l in 0..3 {
+                    let xv = (xc[i * 3 + l] as i32 - xz[i]) as f64 * xs[i];
+                    let wv = (wc[j * 3 + l] as i32 - wz[j]) as f64 * ws[j];
+                    want += xv * wv;
+                }
+                assert!(
+                    (c[(i, j)] - want).abs() < 1e-12,
+                    "({i},{j}): {} vs {want}",
+                    c[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_and_i16_paths_agree() {
+        // Same logical codes through Byte (fast path) and Wide (exact
+        // path) storage must produce identical results.
+        let codes_b: Vec<i8> = (0..24).map(|v| (v % 11) - 5).collect();
+        let codes_w: Vec<i32> = codes_b.iter().map(|&v| v as i32).collect();
+        let scales = [0.5, 0.75, 1.25];
+        let zps = [1i32, -2, 0];
+        let sums: Vec<i64> = (0..3)
+            .map(|i| codes_b[i * 8..(i + 1) * 8].iter().map(|&v| v as i64).sum())
+            .collect();
+        let mk = |byte: bool| QMatView {
+            rows: 3,
+            cols: 8,
+            codes: if byte { QCodes::Byte(&codes_b) } else { QCodes::Wide(&codes_w) },
+            scales: &scales,
+            zps: &zps,
+            row_sums: &sums,
+        };
+        let fast = qmatmul_a_bt(&mk(true), &mk(true));
+        let wide = qmatmul_a_bt(&mk(false), &mk(false));
+        assert_eq!(fast.max_abs_diff(&wide), 0.0);
+    }
+
+    #[test]
+    fn qdot_matches_naive() {
+        let a: Vec<i16> = (0..37).map(|v| (v * 7 % 19) - 9).collect();
+        let b: Vec<i16> = (0..37).map(|v| (v * 5 % 23) - 11).collect();
+        let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+        assert_eq!(qdot_i16(&a, &b), naive);
+    }
+}

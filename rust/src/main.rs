@@ -193,9 +193,10 @@ fn cmd_quantize(manifest: &Manifest, args: &Args) -> Result<()> {
     println!("  mean layer SQNR (approx): {:.1} dB", rep.mean_sqnr_db);
     println!("  activation clip ratio:    {:.2}", rep.act_clip);
     println!(
-        "  transforms: {}  fused weights: {}",
+        "  transforms: {}  packed linears: {} ({:.1} KiB packed weight storage)",
         qc.transforms.len(),
-        qc.fused_weights.len()
+        qc.linears.len(),
+        qc.packed_bytes() as f64 / 1024.0
     );
     if let Some((name, ms)) = rep
         .transform_ms

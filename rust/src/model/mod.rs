@@ -14,4 +14,6 @@ mod quantized;
 pub use config::ModelConfig;
 pub use loader::{load_catw, CatwTensor};
 pub use native::{softmax_row, NativeModel, ProbeCapture};
-pub use quantized::{group_of_linear, LayerGroup, QuantConfig, QuantizedWeightsSet, ALL_GROUPS};
+pub use quantized::{
+    group_of_linear, LayerGroup, QuantConfig, QuantizedLinear, QuantizedWeightsSet, ALL_GROUPS,
+};

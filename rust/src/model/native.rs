@@ -6,8 +6,8 @@
 //! graphs to f32 precision.
 
 use super::{ModelConfig, QuantConfig};
-use crate::linalg::{matmul_a_bt, par, Mat};
-use crate::quant::quantize_activations_per_token;
+use crate::linalg::{matmul_a_bt, par, qmatmul_a_bt, Mat};
+use crate::quant::{quantize_activations_per_token, QuantizedTensor};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -96,24 +96,38 @@ impl NativeModel {
 
     /// Full-sequence FP forward: logits `[S, vocab]` for one sequence.
     pub fn forward(&self, tokens: &[u8]) -> Mat {
-        self.forward_opts(tokens, None, None)
+        self.forward_opts(tokens, None, None, None)
     }
 
     /// FP forward capturing per-group linear inputs into `probe`.
     pub fn forward_probed(&self, tokens: &[u8], probe: &mut ProbeCapture) -> Mat {
-        self.forward_opts(tokens, None, Some(probe))
+        self.forward_opts(tokens, None, None, Some(probe))
     }
 
-    /// Quantized forward (transforms + fused fake-quant weights + dynamic
-    /// activation quant, per `qc`).
+    /// Quantized forward: transforms, then per-token activation codes ×
+    /// packed weight codes through the integer kernel (no dequantized f64
+    /// weight matrices touched).
     pub fn forward_quant(&self, tokens: &[u8], qc: &QuantConfig) -> Mat {
-        self.forward_opts(tokens, Some(qc), None)
+        self.forward_opts(tokens, Some(qc), None, None)
+    }
+
+    /// Reference fake-quant forward over pre-dequantized f64 weights
+    /// (`qc.deq_weights()`): the parity baseline the packed path must
+    /// match to fp rounding, and the dense side of the bench A/B.
+    pub fn forward_quant_dense(
+        &self,
+        tokens: &[u8],
+        qc: &QuantConfig,
+        weights: &HashMap<String, Mat>,
+    ) -> Mat {
+        self.forward_opts(tokens, Some(qc), Some(weights), None)
     }
 
     fn forward_opts(
         &self,
         tokens: &[u8],
         qc: Option<&QuantConfig>,
+        dense: Option<&HashMap<String, Mat>>,
         mut probe: Option<&mut ProbeCapture>,
     ) -> Mat {
         let cfg = &self.cfg;
@@ -133,9 +147,12 @@ impl NativeModel {
             if let Some(pr) = probe.as_deref_mut() {
                 pr.attn_in[i].push(h.clone());
             }
-            let q = self.linear(&h, &format!("{pfx}q_proj"), &format!("{pfx}t_attn"), qc);
-            let mut k = self.linear(&h, &format!("{pfx}k_proj"), &format!("{pfx}t_attn"), qc);
-            let mut v = self.linear(&h, &format!("{pfx}v_proj"), &format!("{pfx}t_attn"), qc);
+            let mut qkv = self
+                .linear_group(&h, &pfx, &["q_proj", "k_proj", "v_proj"], "t_attn", qc, dense)
+                .into_iter();
+            let q = qkv.next().unwrap();
+            let mut k = qkv.next().unwrap();
+            let mut v = qkv.next().unwrap();
             if let Some(qc) = qc {
                 k = kv_quant(&k, qc);
                 v = kv_quant(&v, qc);
@@ -144,14 +161,18 @@ impl NativeModel {
             if let Some(pr) = probe.as_deref_mut() {
                 pr.o_in[i].push(att.clone());
             }
-            let o = self.linear(&att, &format!("{pfx}o_proj"), &format!("{pfx}t_o"), qc);
+            let o =
+                self.linear_group(&att, &pfx, &["o_proj"], "t_o", qc, dense).pop().unwrap();
             x = x.add(&o);
             let h = rmsnorm(&x, self.p(&format!("{pfx}ln2")));
             if let Some(pr) = probe.as_deref_mut() {
                 pr.mlp_in[i].push(h.clone());
             }
-            let gate = self.linear(&h, &format!("{pfx}gate_proj"), &format!("{pfx}t_mlp"), qc);
-            let up = self.linear(&h, &format!("{pfx}up_proj"), &format!("{pfx}t_mlp"), qc);
+            let mut gu = self
+                .linear_group(&h, &pfx, &["gate_proj", "up_proj"], "t_mlp", qc, dense)
+                .into_iter();
+            let gate = gu.next().unwrap();
+            let up = gu.next().unwrap();
             let mut hidden = Mat::zeros(s, cfg.ff);
             for t in 0..s {
                 for j in 0..cfg.ff {
@@ -161,33 +182,73 @@ impl NativeModel {
             if let Some(pr) = probe.as_deref_mut() {
                 pr.down_in[i].push(hidden.clone());
             }
-            let down = self.linear(&hidden, &format!("{pfx}down_proj"), &format!("{pfx}t_down"), qc);
+            let down = self
+                .linear_group(&hidden, &pfx, &["down_proj"], "t_down", qc, dense)
+                .pop()
+                .unwrap();
             x = x.add(&down);
         }
         let x = rmsnorm(&x, self.p("ln_f"));
         matmul_a_bt(&x, self.p("lm_head"))
     }
 
-    /// One (possibly transformed + quantized) linear.
-    fn linear(&self, x: &Mat, wname: &str, tname: &str, qc: Option<&QuantConfig>) -> Mat {
-        match qc {
-            None => matmul_a_bt(x, self.p(wname)),
-            Some(qc) => {
-                let w = qc
-                    .fused_weights
-                    .get(wname)
-                    .unwrap_or_else(|| panic!("missing fused weight {wname}"));
-                match qc.transforms.get(tname) {
-                    Some(t) => {
-                        let xt = matmul_a_bt(x, t); // X Tᵀ
-                        let (xq, _) = quantize_activations_per_token(&xt, qc.act.scheme, qc.act.clip_ratio);
+    /// One group of (possibly transformed + quantized) linears. Layers in
+    /// a group share their input, so the transform matmul and the
+    /// per-token quantization happen once per group — not once per linear
+    /// (q/k/v share one transformed+quantized activation). The quantized
+    /// path produces integer codes for the packed i32-accumulate kernel;
+    /// `dense` routes through the historical fake-quant f64 reference
+    /// over pre-dequantized mats instead (parity tests, bench A/B).
+    fn linear_group(
+        &self,
+        x: &Mat,
+        pfx: &str,
+        lins: &[&str],
+        tshort: &str,
+        qc: Option<&QuantConfig>,
+        dense: Option<&HashMap<String, Mat>>,
+    ) -> Vec<Mat> {
+        let Some(qc) = qc else {
+            return lins
+                .iter()
+                .map(|lin| matmul_a_bt(x, self.p(&format!("{pfx}{lin}"))))
+                .collect();
+        };
+        let tname = format!("{pfx}{tshort}");
+        let xt_store;
+        let xin: &Mat = match qc.transforms.get(&tname) {
+            Some(t) => {
+                xt_store = matmul_a_bt(x, t); // X Tᵀ
+                &xt_store
+            }
+            None => x,
+        };
+        match dense {
+            Some(weights) => {
+                let (xq, _) =
+                    quantize_activations_per_token(xin, qc.act.scheme, qc.act.clip_ratio);
+                lins.iter()
+                    .map(|lin| {
+                        let name = format!("{pfx}{lin}");
+                        let w = weights
+                            .get(&name)
+                            .unwrap_or_else(|| panic!("missing dense weight {name}"));
                         matmul_a_bt(&xq, w)
-                    }
-                    None => {
-                        let (xq, _) = quantize_activations_per_token(x, qc.act.scheme, qc.act.clip_ratio);
-                        matmul_a_bt(&xq, w)
-                    }
-                }
+                    })
+                    .collect()
+            }
+            None => {
+                let xq = QuantizedTensor::quantize_acts(xin, qc.act.scheme, qc.act.clip_ratio);
+                lins.iter()
+                    .map(|lin| {
+                        let name = format!("{pfx}{lin}");
+                        let ql = qc
+                            .linears
+                            .get(&name)
+                            .unwrap_or_else(|| panic!("missing packed weight {name}"));
+                        qmatmul_a_bt(&xq.view(), &ql.weight.view())
+                    })
+                    .collect()
             }
         }
     }
@@ -367,6 +428,21 @@ mod tests {
             let err = fp.sub(&q).fro_norm2();
             assert!(err < prev, "bits {bits}: {err} !< {prev}");
             prev = err;
+        }
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_reference() {
+        // The core invariant: the integer path reproduces the fake-quant
+        // f64 path to fp rounding (the affine identity is exact).
+        let m = NativeModel::init_random(tiny_cfg(), 6);
+        let toks = [1u8, 2, 3, 4, 5, 6, 7];
+        for bits in [2u32, 4, 8] {
+            let qc = QuantConfig::identity_for_test(&m, bits);
+            let dense = m.forward_quant_dense(&toks, &qc, &qc.deq_weights());
+            let packed = m.forward_quant(&toks, &qc);
+            let rel = dense.max_abs_diff(&packed) / dense.max_abs().max(1e-30);
+            assert!(rel < 1e-9, "bits {bits}: rel {rel}");
         }
     }
 

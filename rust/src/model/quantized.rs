@@ -1,12 +1,14 @@
-//! Quantized-model configuration: transforms + fused fake-quant weights.
+//! Quantized-model configuration: transforms + packed integer weights.
 //!
 //! A [`QuantConfig`] is the output of the PTQ pipeline
-//! ([`crate::pipeline`]) and the input to both engines (native forward and
-//! the PJRT graphs — the same matrices are fed as runtime arguments).
+//! ([`crate::pipeline`]) and the input to both engines. The native
+//! forward executes the packed codes directly through the integer kernel;
+//! the PJRT graphs still consume dense f32 runtime arguments, so the
+//! `ArgPack` dequantizes once per pack build.
 
 use super::{ModelConfig, NativeModel};
 use crate::linalg::Mat;
-use crate::quant::{quantize_weights_rtn, ActQuantCfg, QScheme, WeightQuantCfg};
+use crate::quant::{quantize_weights_rtn, ActQuantCfg, QScheme, QuantizedTensor, WeightQuantCfg};
 use std::collections::HashMap;
 
 /// The four transform groups per block (layers sharing an input share a
@@ -77,14 +79,39 @@ pub fn group_of_linear(name: &str) -> LayerGroup {
     }
 }
 
+/// One linear layer's integer-executable weights: the packed codes of the
+/// fused `W·T⁻¹` plus per-output-channel grids.
+#[derive(Clone)]
+pub struct QuantizedLinear {
+    /// Packed integer codes (`out × in`).
+    pub weight: QuantizedTensor,
+}
+
+impl QuantizedLinear {
+    pub fn new(weight: QuantizedTensor) -> QuantizedLinear {
+        QuantizedLinear { weight }
+    }
+
+    /// Dequantize back to f64 (PJRT `ArgPack`, analysis, the fake-quant
+    /// parity reference).
+    pub fn deq(&self) -> Mat {
+        self.weight.deq()
+    }
+
+    /// Bytes of packed storage (codes + per-row metadata).
+    pub fn packed_bytes(&self) -> usize {
+        self.weight.packed_bytes()
+    }
+}
+
 /// Everything a quantized forward needs beyond the FP weights.
 pub struct QuantConfig {
     pub act: ActQuantCfg,
     pub weight_bits: u32,
     /// Transform name (`blocks.i.t_*`) → `T` (applied as `x·Tᵀ`).
     pub transforms: HashMap<String, Mat>,
-    /// Full weight name (`blocks.i.*_proj`) → fused fake-quant `W·T⁻¹`.
-    pub fused_weights: HashMap<String, Mat>,
+    /// Full weight name (`blocks.i.*_proj`) → packed fused `W·T⁻¹` codes.
+    pub linears: HashMap<String, QuantizedLinear>,
 }
 
 /// Bundle of `QuantConfig` + run metadata (which transform/quantizer built
@@ -103,22 +130,35 @@ impl QuantConfig {
         for (name, shape) in cfg.transform_spec() {
             transforms.insert(name, Mat::eye(shape[0]));
         }
-        let mut fused = HashMap::new();
+        let mut linears = HashMap::new();
         let wq = WeightQuantCfg::minmax(bits);
         for i in 0..cfg.n_layers {
-            for lin in ["q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj"]
-            {
-                let name = format!("blocks.{i}.{lin}");
-                let w = &model.params[&name];
-                fused.insert(name, quantize_weights_rtn(w, wq).deq);
+            for g in ALL_GROUPS {
+                for lin in g.linears() {
+                    let name = format!("blocks.{i}.{lin}");
+                    let w = &model.params[&name];
+                    linears
+                        .insert(name, QuantizedLinear::new(quantize_weights_rtn(w, wq).codes));
+                }
             }
         }
         QuantConfig {
             act: ActQuantCfg { scheme: QScheme::asym(bits), clip_ratio: 1.0 },
             weight_bits: bits,
             transforms,
-            fused_weights: fused,
+            linears,
         }
+    }
+
+    /// Dense f64 view of every packed weight — the fake-quant reference
+    /// for parity tests and the dense side of A/B benches.
+    pub fn deq_weights(&self) -> HashMap<String, Mat> {
+        self.linears.iter().map(|(k, l)| (k.clone(), l.deq())).collect()
+    }
+
+    /// Total packed bytes across all linears (vs `8·out·in` per f64 mat).
+    pub fn packed_bytes(&self) -> usize {
+        self.linears.values().map(|l| l.packed_bytes()).sum()
     }
 }
 
@@ -154,5 +194,22 @@ mod tests {
         let cfg = ModelConfig::zoo("small").unwrap();
         assert_eq!(LayerGroup::AttnIn.dim(&cfg), cfg.d);
         assert_eq!(LayerGroup::DownIn.dim(&cfg), cfg.ff);
+    }
+
+    #[test]
+    fn identity_config_packs_every_linear() {
+        let cfg = ModelConfig::zoo("tiny").unwrap();
+        let model = NativeModel::init_random(cfg.clone(), 9);
+        let qc = QuantConfig::identity_for_test(&model, 4);
+        // The linear list is derived from ALL_GROUPS — 7 per block.
+        assert_eq!(qc.linears.len(), cfg.n_layers * 7);
+        let f64_bytes: usize = qc
+            .linears
+            .keys()
+            .map(|n| model.params[n].rows() * model.params[n].cols() * 8)
+            .sum();
+        // Nibble-packed W4 sits far below the f64 footprint (~16×; the
+        // per-row metadata keeps it shy of exact).
+        assert!(qc.packed_bytes() * 8 < f64_bytes, "{} vs {f64_bytes}", qc.packed_bytes());
     }
 }

@@ -8,7 +8,7 @@
 use crate::calib::CalibStats;
 use crate::linalg::{matmul_at_b, par, Mat};
 use crate::model::LayerGroup;
-use crate::model::{NativeModel, QuantConfig, ALL_GROUPS};
+use crate::model::{NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
 use crate::quant::{
     gptq_quantize, quantize_weights_rtn, ActQuantCfg, GptqConfig, QScheme, RangeEstimator,
     WeightQuantCfg,
@@ -131,7 +131,7 @@ pub fn build_quant_config(
     };
 
     let mut transforms = HashMap::new();
-    let mut fused_weights = HashMap::new();
+    let mut linears = HashMap::new();
     let mut report = PipelineReport::default();
     let mut sqnr_acc = Vec::new();
 
@@ -141,7 +141,7 @@ pub fn build_quant_config(
         t_name: String,
         timing: (String, f64),
         t_mat: Mat,
-        weights: Vec<(String, Mat)>,
+        weights: Vec<(String, QuantizedLinear)>,
         sqnrs: Vec<f64>,
     }
 
@@ -182,14 +182,14 @@ pub fn build_quant_config(
             let name = format!("blocks.{block}.{lin}");
             let w = &model.params[&name];
             let w_fused = t.fuse_weights(w);
-            let deq = match cfg.weight_quantizer {
-                WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, wq).deq,
+            let codes = match cfg.weight_quantizer {
+                WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, wq).codes,
                 WeightQuantizer::Gptq => {
-                    gptq_quantize(&w_fused, &sigma_xt, wq, GptqConfig::default()).deq
+                    gptq_quantize(&w_fused, &sigma_xt, wq, GptqConfig::default()).codes
                 }
             };
             sqnrs.push(10.0 * approx_sqnr_joint(&xt_sample, &w_fused, act, wq).log10());
-            weights.push((name, deq));
+            weights.push((name, QuantizedLinear::new(codes)));
         }
         GroupBuild { t_name, timing, t_mat: t.matrix().clone(), weights, sqnrs }
     });
@@ -197,8 +197,8 @@ pub fn build_quant_config(
     for gb in built {
         report.transform_ms.push(gb.timing);
         sqnr_acc.extend(gb.sqnrs);
-        for (name, deq) in gb.weights {
-            fused_weights.insert(name, deq);
+        for (name, ql) in gb.weights {
+            linears.insert(name, ql);
         }
         transforms.insert(gb.t_name, gb.t_mat);
     }
@@ -207,29 +207,35 @@ pub fn build_quant_config(
     // "Trained" variants: learnable clipping — grid-search the activation
     // clip ratio maximizing the mean post-transform SQNR proxy (the
     // paper attributes most of the trained gain to learnable clipping).
+    // The transformed sample and the dequantized fused weight are
+    // computed once per (block, group, linear) — not once per clip
+    // candidate — and each candidate's score accumulates in the same
+    // order as the historical clip-outermost loop.
     let mut act_final = act;
     if cfg.kind == TransformKind::CatBlockTrained {
-        let mut best = (f64::NEG_INFINITY, 1.0);
-        for &clip in &[1.0, 0.95, 0.9, 0.85, 0.8] {
-            let cand = ActQuantCfg { scheme: act.scheme, clip_ratio: clip };
-            let mut acc = 0.0;
-            let mut n = 0;
-            for block in 0..mcfg.n_layers {
-                for g in ALL_GROUPS {
-                    let t_name = g.t_name(block);
-                    let stats = calib.sigma(&t_name);
-                    let x = stats.sample();
-                    let t_mat = &transforms[&t_name];
-                    let xt = crate::linalg::matmul_a_bt(&x, t_mat);
-                    for lin in g.linears() {
-                        let name = format!("blocks.{block}.{lin}");
-                        let wf = &fused_weights[&name];
-                        acc += approx_sqnr_joint(&xt, wf, cand, wq).ln();
-                        n += 1;
+        const CLIPS: [f64; 5] = [1.0, 0.95, 0.9, 0.85, 0.8];
+        let mut acc = [0.0f64; CLIPS.len()];
+        let mut n = 0usize;
+        for block in 0..mcfg.n_layers {
+            for g in ALL_GROUPS {
+                let t_name = g.t_name(block);
+                let stats = calib.sigma(&t_name);
+                let x = stats.sample();
+                let xt = crate::linalg::matmul_a_bt(&x, &transforms[&t_name]);
+                for lin in g.linears() {
+                    let name = format!("blocks.{block}.{lin}");
+                    let wf = linears[&name].deq();
+                    for (ci, &clip) in CLIPS.iter().enumerate() {
+                        let cand = ActQuantCfg { scheme: act.scheme, clip_ratio: clip };
+                        acc[ci] += approx_sqnr_joint(&xt, &wf, cand, wq).ln();
                     }
+                    n += 1;
                 }
             }
-            let score = acc / n as f64;
+        }
+        let mut best = (f64::NEG_INFINITY, 1.0);
+        for (ci, &clip) in CLIPS.iter().enumerate() {
+            let score = acc[ci] / n as f64;
             if score > best.0 {
                 best = (score, clip);
             }
@@ -245,7 +251,7 @@ pub fn build_quant_config(
             act: act_final,
             weight_bits: cfg.bits_w,
             transforms,
-            fused_weights,
+            linears,
         },
         report,
     )
@@ -339,11 +345,11 @@ mod tests {
             &calib,
             PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Gptq, 0),
         );
-        assert_eq!(qc.fused_weights.len(), 2 * 7);
+        assert_eq!(qc.linears.len(), 2 * 7);
         assert!(qc
-            .fused_weights
+            .linears
             .values()
-            .all(|m| m.as_slice().iter().all(|v| v.is_finite())));
+            .all(|l| l.deq().as_slice().iter().all(|v| v.is_finite())));
     }
 
     #[test]

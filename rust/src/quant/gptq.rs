@@ -12,7 +12,8 @@
 //! baselines but not clip-trained methods* is reproduced in
 //! `experiments::table1`.
 
-use super::{AffineParams, QuantizedWeights, WeightQuantCfg};
+use super::rtn::row_grids;
+use super::{AffineParams, QuantizedTensor, QuantizedWeights, WeightQuantCfg};
 use crate::linalg::{par, Cholesky, Mat};
 
 /// GPTQ hyperparameters (defaults follow the reference implementation).
@@ -54,12 +55,7 @@ pub fn gptq_quantize(
 
     // Per-row grids fixed up front from the (clipped) range estimator —
     // same range setting as RTN so the two settings are comparable.
-    let params: Vec<AffineParams> = (0..rows)
-        .map(|i| {
-            let absmax = cfg.range.resolve_sym(w.row(i), cfg.scheme);
-            AffineParams::symmetric(absmax, cfg.scheme)
-        })
-        .collect();
+    let params = row_grids(w, cfg);
 
     // Every output row carries its own grid and its own error flow (the
     // Hessian couples *columns*, not rows), so rows quantize
@@ -68,28 +64,26 @@ pub fn gptq_quantize(
     let bs = gptq.block_size.max(1);
     let work_fma = rows.saturating_mul(cols).saturating_mul(cols) / 2;
     let threads = par::threads_for(work_fma, rows);
-    let deq_rows: Vec<Vec<f64>> = par::par_map((0..rows).collect(), threads, |i| {
+    let code_rows: Vec<Vec<i32>> = par::par_map((0..rows).collect(), threads, |i| {
         gptq_quantize_row(w.row(i), &params[i], &hinv_u, bs)
     });
-    let mut deq = Mat::zeros(rows, cols);
-    for (i, r) in deq_rows.iter().enumerate() {
-        deq.row_mut(i).copy_from_slice(r);
-    }
 
-    let scales = params.iter().map(|p| p.scale).collect();
     let ranges = params.iter().map(|p| p.range()).collect();
-    QuantizedWeights { deq, scales, ranges }
+    let codes = QuantizedTensor::from_code_rows(cols, cfg.scheme, &params, &code_rows);
+    QuantizedWeights { codes, ranges }
 }
 
 /// GPTQ over one weight row: quantize column by column in natural order,
 /// propagating error within the active block immediately and onto the
 /// remaining columns lazily per block (cache efficiency). Identical
 /// arithmetic order to the historical whole-matrix loop, so results are
-/// independent of the fan-out.
-fn gptq_quantize_row(row: &[f64], p: &AffineParams, hinv_u: &Mat, bs: usize) -> Vec<f64> {
+/// independent of the fan-out. Returns the raw grid codes; the
+/// dequantized value `(c − zp)·scale` is used internally for the error
+/// flow, so packing loses nothing.
+fn gptq_quantize_row(row: &[f64], p: &AffineParams, hinv_u: &Mat, bs: usize) -> Vec<i32> {
     let cols = row.len();
     let mut work = row.to_vec(); // columns get error-compensated in place
-    let mut deq = vec![0.0; cols];
+    let mut codes = vec![0i32; cols];
     let mut block_err = vec![0.0; bs];
     let mut b0 = 0;
     while b0 < cols {
@@ -99,8 +93,9 @@ fn gptq_quantize_row(row: &[f64], p: &AffineParams, hinv_u: &Mat, bs: usize) -> 
         for j in b0..b1 {
             let d = hinv_u[(j, j)];
             let v = work[j];
-            let q = p.fake_quant(v);
-            deq[j] = q;
+            let c = p.quantize(v);
+            let q = (c - p.zero_point) * p.scale; // == p.fake_quant(v)
+            codes[j] = c as i32;
             let e = (v - q) / d;
             block_err[j - b0] = e;
             for k in (j + 1)..b1 {
@@ -122,7 +117,7 @@ fn gptq_quantize_row(row: &[f64], p: &AffineParams, hinv_u: &Mat, bs: usize) -> 
         }
         b0 = b1;
     }
-    deq
+    codes
 }
 
 #[cfg(test)]
@@ -162,8 +157,8 @@ mod tests {
         let rtn = quantize_weights_rtn(&w, cfg);
         let gptq = gptq_quantize(&w, &sigma, cfg, GptqConfig::default());
 
-        let e_rtn = output_mse(&x, &w, &rtn.deq);
-        let e_gptq = output_mse(&x, &w, &gptq.deq);
+        let e_rtn = output_mse(&x, &w, &rtn.deq());
+        let e_gptq = output_mse(&x, &w, &gptq.deq());
         assert!(
             e_gptq < e_rtn * 0.9,
             "GPTQ ({e_gptq:.4}) should beat RTN ({e_rtn:.4}) by >10%"
@@ -179,9 +174,10 @@ mod tests {
         let sigma = matmul_at_b(&x, &x).scale(1.0 / 128.0);
         let cfg = WeightQuantCfg::minmax(4);
         let q = gptq_quantize(&w, &sigma, cfg, GptqConfig::default());
+        let deq = q.deq();
         for i in 0..8 {
-            let s = q.scales[i];
-            for &v in q.deq.row(i) {
+            let s = q.scales()[i];
+            for &v in deq.row(i) {
                 let code = v / s;
                 assert!((code - code.round()).abs() < 1e-9, "off-grid value {v}");
                 assert!(code.abs() <= 7.0 + 1e-9);
@@ -198,7 +194,7 @@ mod tests {
         let cfg = WeightQuantCfg::minmax(4);
         let q_gptq = gptq_quantize(&w, &sigma, cfg, GptqConfig::default());
         let q_rtn = quantize_weights_rtn(&w, cfg);
-        assert!(q_gptq.deq.max_abs_diff(&q_rtn.deq) < 1e-9);
+        assert!(q_gptq.deq().max_abs_diff(&q_rtn.deq()) < 1e-9);
     }
 
     #[test]
@@ -211,7 +207,7 @@ mod tests {
         let cfg = WeightQuantCfg::minmax(4);
         let q1 = gptq_quantize(&w, &sigma, cfg, GptqConfig { damp: 0.01, block_size: 8 });
         let q2 = gptq_quantize(&w, &sigma, cfg, GptqConfig { damp: 0.01, block_size: 48 });
-        assert!(q1.deq.max_abs_diff(&q2.deq) < 1e-9);
+        assert!(q1.deq().max_abs_diff(&q2.deq()) < 1e-9);
     }
 
     #[test]
@@ -225,8 +221,8 @@ mod tests {
         let sigma = matmul_at_b(&x, &x).scale(1.0 / 16.0);
         let cfg = WeightQuantCfg::minmax(3);
         let q = gptq_quantize(&w, &sigma, cfg, GptqConfig::default());
-        assert!(q.deq.as_slice().iter().all(|v| v.is_finite()));
+        assert!(q.deq().as_slice().iter().all(|v| v.is_finite()));
         let rtn = quantize_weights_rtn(&w, cfg);
-        assert!(output_mse(&x, &w, &q.deq) <= output_mse(&x, &w, &rtn.deq) * 1.001);
+        assert!(output_mse(&x, &w, &q.deq()) <= output_mse(&x, &w, &rtn.deq()) * 1.001);
     }
 }

@@ -6,18 +6,24 @@
 //! optional learnable clip search. Both round-to-nearest (RTN) and GPTQ
 //! weight quantizers are provided.
 //!
-//! All quantizers are *fake-quant*: they return dequantized `f64` values on
-//! the original scale, which is what the SQNR analysis ([`crate::sqnr`])
-//! and the serving path (weights are runtime args to the compiled graph)
-//! consume. Integer codes are available for storage-size accounting.
+//! Weight quantizers return *packed integer codes*
+//! ([`QuantizedTensor`], nibble-packed for bits ≤ 4): the serving path
+//! executes them directly through the integer kernel
+//! ([`crate::linalg::qmatmul_a_bt`]), while [`QuantizedWeights::deq`]
+//! reconstructs the historical fake-quant `f64` matrices bit-exactly for
+//! the SQNR analysis ([`crate::sqnr`]) and the PJRT `ArgPack`. The
+//! fake-quant activation helpers remain for analysis and as the parity
+//! reference the packed path must match to fp rounding.
 
 mod gptq;
+mod packed;
 mod range;
 mod rtn;
 mod scheme;
 mod uniform;
 
 pub use gptq::{gptq_quantize, GptqConfig};
+pub use packed::QuantizedTensor;
 pub use range::{lp_optimal_clip_sym, RangeEstimator};
 pub use rtn::{quantize_weights_rtn, QuantizedWeights};
 pub use scheme::{ActQuantCfg, QScheme, WeightQuantCfg};

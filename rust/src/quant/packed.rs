@@ -1,0 +1,318 @@
+//! Packed integer tensor storage — true low-bit representation.
+//!
+//! A [`QuantizedTensor`] holds the *integer codes* of a row-quantized
+//! matrix instead of dequantized f64 values: nibble-packed `u8` for bit
+//! widths ≤ 4, one `i8` per code up to 8 bits, and raw `i32` codes above
+//! that (analysis-only bit widths). Each row carries its affine grid
+//! (scale, zero point) plus the precomputed code sum the integer kernel's
+//! affine correction needs.
+//!
+//! A W4 weight therefore occupies ~1/16 of its f64 footprint, and the
+//! serving path multiplies codes directly via
+//! [`qmatmul_a_bt`](crate::linalg::qmatmul_a_bt) — no dequantized weight
+//! matrices are materialized outside [`Self::deq`] (parity tests, the
+//! PJRT `ArgPack`, SQNR analysis).
+//!
+//! Codes may be stored *biased* so they fit the physical container (e.g.
+//! symmetric 4-bit codes −7..=7 are shifted to 0..=14 for nibble packing);
+//! the per-row zero point is biased identically, so
+//! `value = (stored − zp)·scale` holds verbatim and [`Self::deq`] is
+//! bit-identical to the historical fake-quant output.
+
+use super::uniform::per_token_params;
+use super::{AffineParams, QScheme};
+use crate::linalg::{Mat, QCodes, QMatView};
+
+/// Packed integer codes + per-row affine grids for one matrix.
+#[derive(Clone)]
+pub struct QuantizedTensor {
+    rows: usize,
+    cols: usize,
+    scheme: QScheme,
+    store: Store,
+    /// Per-row scale.
+    scales: Vec<f64>,
+    /// Per-row zero point in stored-code space (integral).
+    zps: Vec<i32>,
+    /// Per-row sum of stored codes.
+    row_sums: Vec<i64>,
+}
+
+#[derive(Clone)]
+enum Store {
+    /// Two codes per byte, low nibble = even column; row stride
+    /// `cols.div_ceil(2)`.
+    Nibble(Vec<u8>),
+    /// One centered code per byte.
+    Byte(Vec<i8>),
+    /// Raw codes (bit widths above 8).
+    Wide(Vec<i32>),
+}
+
+impl Store {
+    fn new(scheme: QScheme, rows: usize, cols: usize) -> Store {
+        if scheme.bits <= 4 {
+            Store::Nibble(vec![0u8; rows * cols.div_ceil(2)])
+        } else if scheme.bits <= 8 {
+            Store::Byte(vec![0i8; rows * cols])
+        } else {
+            Store::Wide(vec![0i32; rows * cols])
+        }
+    }
+
+    fn pack_row(&mut self, i: usize, codes: &[i32]) {
+        let cols = codes.len();
+        match self {
+            Store::Nibble(data) => {
+                let stride = cols.div_ceil(2);
+                let row = &mut data[i * stride..(i + 1) * stride];
+                for (j, &c) in codes.iter().enumerate() {
+                    debug_assert!((0..16).contains(&c), "nibble code {c} out of range");
+                    let nib = (c as u8) & 0x0F;
+                    if j % 2 == 0 {
+                        row[j / 2] = nib;
+                    } else {
+                        row[j / 2] |= nib << 4;
+                    }
+                }
+            }
+            Store::Byte(data) => {
+                let row = &mut data[i * cols..(i + 1) * cols];
+                for (o, &c) in row.iter_mut().zip(codes) {
+                    debug_assert!((-128..128).contains(&c), "byte code {c} out of range");
+                    *o = c as i8;
+                }
+            }
+            Store::Wide(data) => {
+                data[i * cols..(i + 1) * cols].copy_from_slice(codes);
+            }
+        }
+    }
+
+    fn code_bytes(&self) -> usize {
+        match self {
+            Store::Nibble(d) => d.len(),
+            Store::Byte(d) => d.len(),
+            Store::Wide(d) => d.len() * std::mem::size_of::<i32>(),
+        }
+    }
+}
+
+/// Offset subtracted from raw grid codes before storage, chosen so the
+/// stored codes fit the physical container. The zero point is biased by
+/// the same amount, keeping `value = (stored − zp)·scale` exact.
+fn storage_bias(scheme: QScheme) -> i32 {
+    if scheme.bits <= 4 {
+        // Nibble storage is unsigned: bias by qmin so codes land in 0..=15.
+        if scheme.symmetric {
+            -(scheme.sym_qmax() as i32)
+        } else {
+            0
+        }
+    } else if scheme.bits <= 8 {
+        // i8 storage: symmetric codes (|q| ≤ 127) already fit; asymmetric
+        // codes (0..=2^b−1) are centered by 2^{b−1}.
+        if scheme.symmetric {
+            0
+        } else {
+            1 << (scheme.bits - 1)
+        }
+    } else {
+        0
+    }
+}
+
+impl QuantizedTensor {
+    /// Quantize each row of `m` on its grid `params[i]` and pack the codes.
+    pub fn quantize_rows(m: &Mat, scheme: QScheme, params: &[AffineParams]) -> QuantizedTensor {
+        assert_eq!(params.len(), m.rows(), "one grid per row");
+        Self::build(m.rows(), m.cols(), scheme, params, |i, buf| {
+            let p = &params[i];
+            for (o, &v) in buf.iter_mut().zip(m.row(i)) {
+                *o = p.quantize(v) as i32;
+            }
+        })
+    }
+
+    /// Pack pre-computed raw grid codes (one `Vec` per row, as produced
+    /// by GPTQ's column sweep).
+    pub fn from_code_rows(
+        cols: usize,
+        scheme: QScheme,
+        params: &[AffineParams],
+        code_rows: &[Vec<i32>],
+    ) -> QuantizedTensor {
+        assert_eq!(params.len(), code_rows.len(), "one grid per row");
+        Self::build(code_rows.len(), cols, scheme, params, |i, buf| {
+            buf.copy_from_slice(&code_rows[i])
+        })
+    }
+
+    /// Dynamic per-token quantization straight to packed codes, using the
+    /// exact same grids as
+    /// [`quantize_activations_per_token`](super::quantize_activations_per_token)
+    /// so the packed and fake-quant paths share every rounding decision.
+    pub fn quantize_acts(x: &Mat, scheme: QScheme, clip_ratio: f64) -> QuantizedTensor {
+        let params: Vec<AffineParams> = (0..x.rows())
+            .map(|t| per_token_params(x.row(t), scheme, clip_ratio))
+            .collect();
+        Self::quantize_rows(x, scheme, &params)
+    }
+
+    fn build(
+        rows: usize,
+        cols: usize,
+        scheme: QScheme,
+        params: &[AffineParams],
+        fill: impl Fn(usize, &mut [i32]),
+    ) -> QuantizedTensor {
+        debug_assert!(scheme.bits <= 24, "codes must fit i32 with margin");
+        let bias = storage_bias(scheme);
+        let mut store = Store::new(scheme, rows, cols);
+        let mut scales = Vec::with_capacity(rows);
+        let mut zps = Vec::with_capacity(rows);
+        let mut row_sums = Vec::with_capacity(rows);
+        let mut raw = vec![0i32; cols];
+        for i in 0..rows {
+            fill(i, &mut raw);
+            let mut sum = 0i64;
+            for v in raw.iter_mut() {
+                *v -= bias;
+                sum += *v as i64;
+            }
+            store.pack_row(i, &raw);
+            let p = &params[i];
+            scales.push(p.scale);
+            zps.push(p.zero_point as i32 - bias);
+            row_sums.push(sum);
+        }
+        QuantizedTensor { rows, cols, scheme, store, scales, zps, row_sums }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn scheme(&self) -> QScheme {
+        self.scheme
+    }
+
+    /// Per-row scales.
+    pub fn scales(&self) -> &[f64] {
+        &self.scales
+    }
+
+    /// Borrowed kernel view ([`crate::linalg::qmatmul_a_bt`] input).
+    pub fn view(&self) -> QMatView<'_> {
+        QMatView {
+            rows: self.rows,
+            cols: self.cols,
+            codes: match &self.store {
+                Store::Nibble(d) => QCodes::Nibble(d),
+                Store::Byte(d) => QCodes::Byte(d),
+                Store::Wide(d) => QCodes::Wide(d),
+            },
+            scales: &self.scales,
+            zps: &self.zps,
+            row_sums: &self.row_sums,
+        }
+    }
+
+    /// Reconstruct the dequantized f64 matrix. Bit-identical to the
+    /// historical fake-quant output: both compute `(q − zp)·scale` with
+    /// one f64 rounding per element.
+    pub fn deq(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let view = self.view();
+        let mut raw = vec![0i32; self.cols];
+        for i in 0..self.rows {
+            view.unpack_row_i32(i, &mut raw);
+            let (s, z) = (self.scales[i], self.zps[i]);
+            let orow = out.row_mut(i);
+            for (o, &c) in orow.iter_mut().zip(&raw) {
+                *o = (c - z) as f64 * s;
+            }
+        }
+        out
+    }
+
+    /// Bytes held by the packed codes plus per-row metadata
+    /// (scale f64 + zero point i32 + code sum i64).
+    pub fn packed_bytes(&self) -> usize {
+        self.store.code_bytes() + self.rows * (8 + 4 + 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::quantize_activations_per_token;
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn deq_matches_fake_quant_exactly_across_stores() {
+        // bits 4 → Nibble, 8 → Byte, 12 → Wide; sym and asym; odd cols.
+        for bits in [2u32, 4, 8, 12] {
+            for sym in [true, false] {
+                let scheme =
+                    if sym { QScheme::sym(bits) } else { QScheme::asym(bits) };
+                let x = random(7, 33, 100 + bits as u64 + sym as u64);
+                let (fq, _) = quantize_activations_per_token(&x, scheme, 1.0);
+                let packed = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                assert_eq!(
+                    packed.deq().max_abs_diff(&fq),
+                    0.0,
+                    "bits {bits} sym {sym}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_storage_is_half_a_byte_per_code() {
+        let x = random(16, 64, 3);
+        let p4 = QuantizedTensor::quantize_acts(&x, QScheme::asym(4), 1.0);
+        let p8 = QuantizedTensor::quantize_acts(&x, QScheme::asym(8), 1.0);
+        let meta = 16 * (8 + 4 + 8);
+        assert_eq!(p4.packed_bytes(), 16 * 32 + meta);
+        assert_eq!(p8.packed_bytes(), 16 * 64 + meta);
+    }
+
+    #[test]
+    fn odd_column_rows_pack_and_unpack() {
+        let x = random(3, 5, 4);
+        let p = QuantizedTensor::quantize_acts(&x, QScheme::asym(4), 1.0);
+        let (fq, _) = quantize_activations_per_token(&x, QScheme::asym(4), 1.0);
+        assert_eq!(p.deq().max_abs_diff(&fq), 0.0);
+        let mut raw = vec![0i32; 5];
+        let v = p.view();
+        for i in 0..3 {
+            v.unpack_row_i32(i, &mut raw);
+            for &c in &raw {
+                assert!((0..16).contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn row_sums_match_unpacked_codes() {
+        let x = random(9, 17, 5);
+        let p = QuantizedTensor::quantize_acts(&x, QScheme::sym(4), 1.0);
+        let v = p.view();
+        let mut raw = vec![0i32; 17];
+        for i in 0..9 {
+            v.unpack_row_i32(i, &mut raw);
+            let sum: i64 = raw.iter().map(|&c| c as i64).sum();
+            assert_eq!(sum, v.row_sums[i], "row {i}");
+        }
+    }
+}

@@ -1,35 +1,48 @@
 //! Round-to-nearest weight quantization (per output channel, symmetric).
 
-use super::{AffineParams, WeightQuantCfg};
+use super::{AffineParams, QuantizedTensor, WeightQuantCfg};
 use crate::linalg::Mat;
 
-/// A fake-quantized weight matrix plus its per-row grids.
+/// A weight matrix quantized to packed integer codes plus its per-row
+/// grids — the native output of RTN and GPTQ.
 pub struct QuantizedWeights {
-    /// Dequantized weights, same shape as the input (`out × in`).
-    pub deq: Mat,
-    /// Per-output-channel scale.
-    pub scales: Vec<f64>,
+    /// Packed codes + per-output-channel scale/zero-point (`out × in`).
+    pub codes: QuantizedTensor,
     /// Per-output-channel quantization range `r(w_i)` (for `C(W)`).
     pub ranges: Vec<f64>,
 }
 
-/// RTN: independently round each output channel to its symmetric grid.
-pub fn quantize_weights_rtn(w: &Mat, cfg: WeightQuantCfg) -> QuantizedWeights {
-    let mut deq = Mat::zeros(w.rows(), w.cols());
-    let mut scales = Vec::with_capacity(w.rows());
-    let mut ranges = Vec::with_capacity(w.rows());
-    for i in 0..w.rows() {
-        let row = w.row(i);
-        let absmax = cfg.range.resolve_sym(row, cfg.scheme);
-        let p = AffineParams::symmetric(absmax, cfg.scheme);
-        scales.push(p.scale);
-        ranges.push(p.range());
-        let orow = deq.row_mut(i);
-        for (o, &v) in orow.iter_mut().zip(row) {
-            *o = p.fake_quant(v);
-        }
+impl QuantizedWeights {
+    /// Reconstruct the dequantized f64 matrix — bit-identical to the
+    /// historical fake-quant output (parity reference, SQNR analysis,
+    /// the PJRT `ArgPack`).
+    pub fn deq(&self) -> Mat {
+        self.codes.deq()
     }
-    QuantizedWeights { deq, scales, ranges }
+
+    /// Per-output-channel scales.
+    pub fn scales(&self) -> &[f64] {
+        self.codes.scales()
+    }
+}
+
+/// The per-output-channel symmetric grids for `w` under `cfg`.
+pub(crate) fn row_grids(w: &Mat, cfg: WeightQuantCfg) -> Vec<AffineParams> {
+    (0..w.rows())
+        .map(|i| {
+            let absmax = cfg.range.resolve_sym(w.row(i), cfg.scheme);
+            AffineParams::symmetric(absmax, cfg.scheme)
+        })
+        .collect()
+}
+
+/// RTN: independently round each output channel to its symmetric grid,
+/// returning packed integer codes.
+pub fn quantize_weights_rtn(w: &Mat, cfg: WeightQuantCfg) -> QuantizedWeights {
+    let params = row_grids(w, cfg);
+    let ranges = params.iter().map(|p| p.range()).collect();
+    let codes = QuantizedTensor::quantize_rows(w, cfg.scheme, &params);
+    QuantizedWeights { codes, ranges }
 }
 
 #[cfg(test)]
@@ -51,22 +64,23 @@ mod tests {
             *v *= 100.0;
         }
         let q = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
-        assert!(q.scales[2] > 50.0 * q.scales[0]);
+        assert!(q.scales()[2] > 50.0 * q.scales()[0]);
         // Row 0 error stays at its own scale.
+        let deq = q.deq();
         let err0: f64 = w
             .row(0)
             .iter()
-            .zip(q.deq.row(0))
+            .zip(deq.row(0))
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f64::max);
-        assert!(err0 <= q.scales[0] / 2.0 + 1e-12);
+        assert!(err0 <= q.scales()[0] / 2.0 + 1e-12);
     }
 
     #[test]
     fn error_bounded_at_8_bits() {
         let w = random_w(16, 128, 2);
         let q = quantize_weights_rtn(&w, WeightQuantCfg::minmax(8));
-        let rel = w.sub(&q.deq).fro_norm2() / w.fro_norm2();
+        let rel = w.sub(&q.deq()).fro_norm2() / w.fro_norm2();
         assert!(rel < 1e-4, "rel err {rel}");
     }
 
@@ -81,8 +95,8 @@ mod tests {
         }
         let q_mm = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
         let q_lp = quantize_weights_rtn(&w, WeightQuantCfg::rtn_default(4));
-        let e_mm = w.sub(&q_mm.deq).fro_norm2();
-        let e_lp = w.sub(&q_lp.deq).fro_norm2();
+        let e_mm = w.sub(&q_mm.deq()).fro_norm2();
+        let e_lp = w.sub(&q_lp.deq()).fro_norm2();
         // L2.4 optimizes a close proxy of L2; allow small slack.
         assert!(e_lp <= e_mm * 1.05, "lp {e_lp} vs mm {e_mm}");
     }

@@ -94,19 +94,7 @@ pub fn quantize_activations_per_token(
     let mut ranges = Vec::with_capacity(x.rows());
     for t in 0..x.rows() {
         let row = x.row(t);
-        let p = if scheme.symmetric {
-            let absmax = row.iter().fold(0.0_f64, |m, &v| m.max(v.abs())) * clip_ratio;
-            // Paper: r(x) = 2·max|x_i| for symmetric quantization.
-            AffineParams::symmetric(absmax, scheme)
-        } else {
-            let (mut lo, mut hi) = minmax(row);
-            if clip_ratio < 1.0 {
-                let mid = 0.5 * (lo + hi);
-                lo = mid + (lo - mid) * clip_ratio;
-                hi = mid + (hi - mid) * clip_ratio;
-            }
-            AffineParams::asymmetric(lo, hi, scheme)
-        };
+        let p = per_token_params(row, scheme, clip_ratio);
         ranges.push(p.range());
         let orow = out.row_mut(t);
         for (o, &v) in orow.iter_mut().zip(row) {
@@ -114,6 +102,26 @@ pub fn quantize_activations_per_token(
         }
     }
     (out, ranges)
+}
+
+/// The dynamic grid for one activation row. Shared by the fake-quant path
+/// above and the packed-code path ([`crate::quant::QuantizedTensor`]), so
+/// both make identical range and rounding decisions — the foundation of
+/// the integer/fake-quant parity invariant.
+pub(crate) fn per_token_params(row: &[f64], scheme: QScheme, clip_ratio: f64) -> AffineParams {
+    if scheme.symmetric {
+        let absmax = row.iter().fold(0.0_f64, |m, &v| m.max(v.abs())) * clip_ratio;
+        // Paper: r(x) = 2·max|x_i| for symmetric quantization.
+        AffineParams::symmetric(absmax, scheme)
+    } else {
+        let (mut lo, mut hi) = minmax(row);
+        if clip_ratio < 1.0 {
+            let mid = 0.5 * (lo + hi);
+            lo = mid + (lo - mid) * clip_ratio;
+            hi = mid + (hi - mid) * clip_ratio;
+        }
+        AffineParams::asymmetric(lo, hi, scheme)
+    }
 }
 
 /// *Static* asymmetric activation quantization: one calibrated `[lo, hi]`
@@ -146,15 +154,16 @@ pub fn quantize_activations_static(
 /// sample: `pct = 1.0` is min/max; `pct = 0.999` clips the extreme 0.1%
 /// tails (standard static-range calibration).
 pub fn percentile_range(x: &Mat, pct: f64) -> (f64, f64) {
-    let mut vals: Vec<f64> = x.as_slice().to_vec();
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = vals.len();
+    let n = x.as_slice().len();
     if n == 0 {
         return (0.0, 0.0);
     }
-    let tail = ((1.0 - pct) * n as f64).floor() as usize;
-    let lo = vals[tail.min(n - 1)];
-    let hi = vals[n - 1 - tail.min(n - 1)];
+    // Two order-statistic selections (O(n) expected) instead of sorting
+    // the whole calibration matrix (O(n log n)) on every call.
+    let tail = (((1.0 - pct) * n as f64).floor() as usize).min(n - 1);
+    let mut vals: Vec<f64> = x.as_slice().to_vec();
+    let lo = *vals.select_nth_unstable_by(tail, f64::total_cmp).1;
+    let hi = *vals.select_nth_unstable_by(n - 1 - tail, f64::total_cmp).1;
     (lo.min(0.0), hi.max(0.0))
 }
 

@@ -31,8 +31,11 @@ impl ArgPack {
         Ok(ArgPack { literals })
     }
 
-    /// Quantized pack: fused fake-quant weights where available (FP params
-    /// elsewhere) followed by the transforms in `transform_spec` order.
+    /// Quantized pack: packed weights dequantized once per pack build
+    /// where available (FP params elsewhere), followed by the transforms
+    /// in `transform_spec` order — the graphs consume dense f32 runtime
+    /// args, so this is the one seam that still materializes f64 mats
+    /// from the codes.
     pub fn quant(
         model: &ModelEntry,
         params: &HashMap<String, Mat>,
@@ -40,12 +43,16 @@ impl ArgPack {
     ) -> Result<ArgPack> {
         let mut literals = Vec::new();
         for (name, shape) in model.config.param_spec() {
-            let m = qc
-                .fused_weights
-                .get(&name)
-                .or_else(|| params.get(&name))
-                .ok_or_else(|| anyhow::anyhow!("missing param {name}"))?;
-            literals.push(mat_literal(m, &shape)?);
+            let lit = match qc.linears.get(&name) {
+                Some(lin) => mat_literal(&lin.deq(), &shape)?,
+                None => {
+                    let m = params
+                        .get(&name)
+                        .ok_or_else(|| anyhow::anyhow!("missing param {name}"))?;
+                    mat_literal(m, &shape)?
+                }
+            };
+            literals.push(lit);
         }
         for (name, shape) in model.config.transform_spec() {
             let t = qc

@@ -23,7 +23,7 @@ pub fn measured_sqnr_act_only(x: &Mat, w: &Mat, cfg: ActQuantCfg) -> f64 {
 pub fn measured_sqnr_weight_only(x: &Mat, w: &Mat, cfg: WeightQuantCfg) -> f64 {
     let wq = quantize_weights_rtn(w, cfg);
     let y = matmul_a_bt(x, w);
-    let yq = matmul_a_bt(x, &wq.deq);
+    let yq = matmul_a_bt(x, &wq.deq());
     ratio(&y, &yq)
 }
 
@@ -32,7 +32,7 @@ pub fn measured_sqnr_joint(x: &Mat, w: &Mat, act: ActQuantCfg, wq_cfg: WeightQua
     let (xq, _) = quantize_activations_per_token(x, act.scheme, act.clip_ratio);
     let wq = quantize_weights_rtn(w, wq_cfg);
     let y = matmul_a_bt(x, w);
-    let yq = matmul_a_bt(&xq, &wq.deq);
+    let yq = matmul_a_bt(&xq, &wq.deq());
     ratio(&y, &yq)
 }
 
@@ -79,7 +79,7 @@ impl LayerSqnrReport {
             let wq_m = gptq_quantize(w, &sigma, wq, GptqConfig::default());
             let (xq, _) = quantize_activations_per_token(x, act.scheme, act.clip_ratio);
             let y = matmul_a_bt(x, w);
-            let yq = matmul_a_bt(&xq, &wq_m.deq);
+            let yq = matmul_a_bt(&xq, &wq_m.deq());
             ratio(&y, &yq)
         } else {
             measured_sqnr_joint(x, w, act, wq)

@@ -1,0 +1,183 @@
+//! Integer/fake-quant parity properties: the packed-code path must
+//! reproduce the dense f64 fake-quant path to fp rounding — the affine
+//! identity `s_x·s_w·(Σq_x·q_w − zp_x·Σq_w − zp_w·Σq_x + k·zp_x·zp_w)`
+//! is exact in integer arithmetic, so any divergence beyond ~1e-12
+//! relative is a packing or kernel bug.
+//!
+//! CI runs this suite under `CATQUANT_THREADS=1` and `=8`; integer
+//! accumulation is exact, so the results must be bit-identical at any
+//! worker count.
+
+use catquant::calib::calibrate;
+use catquant::linalg::{matmul_a_bt, matmul_at_b, qmatmul_a_bt, qmatmul_a_bt_serial, Mat, Rng};
+use catquant::model::{ModelConfig, NativeModel, QuantConfig};
+use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
+use catquant::quant::{
+    gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, GptqConfig, QScheme,
+    QuantizedTensor, WeightQuantCfg,
+};
+use catquant::transforms::TransformKind;
+
+const TOL: f64 = 1e-9;
+
+fn rel_err(a: &Mat, b: &Mat) -> f64 {
+    a.max_abs_diff(b) / a.max_abs().max(1e-30)
+}
+
+fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+#[test]
+fn kernel_matches_fake_quant_across_bits_schemes_shapes() {
+    // Odd / non-pow2 dims on purpose: nibble rows with padded tail bytes,
+    // uneven worker partitions.
+    let shapes = [(37usize, 53usize, 29usize), (64, 96, 31), (3, 5, 2)];
+    let mut seed = 0u64;
+    for bits in [2u32, 4, 8] {
+        for sym_act in [false, true] {
+            for &(m, k, n) in &shapes {
+                seed += 1;
+                let x = random(m, k, seed);
+                let w = random(n, k, seed + 1000).scale(0.1);
+                let act = if sym_act { QScheme::sym(bits) } else { QScheme::asym(bits) };
+                let wq = quantize_weights_rtn(&w, WeightQuantCfg::minmax(bits));
+
+                let (xq, _) = quantize_activations_per_token(&x, act, 1.0);
+                let dense = matmul_a_bt(&xq, &wq.deq());
+
+                let xp = QuantizedTensor::quantize_acts(&x, act, 1.0);
+                let packed = qmatmul_a_bt(&xp.view(), &wq.codes.view());
+
+                let rel = rel_err(&dense, &packed);
+                assert!(rel <= TOL, "bits={bits} sym={sym_act} {m}x{k}x{n}: rel {rel}");
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_matches_with_clip_and_gptq_weights() {
+    let (m, k, n) = (41, 64, 23);
+    let x = random(m, k, 7);
+    let w = random(n, k, 8).scale(0.05);
+    let sigma = {
+        let xc = random(128, k, 9);
+        matmul_at_b(&xc, &xc).scale(1.0 / 128.0)
+    };
+    for bits in [2u32, 4, 8] {
+        let act = QScheme::asym(bits);
+        let wq =
+            gptq_quantize(&w, &sigma, WeightQuantCfg::rtn_default(bits), GptqConfig::default());
+
+        let (xq, _) = quantize_activations_per_token(&x, act, 0.9);
+        let dense = matmul_a_bt(&xq, &wq.deq());
+
+        let xp = QuantizedTensor::quantize_acts(&x, act, 0.9);
+        let packed = qmatmul_a_bt(&xp.view(), &wq.codes.view());
+
+        let rel = rel_err(&dense, &packed);
+        assert!(rel <= TOL, "gptq bits={bits}: rel {rel}");
+    }
+}
+
+#[test]
+fn wide_bit_widths_take_the_exact_i64_path() {
+    // Analysis configs above 8 bits route through the wide (i32 code,
+    // i64 product) store and must hold the same invariant.
+    let x = random(19, 33, 20);
+    let w = random(11, 33, 21).scale(0.1);
+    for bits in [12u32, 16] {
+        let act = QScheme::asym(bits);
+        let wq = quantize_weights_rtn(&w, WeightQuantCfg::minmax(bits));
+        let (xq, _) = quantize_activations_per_token(&x, act, 1.0);
+        let dense = matmul_a_bt(&xq, &wq.deq());
+        let xp = QuantizedTensor::quantize_acts(&x, act, 1.0);
+        let packed = qmatmul_a_bt(&xp.view(), &wq.codes.view());
+        let rel = rel_err(&dense, &packed);
+        assert!(rel <= TOL, "bits={bits}: rel {rel}");
+    }
+}
+
+#[test]
+fn parallel_kernel_is_bit_identical_to_serial() {
+    // 256×256×128 ≈ 8.4 M FMA crosses PAR_MIN_FMA, so the dispatcher
+    // takes the threaded path whenever >1 worker is configured; integer
+    // accumulation is exact, so the diff must be exactly zero.
+    let x = random(256, 256, 30);
+    let w = random(128, 256, 31).scale(0.1);
+    let xp = QuantizedTensor::quantize_acts(&x, QScheme::asym(4), 1.0);
+    let wq = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
+    let a = qmatmul_a_bt(&xp.view(), &wq.codes.view());
+    let b = qmatmul_a_bt_serial(&xp.view(), &wq.codes.view());
+    assert_eq!(a.max_abs_diff(&b), 0.0);
+}
+
+#[test]
+fn packed_deq_is_bit_identical_to_fake_quant() {
+    for bits in [2u32, 4, 8, 12] {
+        for sym in [true, false] {
+            let scheme = if sym { QScheme::sym(bits) } else { QScheme::asym(bits) };
+            let x = random(17, 31, 40 + bits as u64 + sym as u64);
+            let (fq, _) = quantize_activations_per_token(&x, scheme, 1.0);
+            let packed = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+            assert_eq!(packed.deq().max_abs_diff(&fq), 0.0, "bits {bits} sym {sym}");
+        }
+    }
+}
+
+#[test]
+fn forward_quant_packed_matches_dense_reference() {
+    let cfg = ModelConfig {
+        name: "t".into(),
+        d: 32,
+        n_layers: 2,
+        n_heads: 4,
+        ff: 64,
+        seq: 16,
+        vocab: 256,
+    };
+    let model = NativeModel::init_random(cfg, 17);
+    let toks = [3u8, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+    for bits in [2u32, 4, 8] {
+        let qc = QuantConfig::identity_for_test(&model, bits);
+        let dense_w = qc.deq_weights();
+        let packed = model.forward_quant(&toks, &qc);
+        let dense = model.forward_quant_dense(&toks, &qc, &dense_w);
+        let rel = rel_err(&dense, &packed);
+        assert!(rel <= TOL, "bits {bits}: packed forward strayed {rel}");
+    }
+}
+
+#[test]
+fn pipeline_built_config_packed_matches_dense() {
+    // Full PTQ pipeline (transforms + RTN/GPTQ at W4A4) → the packed
+    // forward must track the fake-quant reference to fp rounding.
+    let cfg = ModelConfig {
+        name: "t".into(),
+        d: 32,
+        n_layers: 2,
+        n_heads: 4,
+        ff: 64,
+        seq: 16,
+        vocab: 256,
+    };
+    let model = NativeModel::init_random(cfg, 11);
+    let mut rng = Rng::new(5);
+    let seqs: Vec<Vec<u8>> =
+        (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+    let calib = calibrate(&model, &seqs, 256, 0);
+    let toks: Vec<u8> = (0..12).map(|i| (i * 17) as u8).collect();
+    for (kind, wq) in [
+        (TransformKind::None, WeightQuantizer::Rtn),
+        (TransformKind::QuaRot, WeightQuantizer::Rtn),
+        (TransformKind::CatBlock, WeightQuantizer::Gptq),
+    ] {
+        let (qc, _) = build_quant_config(&model, &calib, PipelineCfg::w4a4(kind, wq, 0));
+        let packed = model.forward_quant(&toks, &qc);
+        let dense = model.forward_quant_dense(&toks, &qc, &qc.deq_weights());
+        let rel = rel_err(&dense, &packed);
+        assert!(rel <= TOL, "{kind:?}/{wq:?}: rel {rel}");
+    }
+}
