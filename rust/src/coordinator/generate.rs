@@ -25,6 +25,30 @@ impl Default for SamplingCfg {
     }
 }
 
+/// Phase-split accounting for one or more `generate_batch` calls:
+/// prefill (prompt ingestion, the time-to-first-token cost) vs decode
+/// (steady-state token production).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Wall time spent in prefill.
+    pub prefill_time: std::time::Duration,
+    /// Wall time spent in the decode loop (including sampling).
+    pub decode_time: std::time::Duration,
+    /// Prompt tokens ingested by prefill.
+    pub prefill_tokens: u64,
+    /// Tokens produced by incremental decode steps.
+    pub decode_tokens: u64,
+}
+
+impl EngineStats {
+    pub fn accumulate(&mut self, other: &EngineStats) {
+        self.prefill_time += other.prefill_time;
+        self.decode_time += other.decode_time;
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
+    }
+}
+
 /// A batched generator: prompts in, continuations out.
 ///
 /// Not `Send`: PJRT engines hold raw C handles, so the coordinator
@@ -36,6 +60,39 @@ pub trait GenEngine {
 
     /// The fixed batch width of the underlying executable.
     fn max_batch(&self) -> usize;
+
+    /// Drain the prefill/decode accounting accumulated since the last
+    /// call. Engines without phase instrumentation report zeros.
+    fn take_stats(&mut self) -> EngineStats {
+        EngineStats::default()
+    }
+}
+
+/// Sample one token index from a logits row: greedy argmax at
+/// `temperature <= 0`, otherwise softmax sampling at the given
+/// temperature. Shared by the PJRT and native generators so both draw
+/// identically from the same RNG stream.
+pub(crate) fn sample_index(logits: &[f64], temperature: f64, rng: &mut Rng) -> usize {
+    if temperature <= 0.0 {
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let weights: Vec<f64> = logits.iter().map(|&v| ((v - max) / temperature).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    logits.len() - 1
 }
 
 /// PJRT prefill+decode generator.
@@ -122,6 +179,7 @@ impl PjrtGenerator {
     }
 
     fn sample_row(&mut self, logits: &[f32]) -> u8 {
+        // Greedy path stays allocation-free (no RNG draw, no f64 bridge).
         if self.sampling.temperature <= 0.0 {
             let mut best = 0;
             for (i, &v) in logits.iter().enumerate() {
@@ -131,19 +189,8 @@ impl PjrtGenerator {
             }
             return best as u8;
         }
-        let t = self.sampling.temperature;
-        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let weights: Vec<f64> =
-            logits.iter().map(|&v| ((v as f64 - max) / t).exp()).collect();
-        let total: f64 = weights.iter().sum();
-        let mut u = self.rng.uniform() * total;
-        for (i, w) in weights.iter().enumerate() {
-            u -= w;
-            if u <= 0.0 {
-                return i as u8;
-            }
-        }
-        (self.vocab - 1) as u8
+        let row: Vec<f64> = logits.iter().map(|&v| v as f64).collect();
+        sample_index(&row, self.sampling.temperature, &mut self.rng) as u8
     }
 }
 
@@ -168,13 +215,19 @@ impl GenEngine for PjrtGenerator {
         let budget = max_new.min(self.seq_max - self.prompt_len);
         let mut results: Vec<Vec<u8>> = vec![Vec::new(); real];
         for step in 0..budget {
-            // Sample next token per row.
-            let next: Vec<Vec<u8>> = (0..self.batch)
+            // Sample next tokens for *real* rows only: pad rows must not
+            // consume RNG draws, or sampled outputs would depend on how
+            // full the batch happens to be. Pad rows feed a fixed token
+            // to keep the decode graph's shape.
+            let mut next: Vec<Vec<u8>> = (0..real)
                 .map(|b| {
                     let row = &logits[b * self.vocab..(b + 1) * self.vocab];
                     vec![self.sample_row(row)]
                 })
                 .collect();
+            while next.len() < self.batch {
+                next.push(vec![self.bos]);
+            }
             for (b, r) in results.iter_mut().enumerate() {
                 r.push(next[b][0]);
             }

@@ -1,5 +1,7 @@
-//! Serving metrics: latency histogram + throughput counters.
+//! Serving metrics: latency histograms + throughput counters, with the
+//! prefill/decode phase split the serving benchmark reports.
 
+use super::EngineStats;
 use std::time::Duration;
 
 /// Log-bucketed latency histogram (microsecond resolution, ~7% buckets).
@@ -71,10 +73,15 @@ impl Default for Histogram {
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub request_latency: Histogram,
+    /// Time-to-first-token per request: queueing/batching wait + the
+    /// serving batch's prefill phase.
+    pub ttft: Histogram,
     pub batch_sizes: Vec<usize>,
     pub tokens_out: u64,
     pub requests: u64,
     pub elapsed: Duration,
+    /// Accumulated engine phase split (prefill vs decode).
+    pub engine: EngineStats,
 }
 
 impl ServeMetrics {
@@ -83,6 +90,24 @@ impl ServeMetrics {
             return 0.0;
         }
         self.tokens_out as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// Steady-state decode rate: tokens produced by incremental decode
+    /// steps over the time spent in them (excludes prefill, so this is
+    /// the flat per-token cost the KV cache buys).
+    pub fn decode_tok_s(&self) -> f64 {
+        if self.engine.decode_time.is_zero() {
+            return 0.0;
+        }
+        self.engine.decode_tokens as f64 / self.engine.decode_time.as_secs_f64()
+    }
+
+    /// Prompt-ingestion rate during prefill.
+    pub fn prefill_tok_s(&self) -> f64 {
+        if self.engine.prefill_time.is_zero() {
+            return 0.0;
+        }
+        self.engine.prefill_tokens as f64 / self.engine.prefill_time.as_secs_f64()
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -94,11 +119,15 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} tokens={} throughput={:.1} tok/s mean_batch={:.2} p50={:?} p95={:?} mean={:?}",
+            "requests={} tokens={} throughput={:.1} tok/s decode={:.1} tok/s prefill={:.1} tok/s \
+             mean_batch={:.2} ttft_p50={:?} p50={:?} p95={:?} mean={:?}",
             self.requests,
             self.tokens_out,
             self.throughput_tok_s(),
+            self.decode_tok_s(),
+            self.prefill_tok_s(),
             self.mean_batch(),
+            self.ttft.quantile(0.5),
             self.request_latency.quantile(0.5),
             self.request_latency.quantile(0.95),
             self.request_latency.mean(),
@@ -147,5 +176,24 @@ mod tests {
             ..Default::default()
         };
         assert!((m.throughput_tok_s() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_split_rates() {
+        let m = ServeMetrics {
+            engine: EngineStats {
+                prefill_time: Duration::from_millis(500),
+                decode_time: Duration::from_secs(2),
+                prefill_tokens: 1000,
+                decode_tokens: 300,
+            },
+            ..Default::default()
+        };
+        assert!((m.decode_tok_s() - 150.0).abs() < 1e-9);
+        assert!((m.prefill_tok_s() - 2000.0).abs() < 1e-9);
+        // Zero-phase engines report zero rates, not NaN.
+        let z = ServeMetrics::default();
+        assert_eq!(z.decode_tok_s(), 0.0);
+        assert_eq!(z.prefill_tok_s(), 0.0);
     }
 }

@@ -8,15 +8,22 @@
 //!
 //! No tokio in this environment (offline vendor set) — the runtime is
 //! `std::thread` + `mpsc`, which for a single-host, CPU-bound serving
-//! loop is the honest design anyway: one worker owns the PJRT client and
-//! the batcher is the only coordination point.
+//! loop is the honest design anyway: one worker owns the engine and the
+//! batcher is the only coordination point.
+//!
+//! Two engines implement [`GenEngine`]: [`NativeGenerator`] (pure-Rust
+//! batched prefill + KV-cache decode, FP or packed-integer — the
+//! runnable path in this offline environment) and [`PjrtGenerator`]
+//! (AOT-compiled graphs when a PJRT runtime is present).
 
 mod batcher;
 mod generate;
 mod metrics;
+mod native_gen;
 mod server;
 
 pub use batcher::{BatcherCfg, DynamicBatcher};
-pub use generate::{GenEngine, PjrtGenerator, SamplingCfg};
+pub use generate::{EngineStats, GenEngine, PjrtGenerator, SamplingCfg};
 pub use metrics::{Histogram, ServeMetrics};
+pub use native_gen::NativeGenerator;
 pub use server::{Coordinator, GenRequest, GenResponse};

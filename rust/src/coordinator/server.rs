@@ -54,10 +54,15 @@ impl Coordinator {
                 let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
                 let prompts: Vec<Vec<u8>> = batch.iter().map(|r| r.prompt.clone()).collect();
                 // The graph batch width may be smaller than the batch the
-                // policy admitted; chunk.
+                // policy admitted; chunk. Stats drain per chunk so TTFT
+                // can charge each request its own chunk's start offset
+                // (which includes earlier chunks' full generation) plus
+                // that chunk's prefill — not a summed batch prefill.
                 let chunk = engine.max_batch();
                 let mut outputs: Vec<Vec<u8>> = Vec::with_capacity(bsz);
+                let mut chunk_stats: Vec<(Instant, super::EngineStats)> = Vec::new();
                 for c in prompts.chunks(chunk) {
+                    let c_start = Instant::now();
                     match engine.generate_batch(c, max_new) {
                         Ok(mut o) => outputs.append(&mut o),
                         Err(e) => {
@@ -65,15 +70,25 @@ impl Coordinator {
                             outputs.extend(std::iter::repeat_with(Vec::new).take(c.len()));
                         }
                     }
+                    chunk_stats.push((c_start, engine.take_stats()));
                 }
                 let now = Instant::now();
                 let mut met = m2.lock().unwrap();
                 met.batch_sizes.push(bsz);
-                for (req, tokens) in batch.into_iter().zip(outputs) {
+                for (_, s) in &chunk_stats {
+                    met.engine.accumulate(s);
+                }
+                for (ri, (req, tokens)) in batch.into_iter().zip(outputs).enumerate() {
                     let latency = now - req.enqueued;
                     met.requests += 1;
                     met.tokens_out += tokens.len().min(req.max_new) as u64;
                     met.request_latency.record(latency);
+                    // Time-to-first-token ≈ wait until this request's
+                    // chunk started + that chunk's prefill phase
+                    // (engines that don't split phases report zero
+                    // prefill, so this degrades to the wait alone).
+                    let (c_start, c_stats) = chunk_stats[ri / chunk];
+                    met.ttft.record(c_start - req.enqueued + c_stats.prefill_time);
                     let _ = req.reply.send(GenResponse {
                         id: req.id,
                         tokens: tokens.into_iter().take(req.max_new).collect(),
@@ -195,6 +210,62 @@ mod tests {
         coord.shutdown();
         let seen = calls.lock().unwrap();
         assert!(seen.iter().all(|&c| c <= 2), "engine saw oversize chunk: {seen:?}");
+    }
+
+    #[test]
+    fn engine_phase_stats_reach_metrics() {
+        use crate::coordinator::EngineStats;
+        use std::time::Duration;
+
+        /// Engine reporting a fixed phase split per chunk, counting calls.
+        struct StatEngine {
+            calls: Arc<Mutex<usize>>,
+        }
+        impl GenEngine for StatEngine {
+            fn generate_batch(
+                &mut self,
+                prompts: &[Vec<u8>],
+                max_new: usize,
+            ) -> Result<Vec<Vec<u8>>> {
+                *self.calls.lock().unwrap() += 1;
+                Ok(prompts.iter().map(|_| vec![1; max_new]).collect())
+            }
+            fn max_batch(&self) -> usize {
+                // Width 2 so a 3-request batch splits into two chunks —
+                // TTFT/stat accounting must hold per chunk.
+                2
+            }
+            fn take_stats(&mut self) -> EngineStats {
+                EngineStats {
+                    prefill_time: Duration::from_millis(10),
+                    decode_time: Duration::from_millis(20),
+                    prefill_tokens: 5,
+                    decode_tokens: 7,
+                }
+            }
+        }
+
+        let calls = Arc::new(Mutex::new(0usize));
+        let c2 = calls.clone();
+        let coord = Coordinator::start(
+            move || Box::new(StatEngine { calls: c2 }) as Box<dyn GenEngine>,
+            BatcherCfg::default(),
+        );
+        let rxs: Vec<_> = (0..3).map(|_| coord.submit(vec![1, 2], 2)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let met = coord.shutdown();
+        let chunks = *calls.lock().unwrap() as u64;
+        assert!(chunks >= 2, "3 requests through width-2 chunks: {chunks}");
+        // One stats report per engine chunk, accumulated.
+        assert_eq!(met.engine.prefill_tokens, 5 * chunks);
+        assert_eq!(met.engine.decode_tokens, 7 * chunks);
+        assert_eq!(met.engine.prefill_time, Duration::from_millis(10) * chunks as u32);
+        // Every request records a TTFT that includes its chunk's prefill.
+        assert_eq!(met.ttft.count(), met.requests);
+        assert!(met.ttft.quantile(0.5) >= Duration::from_millis(10));
+        assert!(met.decode_tok_s() > 0.0);
     }
 
     #[test]

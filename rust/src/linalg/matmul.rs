@@ -88,6 +88,31 @@ pub(crate) fn matmul_a_bt_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
     }
 }
 
+/// Rows `j0 ..` of `Cᵀ` for the decode/GEMV shape of `C = A · Bᵀ`: row
+/// `j` of `Cᵀ` is `b.row(j)` dotted with every row of `A`. Each output
+/// element is the same `dot` as [`matmul_a_bt_rows`] computes, so the
+/// two partitionings are bit-identical.
+pub(crate) fn matmul_a_bt_ct_rows(a: &Mat, b: &Mat, j0: usize, out: &mut [f64]) {
+    let m = a.rows();
+    for (jj, orow) in out.chunks_mut(m).enumerate() {
+        let brow = b.row(j0 + jj);
+        for (i, o) in orow.iter_mut().enumerate() {
+            *o = dot(a.row(i), brow);
+        }
+    }
+}
+
+/// Scatter a contiguous `Cᵀ` buffer (`n` rows of `m` entries, one per
+/// output channel) back into `C` (`m × n`). Shared by the f64 and
+/// integer GEMV-shaped kernels.
+pub(crate) fn transpose_ct_into(ct: &[f64], m: usize, c: &mut Mat) {
+    for (j, crow) in ct.chunks(m).enumerate() {
+        for (i, &v) in crow.iter().enumerate() {
+            c[(i, j)] = v;
+        }
+    }
+}
+
 /// Output entries `r0 .. r0 + out.len()` of `y = A · x`.
 pub(crate) fn matvec_rows(a: &Mat, x: &[f64], r0: usize, out: &mut [f64]) {
     for (i, y) in out.iter_mut().enumerate() {
@@ -180,6 +205,12 @@ pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
 }
 
+/// Below this many activation rows, `A · Bᵀ` is a decode/GEMV shape:
+/// partitioning output *rows* caps the worker count at `m` (1 for
+/// single-token decode), so the dispatcher partitions over `B`'s rows
+/// (output channels) instead.
+pub(crate) const GEMV_MAX_ROWS: usize = 32;
+
 /// `C = A · Bᵀ` without materializing the transpose.
 ///
 /// This is the layout of a linear layer (`x · Wᵀ` with `W: out×in`),
@@ -188,7 +219,15 @@ pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let threads = par::threads_for(m.saturating_mul(k).saturating_mul(n), m);
+    let work = m.saturating_mul(k).saturating_mul(n);
+    if m < GEMV_MAX_ROWS && n > m {
+        let threads = par::threads_for(work, n);
+        if threads > 1 {
+            return par::matmul_a_bt_ct_mt(a, b, threads);
+        }
+        return matmul_a_bt_serial(a, b);
+    }
+    let threads = par::threads_for(work, m);
     if threads > 1 {
         par::matmul_a_bt_mt(a, b, threads)
     } else {

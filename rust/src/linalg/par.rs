@@ -25,7 +25,10 @@
 //! [`threads_for`], which adds the [`KERNEL_MAX_THREADS`] bandwidth cap
 //! and the [`PAR_MIN_FMA`] serial-fallback gate.
 
-use super::matmul::{matmul_a_bt_rows, matmul_at_b_rows, matmul_rows, matvec_rows};
+use super::matmul::{
+    matmul_a_bt_ct_rows, matmul_a_bt_rows, matmul_at_b_rows, matmul_rows, matvec_rows,
+    transpose_ct_into,
+};
 use super::Mat;
 use std::cell::Cell;
 use std::sync::{mpsc, Mutex, OnceLock};
@@ -166,6 +169,21 @@ pub fn matmul_a_bt_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     c
 }
 
+/// Threaded `C = A · Bᵀ` partitioned over `B`'s rows (output channels)
+/// — the decode/GEMV shape where `A` has only a handful of rows and
+/// row-partitioning `C` would leave workers idle. Computes `Cᵀ` in
+/// contiguous chunks, then transposes; each element is the same serial
+/// `dot`, so results are bit-identical to [`matmul_a_bt_mt`].
+pub fn matmul_a_bt_ct_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let (m, n) = (a.rows(), b.rows());
+    let mut ct = vec![0.0f64; n * m];
+    par_rows(&mut ct, m, threads, |j0, out| matmul_a_bt_ct_rows(a, b, j0, out));
+    let mut c = Mat::zeros(m, n);
+    transpose_ct_into(&ct, m, &mut c);
+    c
+}
+
 /// Threaded `y = A · x`.
 pub fn matvec_mt(a: &Mat, x: &[f64], threads: usize) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
@@ -284,6 +302,26 @@ mod tests {
             matmul_a_bt_mt(&a, &w, 3).max_abs_diff(&matmul_a_bt_serial(&a, &w)),
             0.0
         );
+    }
+
+    #[test]
+    fn colpart_a_bt_matches_rowpart_exactly() {
+        // The decode/GEMV partitioning (over B's rows) must agree with
+        // both the row-partitioned and serial kernels bit-for-bit, for
+        // any worker count — including single-row A (pure GEMV).
+        for m in [1usize, 3, 7] {
+            let a = random(m, 67, 20 + m as u64);
+            let b = random(143, 67, 30 + m as u64);
+            let want = matmul_a_bt_serial(&a, &b);
+            for t in [1, 2, 5, 8] {
+                assert_eq!(
+                    matmul_a_bt_ct_mt(&a, &b, t).max_abs_diff(&want),
+                    0.0,
+                    "m={m} t={t}"
+                );
+            }
+            assert_eq!(matmul_a_bt_mt(&a, &b, 4).max_abs_diff(&want), 0.0);
+        }
     }
 
     #[test]

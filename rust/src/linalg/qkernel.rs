@@ -23,6 +23,7 @@
 //! module only borrows them through [`QMatView`] so `linalg` stays below
 //! `quant` in the crate layering.
 
+use super::matmul::{transpose_ct_into, GEMV_MAX_ROWS};
 use super::{par, Mat};
 
 /// Packed integer codes of one row-quantized matrix.
@@ -118,12 +119,15 @@ const MAX_I16_PATH_COLS: usize = 1 << 19;
 /// `C = X · Wᵀ` over packed integer codes with the affine correction
 /// applied per `(token, output-channel)` pair. Dispatches to the worker
 /// pool above the [`par::PAR_MIN_FMA`] threshold; integer accumulation is
-/// exact, so worker count never changes the result.
+/// exact, so worker count — and which partitioning the shape selects —
+/// never changes the result.
 pub fn qmatmul_a_bt(x: &QMatView, w: &QMatView) -> Mat {
-    let threads = par::threads_for(
-        x.rows.saturating_mul(x.cols).saturating_mul(w.rows),
-        x.rows,
-    );
+    let work = x.rows.saturating_mul(x.cols).saturating_mul(w.rows);
+    if x.rows < GEMV_MAX_ROWS && w.rows > x.rows {
+        let threads = par::threads_for(work, w.rows);
+        return qmatmul_small_m(x, w, threads);
+    }
+    let threads = par::threads_for(work, x.rows);
     qmatmul_a_bt_t(x, w, threads)
 }
 
@@ -158,6 +162,67 @@ fn qmatmul_a_bt_t(x: &QMatView, w: &QMatView, threads: usize) -> Mat {
             qmatmul_rows_wide(x, w, &wbuf, r0, out)
         });
     }
+    c
+}
+
+/// Decode/GEMV kernel: `m` is tiny (a decode batch), `n` is a full
+/// weight's output channels. Activations unpack once up front; weight
+/// rows unpack into a per-worker `k`-wide tile that stays hot in L1 and
+/// is consumed immediately — once per step, not once per output row of a
+/// materialized `n×k` buffer. Work partitions over output channels via
+/// the transposed output (`Cᵀ` rows are contiguous), then transposes
+/// back. Per-element math is identical to the row-partitioned path.
+fn qmatmul_small_m(x: &QMatView, w: &QMatView, threads: usize) -> Mat {
+    assert_eq!(x.cols, w.cols, "qmatmul_a_bt shape mismatch");
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let mut ct = vec![0.0f64; n * m];
+    if x.fits_i16() && w.fits_i16() && k <= MAX_I16_PATH_COLS {
+        let mut xbuf = vec![0i16; m * k];
+        for i in 0..m {
+            x.unpack_row_i16(i, &mut xbuf[i * k..(i + 1) * k]);
+        }
+        par::par_rows(&mut ct, m, threads, |j0, out| {
+            let mut wrow = vec![0i16; k];
+            for (jj, orow) in out.chunks_mut(m).enumerate() {
+                let j = j0 + jj;
+                w.unpack_row_i16(j, &mut wrow);
+                let (sw, zw, sumw) = (w.scales[j], w.zps[j] as i64, w.row_sums[j]);
+                for (i, o) in orow.iter_mut().enumerate() {
+                    let dot = qdot_i16(&xbuf[i * k..(i + 1) * k], &wrow);
+                    let zx = x.zps[i] as i64;
+                    let corr = dot - zx * sumw - zw * x.row_sums[i] + (k as i64) * zx * zw;
+                    *o = x.scales[i] * sw * corr as f64;
+                }
+            }
+        });
+    } else {
+        let mut xbuf = vec![0i32; m * k];
+        for i in 0..m {
+            x.unpack_row_i32(i, &mut xbuf[i * k..(i + 1) * k]);
+        }
+        par::par_rows(&mut ct, m, threads, |j0, out| {
+            let mut wrow = vec![0i32; k];
+            for (jj, orow) in out.chunks_mut(m).enumerate() {
+                let j = j0 + jj;
+                w.unpack_row_i32(j, &mut wrow);
+                let (sw, zw, sumw) = (w.scales[j], w.zps[j] as i64, w.row_sums[j]);
+                for (i, o) in orow.iter_mut().enumerate() {
+                    let mut dot = 0i64;
+                    for (&a, &b) in xbuf[i * k..(i + 1) * k].iter().zip(&wrow) {
+                        dot += a as i64 * b as i64;
+                    }
+                    let zx = x.zps[i] as i64;
+                    let corr = dot - zx * sumw - zw * x.row_sums[i] + (k as i64) * zx * zw;
+                    *o = x.scales[i] * sw * corr as f64;
+                }
+            }
+        });
+    }
+    transpose_ct_into(&ct, m, &mut c);
     c
 }
 
@@ -332,6 +397,29 @@ mod tests {
         let fast = qmatmul_a_bt(&mk(true), &mk(true));
         let wide = qmatmul_a_bt(&mk(false), &mk(false));
         assert_eq!(fast.max_abs_diff(&wide), 0.0);
+    }
+
+    #[test]
+    fn small_m_path_matches_row_path_bit_exactly() {
+        // Decode shapes (few tokens, many output channels) route through
+        // qmatmul_small_m; the per-element math is shared, so both
+        // partitionings must agree exactly — nibble and byte stores,
+        // odd k (padded nibble tails), m = 1 (pure GEMV) included.
+        let mut rng = crate::linalg::Rng::new(9);
+        for (m, k, n) in [(1usize, 33usize, 96usize), (4, 48, 64), (7, 19, 40)] {
+            for bits in [4u32, 8, 12] {
+                let x = Mat::from_fn(m, k, |_, _| rng.normal());
+                let w = Mat::from_fn(n, k, |_, _| rng.normal() * 0.1);
+                let scheme = crate::quant::QScheme::asym(bits);
+                let xp = crate::quant::QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                let wp = crate::quant::QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+                let small = qmatmul_small_m(&xp.view(), &wp.view(), 3);
+                let rows = qmatmul_a_bt_serial(&xp.view(), &wp.view());
+                assert_eq!(small.max_abs_diff(&rows), 0.0, "{m}x{k}x{n} bits {bits}");
+                // And the dispatcher picks the small path for this shape.
+                assert_eq!(qmatmul_a_bt(&xp.view(), &wp.view()).max_abs_diff(&rows), 0.0);
+            }
+        }
     }
 
     #[test]

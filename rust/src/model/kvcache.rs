@@ -1,0 +1,243 @@
+//! Per-sequence KV cache for incremental decode.
+//!
+//! One [`KvCache`] holds, per layer, the attention keys and values of
+//! every token processed so far — the state that turns generation from
+//! O(T²) full-prefix recomputes into O(T) single-token steps.
+//!
+//! Two storage modes, matching the two native forward paths:
+//!
+//! * **Fp** — raw f64 K/V rows, exactly what `forward` feeds attention.
+//! * **Packed** — per-token *integer activation codes*
+//!   ([`QuantizedTensor`]). The quantized forward fake-quantizes K/V
+//!   per token, and per-token grids are row-local, so a token's codes
+//!   never change as the sequence grows; dequantizing a cached row is
+//!   bit-identical to the fake-quant value the full forward would
+//!   compute. A W4A4 cache therefore stores ~1/16 the bytes of the FP
+//!   cache while reproducing `forward_quant` logits exactly.
+
+use crate::model::ModelConfig;
+use crate::quant::{QScheme, QuantizedTensor};
+
+/// Growable K or V storage for one layer.
+pub(crate) enum KvStore {
+    /// Row-major f64 rows (`len × cols`).
+    Fp { data: Vec<f64>, cols: usize },
+    /// Packed per-token codes on the activation scheme's grid.
+    Packed { codes: QuantizedTensor, clip_ratio: f64 },
+}
+
+impl KvStore {
+    fn fp(cols: usize) -> KvStore {
+        KvStore::Fp { data: Vec::new(), cols }
+    }
+
+    fn packed(cols: usize, scheme: QScheme, clip_ratio: f64) -> KvStore {
+        KvStore::Packed { codes: QuantizedTensor::empty(cols, scheme), clip_ratio }
+    }
+
+    /// Append one token row. Packed mode quantizes on the row's dynamic
+    /// per-token grid (the same grid `kv_quant` would pick).
+    pub(crate) fn push(&mut self, row: &[f64]) {
+        match self {
+            KvStore::Fp { data, cols } => {
+                debug_assert_eq!(row.len(), *cols);
+                data.extend_from_slice(row);
+            }
+            KvStore::Packed { codes, clip_ratio } => codes.push_row(row, *clip_ratio),
+        }
+    }
+
+    /// Append one token row and write the value attention should see
+    /// back into `out`: the raw row for FP, the dequantized pushed codes
+    /// for packed — bit-identical to per-token fake-quant of `row`.
+    pub(crate) fn push_fake_quant(&mut self, row: &[f64], out: &mut [f64]) {
+        self.push(row);
+        match self {
+            KvStore::Fp { .. } => out.copy_from_slice(row),
+            KvStore::Packed { codes, .. } => codes.deq_row_into(codes.rows() - 1, out),
+        }
+    }
+
+    /// Borrow token row `i`, dequantizing into `buf` when packed. The FP
+    /// mode returns the stored slice; `buf` must be `cols` wide.
+    pub(crate) fn row<'a>(&'a self, i: usize, buf: &'a mut [f64]) -> &'a [f64] {
+        match self {
+            KvStore::Fp { data, cols } => &data[i * cols..(i + 1) * cols],
+            KvStore::Packed { codes, .. } => {
+                codes.deq_row_into(i, buf);
+                buf
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            KvStore::Fp { data, cols } => data.len() / cols,
+            KvStore::Packed { codes, .. } => codes.rows(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            KvStore::Fp { data, .. } => data.len() * std::mem::size_of::<f64>(),
+            KvStore::Packed { codes, .. } => codes.packed_bytes(),
+        }
+    }
+}
+
+/// K and V stores for one layer.
+pub(crate) struct LayerKv {
+    pub(crate) k: KvStore,
+    pub(crate) v: KvStore,
+}
+
+/// The incremental-decode state of one sequence: per-layer K/V plus the
+/// number of tokens processed. Built by [`NativeModel::prefill`] and
+/// advanced by [`NativeModel::decode_step`].
+///
+/// [`NativeModel::prefill`]: crate::model::NativeModel::prefill
+/// [`NativeModel::decode_step`]: crate::model::NativeModel::decode_step
+pub struct KvCache {
+    pub(crate) layers: Vec<LayerKv>,
+    len: usize,
+    /// Max tokens (the model's positional-embedding budget).
+    capacity: usize,
+}
+
+impl KvCache {
+    /// FP cache for `cfg`.
+    pub fn fp(cfg: &ModelConfig) -> KvCache {
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerKv { k: KvStore::fp(cfg.d), v: KvStore::fp(cfg.d) })
+            .collect();
+        KvCache { layers, len: 0, capacity: cfg.seq }
+    }
+
+    /// Packed cache on the quantized path's activation grid.
+    pub fn packed(cfg: &ModelConfig, scheme: QScheme, clip_ratio: f64) -> KvCache {
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerKv {
+                k: KvStore::packed(cfg.d, scheme, clip_ratio),
+                v: KvStore::packed(cfg.d, scheme, clip_ratio),
+            })
+            .collect();
+        KvCache { layers, len: 0, capacity: cfg.seq }
+    }
+
+    /// Whether this cache stores packed codes (the quantized path) —
+    /// decode steps must run with the matching `qc` argument.
+    pub fn is_packed(&self) -> bool {
+        self.packed_grid().is_some()
+    }
+
+    /// The packed cache's activation grid `(scheme, clip_ratio)`, if
+    /// packed — decode steps assert it matches `qc.act`, since cached
+    /// codes from one grid are meaningless under another.
+    pub(crate) fn packed_grid(&self) -> Option<(QScheme, f64)> {
+        match self.layers.first() {
+            Some(LayerKv { k: KvStore::Packed { codes, clip_ratio }, .. }) => {
+                Some((codes.scheme(), *clip_ratio))
+            }
+            _ => None,
+        }
+    }
+
+    /// Tokens processed so far (= the next token's position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether another token fits under the positional budget.
+    pub fn has_room(&self) -> bool {
+        self.len < self.capacity
+    }
+
+    /// Max tokens this cache (and its model) can hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Advance the token count by `n` after every layer has pushed its
+    /// K/V rows for those tokens.
+    pub(crate) fn advance(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(self.layers.iter().all(|l| l.k.len() == self.len && l.v.len() == self.len));
+    }
+
+    /// Total K/V bytes held (packed codes + grids, or raw f64) — the
+    /// footprint number PERF.md's decode section reports.
+    pub fn kv_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 16, vocab: 256 }
+    }
+
+    #[test]
+    fn fp_cache_roundtrips_rows() {
+        let cfg = cfg();
+        let mut c = KvCache::fp(&cfg);
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..cfg.d).map(|_| rng.normal()).collect()).collect();
+        for r in &rows {
+            for l in &mut c.layers {
+                l.k.push(r);
+                l.v.push(r);
+            }
+            c.advance(1);
+        }
+        assert_eq!(c.len(), 3);
+        let mut buf = vec![0.0; cfg.d];
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(c.layers[1].k.row(i, &mut buf), r.as_slice());
+        }
+    }
+
+    #[test]
+    fn packed_cache_is_smaller_than_fp() {
+        let cfg = cfg();
+        let mut fp = KvCache::fp(&cfg);
+        let mut pk = KvCache::packed(&cfg, QScheme::asym(4), 1.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..8 {
+            let row: Vec<f64> = (0..cfg.d).map(|_| rng.normal()).collect();
+            for c in [&mut fp, &mut pk] {
+                for l in &mut c.layers {
+                    l.k.push(&row);
+                    l.v.push(&row);
+                }
+                c.advance(1);
+            }
+        }
+        // 4-bit codes + per-row grids sit well under the f64 rows.
+        assert!(pk.kv_bytes() * 4 < fp.kv_bytes(), "{} vs {}", pk.kv_bytes(), fp.kv_bytes());
+    }
+
+    #[test]
+    fn room_tracks_capacity() {
+        let cfg = cfg();
+        let mut c = KvCache::fp(&cfg);
+        assert!(c.has_room());
+        for _ in 0..cfg.seq {
+            for l in &mut c.layers {
+                l.k.push(&vec![0.0; cfg.d]);
+                l.v.push(&vec![0.0; cfg.d]);
+            }
+            c.advance(1);
+        }
+        assert!(!c.has_room());
+        assert_eq!(c.capacity(), cfg.seq);
+    }
+}

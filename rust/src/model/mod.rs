@@ -2,16 +2,19 @@
 //! `python/compile/model.py`.
 //!
 //! The native forward pass here is numerically cross-validated against the
-//! AOT-compiled JAX graphs (see `rust/tests/pjrt_parity.rs`): the PJRT
-//! executables are the serving hot path, the native engine is the
-//! calibration/analysis reference the tests trust.
+//! AOT-compiled JAX graphs (see `rust/tests/pjrt_parity.rs`) and doubles
+//! as the first runnable serving engine: [`NativeModel::prefill`] /
+//! [`NativeModel::decode_step`] drive incremental KV-cache generation
+//! ([`KvCache`]) with FP or packed-integer execution.
 
 mod config;
+mod kvcache;
 mod loader;
 mod native;
 mod quantized;
 
 pub use config::ModelConfig;
+pub use kvcache::KvCache;
 pub use loader::{load_catw, CatwTensor};
 pub use native::{softmax_row, NativeModel, ProbeCapture};
 pub use quantized::{

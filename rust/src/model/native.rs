@@ -5,6 +5,7 @@
 //! mask value, per-token KV fake-quant) so logits agree with the AOT
 //! graphs to f32 precision.
 
+use super::kvcache::{KvCache, LayerKv};
 use super::{ModelConfig, QuantConfig};
 use crate::linalg::{matmul_a_bt, par, qmatmul_a_bt, Mat};
 use crate::quant::{quantize_activations_per_token, QuantizedTensor};
@@ -12,7 +13,6 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 const EPS: f64 = 1e-5;
-const MASK_VALUE: f64 = -1e30;
 
 /// Per-group activation capture for calibration (one entry per block).
 #[derive(Default)]
@@ -123,12 +123,133 @@ impl NativeModel {
         self.forward_opts(tokens, Some(qc), Some(weights), None)
     }
 
+    /// Prefill: run the prompt through the full-sequence path once,
+    /// populating a fresh [`KvCache`] (FP rows, or packed per-token codes
+    /// when `qc` is given), and return the *last-token* logits
+    /// (`1 × vocab`) — the only row generation needs. The cached state
+    /// makes each subsequent [`Self::decode_step`] O(T) instead of the
+    /// O(T²) full-prefix recompute.
+    pub fn prefill(&self, tokens: &[u8], qc: Option<&QuantConfig>) -> (Mat, KvCache) {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let mut cache = match qc {
+            None => KvCache::fp(&self.cfg),
+            Some(qc) => KvCache::packed(&self.cfg, qc.act.scheme, qc.act.clip_ratio),
+        };
+        let logits = self.forward_impl(tokens, qc, None, None, Some(&mut cache), true);
+        (logits, cache)
+    }
+
+    /// One incremental decode step for a batch of sequences: `next[b]` is
+    /// appended to `caches[b]` at its current position, and the returned
+    /// `B × vocab` logits predict each sequence's following token.
+    ///
+    /// All linear groups run over the `B × d` batch of last-token
+    /// activations (one kernel call per group, sharing
+    /// [`Self::linear_group`] with the full forward), while attention is
+    /// a single-query pass per sequence over its cached K/V. FP results
+    /// are bit-identical to the last row of [`Self::forward`] on the
+    /// concatenated sequence; quantized results are bit-identical to
+    /// [`Self::forward_quant`] (per-token grids are row-local, so cached
+    /// codes never change as the sequence grows).
+    pub fn decode_step(
+        &self,
+        caches: &mut [&mut KvCache],
+        next: &[u8],
+        qc: Option<&QuantConfig>,
+    ) -> Mat {
+        let b = caches.len();
+        assert!(b > 0, "empty decode batch");
+        assert_eq!(next.len(), b, "one next token per cache");
+        let cfg = &self.cfg;
+        for c in caches.iter() {
+            assert!(c.has_room(), "kv cache at positional capacity");
+            assert_eq!(c.layers.len(), cfg.n_layers, "cache/model layer mismatch");
+            assert_eq!(
+                c.is_packed(),
+                qc.is_some(),
+                "cache storage mode does not match the qc argument"
+            );
+            if let (Some((scheme, clip)), Some(qc)) = (c.packed_grid(), qc) {
+                assert!(
+                    scheme == qc.act.scheme && clip == qc.act.clip_ratio,
+                    "cache activation grid does not match qc.act"
+                );
+            }
+        }
+        let tok_emb = self.p("tok_emb");
+        let pos_emb = self.p("pos_emb");
+        let mut x = Mat::zeros(b, cfg.d);
+        for (bi, &tok) in next.iter().enumerate() {
+            let pos = caches[bi].len();
+            for j in 0..cfg.d {
+                x[(bi, j)] = tok_emb[(tok as usize, j)] + pos_emb[(pos, j)];
+            }
+        }
+        // Scratch reused across layers and sequences (no per-row allocs
+        // in the step hot loop).
+        let max_ctx = caches.iter().map(|c| c.len()).max().unwrap() + 1;
+        let mut scores = vec![0.0f64; cfg.n_heads * max_ctx];
+        let mut rowbuf = vec![0.0f64; cfg.d];
+        let scale = 1.0 / (cfg.head_dim() as f64).sqrt();
+        for i in 0..cfg.n_layers {
+            let pfx = format!("blocks.{i}.");
+            let h = rmsnorm(&x, self.p(&format!("{pfx}ln1")));
+            let mut qkv = self
+                .linear_group(&h, &pfx, &["q_proj", "k_proj", "v_proj"], "t_attn", qc, None)
+                .into_iter();
+            let q = qkv.next().unwrap();
+            let k = qkv.next().unwrap();
+            let v = qkv.next().unwrap();
+            let mut att = Mat::zeros(b, cfg.d);
+            for bi in 0..b {
+                let t1 = caches[bi].len() + 1;
+                let lkv = &mut caches[bi].layers[i];
+                // Packed caches quantize the pushed row on its per-token
+                // grid; attention then reads every row — including this
+                // one — back through the cache (deq = fake-quant).
+                lkv.k.push(k.row(bi));
+                lkv.v.push(v.row(bi));
+                attention_decode(
+                    q.row(bi),
+                    lkv,
+                    t1,
+                    cfg.n_heads,
+                    scale,
+                    &mut scores[..cfg.n_heads * t1],
+                    &mut rowbuf,
+                    att.row_mut(bi),
+                );
+            }
+            let o =
+                self.linear_group(&att, &pfx, &["o_proj"], "t_o", qc, None).pop().unwrap();
+            x = x.add(&o);
+            self.mlp_block(&mut x, &pfx, qc, None, None);
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        let xn = rmsnorm(&x, self.p("ln_f"));
+        matmul_a_bt(&xn, self.p("lm_head"))
+    }
+
     fn forward_opts(
         &self,
         tokens: &[u8],
         qc: Option<&QuantConfig>,
         dense: Option<&HashMap<String, Mat>>,
+        probe: Option<&mut ProbeCapture>,
+    ) -> Mat {
+        self.forward_impl(tokens, qc, dense, probe, None, false)
+    }
+
+    fn forward_impl(
+        &self,
+        tokens: &[u8],
+        qc: Option<&QuantConfig>,
+        dense: Option<&HashMap<String, Mat>>,
         mut probe: Option<&mut ProbeCapture>,
+        mut cache: Option<&mut KvCache>,
+        last_only: bool,
     ) -> Mat {
         let cfg = &self.cfg;
         let s = tokens.len();
@@ -153,7 +274,20 @@ impl NativeModel {
             let q = qkv.next().unwrap();
             let mut k = qkv.next().unwrap();
             let mut v = qkv.next().unwrap();
-            if let Some(qc) = qc {
+            if let Some(cache) = cache.as_deref_mut() {
+                // Capture K/V while producing the values attention sees:
+                // the raw rows (FP cache) or their per-token fake-quant
+                // (packed cache) — bit-identical to the `kv_quant` path.
+                let mut kq = Mat::zeros(s, cfg.d);
+                let mut vq = Mat::zeros(s, cfg.d);
+                let lkv = &mut cache.layers[i];
+                for t in 0..s {
+                    lkv.k.push_fake_quant(k.row(t), kq.row_mut(t));
+                    lkv.v.push_fake_quant(v.row(t), vq.row_mut(t));
+                }
+                k = kq;
+                v = vq;
+            } else if let Some(qc) = qc {
                 k = kv_quant(&k, qc);
                 v = kv_quant(&v, qc);
             }
@@ -164,32 +298,63 @@ impl NativeModel {
             let o =
                 self.linear_group(&att, &pfx, &["o_proj"], "t_o", qc, dense).pop().unwrap();
             x = x.add(&o);
-            let h = rmsnorm(&x, self.p(&format!("{pfx}ln2")));
-            if let Some(pr) = probe.as_deref_mut() {
-                pr.mlp_in[i].push(h.clone());
-            }
-            let mut gu = self
-                .linear_group(&h, &pfx, &["gate_proj", "up_proj"], "t_mlp", qc, dense)
-                .into_iter();
-            let gate = gu.next().unwrap();
-            let up = gu.next().unwrap();
-            let mut hidden = Mat::zeros(s, cfg.ff);
-            for t in 0..s {
-                for j in 0..cfg.ff {
-                    hidden[(t, j)] = silu(gate[(t, j)]) * up[(t, j)];
-                }
-            }
-            if let Some(pr) = probe.as_deref_mut() {
-                pr.down_in[i].push(hidden.clone());
-            }
-            let down = self
-                .linear_group(&hidden, &pfx, &["down_proj"], "t_down", qc, dense)
-                .pop()
-                .unwrap();
-            x = x.add(&down);
+            let mlp_probe = probe
+                .as_deref_mut()
+                .map(|pr| (&mut pr.mlp_in[i], &mut pr.down_in[i]));
+            self.mlp_block(&mut x, &pfx, qc, dense, mlp_probe);
         }
+        if let Some(cache) = cache {
+            cache.advance(s);
+        }
+        // rmsnorm and lm_head are row-local, so projecting only the last
+        // row (prefill) yields exactly the last row of the full logits.
+        let x = if last_only { x.block(s - 1, 0, 1, cfg.d) } else { x };
         let x = rmsnorm(&x, self.p("ln_f"));
         matmul_a_bt(&x, self.p("lm_head"))
+    }
+
+    /// The MLP half of one block, updating `x` in place:
+    /// `x += down(silu(gate(h)) · up(h))` with `h = rmsnorm(x, ln2)`.
+    /// Shared by the full forward and the decode step so the layer
+    /// structure lives in one place; `probe` optionally captures the
+    /// `mlp_in`/`down_in` calibration activations.
+    fn mlp_block(
+        &self,
+        x: &mut Mat,
+        pfx: &str,
+        qc: Option<&QuantConfig>,
+        dense: Option<&HashMap<String, Mat>>,
+        probe: Option<(&mut Vec<Mat>, &mut Vec<Mat>)>,
+    ) {
+        let s = x.rows();
+        let ff = self.cfg.ff;
+        let (probe_h, probe_hidden) = match probe {
+            Some((a, b)) => (Some(a), Some(b)),
+            None => (None, None),
+        };
+        let h = rmsnorm(x, self.p(&format!("{pfx}ln2")));
+        if let Some(p) = probe_h {
+            p.push(h.clone());
+        }
+        let mut gu = self
+            .linear_group(&h, pfx, &["gate_proj", "up_proj"], "t_mlp", qc, dense)
+            .into_iter();
+        let gate = gu.next().unwrap();
+        let up = gu.next().unwrap();
+        let mut hidden = Mat::zeros(s, ff);
+        for t in 0..s {
+            for j in 0..ff {
+                hidden[(t, j)] = silu(gate[(t, j)]) * up[(t, j)];
+            }
+        }
+        if let Some(p) = probe_hidden {
+            p.push(hidden.clone());
+        }
+        let down = self
+            .linear_group(&hidden, pfx, &["down_proj"], "t_down", qc, dense)
+            .pop()
+            .unwrap();
+        x.add_in_place(&down);
     }
 
     /// One group of (possibly transformed + quantized) linears. Layers in
@@ -317,24 +482,26 @@ fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
 
 /// One attention head: the `S×hd` output block for columns
 /// `c0 .. c0 + hd` (row-major).
+///
+/// The score buffer is hoisted across rows, and row `t` touches only its
+/// `t + 1` visible keys — no `S×S` masked-score pass. Softmax over the
+/// visible prefix is bit-identical to softmax over a `−1e30`-masked full
+/// row (`exp(mask − max)` underflows to exactly `0.0`), so this is a
+/// pure-speed change.
 fn attention_head(q: &Mat, k: &Mat, v: &Mat, c0: usize, hd: usize, scale: f64) -> Vec<f64> {
     let s = q.rows();
     let mut out = vec![0.0f64; s * hd];
     let mut scores = vec![0.0f64; s];
     for t in 0..s {
         // scores over keys 0..=t
-        for (j, sc) in scores.iter_mut().enumerate().take(s) {
-            if j <= t {
-                let mut acc = 0.0;
-                for c in c0..c0 + hd {
-                    acc += q[(t, c)] * k[(j, c)];
-                }
-                *sc = acc * scale;
-            } else {
-                *sc = MASK_VALUE;
+        for (j, sc) in scores.iter_mut().enumerate().take(t + 1) {
+            let mut acc = 0.0;
+            for c in c0..c0 + hd {
+                acc += q[(t, c)] * k[(j, c)];
             }
+            *sc = acc * scale;
         }
-        softmax_row(&mut scores[..s]);
+        softmax_row(&mut scores[..t + 1]);
         let orow = &mut out[t * hd..(t + 1) * hd];
         for (j, &a) in scores.iter().enumerate().take(t + 1) {
             if a == 0.0 {
@@ -346,6 +513,61 @@ fn attention_head(q: &Mat, k: &Mat, v: &Mat, c0: usize, hd: usize, scale: f64) -
         }
     }
     out
+}
+
+/// Single-query attention for one decode step: `q` (one token's `d`-wide
+/// query) against the `t1` cached K/V rows of `kv`, writing the `d`-wide
+/// attention output into `out`.
+///
+/// Loops are ordered key-outer / head-inner so a packed cache dequantizes
+/// each K/V row exactly once per step (into `rowbuf`); per-element
+/// accumulation order matches [`attention_head`], so the result is
+/// bit-identical to the full-sequence path's last row. `scores` is the
+/// caller's reusable `n_heads·t1` buffer — this routine allocates nothing.
+#[allow(clippy::too_many_arguments)]
+fn attention_decode(
+    q: &[f64],
+    kv: &LayerKv,
+    t1: usize,
+    n_heads: usize,
+    scale: f64,
+    scores: &mut [f64],
+    rowbuf: &mut [f64],
+    out: &mut [f64],
+) {
+    let d = q.len();
+    let hd = d / n_heads;
+    debug_assert_eq!(scores.len(), n_heads * t1);
+    for j in 0..t1 {
+        let krow = kv.k.row(j, rowbuf);
+        for h in 0..n_heads {
+            let c0 = h * hd;
+            let mut acc = 0.0;
+            for c in c0..c0 + hd {
+                acc += q[c] * krow[c];
+            }
+            scores[h * t1 + j] = acc * scale;
+        }
+    }
+    for h in 0..n_heads {
+        softmax_row(&mut scores[h * t1..(h + 1) * t1]);
+    }
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for j in 0..t1 {
+        let vrow = kv.v.row(j, rowbuf);
+        for h in 0..n_heads {
+            let a = scores[h * t1 + j];
+            if a == 0.0 {
+                continue;
+            }
+            let c0 = h * hd;
+            for c in 0..hd {
+                out[c0 + c] += a * vrow[c0 + c];
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -60,6 +60,29 @@ impl Store {
         }
     }
 
+    /// Append storage for one more row of `cols` codes (zero-filled, so
+    /// nibble tail bytes stay clean), returning the new row index.
+    fn grow_row(&mut self, cols: usize) -> usize {
+        match self {
+            Store::Nibble(d) => {
+                let stride = cols.div_ceil(2);
+                let i = d.len() / stride;
+                d.resize(d.len() + stride, 0);
+                i
+            }
+            Store::Byte(d) => {
+                let i = d.len() / cols;
+                d.resize(d.len() + cols, 0);
+                i
+            }
+            Store::Wide(d) => {
+                let i = d.len() / cols;
+                d.resize(d.len() + cols, 0);
+                i
+            }
+        }
+    }
+
     fn pack_row(&mut self, i: usize, codes: &[i32]) {
         let cols = codes.len();
         match self {
@@ -189,6 +212,75 @@ impl QuantizedTensor {
         QuantizedTensor { rows, cols, scheme, store, scales, zps, row_sums }
     }
 
+    /// An empty row-growable tensor (the KV-cache decode path appends one
+    /// packed token row per [`Self::push_row`]).
+    pub fn empty(cols: usize, scheme: QScheme) -> QuantizedTensor {
+        debug_assert!(scheme.bits <= 24, "codes must fit i32 with margin");
+        QuantizedTensor {
+            rows: 0,
+            cols,
+            scheme,
+            store: Store::new(scheme, 0, cols),
+            scales: Vec::new(),
+            zps: Vec::new(),
+            row_sums: Vec::new(),
+        }
+    }
+
+    /// Quantize one activation row on its dynamic per-token grid (the
+    /// exact grid [`Self::quantize_acts`] would pick for this row) and
+    /// append the packed codes. Row-local: existing rows are untouched,
+    /// which is what makes cached decode codes stable as a sequence grows.
+    pub fn push_row(&mut self, row: &[f64], clip_ratio: f64) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        let p = per_token_params(row, self.scheme, clip_ratio);
+        let bias = storage_bias(self.scheme);
+        let mut raw = vec![0i32; self.cols];
+        let mut sum = 0i64;
+        for (o, &v) in raw.iter_mut().zip(row) {
+            *o = p.quantize(v) as i32 - bias;
+            sum += *o as i64;
+        }
+        let i = self.store.grow_row(self.cols);
+        debug_assert_eq!(i, self.rows);
+        self.store.pack_row(i, &raw);
+        self.scales.push(p.scale);
+        self.zps.push(p.zero_point as i32 - bias);
+        self.row_sums.push(sum);
+        self.rows += 1;
+    }
+
+    /// Dequantize row `i` into `out` — same per-element math as
+    /// [`Self::deq`], so the result is bit-identical to the fake-quant
+    /// value of the original row.
+    pub fn deq_row_into(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let (s, z) = (self.scales[i], self.zps[i]);
+        match &self.store {
+            Store::Nibble(data) => {
+                let stride = self.cols.div_ceil(2);
+                let rowb = &data[i * stride..(i + 1) * stride];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let b = rowb[j / 2];
+                    let c = if j % 2 == 0 { (b & 0x0F) as i32 } else { (b >> 4) as i32 };
+                    *o = (c - z) as f64 * s;
+                }
+            }
+            Store::Byte(data) => {
+                let rowb = &data[i * self.cols..(i + 1) * self.cols];
+                for (o, &c) in out.iter_mut().zip(rowb) {
+                    *o = (c as i32 - z) as f64 * s;
+                }
+            }
+            Store::Wide(data) => {
+                let rowb = &data[i * self.cols..(i + 1) * self.cols];
+                for (o, &c) in out.iter_mut().zip(rowb) {
+                    *o = (c - z) as f64 * s;
+                }
+            }
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -299,6 +391,53 @@ mod tests {
             v.unpack_row_i32(i, &mut raw);
             for &c in &raw {
                 assert!((0..16).contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn pushed_rows_match_bulk_quantization() {
+        // Growing row by row must reproduce the bulk quantizer exactly:
+        // same grids, same stored codes, same metadata — across stores,
+        // schemes, and odd widths (nibble tail bytes).
+        for bits in [4u32, 8, 12] {
+            for sym in [true, false] {
+                let scheme = if sym { QScheme::sym(bits) } else { QScheme::asym(bits) };
+                let x = random(6, 33, 42 + bits as u64 + sym as u64);
+                let bulk = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                let mut grown = QuantizedTensor::empty(33, scheme);
+                for t in 0..x.rows() {
+                    grown.push_row(x.row(t), 1.0);
+                }
+                assert_eq!(grown.rows(), 6);
+                assert_eq!(grown.deq().max_abs_diff(&bulk.deq()), 0.0, "bits {bits} sym {sym}");
+                let (gv, bv) = (grown.view(), bulk.view());
+                assert_eq!(gv.row_sums, bv.row_sums);
+                assert_eq!(gv.zps, bv.zps);
+            }
+        }
+    }
+
+    #[test]
+    fn deq_row_into_matches_full_deq() {
+        // Every store type under both biased and unbiased grids: the
+        // hand-rolled row decoder (kept allocation-free for the decode
+        // hot loop) must track `deq` — which routes through the kernel's
+        // unpack — exactly.
+        let x = random(5, 17, 7);
+        for scheme in [
+            QScheme::asym(4),
+            QScheme::sym(4),
+            QScheme::asym(8),
+            QScheme::sym(8),
+            QScheme::asym(12),
+        ] {
+            let p = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+            let full = p.deq();
+            let mut buf = vec![0.0; 17];
+            for i in 0..5 {
+                p.deq_row_into(i, &mut buf);
+                assert_eq!(buf, full.row(i), "row {i}");
             }
         }
     }

@@ -1,0 +1,171 @@
+//! Incremental-decode parity: `prefill` + `decode_step` must reproduce
+//! the full-recompute forward exactly.
+//!
+//! Every op on the decode path is row-local (embeddings, rmsnorm,
+//! linears, per-token quantization) or accumulates in the same serial
+//! order as the full-sequence path (single-query attention mirrors
+//! `attention_head`), so FP logits are *bit-exact* and packed-quantized
+//! logits match `forward_quant` to ≤1e-9 relative (integer execution is
+//! exact; only f64 rounding of identical expressions remains).
+//!
+//! CI runs this suite under `CATQUANT_THREADS=1` and `=8`: the kernels'
+//! partitionings (row-split for long sequences, channel-split for decode
+//! batches) must never change a result.
+
+use catquant::model::{KvCache, ModelConfig, NativeModel, QuantConfig};
+use catquant::quant::QScheme;
+
+const QUANT_TOL: f64 = 1e-9;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 24, vocab: 256 }
+}
+
+/// Deterministic token pattern for sequence `b`, step `s`.
+fn tok(b: usize, s: usize) -> u8 {
+    ((s * 29 + b * 97 + 3) % 251) as u8
+}
+
+/// Drive `steps` decode steps over a batch of prompts, asserting at every
+/// step that each row of the incremental logits matches the last row of
+/// the full forward on the concatenated sequence.
+fn check_decode(
+    model: &NativeModel,
+    qc: Option<&QuantConfig>,
+    prompts: &[Vec<u8>],
+    steps: usize,
+    tol: f64,
+    label: &str,
+) {
+    let full = |seq: &[u8]| match qc {
+        None => model.forward(seq),
+        Some(qc) => model.forward_quant(seq, qc),
+    };
+    let mut seqs: Vec<Vec<u8>> = prompts.to_vec();
+    let mut caches: Vec<KvCache> = Vec::new();
+    for (b, p) in prompts.iter().enumerate() {
+        let (logits, cache) = model.prefill(p, qc);
+        assert_eq!(logits.rows(), 1);
+        let want = full(p);
+        let diff = max_row_diff(logits.row(0), want.row(want.rows() - 1));
+        let denom = row_abs_max(want.row(want.rows() - 1)).max(1e-30);
+        assert!(diff / denom <= tol, "{label}: prefill b={b} rel {}", diff / denom);
+        assert_eq!(cache.len(), p.len());
+        caches.push(cache);
+    }
+    for s in 0..steps {
+        let next: Vec<u8> = (0..seqs.len()).map(|b| tok(b, s)).collect();
+        for (b, seq) in seqs.iter_mut().enumerate() {
+            seq.push(next[b]);
+        }
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let logits = model.decode_step(&mut refs, &next, qc);
+        assert_eq!(logits.rows(), seqs.len());
+        for (b, seq) in seqs.iter().enumerate() {
+            let want = full(seq);
+            let wrow = want.row(want.rows() - 1);
+            let diff = max_row_diff(logits.row(b), wrow);
+            let denom = row_abs_max(wrow).max(1e-30);
+            assert!(
+                diff / denom <= tol,
+                "{label}: step {s} b={b} (len {}) rel {}",
+                seq.len(),
+                diff / denom
+            );
+        }
+    }
+}
+
+fn max_row_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn row_abs_max(a: &[f64]) -> f64 {
+    a.iter().map(|v| v.abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn fp_decode_is_bit_exact() {
+    let model = NativeModel::init_random(tiny_cfg(), 21);
+    // Batch sizes 1, 3, and the serving default max; prompt lengths
+    // deliberately odd and ragged within a batch.
+    let batches: Vec<Vec<Vec<u8>>> = vec![
+        vec![vec![3, 1, 4, 1, 5]],
+        vec![vec![2, 7], vec![1, 8, 2, 8, 1, 8, 2], vec![9]],
+        vec![
+            vec![1, 2, 3],
+            vec![4, 5, 6, 7, 8, 9, 10],
+            vec![11],
+            vec![12, 13, 14, 15, 16],
+        ],
+    ];
+    for prompts in &batches {
+        // tol = 0.0: FP decode must be bit-identical to the full forward.
+        check_decode(&model, None, prompts, 6, 0.0, "fp");
+    }
+}
+
+#[test]
+fn quant_decode_matches_forward_quant() {
+    let model = NativeModel::init_random(tiny_cfg(), 22);
+    for bits in [4u32, 8] {
+        for sym in [false, true] {
+            let mut qc = QuantConfig::identity_for_test(&model, bits);
+            if sym {
+                qc.act.scheme = QScheme::sym(bits);
+            }
+            let label = format!("quant bits={bits} sym={sym}");
+            let batches: Vec<Vec<Vec<u8>>> = vec![
+                vec![vec![5, 9, 2, 6, 5, 3, 5]],
+                vec![vec![1, 1, 2], vec![3, 5, 8, 13, 21], vec![34, 55, 89, 144, 233, 121, 98]],
+            ];
+            for prompts in &batches {
+                check_decode(&model, Some(&qc), prompts, 5, QUANT_TOL, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_decode_at_max_batch() {
+    let model = NativeModel::init_random(tiny_cfg(), 23);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let prompts: Vec<Vec<u8>> =
+        (0..8).map(|b| (0..(b % 5 + 1)).map(|s| tok(b, s + 50)).collect()).collect();
+    check_decode(&model, Some(&qc), &prompts, 4, QUANT_TOL, "quant max-batch");
+}
+
+#[test]
+fn packed_cache_is_smaller_and_exact() {
+    // The packed KV cache stores low-bit codes, not f64 rows — and still
+    // reproduces forward_quant. Footprint: W4 codes + per-row grids vs
+    // 8-byte f64s per element.
+    let model = NativeModel::init_random(tiny_cfg(), 24);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let prompt: Vec<u8> = (0..15).map(|s| tok(0, s)).collect();
+    let (_, qcache) = model.prefill(&prompt, Some(&qc));
+    let (_, fcache) = model.prefill(&prompt, None);
+    assert!(
+        qcache.kv_bytes() * 3 < fcache.kv_bytes(),
+        "packed {} vs fp {}",
+        qcache.kv_bytes(),
+        fcache.kv_bytes()
+    );
+}
+
+#[test]
+fn prefill_then_decode_spans_full_capacity() {
+    // Decode right up to the positional budget; the last admissible step
+    // must still be exact, and the cache must then refuse more room.
+    let cfg = tiny_cfg();
+    let model = NativeModel::init_random(cfg.clone(), 25);
+    let prompt: Vec<u8> = (0..3).map(|s| tok(1, s)).collect();
+    let steps = cfg.seq - prompt.len();
+    check_decode(&model, None, &[prompt.clone()], steps, 0.0, "fp full-capacity");
+    let (_, mut cache) = model.prefill(&prompt, None);
+    for s in 0..steps {
+        let mut refs = vec![&mut cache];
+        model.decode_step(&mut refs, &[tok(0, s)], None);
+    }
+    assert!(!cache.has_room());
+}
