@@ -1,13 +1,56 @@
-//! L3 hot-path microbenches: matmul, eigh, FWHT, geometric mean, GPTQ's
-//! Cholesky. (Plain harness — criterion is not in the offline vendor set.)
+//! L3 hot-path microbenches: matmul (tiled vs the retained pre-tiling
+//! reference, serial vs dispatched), syrk covariance, eigh, FWHT,
+//! geometric mean, GPTQ's Cholesky. (Plain harness — criterion is not in
+//! the offline vendor set.)
 //!
-//! Run: `cargo bench --bench linalg_hot`
+//! Run: `cargo bench --bench linalg_hot` (full sweep) or
+//! `cargo bench --bench linalg_hot -- --quick` (CI perf smoke: runs the
+//! 512³ tiled-vs-reference A/B only and **exits nonzero if the tiled
+//! kernel is not faster** — the hard gate against silent kernel
+//! regressions).
+//!
+//! Both modes write `BENCH_linalg.json` — machine-readable records
+//! `{kernel, shape, threads, ms_per_iter, gflops, speedup}` — which CI
+//! uploads as an artifact so the perf trajectory is recorded per run.
 
 use catquant::linalg::{
     eigh, fwht_inplace, geometric_mean, matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b,
-    matmul_at_b_serial, matmul_serial, par, Cholesky, Mat, Rng,
+    matmul_at_b_serial, matmul_serial, matmul_serial_ref, par, syrk_at_a, Cholesky, Mat, Rng,
 };
 use std::time::Instant;
+
+/// One machine-readable bench record (JSON object).
+struct Rec {
+    kernel: String,
+    shape: String,
+    threads: usize,
+    ms_per_iter: f64,
+    gflops: f64,
+    /// Speedup vs this record's baseline (1.0 when it *is* the baseline).
+    speedup: f64,
+}
+
+fn write_json(path: &str, recs: &[Rec]) {
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"linalg_hot\", \"kernel\": \"{}\", \"shape\": \"{}\", \
+             \"threads\": {}, \"ms_per_iter\": {:.6}, \"gflops\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            r.kernel,
+            r.shape,
+            r.threads,
+            r.ms_per_iter,
+            r.gflops,
+            r.speedup,
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
@@ -26,11 +69,78 @@ fn random(rows: usize, cols: usize, seed: u64) -> Mat {
     Mat::from_fn(rows, cols, |_, _| rng.normal())
 }
 
+/// Tiled-vs-reference serial A/B at `n³` — the acceptance measurement
+/// (≥2× single-thread GFLOP/s at 512³) and the CI perf gate. Returns
+/// (t_ref, t_tiled).
+fn ref_vs_tiled(n: usize, iters: usize, recs: &mut Vec<Rec>) -> (f64, f64) {
+    let a = random(n, n, 21);
+    let b = random(n, n, 22);
+    let gf = 2.0 * (n as f64).powi(3) / 1e9;
+    let t_ref = time(&format!("matmul {n}³ serial REFERENCE (pre-PR)"), iters, || {
+        std::hint::black_box(matmul_serial_ref(&a, &b));
+    });
+    let t_tiled = time(&format!("matmul {n}³ serial tiled"), iters, || {
+        std::hint::black_box(matmul_serial(&a, &b));
+    });
+    println!(
+        "{:<44} {:>6.2} -> {:.2} GFLOP/s ({:.2}× vs reference)",
+        format!("  -> single-thread tiling gain {n}³"),
+        gf / t_ref,
+        gf / t_tiled,
+        t_ref / t_tiled
+    );
+    recs.push(Rec {
+        kernel: "matmul_serial_ref".into(),
+        shape: format!("{n}x{n}x{n}"),
+        threads: 1,
+        ms_per_iter: t_ref * 1e3,
+        gflops: gf / t_ref,
+        speedup: 1.0,
+    });
+    recs.push(Rec {
+        // Distinct key from the serial-vs-dispatched sweep's
+        // "matmul_serial_tiled" record: same kernel, but this row's
+        // speedup is measured against the retained reference.
+        kernel: "matmul_tiled_vs_ref".into(),
+        shape: format!("{n}x{n}x{n}"),
+        threads: 1,
+        ms_per_iter: t_tiled * 1e3,
+        gflops: gf / t_tiled,
+        speedup: t_ref / t_tiled,
+    });
+    (t_ref, t_tiled)
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let workers = par::num_threads();
+    let mut recs: Vec<Rec> = Vec::new();
     println!("== linalg hot paths ==");
-    println!("workers: {} (CATQUANT_THREADS to override)\n", par::num_threads());
+    println!("workers: {workers} (CATQUANT_THREADS to override)\n");
+
+    if quick {
+        // CI perf smoke: one 512³ tiled-vs-reference A/B, hard-gated.
+        let (t_ref, t_tiled) = ref_vs_tiled(512, 3, &mut recs);
+        write_json("BENCH_linalg.json", &recs);
+        if t_tiled >= t_ref {
+            eprintln!(
+                "PERF REGRESSION: tiled matmul 512³ ({:.1} ms) is not faster than the \
+                 reference kernel ({:.1} ms)",
+                t_tiled * 1e3,
+                t_ref * 1e3
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "perf smoke OK: tiled 512³ is {:.2}× the reference kernel",
+            t_ref / t_tiled
+        );
+        return;
+    }
+
     // Serial vs dispatched (parallel above the size threshold) A/B — the
-    // acceptance gate is ≥2× on matmul 512³ with ≥4 workers (PERF.md).
+    // acceptance gates are ≥2× single-thread from tiling at 512³ and ≥2×
+    // from threading with ≥4 workers (PERF.md).
     for &n in &[128usize, 256, 512] {
         let a = random(n, n, 1);
         let b = random(n, n, 2);
@@ -48,16 +158,61 @@ fn main() {
             gf / t_par,
             t_ser / t_par
         );
+        recs.push(Rec {
+            kernel: "matmul_serial_tiled".into(),
+            shape: format!("{n}x{n}x{n}"),
+            threads: 1,
+            ms_per_iter: t_ser * 1e3,
+            gflops: gf / t_ser,
+            speedup: 1.0,
+        });
+        recs.push(Rec {
+            kernel: "matmul_dispatched".into(),
+            shape: format!("{n}x{n}x{n}"),
+            // Effective worker count: 128³ sits below PAR_MIN_FMA and
+            // runs serial — the JSON must not attribute it to the pool.
+            threads: par::threads_for(n * n * n, n),
+            ms_per_iter: t_par * 1e3,
+            gflops: gf / t_par,
+            speedup: t_ser / t_par,
+        });
     }
+    // The single-thread tiling acceptance A/B.
+    ref_vs_tiled(512, 4, &mut recs);
     {
         let x = random(2048, 256, 3);
-        let t_ser = time("Σ accumulation  XᵀX (2048×256) serial", 8, || {
+        let gf_syrk = (2048.0 * 256.0 * 256.0) / 1e9; // full-product FLOP for comparability
+        let t_ser = time("Σ accumulation  XᵀX (2048×256) at_b serial", 8, || {
             std::hint::black_box(matmul_at_b_serial(&x, &x));
         });
-        let t_par = time("Σ accumulation  XᵀX (2048×256) dispatched", 8, || {
+        let t_full = time("Σ accumulation  XᵀX (2048×256) at_b dispatched", 8, || {
             std::hint::black_box(matmul_at_b(&x, &x));
         });
-        println!("{:<44} {:>9.2}× vs serial", "  -> XᵀX speedup", t_ser / t_par);
+        let t_syrk = time("Σ accumulation  XᵀX (2048×256) syrk", 8, || {
+            std::hint::black_box(syrk_at_a(&x));
+        });
+        println!(
+            "{:<44} {:>9.2}× vs at_b serial ({:.2}× vs at_b dispatched)",
+            "  -> syrk speedup",
+            t_ser / t_syrk,
+            t_full / t_syrk
+        );
+        recs.push(Rec {
+            kernel: "matmul_at_b".into(),
+            shape: "2048x256->256x256".into(),
+            threads: par::threads_for(2048 * 256 * 256, 256),
+            ms_per_iter: t_full * 1e3,
+            gflops: 2.0 * gf_syrk / t_full,
+            speedup: t_ser / t_full,
+        });
+        recs.push(Rec {
+            kernel: "syrk_at_a".into(),
+            shape: "2048x256->256x256".into(),
+            threads: par::threads_for(2048 * 256 * 256 / 2, 256),
+            ms_per_iter: t_syrk * 1e3,
+            gflops: 2.0 * gf_syrk / t_syrk,
+            speedup: t_ser / t_syrk,
+        });
         let w = random(256, 256, 4);
         let t_ser = time("layer fwd  X·Wᵀ (2048×256·256) serial", 8, || {
             std::hint::black_box(matmul_a_bt_serial(&x, &w));
@@ -66,19 +221,27 @@ fn main() {
             std::hint::black_box(matmul_a_bt(&x, &w));
         });
         println!("{:<44} {:>9.2}× vs serial", "  -> X·Wᵀ speedup", t_ser / t_par);
+        recs.push(Rec {
+            kernel: "matmul_a_bt".into(),
+            shape: "2048x256x256".into(),
+            threads: par::threads_for(2048 * 256 * 256, 2048),
+            ms_per_iter: t_par * 1e3,
+            gflops: 2.0 * 2048.0 * 256.0 * 256.0 / 1e9 / t_par,
+            speedup: t_ser / t_par,
+        });
     }
     for &n in &[64usize, 128, 256] {
-        let mut s = random(n + 8, n, 5);
-        s = matmul_at_b(&s, &s);
+        let g = random(n + 8, n, 5);
+        let s = syrk_at_a(&g);
         time(&format!("eigh (cyclic Jacobi) {n}×{n}"), if n > 128 { 2 } else { 6 }, || {
             std::hint::black_box(eigh(&s));
         });
     }
     {
-        let mut a = random(136, 128, 6);
-        a = matmul_at_b(&a, &a);
-        let mut b = random(136, 128, 7);
-        b = matmul_at_b(&b, &b);
+        let ga = random(136, 128, 6);
+        let a = syrk_at_a(&ga);
+        let gb = random(136, 128, 7);
+        let b = syrk_at_a(&gb);
         time("geometric mean A#B 128×128 (CAT block)", 3, || {
             std::hint::black_box(geometric_mean(&a, &b));
         });
@@ -88,8 +251,8 @@ fn main() {
     }
     {
         // A/B for the §Perf dot-product change: naive single-accumulator
-        // reduction vs the shipped 4-accumulator kernel (what
-        // matmul_a_bt / matvec use).
+        // reduction vs the shipped 4-accumulator kernel (what matvec
+        // uses; the matmul kernels moved to 4×8 register tiles).
         let mut rng = Rng::new(9);
         let a: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
@@ -141,4 +304,5 @@ fn main() {
         let per = t0.elapsed().as_secs_f64() / iters as f64;
         println!("{:<44} {:>10.3} µs/iter", "FWHT d=512", per * 1e6);
     }
+    write_json("BENCH_linalg.json", &recs);
 }

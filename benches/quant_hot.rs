@@ -1,14 +1,53 @@
 //! Quantizer hot paths: per-token activation quant, RTN, GPTQ, transform
-//! builders, and the packed-integer vs dense-f64 serving A/B.
-//! Run: `cargo bench --bench quant_hot`
+//! builders, the packed-integer vs dense-f64 serving A/B, and the
+//! persistent-panel vs unpack-per-call decode-shape A/B.
+//!
+//! Run: `cargo bench --bench quant_hot` (full) or
+//! `cargo bench --bench quant_hot -- --quick` (CI perf smoke: runs the
+//! small-m panel A/B only and exits nonzero if persistent panels are not
+//! faster than per-call unpacking).
+//!
+//! Both modes write `BENCH_quant.json` (machine-readable records; CI
+//! uploads the file as an artifact).
 
-use catquant::linalg::{matmul_a_bt, matmul_at_b, qmatmul_a_bt, Mat, Rng};
+use catquant::linalg::{
+    matmul_a_bt, qmatmul_a_bt, qmatmul_a_bt_panels, syrk_at_a, Mat, QPanels, Rng,
+};
 use catquant::quant::{
     gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, GptqConfig, QScheme,
     QuantizedTensor, WeightQuantCfg,
 };
 use catquant::transforms::{cat_block, kronecker_cat};
 use std::time::Instant;
+
+struct Rec {
+    kernel: String,
+    shape: String,
+    threads: usize,
+    ms_per_iter: f64,
+    speedup: f64,
+}
+
+fn write_json(path: &str, recs: &[Rec]) {
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"quant_hot\", \"kernel\": \"{}\", \"shape\": \"{}\", \
+             \"threads\": {}, \"ms_per_iter\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.kernel,
+            r.shape,
+            r.threads,
+            r.ms_per_iter,
+            r.speedup,
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     f();
@@ -21,8 +60,81 @@ fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Decode/prefill-shaped `qmatmul_a_bt` (small m, full output width):
+/// per-call weight unpack vs persistent panels. This isolates the
+/// persistent-panel win — the acceptance bar is ≥1.5× at small m.
+/// Returns (t_per_call, t_panels).
+fn small_m_panel_ab(
+    m: usize,
+    k: usize,
+    n: usize,
+    iters: usize,
+    recs: &mut Vec<Rec>,
+) -> (f64, f64) {
+    let mut rng = Rng::new(77 + m as u64);
+    let x = Mat::from_fn(m, k, |_, _| rng.normal());
+    let w = Mat::from_fn(n, k, |_, _| rng.normal() * 0.05);
+    let scheme = QScheme::asym(4);
+    let xq = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+    let wq = QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+    let panels: QPanels = wq.panels();
+    // Effective worker count for this shape (decode shapes sit below
+    // PAR_MIN_FMA and run serial) — what the JSON should attribute.
+    let threads = catquant::linalg::par::threads_for(m * k * n, n);
+    let t_call = time(
+        &format!("qmatmul m={m} ({k}→{n}) per-call unpack"),
+        iters,
+        || {
+            std::hint::black_box(qmatmul_a_bt(&xq.view(), &wq.view()));
+        },
+    );
+    let t_panel = time(&format!("qmatmul m={m} ({k}→{n}) persistent panels"), iters, || {
+        std::hint::black_box(qmatmul_a_bt_panels(&xq.view(), &wq.view(), &panels));
+    });
+    println!(
+        "{:<48} {:>9.2}×",
+        format!("  -> panel speedup m={m}"),
+        t_call / t_panel
+    );
+    recs.push(Rec {
+        kernel: "qmatmul_per_call".into(),
+        shape: format!("{m}x{k}x{n}"),
+        threads,
+        ms_per_iter: t_call * 1e3,
+        speedup: 1.0,
+    });
+    recs.push(Rec {
+        kernel: "qmatmul_panels".into(),
+        shape: format!("{m}x{k}x{n}"),
+        threads,
+        ms_per_iter: t_panel * 1e3,
+        speedup: t_call / t_panel,
+    });
+    (t_call, t_panel)
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut recs: Vec<Rec> = Vec::new();
     println!("== quantization hot paths ==");
+
+    if quick {
+        // CI perf smoke: decode-shaped panel A/B, gated.
+        let (t_call, t_panel) = small_m_panel_ab(4, 256, 512, 200, &mut recs);
+        write_json("BENCH_quant.json", &recs);
+        if t_panel >= t_call {
+            eprintln!(
+                "PERF REGRESSION: persistent panels ({:.3} ms) not faster than per-call \
+                 unpack ({:.3} ms) at the decode shape",
+                t_panel * 1e3,
+                t_call * 1e3
+            );
+            std::process::exit(1);
+        }
+        println!("perf smoke OK: panels are {:.2}× per-call unpack", t_call / t_panel);
+        return;
+    }
+
     let mut rng = Rng::new(1);
     let x = Mat::from_fn(2048, 256, |_, _| rng.normal());
     let per = time("per-token dyn-asym quant (2048×256, 4b)", 20, || {
@@ -43,7 +155,7 @@ fn main() {
     });
 
     let sigma = {
-        let mut s = matmul_at_b(&x, &x).scale(1.0 / 2048.0);
+        let mut s = syrk_at_a(&x).scale(1.0 / 2048.0);
         s.add_diag(0.01);
         s
     };
@@ -56,7 +168,7 @@ fn main() {
         ));
     });
 
-    let sigma_w = matmul_at_b(&w, &w);
+    let sigma_w = syrk_at_a(&w);
     time("CAT block build k=128 (d=256)", 3, || {
         std::hint::black_box(cat_block(&sigma, &sigma_w, 128, 0));
     });
@@ -73,6 +185,7 @@ fn main() {
     let q4 = quantize_weights_rtn(&w, WeightQuantCfg::minmax(4));
     let wd = q4.deq();
     let act4 = QScheme::asym(4);
+    let threads = catquant::linalg::par::threads_for(2048 * 256 * 512, 2048);
     let t_dense = time("dense: per-token quant + f64 matmul_a_bt", 10, || {
         let (xq, _) = quantize_activations_per_token(&x, act4, 1.0);
         std::hint::black_box(matmul_a_bt(&xq, &wd));
@@ -82,12 +195,49 @@ fn main() {
         std::hint::black_box(qmatmul_a_bt(&xq.view(), &q4.codes.view()));
     });
     println!("{:<48} {:>9.2}×", "  -> packed speedup vs dense", t_dense / t_packed);
+    recs.push(Rec {
+        kernel: "dense_fakequant_linear".into(),
+        shape: "2048x256x512".into(),
+        threads,
+        ms_per_iter: t_dense * 1e3,
+        speedup: 1.0,
+    });
+    recs.push(Rec {
+        kernel: "packed_qmatmul_linear".into(),
+        shape: "2048x256x512".into(),
+        threads,
+        ms_per_iter: t_packed * 1e3,
+        speedup: t_dense / t_packed,
+    });
+    let wpanels = q4.codes.panels();
+    let t_panels = time("packed + persistent panels (prefill shape)", 10, || {
+        let xq = QuantizedTensor::quantize_acts(&x, act4, 1.0);
+        std::hint::black_box(qmatmul_a_bt_panels(&xq.view(), &q4.codes.view(), &wpanels));
+    });
+    println!("{:<48} {:>9.2}×", "  -> panels speedup vs per-call", t_packed / t_panels);
+    recs.push(Rec {
+        kernel: "packed_qmatmul_panels_linear".into(),
+        shape: "2048x256x512".into(),
+        threads,
+        ms_per_iter: t_panels * 1e3,
+        speedup: t_dense / t_panels,
+    });
     let f64_bytes = w.rows() * w.cols() * 8;
     println!(
-        "{:<48} {:>7} B vs {} B f64 ({:.1}× smaller)",
+        "{:<48} {:>7} B vs {} B f64 ({:.1}× smaller; +{} B panels)",
         "  -> W4 packed weight footprint",
         q4.codes.packed_bytes(),
         f64_bytes,
-        f64_bytes as f64 / q4.codes.packed_bytes() as f64
+        f64_bytes as f64 / q4.codes.packed_bytes() as f64,
+        wpanels.bytes(),
     );
+
+    // ---- persistent panels at decode/prefill shapes -------------------
+    // The small-m path used to unpack (or stream-unpack) W on every
+    // call; panels amortize that to zero. Acceptance: ≥1.5× at small m.
+    println!("\n== persistent panels vs per-call unpack (W4A4, k=256, n=512) ==");
+    for m in [1usize, 4, 16] {
+        small_m_panel_ab(m, 256, 512, 400 / m.max(1), &mut recs);
+    }
+    write_json("BENCH_quant.json", &recs);
 }

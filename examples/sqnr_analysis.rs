@@ -10,7 +10,7 @@
 //! ```
 
 use catquant::calib::{synth_suite, SynthLayer};
-use catquant::linalg::{matmul_at_b, Mat};
+use catquant::linalg::{syrk_at_a, Mat};
 use catquant::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
 use catquant::sqnr::{
     alignment_data, approx_sqnr_joint, concentration_act, concentration_weights, db,
@@ -29,7 +29,7 @@ fn main() {
     );
     for layer in synth_suite(d, 4096, 42) {
         let SynthLayer { name, x, w, .. } = layer;
-        let sigma = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma = syrk_at_a(&x).scale(1.0 / x.rows() as f64);
         println!(
             "{:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>9.1} {:>9.1}",
             name,
@@ -44,8 +44,8 @@ fn main() {
 
     println!("\n-- what transforms fix (pathological layer, W4A4) --");
     let layer = synth_suite(d, 4096, 42).pop().unwrap();
-    let sigma_x = matmul_at_b(&layer.x, &layer.x).scale(1.0 / layer.x.rows() as f64);
-    let sigma_w = matmul_at_b(&layer.w, &layer.w);
+    let sigma_x = syrk_at_a(&layer.x).scale(1.0 / layer.x.rows() as f64);
+    let sigma_w = syrk_at_a(&layer.w);
     let configs: Vec<(&str, Transform)> = vec![
         ("identity", Transform::identity(d)),
         (

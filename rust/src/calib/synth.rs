@@ -162,7 +162,7 @@ mod tests {
     #[test]
     fn misaligned_layer_has_alignment_headroom() {
         let l = synth_layer(SynthSpec::Misaligned, 32, 2048, 3);
-        let sigma = crate::linalg::matmul_at_b(&l.x, &l.x).scale(1.0 / l.x.rows() as f64);
+        let sigma = crate::linalg::syrk_at_a(&l.x).scale(1.0 / l.x.rows() as f64);
         let a = alignment_data(&l.x, &l.w);
         let amax = max_alignment(&sigma, &l.w);
         // Figure 5's point: ≥10 dB of headroom on misaligned layers.

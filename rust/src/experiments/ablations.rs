@@ -205,7 +205,7 @@ fn sum_wtw(ws: &[Mat]) -> Mat {
     let d = ws[0].cols();
     let mut s = Mat::zeros(d, d);
     for w in ws {
-        s.add_in_place(&crate::linalg::matmul_at_b(w, w));
+        s.add_in_place(&crate::linalg::syrk_at_a(w));
     }
     s
 }

@@ -78,9 +78,8 @@ pub fn run_fig6(manifest: &Manifest, models: &[&str], seed: u64) -> Result<Vec<F
     // benign (≈2 dB alignment headroom — Figure 5), so the crossover
     // needs ≥12 dB of combined headroom, which these layers have.
     for layer in crate::calib::synth_suite(128, 4096, seed ^ 0x5717) {
-        let sigma_x = crate::linalg::matmul_at_b(&layer.x, &layer.x)
-            .scale(1.0 / layer.x.rows() as f64);
-        let sigma_w = crate::linalg::matmul_at_b(&layer.w, &layer.w);
+        let sigma_x = crate::linalg::syrk_at_a(&layer.x).scale(1.0 / layer.x.rows() as f64);
+        let sigma_w = crate::linalg::syrk_at_a(&layer.w);
         let mut series = Vec::new();
         for kind in KINDS {
             let ws = [&layer.w];

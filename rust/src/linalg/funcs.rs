@@ -67,12 +67,12 @@ pub fn geometric_mean(a: &Mat, b: &Mat) -> Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul_at_b, Rng};
+    use crate::linalg::{syrk_at_a, Rng};
 
     fn random_spd(n: usize, seed: u64) -> Mat {
         let mut rng = Rng::new(seed);
         let g = Mat::from_fn(n + 8, n, |_, _| rng.normal());
-        let mut s = matmul_at_b(&g, &g).scale(1.0 / (n + 8) as f64);
+        let mut s = syrk_at_a(&g).scale(1.0 / (n + 8) as f64);
         s.add_diag(0.05);
         s
     }

@@ -1,7 +1,9 @@
 //! Dense row-major `f64` matrix.
 
+use super::matmul::BtPanels;
 use std::fmt;
 use std::ops::{Index, IndexMut};
+use std::sync::OnceLock;
 
 /// Dense row-major matrix of `f64`.
 ///
@@ -9,17 +11,62 @@ use std::ops::{Index, IndexMut};
 /// quantizer inputs. It is deliberately simple — contiguous storage,
 /// explicit loops — so the hot paths ([`crate::linalg::matmul`],
 /// [`crate::linalg::eigh`]) stay easy to profile and optimize.
-#[derive(Clone, PartialEq)]
+///
+/// Matrices used repeatedly as the right operand of GEMV-shaped
+/// `A · Bᵀ` products (weights, transforms on the decode path) lazily
+/// cache a packed-panel copy of themselves behind a `OnceLock`
+/// ([`Self::bt_panels`]); every `&mut` accessor invalidates it, so a
+/// stale panel can never be read.
 pub struct Mat {
     rows: usize,
     cols: usize,
     data: Vec<f64>,
+    /// Lazily packed `A·Bᵀ` panels (see `matmul::BtPanels`). Not part of
+    /// the value: cleared on clone and on any mutable access.
+    bt_cache: OnceLock<BtPanels>,
+}
+
+impl Clone for Mat {
+    fn clone(&self) -> Mat {
+        Mat::new_raw(self.rows, self.cols, self.data.clone())
+    }
+}
+
+impl PartialEq for Mat {
+    fn eq(&self, other: &Mat) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.data == other.data
+    }
 }
 
 impl Mat {
+    /// Internal constructor (fresh, empty panel cache).
+    #[inline]
+    fn new_raw(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        Mat { rows, cols, data, bt_cache: OnceLock::new() }
+    }
+
+    /// Drop the cached panels — called by every `&mut` accessor so a
+    /// mutated matrix can never serve stale packed data.
+    #[inline]
+    fn touch(&mut self) {
+        self.bt_cache.take();
+    }
+
+    /// This matrix's rows packed into `NR`-wide panels for the
+    /// GEMV-shaped `A · Bᵀ` kernel, built once on first use (see
+    /// `linalg::par::matmul_a_bt_ct_panels_mt`).
+    pub(crate) fn bt_panels(&self) -> &BtPanels {
+        self.bt_cache.get_or_init(|| BtPanels::pack(self))
+    }
+
+    /// Bytes held by the packed-panel cache (0 until first GEMV use).
+    pub fn panel_cache_bytes(&self) -> usize {
+        self.bt_cache.get().map_or(0, |p| p.bytes())
+    }
+
     /// Zero matrix of shape `rows × cols`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat::new_raw(rows, cols, vec![0.0; rows * cols])
     }
 
     /// Identity matrix of size `n`.
@@ -39,13 +86,13 @@ impl Mat {
                 data.push(f(i, j));
             }
         }
-        Mat { rows, cols, data }
+        Mat::new_raw(rows, cols, data)
     }
 
     /// Wrap an existing row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
-        Mat { rows, cols, data }
+        Mat::new_raw(rows, cols, data)
     }
 
     /// Diagonal matrix from a vector.
@@ -82,6 +129,7 @@ impl Mat {
     /// Mutably borrow the underlying row-major buffer.
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        self.touch();
         &mut self.data
     }
 
@@ -94,6 +142,7 @@ impl Mat {
     /// Mutably borrow row `i`.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        self.touch();
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
@@ -115,23 +164,20 @@ impl Mat {
 
     /// Elementwise map into a new matrix.
     pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
-        Mat {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().map(|&v| f(v)).collect(),
-        }
+        Mat::new_raw(self.rows, self.cols, self.data.iter().map(|&v| f(v)).collect())
     }
 
     /// `self + other`.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        Mat::new_raw(self.rows, self.cols, data)
     }
 
     /// `self += other` without allocating (streaming accumulators).
     pub fn add_in_place(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.touch();
         for (a, b) in self.data.iter_mut().zip(&other.data) {
             *a += b;
         }
@@ -141,7 +187,7 @@ impl Mat {
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
-        Mat { rows: self.rows, cols: self.cols, data }
+        Mat::new_raw(self.rows, self.cols, data)
     }
 
     /// `self * s` (scalar).
@@ -219,7 +265,7 @@ impl Mat {
     /// Build from an `f32` row-major buffer.
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
         assert_eq!(data.len(), rows * cols);
-        Mat { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+        Mat::new_raw(rows, cols, data.iter().map(|&v| v as f64).collect())
     }
 }
 
@@ -236,6 +282,7 @@ impl IndexMut<(usize, usize)> for Mat {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
+        self.touch();
         &mut self.data[i * self.cols + j]
     }
 }

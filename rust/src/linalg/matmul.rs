@@ -1,104 +1,462 @@
-//! Blocked matrix multiplication with threaded dispatch.
+//! Register-tiled matrix multiplication with threaded dispatch.
 //!
-//! The `f64` analysis path uses a straightforward i-k-j loop order (the
-//! inner loop is a contiguous AXPY over the output row, which LLVM
-//! auto-vectorizes) with k-blocking for cache reuse. This is the hot path
-//! of covariance estimation, GPTQ and the transform builders; see
-//! `benches/linalg_hot.rs` and PERF.md.
+//! Since PR 4 the `f64` kernels are 4×8 *register-tiled* micro-kernels:
+//! each output tile keeps one accumulator per element in registers and
+//! walks `k` sequentially, with the right-hand operand packed into
+//! contiguous `NR`-wide panels per `KC` k-block (`matmul`,
+//! `matmul_a_bt`) or read as contiguous row slices (`matmul_at_b`,
+//! [`syrk_at_a`]). The per-element accumulation order is *ascending `k`*
+//! everywhere — identical to the naive triple loop and to the pre-tiling
+//! AXPY kernel (retained as [`matmul_serial_ref`], the perf baseline CI's
+//! perf-smoke job gates against) — so tiling is a pure-speed change:
+//! tiled, reference and naive results are bit-equal, and the serial /
+//! parallel / GEMV-partitioned variants of one kernel agree exactly.
 //!
 //! Every public kernel here is a *dispatcher*: below
 //! [`par::PAR_MIN_FMA`](super::par::PAR_MIN_FMA) fused multiply-adds it
 //! runs the serial kernel inline; above it, output rows are partitioned
 //! across a scoped thread pool ([`super::par`]). The split is over output
-//! rows only and each row keeps the exact serial accumulation order, so
-//! serial and parallel results are bit-identical — the property tests in
-//! `rust/tests/linalg_par_props.rs` pin this down.
+//! rows only and each element keeps the ascending-`k` accumulation
+//! order, so serial and parallel results are bit-identical — the
+//! property tests in `rust/tests/linalg_par_props.rs` and
+//! `rust/tests/kernel_tile_props.rs` pin this at exactly `0.0`.
+//!
+//! The old `if aik == 0.0 { continue; }` zero-skip branches are gone:
+//! on dense data they were a mispredicted branch per FMA and made kernel
+//! timing data-dependent (no sparse fast path is retained — the bench
+//! showed no shape in the pipeline where it paid; see PERF.md).
 
 use super::{par, Mat};
 
 const KC: usize = 256; // k-panel kept hot in L1/L2
 
-/// Compute output rows `r0 .. r0 + out.len()/b.cols()` of `C = A · B`
-/// into `out` (row-major, zero-initialized). Shared by the serial and
-/// parallel paths so both accumulate in the same order.
-pub(crate) fn matmul_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
-    if out.is_empty() {
-        return;
+/// Register-tile height (output rows per micro-kernel call).
+pub(crate) const MR: usize = 4;
+
+/// Register-tile width (output columns per micro-kernel call; one packed
+/// panel lane).
+pub(crate) const NR: usize = 8;
+
+// ---------------------------------------------------------------------
+// Persistent packed panels for `C = A · Bᵀ` right-hand operands
+// ---------------------------------------------------------------------
+
+/// `B`'s rows packed into zero-padded `NR`-channel panels for the
+/// GEMV-shaped `A · Bᵀ` kernel: panel `p` holds channels
+/// `p·NR .. p·NR + NR`, laid out `panel[kk·NR + c] = b[p·NR + c][kk]`
+/// so the micro-kernel's inner loop reads one contiguous `NR`-wide lane
+/// per `k` step.
+///
+/// Static operands (model weights, transforms) build this **once** —
+/// lazily, behind [`Mat::bt_panels`]'s `OnceLock` — and every decode
+/// step reuses it; packing per call would cost as much as the GEMV
+/// itself at batch 1. The packed values are exact copies, so the panel
+/// path is bit-identical to the unpacked one.
+#[derive(Clone)]
+pub(crate) struct BtPanels {
+    k: usize,
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl BtPanels {
+    pub(crate) fn pack(b: &Mat) -> BtPanels {
+        let (n, k) = (b.rows(), b.cols());
+        let npanels = n.div_ceil(NR);
+        let mut data = vec![0.0f64; npanels * k * NR];
+        if k > 0 {
+            for (p, pan) in data.chunks_exact_mut(k * NR).enumerate() {
+                let w = NR.min(n - p * NR);
+                for c in 0..w {
+                    let brow = b.row(p * NR + c);
+                    for (kk, &v) in brow.iter().enumerate() {
+                        pan[kk * NR + c] = v;
+                    }
+                }
+            }
+        }
+        BtPanels { k, n, data }
     }
-    let (k, n) = (a.cols(), b.cols());
-    let rows = out.len() / n;
-    for k0 in (0..k).step_by(KC) {
-        let k1 = (k0 + KC).min(k);
-        for i in 0..rows {
-            let arow = a.row(r0 + i);
-            let crow = &mut out[i * n..(i + 1) * n];
-            for kk in k0..k1 {
-                let aik = arow[kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(kk);
-                // contiguous AXPY: c[i, :] += a[i, k] * b[k, :]
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
+
+    /// Panel `p` (length `k·NR`).
+    #[inline]
+    pub(crate) fn panel(&self, p: usize) -> &[f64] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+
+    pub(crate) fn k(&self) -> usize {
+        self.k
+    }
+
+    pub(crate) fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the packed panels.
+    pub(crate) fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Micro-kernels (shared by matmul / matmul_a_bt / the panel GEMV path)
+// ---------------------------------------------------------------------
+
+/// 4×NR register-tile micro-kernel over a packed panel:
+/// `acc[r][c] += Σ_kk a_r[kk] · panel[kk·NR + c]`, `kk` ascending. The
+/// 32 accumulators live in registers; the panel row is one contiguous
+/// `NR`-wide load per step.
+#[inline]
+fn mk4(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], panel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(panel.len() % NR, 0);
+    debug_assert_eq!(a0.len(), panel.len() / NR);
+    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+        // Fixed-size view: compile-time length, so the c-loop fully
+        // unrolls and bounds checks vanish.
+        let brow: &[f64; NR] = brow.try_into().unwrap();
+        let x = [a0[kk], a1[kk], a2[kk], a3[kk]];
+        for (r, xr) in x.iter().enumerate() {
+            for (c, &bv) in brow.iter().enumerate() {
+                acc[r][c] += xr * bv;
             }
         }
     }
 }
 
+/// Single-row variant of [`mk4`] (tile-height remainders): NR
+/// independent accumulator chains, `kk` ascending.
+#[inline]
+fn mk1(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+    debug_assert_eq!(a0.len(), panel.len() / NR);
+    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+        let brow: &[f64; NR] = brow.try_into().unwrap();
+        let x = a0[kk];
+        for (c, &bv) in brow.iter().enumerate() {
+            acc[c] += x * bv;
+        }
+    }
+}
+
+/// Load the `w`-wide live part of an output tile into `acc` (the k-block
+/// loop stores and reloads partial sums; an f64 round-trip through memory
+/// is exact, so blocking never perturbs the ascending-`k` order).
+#[inline]
+fn load_acc(out: &[f64], n: usize, i0: usize, j0: usize, w: usize, acc: &mut [[f64; NR]; MR]) {
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let base = (i0 + r) * n + j0;
+        accr[..w].copy_from_slice(&out[base..base + w]);
+    }
+}
+
+/// Store the `w`-wide live part of an output tile back (pad lanes are
+/// never written).
+#[inline]
+fn store_acc(out: &mut [f64], n: usize, i0: usize, j0: usize, w: usize, acc: &[[f64; NR]; MR]) {
+    for (r, accr) in acc.iter().enumerate() {
+        let base = (i0 + r) * n + j0;
+        out[base..base + w].copy_from_slice(&accr[..w]);
+    }
+}
+
+/// Pack `panel[(kk−k0)·NR + c] = b[kk][j0 + c]` (the `C = A·B` layout),
+/// zero-padding columns past `b.cols()`.
+fn pack_cols(b: &Mat, k0: usize, k1: usize, j0: usize, panel: &mut [f64]) {
+    let w = NR.min(b.cols() - j0);
+    for (kk, prow) in (k0..k1).zip(panel.chunks_exact_mut(NR)) {
+        let brow = &b.row(kk)[j0..j0 + w];
+        prow[..w].copy_from_slice(brow);
+        for p in prow[w..].iter_mut() {
+            *p = 0.0;
+        }
+    }
+}
+
+/// Pack `panel[(kk−k0)·NR + c] = b[j0 + c][kk]` (the `C = A·Bᵀ` layout:
+/// NR weight rows interleaved), zero-padding rows past `b.rows()`.
+fn pack_rows(b: &Mat, k0: usize, k1: usize, j0: usize, panel: &mut [f64]) {
+    let w = NR.min(b.rows() - j0);
+    if w < NR {
+        for prow in panel.chunks_exact_mut(NR) {
+            for p in prow[w..].iter_mut() {
+                *p = 0.0;
+            }
+        }
+    }
+    for c in 0..w {
+        let brow = &b.row(j0 + c)[k0..k1];
+        for (kk, &v) in brow.iter().enumerate() {
+            panel[kk * NR + c] = v;
+        }
+    }
+}
+
+/// Shared tiled-GEMM row kernel: output rows `r0 ..` of a product whose
+/// right operand packs into `NR`-wide panels via `pack` (`pack_cols` for
+/// `A·B`, `pack_rows` for `A·Bᵀ`). `n` is the output width.
+fn gemm_tiled_rows(
+    a: &Mat,
+    b: &Mat,
+    n: usize,
+    pack: fn(&Mat, usize, usize, usize, &mut [f64]),
+    r0: usize,
+    out: &mut [f64],
+) {
+    if out.is_empty() {
+        return;
+    }
+    let k = a.cols();
+    let rows = out.len() / n;
+    let i_main = rows - rows % MR;
+    par::with_scratch_f64(KC * NR, |scratch| {
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            let panel = &mut scratch[..(k1 - k0) * NR];
+            let mut j0 = 0;
+            while j0 < n {
+                let w = NR.min(n - j0);
+                pack(b, k0, k1, j0, panel);
+                let mut i0 = 0;
+                while i0 < i_main {
+                    let mut acc = [[0.0f64; NR]; MR];
+                    load_acc(out, n, i0, j0, w, &mut acc);
+                    mk4(
+                        &a.row(r0 + i0)[k0..k1],
+                        &a.row(r0 + i0 + 1)[k0..k1],
+                        &a.row(r0 + i0 + 2)[k0..k1],
+                        &a.row(r0 + i0 + 3)[k0..k1],
+                        panel,
+                        &mut acc,
+                    );
+                    store_acc(out, n, i0, j0, w, &acc);
+                    i0 += MR;
+                }
+                for i in i_main..rows {
+                    let mut acc = [0.0f64; NR];
+                    acc[..w].copy_from_slice(&out[i * n + j0..i * n + j0 + w]);
+                    mk1(&a.row(r0 + i)[k0..k1], panel, &mut acc);
+                    out[i * n + j0..i * n + j0 + w].copy_from_slice(&acc[..w]);
+                }
+                j0 += w;
+            }
+        }
+    });
+}
+
+/// Compute output rows `r0 .. r0 + out.len()/b.cols()` of `C = A · B`
+/// into `out` (row-major, zero-initialized). Shared by the serial and
+/// parallel paths so both accumulate in the same order.
+pub(crate) fn matmul_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+    gemm_tiled_rows(a, b, b.cols(), pack_cols, r0, out);
+}
+
+/// Output rows of `C = A · Bᵀ` (row `r0 + i` of `A` dotted with every row
+/// of `B`), register-tiled over packed weight-row panels.
+pub(crate) fn matmul_a_bt_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+    gemm_tiled_rows(a, b, b.rows(), pack_rows, r0, out);
+}
+
 /// Output rows of `C = Aᵀ · B`: row `i` of `C` is column `r0 + i` of `A`
-/// against all of `B`, accumulated in the serial `kk` order.
+/// against all of `B`. Both operands are read as contiguous row slices
+/// per `kk` (no packing needed); full tiles run the register
+/// micro-kernel, remainders accumulate in place — every element in
+/// ascending-`kk` order.
 pub(crate) fn matmul_at_b_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
     if out.is_empty() {
         return;
     }
     let (k, n) = (a.rows(), b.cols());
+    let m = a.cols();
     let rows = out.len() / n;
-    for kk in 0..k {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for i in 0..rows {
-            let aik = arow[r0 + i];
-            if aik == 0.0 {
-                continue;
+    let i_main = rows - rows % MR;
+    let j_main = n - n % NR;
+    let ad = a.as_slice();
+    let bd = b.as_slice();
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        // Full MR×NR register tiles.
+        let mut i0 = 0;
+        while i0 < i_main {
+            let c0 = r0 + i0;
+            let mut j0 = 0;
+            while j0 < j_main {
+                let mut acc = [[0.0f64; NR]; MR];
+                load_acc(out, n, i0, j0, NR, &mut acc);
+                for kk in k0..k1 {
+                    let arow: &[f64; MR] =
+                        (&ad[kk * m + c0..kk * m + c0 + MR]).try_into().unwrap();
+                    let brow: &[f64; NR] =
+                        (&bd[kk * n + j0..kk * n + j0 + NR]).try_into().unwrap();
+                    for (r, &xr) in arow.iter().enumerate() {
+                        for (c, &bv) in brow.iter().enumerate() {
+                            acc[r][c] += xr * bv;
+                        }
+                    }
+                }
+                store_acc(out, n, i0, j0, NR, &acc);
+                j0 += NR;
             }
+            i0 += MR;
+        }
+        // Tile-height remainder: AXPY across the full width.
+        for i in i_main..rows {
+            let gi = r0 + i;
             let crow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+            for kk in k0..k1 {
+                let x = ad[kk * m + gi];
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (cj, &bv) in crow.iter_mut().zip(brow) {
+                    *cj += x * bv;
+                }
+            }
+        }
+        // Tile-width remainder for the main rows.
+        if j_main < n {
+            for kk in k0..k1 {
+                let arow = &ad[kk * m..(kk + 1) * m];
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for i in 0..i_main {
+                    let x = arow[r0 + i];
+                    let crow = &mut out[i * n..(i + 1) * n];
+                    for (cj, &bv) in crow[j_main..].iter_mut().zip(&brow[j_main..]) {
+                        *cj += x * bv;
+                    }
+                }
             }
         }
     }
 }
 
-/// Output rows of `C = A · Bᵀ` (row `r0 + i` of `A` dotted with every row
-/// of `B`).
-pub(crate) fn matmul_a_bt_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
+/// Output rows `r0 ..` of the symmetric product `Σ = AᵀA`, upper
+/// triangle only (panel-aligned: the handful of lower-triangle elements
+/// inside the diagonal-straddling tile are computed too — their values
+/// are the symmetric ones, and [`syrk_at_a`]'s mirror pass overwrites
+/// them with bit-identical copies). Per-element math and order match
+/// [`matmul_at_b_rows`] exactly.
+pub(crate) fn syrk_rows(a: &Mat, r0: usize, out: &mut [f64]) {
     if out.is_empty() {
         return;
     }
-    let n = b.rows();
-    let rows = out.len() / n;
-    for i in 0..rows {
-        let arow = a.row(r0 + i);
-        let crow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            crow[j] = dot(arow, b.row(j));
+    let (k, m) = (a.rows(), a.cols());
+    let rows = out.len() / m;
+    let ad = a.as_slice();
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = MR.min(rows - i0);
+            let gi = r0 + i0;
+            let mut j0 = (gi / NR) * NR;
+            while j0 < m {
+                let w = NR.min(m - j0);
+                if mr == MR && w == NR {
+                    let mut acc = [[0.0f64; NR]; MR];
+                    load_acc(out, m, i0, j0, NR, &mut acc);
+                    for kk in k0..k1 {
+                        let arow = &ad[kk * m..(kk + 1) * m];
+                        let av: &[f64; MR] = (&arow[gi..gi + MR]).try_into().unwrap();
+                        let bv: &[f64; NR] = (&arow[j0..j0 + NR]).try_into().unwrap();
+                        for (r, &xr) in av.iter().enumerate() {
+                            for (c, &b) in bv.iter().enumerate() {
+                                acc[r][c] += xr * b;
+                            }
+                        }
+                    }
+                    store_acc(out, m, i0, j0, NR, &acc);
+                } else {
+                    for kk in k0..k1 {
+                        let arow = &ad[kk * m..(kk + 1) * m];
+                        for r in 0..mr {
+                            let x = arow[gi + r];
+                            let crow = &mut out[(i0 + r) * m + j0..(i0 + r) * m + j0 + w];
+                            for (cj, &b) in crow.iter_mut().zip(&arow[j0..j0 + w]) {
+                                *cj += x * b;
+                            }
+                        }
+                    }
+                }
+                j0 += w;
+            }
+            i0 += mr;
         }
     }
 }
 
 /// Rows `j0 ..` of `Cᵀ` for the decode/GEMV shape of `C = A · Bᵀ`: row
-/// `j` of `Cᵀ` is `b.row(j)` dotted with every row of `A`. Each output
-/// element is the same `dot` as [`matmul_a_bt_rows`] computes, so the
-/// two partitionings are bit-identical.
+/// `j` of `Cᵀ` is `b.row(j)` against every row of `A`, each element a
+/// single ascending-`k` accumulator — the exact per-element order of
+/// [`matmul_a_bt_rows`], so the two partitionings are bit-identical.
+/// Channels process in NR-wide groups (NR independent accumulator
+/// chains per activation row).
 pub(crate) fn matmul_a_bt_ct_rows(a: &Mat, b: &Mat, j0: usize, out: &mut [f64]) {
     let m = a.rows();
-    for (jj, orow) in out.chunks_mut(m).enumerate() {
-        let brow = b.row(j0 + jj);
-        for (i, o) in orow.iter_mut().enumerate() {
-            *o = dot(a.row(i), brow);
+    if m == 0 || out.is_empty() {
+        return;
+    }
+    let k = a.cols();
+    let nchunk = out.len() / m;
+    let mut jj = 0;
+    while jj < nchunk {
+        let w = NR.min(nchunk - jj);
+        // Pad lanes repeat channel 0: computed, never stored.
+        let mut brs: [&[f64]; NR] = [b.row(j0 + jj); NR];
+        for (c, slot) in brs.iter_mut().enumerate().take(w) {
+            *slot = b.row(j0 + jj + c);
         }
+        for i in 0..m {
+            let arow = a.row(i);
+            let mut acc = [0.0f64; NR];
+            for (kk, &x) in arow.iter().enumerate().take(k) {
+                for (av, br) in acc.iter_mut().zip(&brs) {
+                    *av += x * br[kk];
+                }
+            }
+            for (c, &av) in acc.iter().enumerate().take(w) {
+                out[(jj + c) * m + i] = av;
+            }
+        }
+        jj += w;
+    }
+}
+
+/// [`matmul_a_bt_ct_rows`] over pre-packed persistent panels
+/// ([`BtPanels`]): the per-`k` loads become contiguous `NR`-wide lanes
+/// and no packing happens per call. Bit-identical to the unpacked path
+/// (the panels hold exact copies, per-element order is unchanged).
+pub(crate) fn matmul_a_bt_ct_rows_panel(a: &Mat, bp: &BtPanels, j0: usize, out: &mut [f64]) {
+    let m = a.rows();
+    if m == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(a.cols(), bp.k());
+    let nchunk = out.len() / m;
+    let i_main = m - m % MR;
+    let mut j = j0; // absolute output channel
+    let jend = (j0 + nchunk).min(bp.n());
+    while j < jend {
+        let p = j / NR;
+        let cend = ((p + 1) * NR).min(jend);
+        let pan = bp.panel(p);
+        let c_lo = j - p * NR;
+        let width = cend - j;
+        let mut i0 = 0;
+        while i0 < i_main {
+            let mut acc = [[0.0f64; NR]; MR];
+            mk4(a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3), pan, &mut acc);
+            for (r, accr) in acc.iter().enumerate() {
+                for c in 0..width {
+                    out[(j - j0 + c) * m + i0 + r] = accr[c_lo + c];
+                }
+            }
+            i0 += MR;
+        }
+        for i in i_main..m {
+            let mut acc = [0.0f64; NR];
+            mk1(a.row(i), pan, &mut acc);
+            for c in 0..width {
+                out[(j - j0 + c) * m + i] = acc[c_lo + c];
+            }
+        }
+        j = cend;
     }
 }
 
@@ -106,9 +464,13 @@ pub(crate) fn matmul_a_bt_ct_rows(a: &Mat, b: &Mat, j0: usize, out: &mut [f64]) 
 /// output channel) back into `C` (`m × n`). Shared by the f64 and
 /// integer GEMV-shaped kernels.
 pub(crate) fn transpose_ct_into(ct: &[f64], m: usize, c: &mut Mat) {
+    let n = c.cols();
+    // One slice borrow (= one panel-cache invalidation), not n·m
+    // per-element `IndexMut` calls in the decode hot loop.
+    let data = c.as_mut_slice();
     for (j, crow) in ct.chunks(m).enumerate() {
         for (i, &v) in crow.iter().enumerate() {
-            c[(i, j)] = v;
+            data[i * n + j] = v;
         }
     }
 }
@@ -153,10 +515,37 @@ pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// The pre-tiling serial `C = A · B` kernel (i-k-j AXPY with k-blocking),
+/// retained as the perf baseline: `benches/linalg_hot.rs` A/Bs the tiled
+/// kernel against it and CI's perf-smoke job fails if tiling ever stops
+/// paying. Per-element accumulation is ascending `k`, same as the tiled
+/// kernel, so the two are bit-equal (asserted in
+/// `rust/tests/kernel_tile_props.rs`).
+pub fn matmul_serial_ref(a: &Mat, b: &Mat) -> Mat {
+    assert_matmul_shapes(a, b);
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    let out = c.as_mut_slice();
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let x = arow[kk];
+                for (cj, &bv) in crow.iter_mut().zip(b.row(kk)) {
+                    *cj += x * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
 /// `C = Aᵀ · B` without materializing the transpose.
 ///
-/// Used for covariance accumulation `Σ = Xᵀ X` where `X` is
-/// `tokens × dim` (tall-skinny).
+/// Used for covariance-style products over *distinct* operands; the
+/// self-product `Σ = XᵀX` has the cheaper [`syrk_at_a`].
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
@@ -176,15 +565,44 @@ pub fn matmul_at_b_serial(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// Symmetric self-product `Σ = AᵀA` (the covariance accumulation shape:
+/// `A` is `tokens × dim`). Computes the upper triangle only and mirrors
+/// it — half the FLOPs of `matmul_at_b(a, a)` — and is **bit-identical**
+/// to it: upper-triangle elements accumulate in the same ascending-`k`
+/// order, and `Σ[j][i] = Σ[i][j]` holds exactly in f64 (products
+/// commute, sums share an order).
+pub fn syrk_at_a(a: &Mat) -> Mat {
+    let (k, m) = (a.rows(), a.cols());
+    let mut c = Mat::zeros(m, m);
+    // ~Half the FMAs of the full rectangular product.
+    let work = k.saturating_mul(m).saturating_mul(m) / 2;
+    let threads = par::threads_for(work, m);
+    if threads > 1 {
+        par::syrk_mt(a, threads, &mut c);
+    } else {
+        syrk_rows(a, 0, c.as_mut_slice());
+    }
+    // Mirror the upper triangle into the lower (single slice borrow —
+    // no per-element cache invalidation).
+    let data = c.as_mut_slice();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            data[j * m + i] = data[i * m + j];
+        }
+    }
+    c
+}
+
 /// Four-accumulator dot product.
 ///
 /// A naive `acc += a[i]*b[i]` loop cannot be auto-vectorized (FP addition
 /// is not associative, and Rust does not reorder it), so it runs at ~1
 /// FLOP/cycle. Splitting the reduction across four independent
 /// accumulators both breaks the dependency chain and lets LLVM emit SIMD
-/// lanes — the §Perf pass measured ~3–4× on this, the forward/eval hot
-/// path. (The summation-order change perturbs results at the 1e-16
-/// relative level only.)
+/// lanes — the §Perf pass measured ~3–4× on this. Still used by
+/// [`matvec`]; the matmul kernels moved to register tiles (which get the
+/// same independence from 32 per-element accumulators without changing
+/// any element's accumulation order).
 #[inline]
 pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -214,18 +632,18 @@ pub(crate) const GEMV_MAX_ROWS: usize = 32;
 /// `C = A · Bᵀ` without materializing the transpose.
 ///
 /// This is the layout of a linear layer (`x · Wᵀ` with `W: out×in`),
-/// and the inner loop is a dot product over contiguous rows of both
-/// operands.
+/// register-tiled over packed weight-row panels.
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
     let work = m.saturating_mul(k).saturating_mul(n);
     if m < GEMV_MAX_ROWS && n > m {
+        // Channel-partitioned Cᵀ kernel at any worker count: it reads B
+        // rows directly, while the row kernel's per-call panel packing
+        // would cost as much as the GEMV itself at tiny m. Bit-identical
+        // either way.
         let threads = par::threads_for(work, n);
-        if threads > 1 {
-            return par::matmul_a_bt_ct_mt(a, b, threads);
-        }
-        return matmul_a_bt_serial(a, b);
+        return par::matmul_a_bt_ct_mt(a, b, threads);
     }
     let threads = par::threads_for(work, m);
     if threads > 1 {
@@ -233,6 +651,24 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     } else {
         matmul_a_bt_serial(a, b)
     }
+}
+
+/// [`matmul_a_bt`] for **static** right operands (model weights,
+/// transforms): the GEMV/decode shape (`m < 32 ≤ n`) runs over `b`'s
+/// persistent packed panels, built lazily once behind a `OnceLock`
+/// ([`Mat::bt_panels`]) and reused by every subsequent call — packing
+/// per call would cost as much as the batch-1 GEMV itself. Results are
+/// bit-identical to [`matmul_a_bt`]; mutating `b` through any `&mut`
+/// accessor invalidates its cache.
+pub fn matmul_a_bt_cached(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    if m > 0 && m < GEMV_MAX_ROWS && n > m {
+        let work = m.saturating_mul(k).saturating_mul(n);
+        let threads = par::threads_for(work, n);
+        return par::matmul_a_bt_ct_panels_mt(a, b, threads);
+    }
+    matmul_a_bt(a, b)
 }
 
 /// Serial `C = A · Bᵀ`.
@@ -288,17 +724,32 @@ mod tests {
 
     #[test]
     fn matmul_matches_naive() {
+        // Tiled kernels keep each element's ascending-k order, so they
+        // match the naive triple loop *bit-exactly*.
         let a = random(13, 29, 1);
         let b = random(29, 17, 2);
         let c = matmul(&a, &b);
-        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-12);
+        assert_eq!(c.max_abs_diff(&naive(&a, &b)), 0.0);
     }
 
     #[test]
     fn matmul_blocked_over_kc_boundary() {
         let a = random(4, KC + 37, 3);
         let b = random(KC + 37, 5, 4);
-        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-10);
+        assert_eq!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)), 0.0);
+    }
+
+    #[test]
+    fn reference_kernel_matches_tiled_exactly() {
+        for (m, k, n) in [(7usize, 33usize, 9usize), (12, KC + 5, 11), (33, 64, 40)] {
+            let a = random(m, k, 40 + m as u64);
+            let b = random(k, n, 50 + n as u64);
+            assert_eq!(
+                matmul_serial_ref(&a, &b).max_abs_diff(&matmul_serial(&a, &b)),
+                0.0,
+                "{m}×{k}×{n}"
+            );
+        }
     }
 
     #[test]
@@ -306,7 +757,7 @@ mod tests {
         let a = random(31, 9, 5);
         let b = random(31, 11, 6);
         let c = matmul_at_b(&a, &b);
-        assert!(c.max_abs_diff(&matmul(&a.transpose(), &b)) < 1e-12);
+        assert_eq!(c.max_abs_diff(&matmul(&a.transpose(), &b)), 0.0);
     }
 
     #[test]
@@ -314,7 +765,32 @@ mod tests {
         let a = random(12, 21, 7);
         let b = random(15, 21, 8);
         let c = matmul_a_bt(&a, &b);
-        assert!(c.max_abs_diff(&matmul(&a, &b.transpose())) < 1e-12);
+        assert_eq!(c.max_abs_diff(&matmul(&a, &b.transpose())), 0.0);
+    }
+
+    #[test]
+    fn syrk_matches_at_b_self_product_exactly() {
+        for (k, m) in [(5usize, 3usize), (40, 17), (300, 33), (64, NR * 3), (7, 1)] {
+            let a = random(k, m, 60 + m as u64);
+            assert_eq!(
+                syrk_at_a(&a).max_abs_diff(&matmul_at_b(&a, &a)),
+                0.0,
+                "syrk {k}×{m}"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_a_bt_matches_uncached_and_survives_mutation() {
+        let a = random(3, 40, 9);
+        let mut b = random(70, 40, 10);
+        let want = matmul_a_bt(&a, &b);
+        assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&want), 0.0);
+        // Mutating b must invalidate the panel cache.
+        b[(5, 7)] += 1.25;
+        let want2 = matmul_a_bt(&a, &b);
+        assert!(want2.max_abs_diff(&want) > 0.0);
+        assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&want2), 0.0);
     }
 
     #[test]
@@ -340,11 +816,13 @@ mod tests {
     fn dispatcher_crosses_parallel_threshold_consistently() {
         // 192³ ≈ 7.1 M FMA is above PAR_MIN_FMA, so `matmul` takes the
         // threaded path (whenever >1 worker is available) and must agree
-        // with the serial reference exactly.
+        // with the serial reference *exactly* — the fan-out partitions
+        // output rows only and every element keeps its ascending-k
+        // accumulation order (PERF.md's bit-identical claim).
         let a = random(192, 192, 11);
         let b = random(192, 192, 12);
-        assert!(matmul(&a, &b).max_abs_diff(&matmul_serial(&a, &b)) < 1e-12);
-        assert!(matmul_at_b(&a, &b).max_abs_diff(&matmul_at_b_serial(&a, &b)) < 1e-12);
-        assert!(matmul_a_bt(&a, &b).max_abs_diff(&matmul_a_bt_serial(&a, &b)) < 1e-12);
+        assert_eq!(matmul(&a, &b).max_abs_diff(&matmul_serial(&a, &b)), 0.0);
+        assert_eq!(matmul_at_b(&a, &b).max_abs_diff(&matmul_at_b_serial(&a, &b)), 0.0);
+        assert_eq!(matmul_a_bt(&a, &b).max_abs_diff(&matmul_a_bt_serial(&a, &b)), 0.0);
     }
 }

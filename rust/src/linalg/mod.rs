@@ -12,10 +12,15 @@
 //! Analysis math runs in `f64`; the model substrate uses `f32` tensors
 //! (see [`crate::model::tensor`]).
 //!
-//! The four matmul kernels are *dispatchers*: large problems run on the
-//! scoped thread pool in [`par`] (worker count via `CATQUANT_THREADS`),
-//! small ones stay on the serial kernels (`*_serial`, also exported as
-//! the bit-exact reference for benches and property tests). See PERF.md.
+//! The matmul kernels are 4×8 **register-tiled** micro-kernels (one
+//! accumulator per output element, ascending-`k` order, right operand
+//! packed into contiguous panels — see `matmul`'s module docs) and
+//! *dispatchers*: large problems run on the scoped thread pool in
+//! [`par`] (worker count via `CATQUANT_THREADS`), small ones stay on the
+//! serial kernels (`*_serial`, also exported as the bit-exact reference
+//! for benches and property tests). [`syrk_at_a`] computes the
+//! covariance self-product `XᵀX` at half the FLOPs (upper triangle +
+//! mirror, bit-identical to `matmul_at_b(x, x)`). See PERF.md.
 //!
 //! [`qmatmul_a_bt`] is the integer sibling: packed quantized codes in,
 //! i32/i64-accumulated dot products plus the affine correction out —
@@ -38,9 +43,11 @@ pub use funcs::{geometric_mean, spd_inv, spd_inv_sqrt, spd_pow, spd_sqrt};
 pub use hadamard::{fwht_inplace, hadamard_matrix, is_pow2, randomized_hadamard};
 pub use mat::Mat;
 pub use matmul::{
-    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b, matmul_at_b_serial, matmul_serial,
-    matvec, matvec_serial,
+    matmul, matmul_a_bt, matmul_a_bt_cached, matmul_a_bt_serial, matmul_at_b,
+    matmul_at_b_serial, matmul_serial, matmul_serial_ref, matvec, matvec_serial, syrk_at_a,
 };
 pub use orthogonal::random_orthogonal;
-pub use qkernel::{qmatmul_a_bt, qmatmul_a_bt_serial, QCodes, QMatView};
+pub use qkernel::{
+    qmatmul_a_bt, qmatmul_a_bt_panels, qmatmul_a_bt_serial, QCodes, QMatView, QPanels,
+};
 pub use rng::Rng;

@@ -26,12 +26,61 @@
 //! and the [`PAR_MIN_FMA`] serial-fallback gate.
 
 use super::matmul::{
-    matmul_a_bt_ct_rows, matmul_a_bt_rows, matmul_at_b_rows, matmul_rows, matvec_rows,
-    transpose_ct_into,
+    matmul_a_bt_ct_rows, matmul_a_bt_ct_rows_panel, matmul_a_bt_rows, matmul_at_b_rows,
+    matmul_rows, matvec_rows, syrk_rows, transpose_ct_into,
 };
 use super::Mat;
 use std::cell::Cell;
 use std::sync::{mpsc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------
+// Thread-local scratch workspace
+// ---------------------------------------------------------------------
+//
+// The decode/forward hot loops call small GEMV-shaped kernels thousands
+// of times per generated token; allocating panel/unpack/Cᵀ buffers per
+// call was a measurable slice of each step. Each thread keeps one
+// reusable buffer per element type instead. Contents are *arbitrary* on
+// entry (stale data from the previous borrow) — callers must overwrite
+// every element they read back. A nested borrow (kernel inside a kernel
+// on one thread) falls back to a fresh allocation and restores the outer
+// buffer on exit, so the scheme is reentrant-safe.
+
+thread_local! {
+    static SCRATCH_F64: Cell<Vec<f64>> = const { Cell::new(Vec::new()) };
+    static SCRATCH_I16: Cell<Vec<i16>> = const { Cell::new(Vec::new()) };
+    static SCRATCH_I32: Cell<Vec<i32>> = const { Cell::new(Vec::new()) };
+}
+
+/// Largest buffer (bytes) a thread keeps cached between `with_scratch_*`
+/// calls. Decode-loop buffers (panels, small-batch Cᵀ staging, code
+/// unpacks) sit far below this and get full reuse; a rare huge request
+/// is served by a one-off allocation that is dropped on exit instead of
+/// staying pinned in a long-lived server thread's TLS forever.
+const MAX_CACHED_SCRATCH_BYTES: usize = 1 << 20;
+
+macro_rules! with_scratch_impl {
+    ($name:ident, $cell:ident, $ty:ty, $zero:expr) => {
+        /// Run `f` over this thread's reusable scratch, grown to `len`.
+        /// Contents are arbitrary on entry; callers must overwrite every
+        /// element they read back.
+        pub(crate) fn $name<R>(len: usize, f: impl FnOnce(&mut [$ty]) -> R) -> R {
+            let mut buf = $cell.with(|c| c.take());
+            if buf.len() < len {
+                buf.resize(len, $zero);
+            }
+            let r = f(&mut buf[..len]);
+            if buf.len() * std::mem::size_of::<$ty>() <= MAX_CACHED_SCRATCH_BYTES {
+                $cell.with(|c| c.set(buf));
+            }
+            r
+        }
+    };
+}
+
+with_scratch_impl!(with_scratch_f64, SCRATCH_F64, f64, 0.0);
+with_scratch_impl!(with_scratch_i16, SCRATCH_I16, i16, 0);
+with_scratch_impl!(with_scratch_i32, SCRATCH_I32, i32, 0);
 
 thread_local! {
     /// True while this thread is executing inside a parallel worker.
@@ -177,11 +226,90 @@ pub fn matmul_a_bt_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
 pub fn matmul_a_bt_ct_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
     let (m, n) = (a.rows(), b.rows());
-    let mut ct = vec![0.0f64; n * m];
-    par_rows(&mut ct, m, threads, |j0, out| matmul_a_bt_ct_rows(a, b, j0, out));
     let mut c = Mat::zeros(m, n);
-    transpose_ct_into(&ct, m, &mut c);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    with_scratch_f64(n * m, |ct| {
+        par_rows(ct, m, threads, |j0, out| matmul_a_bt_ct_rows(a, b, j0, out));
+        transpose_ct_into(ct, m, &mut c);
+    });
     c
+}
+
+/// [`matmul_a_bt_ct_mt`] over `b`'s lazily built persistent packed
+/// panels ([`Mat::bt_panels`]) — the decode fast path for *static* right
+/// operands (weights, transforms): no per-call packing, contiguous
+/// panel lanes in the inner loop. Bit-identical to every other
+/// `A · Bᵀ` partitioning.
+pub fn matmul_a_bt_ct_panels_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shape mismatch");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let bp = b.bt_panels();
+    with_scratch_f64(n * m, |ct| {
+        par_rows(ct, m, threads, |j0, out| matmul_a_bt_ct_rows_panel(a, bp, j0, out));
+        transpose_ct_into(ct, m, &mut c);
+    });
+    c
+}
+
+/// Threaded upper-triangle rows of `Σ = AᵀA` into `c` (callers:
+/// [`super::syrk_at_a`](super::syrk_at_a), which mirrors afterwards).
+///
+/// Row `i` of the triangle costs ~`(m − i)` FMAs per `k` step, so equal
+/// row counts would hand the first worker ~half the work; chunk
+/// boundaries instead balance cumulative triangle *area*. Each row is
+/// still computed whole by one worker in the serial order, so the
+/// partitioning never changes a bit of the result.
+pub(crate) fn syrk_mt(a: &Mat, threads: usize, c: &mut Mat) {
+    let m = a.cols();
+    let t = if in_worker() { 1 } else { threads.min(m).max(1) };
+    if t <= 1 {
+        syrk_rows(a, 0, c.as_mut_slice());
+        return;
+    }
+    // bounds[ci] = first row of chunk ci; chunk ci covers rows where the
+    // cumulative weight Σ(m − i) first reaches fraction ci/t of the total.
+    let total = (m as u64) * (m as u64 + 1) / 2;
+    let mut bounds = vec![m; t + 1];
+    bounds[0] = 0;
+    let mut acc = 0u64;
+    let mut ci = 1;
+    for i in 0..m {
+        acc += (m - i) as u64;
+        if ci < t && acc * (t as u64) >= total * (ci as u64) {
+            bounds[ci] = i + 1;
+            ci += 1;
+        }
+    }
+    let data = c.as_mut_slice();
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut first = None;
+        for ci in 0..t {
+            let (lo, hi) = (bounds[ci], bounds[ci + 1]);
+            let (chunk, tail) = rest.split_at_mut((hi - lo) * m);
+            rest = tail;
+            if ci == 0 {
+                // The heaviest chunk runs on the calling thread (one
+                // fewer spawn, and the caller's core is never idle).
+                first = Some((lo, chunk));
+            } else if !chunk.is_empty() {
+                s.spawn(move || {
+                    let _guard = WorkerGuard::enter();
+                    syrk_rows(a, lo, chunk);
+                });
+            }
+        }
+        if let Some((lo, chunk)) = first {
+            let _guard = WorkerGuard::enter();
+            syrk_rows(a, lo, chunk);
+        }
+    });
 }
 
 /// Threaded `y = A · x`.
@@ -318,6 +446,11 @@ mod tests {
                     matmul_a_bt_ct_mt(&a, &b, t).max_abs_diff(&want),
                     0.0,
                     "m={m} t={t}"
+                );
+                assert_eq!(
+                    matmul_a_bt_ct_panels_mt(&a, &b, t).max_abs_diff(&want),
+                    0.0,
+                    "panels m={m} t={t}"
                 );
             }
             assert_eq!(matmul_a_bt_mt(&a, &b, 4).max_abs_diff(&want), 0.0);

@@ -116,6 +116,63 @@ impl QMatView<'_> {
 /// keeps every lane at ≤ 2^30 < `i32::MAX` with 2× margin.
 const MAX_I16_PATH_COLS: usize = 1 << 19;
 
+/// Persistent unpacked panels of a *static* packed operand (weights):
+/// the codes of every row unpacked **once** into the contiguous
+/// row-major layout the kernels consume (`i16` when the fast path
+/// applies, `i32` otherwise). [`qmatmul_a_bt_panels`] then skips the
+/// per-call `n×k` unpack that dominates small-batch (decode/prefill)
+/// calls — integer accumulation is exact, so the panel path is
+/// bit-identical to [`qmatmul_a_bt`].
+///
+/// Built by `QuantizedTensor::panels()` /
+/// `model::QuantizedLinear::new`; ~4× the nibble-packed bytes at W4 —
+/// a deliberate memory-for-latency trade on serving weights.
+#[derive(Clone)]
+pub struct QPanels {
+    rows: usize,
+    cols: usize,
+    data: QPanelData,
+}
+
+#[derive(Clone)]
+enum QPanelData {
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+impl QPanels {
+    /// Unpack every row of `v` once into the kernel layout.
+    pub fn from_view(v: &QMatView) -> QPanels {
+        let (rows, cols) = (v.rows, v.cols);
+        let data = if v.fits_i16() && cols <= MAX_I16_PATH_COLS {
+            let mut d = vec![0i16; rows * cols];
+            if cols > 0 {
+                for (j, row) in d.chunks_exact_mut(cols).enumerate() {
+                    v.unpack_row_i16(j, row);
+                }
+            }
+            QPanelData::I16(d)
+        } else {
+            let mut d = vec![0i32; rows * cols];
+            if cols > 0 {
+                for (j, row) in d.chunks_exact_mut(cols).enumerate() {
+                    v.unpack_row_i32(j, row);
+                }
+            }
+            QPanelData::I32(d)
+        };
+        QPanels { rows, cols, data }
+    }
+
+    /// Bytes held by the unpacked panels.
+    pub fn bytes(&self) -> usize {
+        match &self.data {
+            QPanelData::I16(d) => d.len() * std::mem::size_of::<i16>(),
+            QPanelData::I32(d) => d.len() * std::mem::size_of::<i32>(),
+        }
+    }
+}
+
 /// `C = X · Wᵀ` over packed integer codes with the affine correction
 /// applied per `(token, output-channel)` pair. Dispatches to the worker
 /// pool above the [`par::PAR_MIN_FMA`] threshold; integer accumulation is
@@ -134,6 +191,112 @@ pub fn qmatmul_a_bt(x: &QMatView, w: &QMatView) -> Mat {
 /// Serial reference for [`qmatmul_a_bt`] (benches, parity property tests).
 pub fn qmatmul_a_bt_serial(x: &QMatView, w: &QMatView) -> Mat {
     qmatmul_a_bt_t(x, w, 1)
+}
+
+/// `C = X · Wᵀ` over `W`'s **persistent** unpacked panels
+/// ([`QPanels::from_view`], built once at weight-load time): skips the
+/// per-call `n×k` weight unpack entirely. Integer accumulation is exact,
+/// so results are bit-identical to [`qmatmul_a_bt`] on the same views.
+///
+/// The one mixed case — wide (>8-bit) activations over `i16` panels —
+/// falls back to the unpack-per-call wide kernel; it only arises in
+/// analysis configs.
+pub fn qmatmul_a_bt_panels(x: &QMatView, w: &QMatView, wp: &QPanels) -> Mat {
+    assert_eq!(x.cols, w.cols, "qmatmul_a_bt shape mismatch");
+    assert!(
+        wp.rows == w.rows && wp.cols == w.cols,
+        "panels do not match the weight view ({}×{} vs {}×{})",
+        wp.rows,
+        wp.cols,
+        w.rows,
+        w.cols
+    );
+    if matches!(wp.data, QPanelData::I16(_)) && !x.fits_i16() {
+        return qmatmul_a_bt(x, w);
+    }
+    let work = x.rows.saturating_mul(x.cols).saturating_mul(w.rows);
+    if x.rows < GEMV_MAX_ROWS && w.rows > x.rows {
+        let threads = par::threads_for(work, w.rows);
+        return qmatmul_small_m_panels(x, w, wp, threads);
+    }
+    let threads = par::threads_for(work, x.rows);
+    let (m, n) = (x.rows, w.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    match &wp.data {
+        QPanelData::I16(wd) => {
+            par::par_rows(c.as_mut_slice(), n, threads, |r0, out| {
+                qmatmul_rows_i16(x, w, wd, r0, out)
+            });
+        }
+        QPanelData::I32(wd) => {
+            par::par_rows(c.as_mut_slice(), n, threads, |r0, out| {
+                qmatmul_rows_wide(x, w, wd, r0, out)
+            });
+        }
+    }
+    c
+}
+
+/// Decode/GEMV shape over persistent panels: activations unpack once
+/// into thread-local scratch, weight rows are read straight from the
+/// panels (zero per-step unpack, zero per-step allocation). Per-element
+/// math matches [`qmatmul_small_m`] exactly.
+fn qmatmul_small_m_panels(x: &QMatView, w: &QMatView, wp: &QPanels, threads: usize) -> Mat {
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    par::with_scratch_f64(n * m, |ct| {
+        match &wp.data {
+            QPanelData::I16(wd) => par::with_scratch_i16(m * k, |xbuf| {
+                for i in 0..m {
+                    x.unpack_row_i16(i, &mut xbuf[i * k..(i + 1) * k]);
+                }
+                let xbuf = &*xbuf;
+                par::par_rows(ct, m, threads, |j0, out| {
+                    for (jj, orow) in out.chunks_mut(m).enumerate() {
+                        let j = j0 + jj;
+                        let wrow = &wd[j * k..(j + 1) * k];
+                        let (sw, zw, sumw) = (w.scales[j], w.zps[j] as i64, w.row_sums[j]);
+                        for (i, o) in orow.iter_mut().enumerate() {
+                            let dot = qdot_i16(&xbuf[i * k..(i + 1) * k], wrow);
+                            let zx = x.zps[i] as i64;
+                            let corr = dot - zx * sumw - zw * x.row_sums[i] + (k as i64) * zx * zw;
+                            *o = x.scales[i] * sw * corr as f64;
+                        }
+                    }
+                });
+            }),
+            QPanelData::I32(wd) => par::with_scratch_i32(m * k, |xbuf| {
+                for i in 0..m {
+                    x.unpack_row_i32(i, &mut xbuf[i * k..(i + 1) * k]);
+                }
+                let xbuf = &*xbuf;
+                par::par_rows(ct, m, threads, |j0, out| {
+                    for (jj, orow) in out.chunks_mut(m).enumerate() {
+                        let j = j0 + jj;
+                        let wrow = &wd[j * k..(j + 1) * k];
+                        let (sw, zw, sumw) = (w.scales[j], w.zps[j] as i64, w.row_sums[j]);
+                        for (i, o) in orow.iter_mut().enumerate() {
+                            let mut dot = 0i64;
+                            for (&a, &b) in xbuf[i * k..(i + 1) * k].iter().zip(wrow) {
+                                dot += a as i64 * b as i64;
+                            }
+                            let zx = x.zps[i] as i64;
+                            let corr = dot - zx * sumw - zw * x.row_sums[i] + (k as i64) * zx * zw;
+                            *o = x.scales[i] * sw * corr as f64;
+                        }
+                    }
+                });
+            }),
+        }
+        transpose_ct_into(ct, m, &mut c);
+    });
+    c
 }
 
 fn qmatmul_a_bt_t(x: &QMatView, w: &QMatView, threads: usize) -> Mat {
@@ -418,6 +581,27 @@ mod tests {
                 assert_eq!(small.max_abs_diff(&rows), 0.0, "{m}x{k}x{n} bits {bits}");
                 // And the dispatcher picks the small path for this shape.
                 assert_eq!(qmatmul_a_bt(&xp.view(), &wp.view()).max_abs_diff(&rows), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn panels_path_matches_unpack_per_call_exactly() {
+        // Persistent panels must be a pure layout change: both the
+        // small-m (decode) and row-partitioned shapes, every store type,
+        // odd dims. Integer accumulation is exact, so equality is 0.0.
+        let mut rng = crate::linalg::Rng::new(11);
+        for (m, k, n) in [(1usize, 33usize, 96usize), (4, 48, 64), (40, 19, 24)] {
+            for bits in [4u32, 8, 12] {
+                let x = Mat::from_fn(m, k, |_, _| rng.normal());
+                let w = Mat::from_fn(n, k, |_, _| rng.normal() * 0.1);
+                let scheme = crate::quant::QScheme::asym(bits);
+                let xp = crate::quant::QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                let wpk = crate::quant::QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+                let panels = QPanels::from_view(&wpk.view());
+                let got = qmatmul_a_bt_panels(&xp.view(), &wpk.view(), &panels);
+                let want = qmatmul_a_bt(&xp.view(), &wpk.view());
+                assert_eq!(got.max_abs_diff(&want), 0.0, "{m}x{k}x{n} bits {bits}");
             }
         }
     }

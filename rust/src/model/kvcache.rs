@@ -27,12 +27,17 @@ pub(crate) enum KvStore {
 }
 
 impl KvStore {
-    fn fp(cols: usize) -> KvStore {
-        KvStore::Fp { data: Vec::new(), cols }
+    /// `cap_rows` pre-reserves the positional budget so the decode hot
+    /// loop's pushes never reallocate mid-generation.
+    fn fp(cols: usize, cap_rows: usize) -> KvStore {
+        KvStore::Fp { data: Vec::with_capacity(cols * cap_rows), cols }
     }
 
-    fn packed(cols: usize, scheme: QScheme, clip_ratio: f64) -> KvStore {
-        KvStore::Packed { codes: QuantizedTensor::empty(cols, scheme), clip_ratio }
+    fn packed(cols: usize, scheme: QScheme, clip_ratio: f64, cap_rows: usize) -> KvStore {
+        KvStore::Packed {
+            codes: QuantizedTensor::empty_with_capacity(cols, scheme, cap_rows),
+            clip_ratio,
+        }
     }
 
     /// Append one token row. Packed mode quantizes on the row's dynamic
@@ -105,10 +110,11 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// FP cache for `cfg`.
+    /// FP cache for `cfg` (K/V storage pre-reserved to the positional
+    /// budget — no reallocation during decode).
     pub fn fp(cfg: &ModelConfig) -> KvCache {
         let layers = (0..cfg.n_layers)
-            .map(|_| LayerKv { k: KvStore::fp(cfg.d), v: KvStore::fp(cfg.d) })
+            .map(|_| LayerKv { k: KvStore::fp(cfg.d, cfg.seq), v: KvStore::fp(cfg.d, cfg.seq) })
             .collect();
         KvCache { layers, len: 0, capacity: cfg.seq }
     }
@@ -117,8 +123,8 @@ impl KvCache {
     pub fn packed(cfg: &ModelConfig, scheme: QScheme, clip_ratio: f64) -> KvCache {
         let layers = (0..cfg.n_layers)
             .map(|_| LayerKv {
-                k: KvStore::packed(cfg.d, scheme, clip_ratio),
-                v: KvStore::packed(cfg.d, scheme, clip_ratio),
+                k: KvStore::packed(cfg.d, scheme, clip_ratio, cfg.seq),
+                v: KvStore::packed(cfg.d, scheme, clip_ratio, cfg.seq),
             })
             .collect();
         KvCache { layers, len: 0, capacity: cfg.seq }

@@ -7,7 +7,7 @@
 
 use super::kvcache::{KvCache, LayerKv};
 use super::{ModelConfig, QuantConfig};
-use crate::linalg::{matmul_a_bt, par, qmatmul_a_bt, Mat};
+use crate::linalg::{matmul_a_bt, matmul_a_bt_cached, par, qmatmul_a_bt_panels, Mat};
 use crate::quant::{quantize_activations_per_token, QuantizedTensor};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -92,6 +92,15 @@ impl NativeModel {
 
     fn p(&self, name: &str) -> &Mat {
         self.params.get(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    /// Total bytes held by the lazily built f64 panel caches on this
+    /// model's parameters. FP decode builds one cache per GEMV-touched
+    /// static weight (≈ one extra copy of each), so capacity planning
+    /// for FP serving should budget roughly 2× weight bytes; this
+    /// reports the live number (0 before the first decode).
+    pub fn panel_cache_bytes(&self) -> usize {
+        self.params.values().map(|m| m.panel_cache_bytes()).sum()
     }
 
     /// Full-sequence FP forward: logits `[S, vocab]` for one sequence.
@@ -229,7 +238,9 @@ impl NativeModel {
             c.advance(1);
         }
         let xn = rmsnorm(&x, self.p("ln_f"));
-        matmul_a_bt(&xn, self.p("lm_head"))
+        // Static weight + GEMV shape: the lm_head panel cache builds on
+        // the first step and every later step reuses it.
+        matmul_a_bt_cached(&xn, self.p("lm_head"))
     }
 
     fn forward_opts(
@@ -310,7 +321,7 @@ impl NativeModel {
         // row (prefill) yields exactly the last row of the full logits.
         let x = if last_only { x.block(s - 1, 0, 1, cfg.d) } else { x };
         let x = rmsnorm(&x, self.p("ln_f"));
-        matmul_a_bt(&x, self.p("lm_head"))
+        matmul_a_bt_cached(&x, self.p("lm_head"))
     }
 
     /// The MLP half of one block, updating `x` in place:
@@ -373,17 +384,21 @@ impl NativeModel {
         qc: Option<&QuantConfig>,
         dense: Option<&HashMap<String, Mat>>,
     ) -> Vec<Mat> {
+        // Model weights and transforms are static across calls, so the
+        // cached dispatcher's persistent panels serve every decode step
+        // (large prefill shapes fall through to the row-partitioned
+        // kernel unchanged).
         let Some(qc) = qc else {
             return lins
                 .iter()
-                .map(|lin| matmul_a_bt(x, self.p(&format!("{pfx}{lin}"))))
+                .map(|lin| matmul_a_bt_cached(x, self.p(&format!("{pfx}{lin}"))))
                 .collect();
         };
         let tname = format!("{pfx}{tshort}");
         let xt_store;
         let xin: &Mat = match qc.transforms.get(&tname) {
             Some(t) => {
-                xt_store = matmul_a_bt(x, t); // X Tᵀ
+                xt_store = matmul_a_bt_cached(x, t); // X Tᵀ
                 &xt_store
             }
             None => x,
@@ -411,7 +426,7 @@ impl NativeModel {
                             .linears
                             .get(&name)
                             .unwrap_or_else(|| panic!("missing packed weight {name}"));
-                        qmatmul_a_bt(&xq.view(), &ql.weight.view())
+                        qmatmul_a_bt_panels(&xq.view(), &ql.weight.view(), ql.panels())
                     })
                     .collect()
             }

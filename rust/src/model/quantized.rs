@@ -7,7 +7,7 @@
 //! `ArgPack` dequantizes once per pack build.
 
 use super::{ModelConfig, NativeModel};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, QPanels};
 use crate::quant::{quantize_weights_rtn, ActQuantCfg, QScheme, QuantizedTensor, WeightQuantCfg};
 use std::collections::HashMap;
 
@@ -80,16 +80,29 @@ pub fn group_of_linear(name: &str) -> LayerGroup {
 }
 
 /// One linear layer's integer-executable weights: the packed codes of the
-/// fused `W·T⁻¹` plus per-output-channel grids.
+/// fused `W·T⁻¹` plus per-output-channel grids, and the codes unpacked
+/// **once** into the kernel's persistent panel layout — weights are
+/// static for the life of a `QuantConfig`, so the per-call `n×k` unpack
+/// the kernel used to do (dominant at small batch) happens exactly once,
+/// here at build time.
 #[derive(Clone)]
 pub struct QuantizedLinear {
     /// Packed integer codes (`out × in`).
     pub weight: QuantizedTensor,
+    /// Persistent unpacked panels ([`crate::linalg::qmatmul_a_bt_panels`]
+    /// input) — ~4× the packed bytes at W4, repaid on every forward.
+    panels: QPanels,
 }
 
 impl QuantizedLinear {
     pub fn new(weight: QuantizedTensor) -> QuantizedLinear {
-        QuantizedLinear { weight }
+        let panels = QPanels::from_view(&weight.view());
+        QuantizedLinear { weight, panels }
+    }
+
+    /// The persistent unpacked panels (kernel fast path).
+    pub fn panels(&self) -> &QPanels {
+        &self.panels
     }
 
     /// Dequantize back to f64 (PJRT `ArgPack`, analysis, the fake-quant
@@ -101,6 +114,11 @@ impl QuantizedLinear {
     /// Bytes of packed storage (codes + per-row metadata).
     pub fn packed_bytes(&self) -> usize {
         self.weight.packed_bytes()
+    }
+
+    /// Bytes of the persistent unpacked panels.
+    pub fn panel_bytes(&self) -> usize {
+        self.panels.bytes()
     }
 }
 
@@ -160,6 +178,16 @@ impl QuantConfig {
     pub fn packed_bytes(&self) -> usize {
         self.linears.values().map(|l| l.packed_bytes()).sum()
     }
+
+    /// Total bytes of persistent panels: the eager `QuantizedLinear`
+    /// i16/i32 panels plus any lazily built f64 panel caches on the
+    /// transforms (decode touches those through the GEMV path). The
+    /// memory-for-latency side of the panel design, for capacity
+    /// planning next to [`Self::packed_bytes`].
+    pub fn panel_bytes(&self) -> usize {
+        self.linears.values().map(|l| l.panel_bytes()).sum::<usize>()
+            + self.transforms.values().map(|t| t.panel_cache_bytes()).sum::<usize>()
+    }
 }
 
 #[cfg(test)]
@@ -211,5 +239,11 @@ mod tests {
         // Nibble-packed W4 sits far below the f64 footprint (~16×; the
         // per-row metadata keeps it shy of exact).
         assert!(qc.packed_bytes() * 8 < f64_bytes, "{} vs {f64_bytes}", qc.packed_bytes());
+        // The persistent i16 panels trade memory for per-call unpack
+        // time: 2 bytes/code vs 0.5 packed — 4× the code bytes, still
+        // 4× under f64.
+        let panel_bytes: usize = qc.linears.values().map(|l| l.panel_bytes()).sum();
+        assert!(panel_bytes > qc.packed_bytes() / 2, "panels are unpacked codes");
+        assert!(panel_bytes * 4 <= f64_bytes, "panels stay well under f64");
     }
 }

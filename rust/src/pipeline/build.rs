@@ -6,7 +6,7 @@
 //! index-ordered, so reports and maps are identical to the serial build.
 
 use crate::calib::CalibStats;
-use crate::linalg::{matmul_at_b, par, Mat};
+use crate::linalg::{par, syrk_at_a, Mat};
 use crate::model::LayerGroup;
 use crate::model::{NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
 use crate::quant::{
@@ -89,7 +89,7 @@ pub fn group_transform(
     let sigma_w = {
         let mut s = Mat::zeros(d, d);
         for w in ws {
-            s.add_in_place(&matmul_at_b(w, w));
+            s.add_in_place(&syrk_at_a(w));
         }
         s
     };

@@ -21,7 +21,7 @@
 
 use super::uniform::per_token_params;
 use super::{AffineParams, QScheme};
-use crate::linalg::{Mat, QCodes, QMatView};
+use crate::linalg::{Mat, QCodes, QMatView, QPanels};
 
 /// Packed integer codes + per-row affine grids for one matrix.
 #[derive(Clone)]
@@ -225,6 +225,29 @@ impl QuantizedTensor {
             zps: Vec::new(),
             row_sums: Vec::new(),
         }
+    }
+
+    /// [`Self::empty`] with storage reserved for `rows_cap` rows — the
+    /// KV cache pre-sizes to the model's positional budget so decode
+    /// pushes never reallocate mid-generation.
+    pub fn empty_with_capacity(cols: usize, scheme: QScheme, rows_cap: usize) -> QuantizedTensor {
+        let mut t = Self::empty(cols, scheme);
+        match &mut t.store {
+            Store::Nibble(d) => d.reserve(rows_cap * cols.div_ceil(2)),
+            Store::Byte(d) => d.reserve(rows_cap * cols),
+            Store::Wide(d) => d.reserve(rows_cap * cols),
+        }
+        t.scales.reserve(rows_cap);
+        t.zps.reserve(rows_cap);
+        t.row_sums.reserve(rows_cap);
+        t
+    }
+
+    /// Unpack the codes once into the kernel's persistent panel layout
+    /// (see [`crate::linalg::qmatmul_a_bt_panels`]). Static operands
+    /// (weights) build this at load time and skip every per-call unpack.
+    pub fn panels(&self) -> QPanels {
+        QPanels::from_view(&self.view())
     }
 
     /// Quantize one activation row on its dynamic per-token grid (the

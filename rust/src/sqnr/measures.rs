@@ -97,7 +97,7 @@ pub fn approx_sqnr_joint(x: &Mat, w: &Mat, act: ActQuantCfg, wq: WeightQuantCfg)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul, matmul_at_b, random_orthogonal, Mat, Rng};
+    use crate::linalg::{matmul, random_orthogonal, syrk_at_a, Mat, Rng};
     use crate::quant::QScheme;
 
     fn gaussian_x(tokens: usize, d: usize, seed: u64) -> Mat {
@@ -145,7 +145,7 @@ mod tests {
         let x = gaussian_x(20_000, d, 5);
         let mut rng = Rng::new(6);
         let w = Mat::from_fn(6, d, |_, _| rng.normal());
-        let sigma = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma = syrk_at_a(&x).scale(1.0 / x.rows() as f64);
         let a_data = alignment_data(&x, &w);
         let a_stats = alignment_stats(&sigma, &w);
         assert!((a_data - a_stats).abs() / a_data < 1e-9);
@@ -159,7 +159,7 @@ mod tests {
         let scales: Vec<f64> = (0..d).map(|i| 1.0 + i as f64).collect();
         let x = Mat::from_fn(5000, d, |_, j| rng.normal() * scales[j]);
         let w = Mat::from_fn(6, d, |_, _| rng.normal());
-        let sigma = matmul_at_b(&x, &x).scale(1.0 / x.rows() as f64);
+        let sigma = syrk_at_a(&x).scale(1.0 / x.rows() as f64);
         let a = alignment_stats(&sigma, &w);
         let a_max = max_alignment(&sigma, &w);
         assert!(a <= a_max * (1.0 + 1e-9), "a={a} max={a_max}");

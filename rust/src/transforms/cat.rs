@@ -86,7 +86,7 @@ fn concentration_rotation(d: usize, seed: u64) -> Transform {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul, matmul_at_b, Rng};
+    use crate::linalg::{matmul, syrk_at_a, Rng};
     use crate::quant::{ActQuantCfg, QScheme, WeightQuantCfg};
     use crate::sqnr::{
         alignment_data, approx_sqnr_joint, concentration_act, max_alignment,
@@ -110,8 +110,8 @@ mod tests {
     }
 
     fn stats(x: &Mat, w: &Mat) -> (Mat, Mat) {
-        let sigma_x = matmul_at_b(x, x).scale(1.0 / x.rows() as f64);
-        let sigma_w = matmul_at_b(w, w);
+        let sigma_x = syrk_at_a(x).scale(1.0 / x.rows() as f64);
+        let sigma_w = syrk_at_a(w);
         (sigma_x, sigma_w)
     }
 

@@ -1,0 +1,236 @@
+//! Property suite for the register-tiled micro-kernels and the
+//! persistent packed-panel paths (PR 4).
+//!
+//! The tiled kernels keep one accumulator per output element and walk
+//! `k` in ascending order, so every kernel — tiled, the retained
+//! pre-tiling reference, the naive triple loop, the GEMV-partitioned
+//! `Cᵀ` path, the panel-cached path, and the parallel variants at any
+//! worker count — must agree **bit-exactly** (`== 0.0` max-abs-diff).
+//! Shapes deliberately straddle every boundary: the MR=4/NR=8 register
+//! tile, the KC=256 k-block, and panel edges (1, 7, tile±1, KC±1).
+//!
+//! CI runs this suite under `CATQUANT_THREADS ∈ {1, 8}` alongside the
+//! quant/decode parity suites.
+
+use catquant::linalg::{
+    matmul, matmul_a_bt, matmul_a_bt_cached, matmul_a_bt_serial, matmul_at_b,
+    matmul_at_b_serial, matmul_serial, matmul_serial_ref, par, qmatmul_a_bt,
+    qmatmul_a_bt_panels, qmatmul_a_bt_serial, syrk_at_a, Mat, QPanels, Rng,
+};
+use catquant::quant::{QScheme, QuantizedTensor};
+
+/// 1, 7, MR±1, NR±1, tile-exact, KC±1 — every boundary family.
+const DIMS: [usize; 8] = [1, 3, 5, 7, 8, 9, 32, 257];
+
+fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+#[test]
+fn tiled_matmul_matches_naive_bit_exactly_across_boundaries() {
+    let mut seed = 0;
+    for &m in &DIMS {
+        for &k in &[1usize, 7, 255, 256, 257] {
+            for &n in &[1usize, 7, 8, 9, 33] {
+                seed += 1;
+                let a = random(m, k, seed);
+                let b = random(k, n, 1000 + seed);
+                let want = naive_matmul(&a, &b);
+                assert_eq!(
+                    matmul_serial(&a, &b).max_abs_diff(&want),
+                    0.0,
+                    "tiled {m}×{k}×{n}"
+                );
+                assert_eq!(
+                    matmul_serial_ref(&a, &b).max_abs_diff(&want),
+                    0.0,
+                    "ref {m}×{k}×{n}"
+                );
+                assert_eq!(matmul(&a, &b).max_abs_diff(&want), 0.0, "dispatched {m}×{k}×{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_at_b_matches_naive_transpose_bit_exactly() {
+    let mut seed = 100;
+    for &k in &[1usize, 5, 256, 257] {
+        for &m in &[1usize, 3, 4, 5, 9, 31] {
+            for &n in &[1usize, 7, 8, 9, 40] {
+                seed += 1;
+                let a = random(k, m, seed);
+                let b = random(k, n, 2000 + seed);
+                let want = naive_matmul(&a.transpose(), &b);
+                assert_eq!(
+                    matmul_at_b_serial(&a, &b).max_abs_diff(&want),
+                    0.0,
+                    "at_b {k}:{m}×{n}"
+                );
+                assert_eq!(matmul_at_b(&a, &b).max_abs_diff(&want), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_a_bt_matches_naive_transpose_bit_exactly() {
+    let mut seed = 300;
+    for &m in &[1usize, 4, 5, 7, 33] {
+        for &k in &[1usize, 9, 255, 257] {
+            for &n in &[1usize, 7, 8, 9, 65] {
+                seed += 1;
+                let a = random(m, k, seed);
+                let b = random(n, k, 3000 + seed);
+                let want = naive_matmul(&a, &b.transpose());
+                assert_eq!(
+                    matmul_a_bt_serial(&a, &b).max_abs_diff(&want),
+                    0.0,
+                    "a_bt {m}×{k}×{n}"
+                );
+                // The dispatcher (which may take the GEMV/ct partitioning
+                // for m < 32 < n) and the panel-cached path must agree too.
+                assert_eq!(matmul_a_bt(&a, &b).max_abs_diff(&want), 0.0);
+                assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&want), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn syrk_matches_at_b_self_product_bit_exactly() {
+    for (si, &m) in DIMS.iter().enumerate() {
+        for &k in &[1usize, 40, 255, 256, 300] {
+            let a = random(k, m, 4000 + (si * 10 + k) as u64);
+            let want = matmul_at_b(&a, &a);
+            let got = syrk_at_a(&a);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "syrk {k}×{m}");
+            // And it is exactly symmetric.
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(got[(i, j)], got[(j, i)], "asym at ({i},{j})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_and_parallel_tiled_kernels_agree_exactly() {
+    // Under any explicit worker count (CI also runs the whole suite at
+    // CATQUANT_THREADS ∈ {1, 8}).
+    for t in [1usize, 2, 3, 8] {
+        let a = random(37, 261, 7000 + t as u64);
+        let b = random(261, 29, 7100 + t as u64);
+        assert_eq!(
+            par::matmul_mt(&a, &b, t).max_abs_diff(&matmul_serial(&a, &b)),
+            0.0,
+            "matmul t={t}"
+        );
+        let x = random(261, 37, 7200 + t as u64);
+        assert_eq!(
+            par::matmul_at_b_mt(&x, &x, t).max_abs_diff(&matmul_at_b_serial(&x, &x)),
+            0.0,
+            "at_b t={t}"
+        );
+        let w = random(65, 261, 7300 + t as u64);
+        assert_eq!(
+            par::matmul_a_bt_mt(&a, &w, t).max_abs_diff(&matmul_a_bt_serial(&a, &w)),
+            0.0,
+            "a_bt t={t}"
+        );
+        // GEMV/decode partitionings, unpacked and panel-cached.
+        let g = random(3, 261, 7400 + t as u64);
+        let want = matmul_a_bt_serial(&g, &w);
+        assert_eq!(par::matmul_a_bt_ct_mt(&g, &w, t).max_abs_diff(&want), 0.0, "ct t={t}");
+        assert_eq!(
+            par::matmul_a_bt_ct_panels_mt(&g, &w, t).max_abs_diff(&want),
+            0.0,
+            "ct panels t={t}"
+        );
+    }
+}
+
+#[test]
+fn panel_cache_invalidates_on_mutation() {
+    let a = random(2, 48, 8000);
+    let mut b = random(90, 48, 8001);
+    assert_eq!(b.panel_cache_bytes(), 0, "no cache before first GEMV use");
+    let first = matmul_a_bt_cached(&a, &b);
+    assert_eq!(first.max_abs_diff(&matmul_a_bt(&a, &b)), 0.0);
+    assert!(b.panel_cache_bytes() > 0, "cache built by the GEMV path");
+    // Mutate through each &mut accessor class and re-check.
+    b[(10, 3)] = 2.5;
+    assert_eq!(b.panel_cache_bytes(), 0, "mutation must drop the cache");
+    assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&matmul_a_bt(&a, &b)), 0.0);
+    b.row_mut(20)[7] = -1.5;
+    assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&matmul_a_bt(&a, &b)), 0.0);
+    b.as_mut_slice()[11] = 0.25;
+    assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&matmul_a_bt(&a, &b)), 0.0);
+    let delta = random(90, 48, 8002);
+    b.add_in_place(&delta);
+    assert_eq!(matmul_a_bt_cached(&a, &b).max_abs_diff(&matmul_a_bt(&a, &b)), 0.0);
+}
+
+#[test]
+fn persistent_qpanels_match_unpack_per_call_bit_exactly() {
+    // Decode-shaped (small m, large n) and prefill-shaped (large m)
+    // calls, every store type (nibble/byte/wide), sym and asym, odd k
+    // straddling the 8-lane qdot chunking.
+    let mut rng = Rng::new(9000);
+    for &(m, k, n) in &[(1usize, 33usize, 96usize), (4, 48, 64), (7, 19, 40), (40, 31, 24)] {
+        for bits in [4u32, 8, 12] {
+            for sym in [true, false] {
+                let scheme = if sym { QScheme::sym(bits) } else { QScheme::asym(bits) };
+                let x = Mat::from_fn(m, k, |_, _| rng.normal());
+                let w = Mat::from_fn(n, k, |_, _| rng.normal() * 0.1);
+                let xp = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                let wp = QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+                let panels = wp.panels();
+                let per_call = qmatmul_a_bt(&xp.view(), &wp.view());
+                let with_panels = qmatmul_a_bt_panels(&xp.view(), &wp.view(), &panels);
+                assert_eq!(
+                    with_panels.max_abs_diff(&per_call),
+                    0.0,
+                    "{m}x{k}x{n} bits {bits} sym {sym}"
+                );
+                // Serial reference agrees too (worker count never matters
+                // for exact integer accumulation).
+                assert_eq!(
+                    with_panels.max_abs_diff(&qmatmul_a_bt_serial(&xp.view(), &wp.view())),
+                    0.0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn qpanels_from_view_standalone_matches_tensor_helper() {
+    let mut rng = Rng::new(9100);
+    let w = Mat::from_fn(12, 21, |_, _| rng.normal());
+    let wp = QuantizedTensor::quantize_acts(&w, QScheme::asym(4), 1.0);
+    let x = Mat::from_fn(2, 21, |_, _| rng.normal());
+    let xp = QuantizedTensor::quantize_acts(&x, QScheme::asym(4), 1.0);
+    let p1 = wp.panels();
+    let p2 = QPanels::from_view(&wp.view());
+    let a = qmatmul_a_bt_panels(&xp.view(), &wp.view(), &p1);
+    let b = qmatmul_a_bt_panels(&xp.view(), &wp.view(), &p2);
+    assert_eq!(a.max_abs_diff(&b), 0.0);
+    assert!(p1.bytes() > 0);
+}
