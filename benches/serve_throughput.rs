@@ -3,16 +3,23 @@
 //! prefill/decode phase split and the O(T)-vs-O(T²) decode argument
 //! measured rather than asserted.
 //!
+//! Also measures the server-boot question the artifact layer answers:
+//! **artifact load vs calibration rebuild** wall-clock (bit-exactness
+//! asserted), emitted as `BENCH_serve.json` for the CI perf record.
+//!
 //! Run: `cargo bench --bench serve_throughput` (add `-- --quick` for the
 //! CI smoke configuration: tiny model, few tokens).
 //!
 //! A PJRT section (device-pack A/B) runs only when a compiled manifest is
 //! present; the offline vendor stub skips it gracefully.
 
+use catquant::calib::calibrate;
 use catquant::coordinator::{
     BatcherCfg, Coordinator, GenEngine, NativeGenerator, SamplingCfg, ServeMetrics,
 };
 use catquant::model::{KvCache, ModelConfig, NativeModel, QuantConfig};
+use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
+use catquant::runtime::{load_artifact, save_artifact};
 use std::time::Instant;
 
 fn bench_cfg(quick: bool) -> ModelConfig {
@@ -129,6 +136,73 @@ fn serve_native(
     coord.shutdown()
 }
 
+/// §Artifacts: what a serving process pays at boot — re-running
+/// calibration + the pipeline vs loading the saved artifact. Asserts the
+/// loaded config is bit-exact, reports both wall-clocks, and emits
+/// `BENCH_serve.json` (uploaded by CI) so the boot-cost trajectory is
+/// machine-recorded per run.
+fn artifact_vs_rebuild(cfg: &ModelConfig, quick: bool) -> anyhow::Result<()> {
+    let model = NativeModel::init_random(cfg.clone(), 21);
+    let n_seqs = if quick { 6 } else { 16 };
+    let seqs: Vec<Vec<u8>> = (0..n_seqs).map(|i| tokens(cfg.seq.min(24), 40 + i)).collect();
+
+    // Rebuild cost: what every boot paid before artifacts existed —
+    // calibration forwards plus transform fits + weight quantization.
+    let t0 = Instant::now();
+    let calib = calibrate(&model, &seqs, 512, 0);
+    let plan = QuantPlan::new()
+        .transform("cat-block")
+        .quantizer(WeightQuantizer::Rtn)
+        .bits(4, 4)
+        .cat_block(16)
+        .seed(0);
+    let (qc, rep) = build_quant_config(&model, &calib, &plan)?;
+    let rebuild_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let dir = std::env::temp_dir().join(format!("catquant-serve-bench-{}", std::process::id()));
+    let t0 = Instant::now();
+    save_artifact(&qc, &rep, &dir)?;
+    let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let artifact_bytes: u64 = ["artifact.json", "codes.bin"]
+        .iter()
+        .map(|f| std::fs::metadata(dir.join(f)).map(|m| m.len()).unwrap_or(0))
+        .sum();
+
+    // Best-of-3 load (page cache warm after the first).
+    let mut load_ms = f64::INFINITY;
+    let mut loaded = None;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let l = load_artifact(&dir, &model)?;
+        load_ms = load_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        loaded = Some(l);
+    }
+    let loaded = loaded.unwrap();
+    let toks = tokens(12, 9);
+    let diff = model.forward_quant(&toks, &qc).max_abs_diff(&model.forward_quant(&toks, &loaded));
+    assert_eq!(diff, 0.0, "loaded artifact must serve bit-exactly");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!(
+        "artifact boot: rebuild {rebuild_ms:.1} ms vs load {load_ms:.2} ms ({:.0}× faster, \
+         save {save_ms:.2} ms, {artifact_bytes} B on disk, bit-exact)",
+        rebuild_ms / load_ms.max(1e-9)
+    );
+    let json = format!(
+        "[\n  {{\"bench\": \"serve_throughput\", \"section\": \"artifact_boot\", \
+         \"quick\": {quick}, \"threads\": {}, \"rebuild_ms\": {rebuild_ms:.3}, \
+         \"artifact_load_ms\": {load_ms:.3}, \"artifact_save_ms\": {save_ms:.3}, \
+         \"load_speedup\": {:.1}, \"artifact_bytes\": {artifact_bytes}}}\n]\n",
+        catquant::linalg::par::num_threads(),
+        rebuild_ms / load_ms.max(1e-9)
+    );
+    match std::fs::write("BENCH_serve.json", json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+    Ok(())
+}
+
 /// §Perf A/B (PJRT only): per-decode-call cost with the weight pack passed
 /// as host literals vs device-resident buffers. Skipped without a manifest.
 fn pjrt_pack_upload_ab() -> anyhow::Result<()> {
@@ -208,7 +282,10 @@ fn main() -> anyhow::Result<()> {
         println!("{:<9} {}", if quantized { "CAT-W4A4" } else { "FP" }, m.summary());
     }
 
-    // 3. PJRT device-pack A/B when a compiled manifest exists.
+    // 3. Server boot: artifact load vs calibration rebuild (bit-exact).
+    artifact_vs_rebuild(&cfg, quick)?;
+
+    // 4. PJRT device-pack A/B when a compiled manifest exists.
     if !quick {
         pjrt_pack_upload_ab()?;
     }

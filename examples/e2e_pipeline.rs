@@ -6,10 +6,14 @@
 //!
 //!   1. load weights (Rust loader ← python-trained .catw artifact)
 //!   2. calibrate on 128 corpus sequences (native engine probe)
-//!   3. PTQ pipeline: {None, QuaRot, CAT block} × RTN at W4A4
+//!   3. PTQ pipeline over `QuantPlan`s: three uniform W4A4 plans
+//!      ({identity, quarot, cat-block} × RTN) plus one **mixed-precision**
+//!      plan (attention W8A8 / MLP W4A4 via per-group overrides)
 //!   4. evaluate perplexity + 6-task 0-shot through the PJRT graphs
-//!      (L2 JAX-lowered HLO, L1 kernel-verified ops, weights as args)
-//!   5. serve a batch of generation requests on the CAT-W4A4 config
+//!      (uniform plans; the mixed plan evaluates on the native engine —
+//!      the compiled A4 graphs are single-precision by construction)
+//!   5. save the CAT-W4A4 config as an artifact, reload it (bit-exact),
+//!      and serve a batch of generation requests from the loaded state
 //!      through the coordinator (batched prefill + KV-cache decode)
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E.
@@ -21,11 +25,11 @@
 
 use catquant::calib::Corpus;
 use catquant::coordinator::{BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg};
-use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits, SeqLogits};
-use catquant::experiments::load_zoo;
-use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{Manifest, PjrtEngine};
-use catquant::transforms::TransformKind;
+use catquant::eval::{perplexity, zero_shot_suite, NativeLogits, PjrtLogits, SeqLogits};
+use catquant::experiments::{load_model, load_zoo};
+use catquant::model::LayerGroup;
+use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
+use catquant::runtime::{save_artifact, Manifest, PjrtEngine};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -57,46 +61,77 @@ fn main() -> anyhow::Result<()> {
     let fp_acc = acc(&fp, &corpus)?;
     println!("[3/5] FP reference: ppl {fp_ppl:.3}, 0-shot {fp_acc:.1}%");
 
-    let mut cat_qc = None;
-    for kind in [TransformKind::None, TransformKind::QuaRot, TransformKind::CatBlock] {
+    let mut cat = None;
+    for recipe in ["identity", "quarot", "cat-block"] {
+        let plan = QuantPlan::new()
+            .transform(recipe)
+            .quantizer(WeightQuantizer::Rtn)
+            .bits(4, 4)
+            .seed(0);
         let t0 = Instant::now();
-        let (qc, rep) = build_quant_config(
-            &zoo.model,
-            &zoo.calib,
-            PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0),
-        );
+        let (qc, rep) = build_quant_config(&zoo.model, &zoo.calib, &plan)?;
         let build_s = t0.elapsed().as_secs_f64();
         let eng = PjrtLogits::quant(engine.clone(), &model, &zoo.model.params, &qc, 4)?;
         let ppl = perplexity(&eng, &windows)?;
         let a = acc(&eng, &corpus)?;
         println!(
-            "[4/5] {:<14} W4A4: ppl {ppl:.3}  0-shot {a:.1}%  (layer SQNR {:.1} dB, built in {build_s:.1}s)",
-            kind.label(),
+            "[4/5] {recipe:<14} W4A4: ppl {ppl:.3}  0-shot {a:.1}%  (layer SQNR {:.1} dB, built in {build_s:.1}s)",
             rep.mean_sqnr_db
         );
-        if kind == TransformKind::CatBlock {
-            cat_qc = Some(qc);
+        if recipe == "cat-block" {
+            cat = Some((qc, rep));
         }
     }
 
-    // Serve the CAT-W4A4 config.
-    let qc = cat_qc.unwrap();
+    // Mixed precision through per-group overrides: attention at W8A8,
+    // the MLP at W4A4 — inexpressible under the old flat config.
+    let mixed_plan = QuantPlan::new()
+        .transform("cat-block")
+        .quantizer(WeightQuantizer::Rtn)
+        .bits(4, 4)
+        .seed(0)
+        .for_group(LayerGroup::AttnIn, |g| g.bits(8, 8))
+        .for_group(LayerGroup::OIn, |g| g.bits(8, 8));
+    let (mixed_qc, mixed_rep) = build_quant_config(&zoo.model, &zoo.calib, &mixed_plan)?;
+    let mixed_eng = NativeLogits { model: &zoo.model, qc: Some(&mixed_qc) };
+    let mixed_ppl = perplexity(&mixed_eng, &windows)?;
+    println!(
+        "[4/5] attn-W8A8/mlp-W4A4: ppl {mixed_ppl:.3} (native engine; layer SQNR {:.1} dB)",
+        mixed_rep.mean_sqnr_db
+    );
+
+    // Persist the CAT-W4A4 run and serve from the loaded artifact.
+    let (qc, rep) = cat.unwrap();
+    let art_dir = std::env::temp_dir().join("catquant-e2e-artifact");
+    let t0 = Instant::now();
+    save_artifact(&qc, &rep, &art_dir)?;
+    let save_s = t0.elapsed().as_secs_f64();
+    println!("[5/5] artifact saved to {} in {save_s:.2}s", art_dir.display());
+
     let manifest2 = manifest.clone();
     let model2 = model.clone();
+    let art_dir2 = art_dir.clone();
     let coord = Coordinator::start(
         move || {
             let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
-            let zoo = load_zoo(&manifest2, &model2, 0).expect("zoo");
-            Box::new(
-                PjrtGenerator::quant(
-                    engine,
-                    &model2,
-                    &zoo.model.params,
-                    &qc,
-                    SamplingCfg { temperature: 0.8, seed: 3 },
-                )
-                .expect("gen"),
-            ) as Box<dyn GenEngine>
+            // No calibration on the boot path: weights + the saved
+            // artifact are all a serving worker needs.
+            let t0 = Instant::now();
+            let native = load_model(&manifest2, &model2).expect("model");
+            let gen = PjrtGenerator::quant_from_artifact(
+                engine,
+                &model2,
+                &native,
+                &art_dir2,
+                SamplingCfg { temperature: 0.8, seed: 3 },
+            )
+            .expect("gen");
+            eprintln!(
+                "[5/5] worker booted from artifact in {:.0} ms (weights + codes, \
+                 no calibration/pipeline rerun)",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            Box::new(gen) as Box<dyn GenEngine>
         },
         BatcherCfg::default(),
     );
@@ -106,7 +141,7 @@ fn main() -> anyhow::Result<()> {
         rx.recv()?;
     }
     let metrics = coord.shutdown();
-    println!("[5/5] served CAT-W4A4: {}", metrics.summary());
+    println!("[5/5] served CAT-W4A4 from artifact: {}", metrics.summary());
     println!("\nE2E complete in {:.1}s", t_all.elapsed().as_secs_f64());
     Ok(())
 }

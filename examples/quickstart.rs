@@ -1,4 +1,4 @@
-//! Quickstart: calibrate → CAT-quantize → evaluate, in ~40 lines of API.
+//! Quickstart: calibrate → plan → CAT-quantize → persist → evaluate.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -7,10 +7,10 @@
 use catquant::calib::Corpus;
 use catquant::eval::{perplexity, PjrtLogits};
 use catquant::experiments::load_zoo;
-use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{Manifest, PjrtEngine};
-use catquant::transforms::TransformKind;
+use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
+use catquant::runtime::{load_artifact, save_artifact, Manifest, PjrtEngine};
 use std::rc::Rc;
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     // 1. Artifacts: trained weights + AOT-compiled graphs + corpus.
@@ -22,21 +22,43 @@ fn main() -> anyhow::Result<()> {
     // 2. Calibrate on 128 corpus sequences (collects Σ_x per layer group).
     let zoo = load_zoo(&manifest, model, 0)?;
 
-    // 3. Build the paper's transform — CAT (block) — and quantize W4A4.
-    let (qc, report) = build_quant_config(
-        &zoo.model,
-        &zoo.calib,
-        PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, 0),
-    );
+    // 3. Plan the run: the paper's transform — CAT (block) — at W4A4,
+    //    uniform across every layer group. (Per-group overrides and
+    //    mixed precision: see examples/e2e_pipeline.rs.)
+    let plan = QuantPlan::new()
+        .transform("cat-block")
+        .quantizer(WeightQuantizer::Rtn)
+        .bits(4, 4)
+        .seed(0);
+    let t0 = Instant::now();
+    let (qc, report) = build_quant_config(&zoo.model, &zoo.calib, &plan)?;
+    let build_s = t0.elapsed().as_secs_f64();
     println!("mean post-transform layer SQNR: {:.1} dB", report.mean_sqnr_db);
 
-    // 4. Evaluate perplexity through the compiled serving graphs.
+    // 4. Persist the built config and load it back — a server boots from
+    //    this directory in milliseconds instead of re-running step 3.
+    let dir = std::env::temp_dir().join("catquant-quickstart-artifact");
+    save_artifact(&qc, &report, &dir)?;
+    let t0 = Instant::now();
+    let loaded = load_artifact(&dir, &zoo.model)?;
+    let load_s = t0.elapsed().as_secs_f64();
+    let toks: Vec<u8> = (0..entry.config.seq.min(16)).map(|i| (i * 31) as u8).collect();
+    let diff = zoo
+        .model
+        .forward_quant(&toks, &qc)
+        .max_abs_diff(&zoo.model.forward_quant(&toks, &loaded));
+    println!(
+        "artifact round trip: build {build_s:.2}s vs load {load_s:.3}s, logits diff {diff} (must be 0)"
+    );
+    assert_eq!(diff, 0.0, "loaded artifact must be bit-exact");
+
+    // 5. Evaluate perplexity through the compiled serving graphs.
     let engine = Rc::new(PjrtEngine::new(manifest.clone())?);
     let corpus = Corpus::load(&manifest.corpus_eval)?;
     let windows = corpus.eval_windows(16, entry.config.seq);
 
     let fp = PjrtLogits::fp(engine.clone(), model, &zoo.model.params)?;
-    let quant = PjrtLogits::quant(engine, model, &zoo.model.params, &qc, 4)?;
+    let quant = PjrtLogits::quant(engine, model, &zoo.model.params, &loaded, 4)?;
     let ppl_fp = perplexity(&fp, &windows)?;
     let ppl_q = perplexity(&quant, &windows)?;
     println!("perplexity: FP {ppl_fp:.3}  |  CAT W4A4 {ppl_q:.3}");

@@ -5,6 +5,12 @@
 //! pays the online transform cost inside the compiled graph, exactly like
 //! a deployment would.
 //!
+//! The quantized worker boots **from a saved artifact**: the pipeline
+//! runs once up front, `save_artifact` persists it, and the serving
+//! factory restores the packed codes with
+//! [`PjrtGenerator::quant_from_artifact`] — the production boot path
+//! (milliseconds, no calibration/GPTQ at startup).
+//!
 //! ```bash
 //! cargo run --release --example serve_quantized -- [model] [n_requests]
 //! ```
@@ -13,34 +19,45 @@ use catquant::calib::Corpus;
 use catquant::coordinator::{
     BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg, ServeMetrics,
 };
-use catquant::experiments::load_zoo;
-use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{Manifest, PjrtEngine};
-use catquant::transforms::TransformKind;
+use catquant::experiments::{load_model, load_zoo};
+use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
+use catquant::runtime::{save_artifact, Manifest, PjrtEngine};
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::time::Instant;
 
-fn run_mode(manifest: &Manifest, model: &str, quantized: bool, prompts: Vec<Vec<u8>>) -> ServeMetrics {
+fn run_mode(
+    manifest: &Manifest,
+    model: &str,
+    artifact: Option<PathBuf>,
+    prompts: Vec<Vec<u8>>,
+) -> ServeMetrics {
     let manifest2 = manifest.clone();
     let model2 = model.to_string();
     let coord = Coordinator::start(
         move || {
             let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
-            let zoo = load_zoo(&manifest2, &model2, 0).expect("zoo");
+            // Serving workers load weights only — no calibration pass;
+            // the quantized state comes from the saved artifact.
+            let native = load_model(&manifest2, &model2).expect("model");
             let sampling = SamplingCfg { temperature: 0.8, seed: 7 };
-            let gen: Box<dyn GenEngine> = if quantized {
-                let (qc, _) = build_quant_config(
-                    &zoo.model,
-                    &zoo.calib,
-                    PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, 0),
-                );
-                Box::new(
-                    PjrtGenerator::quant(engine, &model2, &zoo.model.params, &qc, sampling)
-                        .expect("gen"),
-                )
-            } else {
-                Box::new(
-                    PjrtGenerator::fp(engine, &model2, &zoo.model.params, sampling).expect("gen"),
-                )
+            let gen: Box<dyn GenEngine> = match &artifact {
+                Some(dir) => {
+                    let t0 = Instant::now();
+                    let gen = PjrtGenerator::quant_from_artifact(
+                        engine, &model2, &native, dir, sampling,
+                    )
+                    .expect("gen");
+                    eprintln!(
+                        "quantized worker booted from artifact in {:.0} ms \
+                         (weights + codes, no calibration/pipeline rerun)",
+                        t0.elapsed().as_secs_f64() * 1e3
+                    );
+                    Box::new(gen)
+                }
+                None => Box::new(
+                    PjrtGenerator::fp(engine, &model2, &native.params, sampling).expect("gen"),
+                ),
             };
             gen
         },
@@ -53,6 +70,27 @@ fn run_mode(manifest: &Manifest, model: &str, quantized: bool, prompts: Vec<Vec<
     coord.shutdown()
 }
 
+/// Build the CAT-W4A4 config once and persist it where the serving
+/// factory can boot from.
+fn build_artifact(manifest: &Manifest, model: &str, dir: &Path) -> anyhow::Result<()> {
+    let zoo = load_zoo(manifest, model, 0)?;
+    let plan = QuantPlan::new()
+        .transform("cat-block")
+        .quantizer(WeightQuantizer::Rtn)
+        .bits(4, 4)
+        .seed(0);
+    let t0 = Instant::now();
+    let (qc, rep) = build_quant_config(&zoo.model, &zoo.calib, &plan)?;
+    let build_s = t0.elapsed().as_secs_f64();
+    save_artifact(&qc, &rep, dir)?;
+    println!(
+        "pipeline built in {build_s:.1}s; artifact saved to {} ({:.1} KiB packed codes)",
+        dir.display(),
+        qc.packed_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let model = args.get(1).map(|s| s.as_str()).unwrap_or("small").to_string();
@@ -62,12 +100,15 @@ fn main() -> anyhow::Result<()> {
     let corpus = Corpus::load(&manifest.corpus_eval)?;
     let prompts = corpus.sample_sequences(n, manifest.prompt_len, 99);
 
+    let art_dir = std::env::temp_dir().join(format!("catquant-serve-artifact-{model}"));
+    build_artifact(&manifest, &model, &art_dir)?;
+
     println!("== FP serving ({model}, {n} requests, 24 new tokens each) ==");
-    let fp = run_mode(&manifest, &model, false, prompts.clone());
+    let fp = run_mode(&manifest, &model, None, prompts.clone());
     println!("{}\n", fp.summary());
 
-    println!("== CAT W4A4 serving (same prompts) ==");
-    let q = run_mode(&manifest, &model, true, prompts);
+    println!("== CAT W4A4 serving from artifact (same prompts) ==");
+    let q = run_mode(&manifest, &model, Some(art_dir), prompts);
     println!("{}\n", q.summary());
 
     println!(

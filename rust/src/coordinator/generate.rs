@@ -125,6 +125,13 @@ impl PjrtGenerator {
     }
 
     /// Quantized serving (W?A4 graphs + pipeline products).
+    ///
+    /// The compiled `*_a4` graphs quantize activations at a *baked-in*
+    /// uniform A4, so `qc` must be uniform asymmetric 4-bit — mixed or
+    /// non-A4 plans are rejected (by [`ArgPack::quant`], the shared
+    /// seam) rather than served with numerics that match neither the
+    /// plan nor the native engine; use [`super::NativeGenerator`] for
+    /// those.
     pub fn quant(
         engine: std::rc::Rc<PjrtEngine>,
         model: &str,
@@ -135,6 +142,21 @@ impl PjrtGenerator {
         let entry = engine.manifest().model(model)?.clone();
         let pack = ArgPack::quant(&entry, params, qc)?;
         Self::new(engine, model, "prefill_a4", "decode_a4", pack, sampling)
+    }
+
+    /// Quantized serving from a saved artifact
+    /// ([`crate::runtime::load_artifact`]): loads prebuilt transforms +
+    /// packed codes (validated against `native`) instead of re-running
+    /// the pipeline at boot, then packs them for the compiled graphs.
+    pub fn quant_from_artifact(
+        engine: std::rc::Rc<PjrtEngine>,
+        model: &str,
+        native: &crate::model::NativeModel,
+        dir: &std::path::Path,
+        sampling: SamplingCfg,
+    ) -> Result<PjrtGenerator> {
+        let qc = crate::runtime::load_artifact(dir, native)?;
+        Self::quant(engine, model, &native.params, &qc, sampling)
     }
 
     fn new(

@@ -45,6 +45,21 @@ impl NativeGenerator {
         Self::new(model, Some(qc), max_batch, sampling)
     }
 
+    /// Quantized serving from a saved artifact
+    /// ([`crate::runtime::load_artifact`]): the production boot path —
+    /// prebuilt transforms + packed codes load in milliseconds instead
+    /// of re-running calibration + GPTQ, and serve bit-exactly like the
+    /// in-memory build they were saved from.
+    pub fn quant_from_artifact(
+        model: NativeModel,
+        dir: &std::path::Path,
+        max_batch: usize,
+        sampling: SamplingCfg,
+    ) -> Result<NativeGenerator> {
+        let qc = crate::runtime::load_artifact(dir, &model)?;
+        Ok(Self::new(model, Some(qc), max_batch, sampling))
+    }
+
     fn new(
         model: NativeModel,
         qc: Option<QuantConfig>,

@@ -37,7 +37,12 @@ impl Coordinator {
     ///
     /// Takes a *factory* rather than an engine: PJRT handles are not
     /// `Send`, so the engine is constructed on the worker thread and
-    /// never crosses a thread boundary.
+    /// never crosses a thread boundary. Production factories should
+    /// restore prebuilt quantization state via the artifact constructors
+    /// ([`super::NativeGenerator::quant_from_artifact`] /
+    /// [`super::PjrtGenerator::quant_from_artifact`]) — loading packed
+    /// codes is milliseconds, so worker (re)starts don't re-run
+    /// calibration or GPTQ.
     pub fn start<F>(make_engine: F, cfg: BatcherCfg) -> Coordinator
     where
         F: FnOnce() -> Box<dyn GenEngine> + Send + 'static,

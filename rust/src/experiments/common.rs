@@ -32,10 +32,18 @@ pub struct LayerData {
     pub w: Mat,
 }
 
+/// Load one model's weights *without* running the calibration pass —
+/// what artifact-booting servers and FP serving need (calibration is
+/// exactly the startup cost artifacts exist to skip).
+pub fn load_model(manifest: &Manifest, name: &str) -> Result<NativeModel> {
+    let entry = manifest.model(name)?;
+    NativeModel::from_catw(entry.config.clone(), &entry.weights)
+}
+
 /// Load one model and run the calibration pass.
 pub fn load_zoo(manifest: &Manifest, name: &str, seed: u64) -> Result<ZooModel> {
     let entry = manifest.model(name)?;
-    let model = NativeModel::from_catw(entry.config.clone(), &entry.weights)?;
+    let model = load_model(manifest, name)?;
     let corpus = Corpus::load(&manifest.corpus_train)?;
     let seqs = corpus.sample_sequences(CALIB_SEQS, entry.config.seq, seed ^ 0xCA11B);
     let calib = calibrate(&model, &seqs, CALIB_SAMPLE_ROWS, seed);

@@ -88,7 +88,7 @@ fn print_fig4(rows: &[Fig4Row]) {
         .map(|r| {
             vec![
                 r.layer.clone(),
-                r.transform.label().into(),
+                r.transform.name().into(),
                 format!("{:.1}", r.c_act_db),
                 format!("{:.1}", r.c_w_db),
                 format!("{:.1}", r.normal_ref_db),
@@ -105,6 +105,6 @@ fn print_fig4(rows: &[Fig4Row]) {
         let sel: Vec<&Fig4Row> = rows.iter().filter(|r| r.transform == kind).collect();
         let (ca, _) = mean_std(&sel.iter().map(|r| r.c_act_db).collect::<Vec<_>>());
         let (cw, _) = mean_std(&sel.iter().map(|r| r.c_w_db).collect::<Vec<_>>());
-        println!("  {:<22} C(x) {:>6.1} dB   C(W) {:>6.1} dB", kind.label(), ca, cw);
+        println!("  {:<22} C(x) {:>6.1} dB   C(W) {:>6.1} dB", kind.name(), ca, cw);
     }
 }

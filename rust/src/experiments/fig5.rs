@@ -91,7 +91,7 @@ fn print_fig5(rows: &[Fig5Row]) {
         .map(|r| {
             vec![
                 r.layer.clone(),
-                r.transform.label().into(),
+                r.transform.name().into(),
                 format!("{:.2}", r.alignment_db),
                 format!("{:.2}", r.max_alignment_db),
                 format!("{:.2}", r.max_alignment_db - r.alignment_db),
@@ -108,7 +108,7 @@ fn print_fig5(rows: &[Fig5Row]) {
             .map(|r| r.max_alignment_db - r.alignment_db)
             .collect();
         let (m, s) = mean_std(&sel);
-        println!("  {:<22} {:>6.2} ± {:.2} dB", kind.label(), m, s);
+        println!("  {:<22} {:>6.2} ± {:.2} dB", kind.name(), m, s);
     }
     // Invariance check (paper eq. 4): QuaRot == None per layer.
     let mut max_dev: f64 = 0.0;

@@ -115,7 +115,7 @@ fn print_fig6(rows: &[Fig6Row]) {
         })
         .collect();
     print_table(
-        &["layer group", "None", "SmoothQuant", "QuaRot", "CAT (block)", "W6A6 None"],
+        &["layer group", "identity", "smoothquant", "quarot", "cat-block", "W6A6 identity"],
         &table,
     );
 
@@ -123,7 +123,7 @@ fn print_fig6(rows: &[Fig6Row]) {
     for (i, kind) in KINDS.iter().enumerate() {
         let vals: Vec<f64> = rows.iter().map(|r| r.w4a4[i].1).collect();
         let (m, s) = mean_std(&vals);
-        println!("  {:<22} {:>6.1} ± {:.1} dB", kind.label(), m, s);
+        println!("  {:<22} {:>6.1} ± {:.1} dB", kind.name(), m, s);
     }
     let w66: Vec<f64> = rows.iter().map(|r| r.w6a6_none_db).collect();
     let (m, s) = mean_std(&w66);

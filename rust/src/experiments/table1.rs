@@ -101,8 +101,8 @@ pub fn run_table1(manifest: &Manifest, opts: &Table1Opts) -> Result<Vec<Table1Ce
                     let (qc, _rep) = build_quant_config(
                         &z.model,
                         &z.calib,
-                        PipelineCfg::w4a4(kind, wq, seed),
-                    );
+                        &PipelineCfg::w4a4(kind, wq, seed).plan(),
+                    )?;
                     let qeng =
                         PjrtLogits::quant(engine.clone(), mname, &z.model.params, &qc, 4)?;
                     ppls.push(perplexity(&qeng, &windows)?);
@@ -112,13 +112,13 @@ pub fn run_table1(manifest: &Manifest, opts: &Table1Opts) -> Result<Vec<Table1Ce
                 let (am, asd) = mean_std(&accs);
                 eprintln!(
                     "[table1] {mname} {} {}: ppl {pm:.2}±{ps:.2} acc {am:.1}±{asd:.1}",
-                    wq.label(),
-                    kind.label()
+                    wq.name(),
+                    kind.name()
                 );
                 cells.push(Table1Cell {
                     model: mname.clone(),
-                    quantizer: wq.label(),
-                    transform: kind.label().into(),
+                    quantizer: wq.name(),
+                    transform: kind.name().into(),
                     ppl_mean: pm,
                     ppl_std: ps,
                     acc_mean: am,

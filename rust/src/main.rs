@@ -3,20 +3,22 @@
 //! ```text
 //! catquant info
 //! catquant exp fig2|fig3|fig4|fig5|fig6|table1|ablations [--models tiny,small] [--seed N] [--seeds N] [--quick]
-//! catquant quantize --model small --transform cat [--wquant gptq]
+//! catquant quantize --model small --transform cat [--wquant gptq] [--save-artifact DIR]
 //! catquant eval --model small --transform cat [--wquant rtn] [--windows N]
-//! catquant serve --model small --mode fp|cat-w4a4 [--requests N] [--max-new N]
+//! catquant serve --model small --mode fp|cat-w4a4 [--engine pjrt|native] [--artifact DIR] [--requests N] [--max-new N]
 //! ```
 //!
 //! Argument parsing is hand-rolled: the offline vendor set has no clap.
 
 use anyhow::{bail, Context, Result};
 use catquant::calib::Corpus;
-use catquant::coordinator::{BatcherCfg, Coordinator, GenEngine, PjrtGenerator, SamplingCfg};
+use catquant::coordinator::{
+    BatcherCfg, Coordinator, GenEngine, NativeGenerator, PjrtGenerator, SamplingCfg,
+};
 use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits};
 use catquant::experiments as exp;
 use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{Manifest, PjrtEngine};
+use catquant::runtime::{load_artifact, save_artifact, Manifest, PjrtEngine};
 use catquant::transforms::TransformKind;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -61,25 +63,25 @@ impl Args {
 }
 
 fn parse_kind(name: &str) -> Result<TransformKind> {
-    Ok(match name.to_lowercase().as_str() {
+    let lower = name.to_lowercase();
+    // Registry names first (the canonical spellings), then CLI aliases.
+    if let Some(kind) = TransformKind::from_name(&lower) {
+        return Ok(kind);
+    }
+    Ok(match lower.as_str() {
         "none" => TransformKind::None,
-        "smoothquant" | "sq" => TransformKind::SmoothQuant,
-        "quarot" | "hadamard" => TransformKind::QuaRot,
-        "spinquant" => TransformKind::SpinQuant,
-        "cat" | "cat-block" | "catblock" => TransformKind::CatBlock,
+        "sq" => TransformKind::SmoothQuant,
+        "hadamard" => TransformKind::QuaRot,
+        "cat" | "catblock" => TransformKind::CatBlock,
         "cat-trained" | "cattrained" => TransformKind::CatBlockTrained,
         "flatquant" => TransformKind::FlatQuant,
-        "cat-optimal" => TransformKind::CatOptimal,
         other => bail!("unknown transform {other}"),
     })
 }
 
 fn parse_wquant(name: &str) -> Result<WeightQuantizer> {
-    Ok(match name.to_lowercase().as_str() {
-        "rtn" => WeightQuantizer::Rtn,
-        "gptq" => WeightQuantizer::Gptq,
-        other => bail!("unknown weight quantizer {other}"),
-    })
+    WeightQuantizer::from_name(&name.to_lowercase())
+        .with_context(|| format!("unknown weight quantizer {name}"))
 }
 
 fn main() -> Result<()> {
@@ -183,11 +185,11 @@ fn cmd_quantize(manifest: &Manifest, args: &Args) -> Result<()> {
     let zoo = exp::load_zoo(manifest, model, seed)?;
     let t0 = std::time::Instant::now();
     let (qc, rep) =
-        build_quant_config(&zoo.model, &zoo.calib, PipelineCfg::w4a4(kind, wq, seed));
+        build_quant_config(&zoo.model, &zoo.calib, &PipelineCfg::w4a4(kind, wq, seed).plan())?;
     println!(
         "quantized {model} with {} + {} in {:.1}s",
-        kind.label(),
-        wq.label(),
+        kind.name(),
+        wq.name(),
         t0.elapsed().as_secs_f64()
     );
     println!("  mean layer SQNR (approx): {:.1} dB", rep.mean_sqnr_db);
@@ -204,6 +206,16 @@ fn cmd_quantize(manifest: &Manifest, args: &Args) -> Result<()> {
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     {
         println!("  slowest transform build: {name} ({ms:.1} ms)");
+    }
+    if let Some(dir) = args.flag("save-artifact") {
+        let dir = std::path::Path::new(dir);
+        let t0 = std::time::Instant::now();
+        save_artifact(&qc, &rep, dir)?;
+        println!(
+            "  artifact saved to {} in {:.0} ms (serve with `catquant serve --engine native --artifact ...`)",
+            dir.display(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
     }
     Ok(())
 }
@@ -231,11 +243,11 @@ fn cmd_eval(manifest: &Manifest, args: &Args) -> Result<()> {
     }
     let kind = parse_kind(kind_s)?;
     let (qc, _) =
-        build_quant_config(&zoo.model, &zoo.calib, PipelineCfg::w4a4(kind, wq, seed));
+        build_quant_config(&zoo.model, &zoo.calib, &PipelineCfg::w4a4(kind, wq, seed).plan())?;
     let eng = PjrtLogits::quant(engine, model, &zoo.model.params, &qc, 4)?;
     let ppl = perplexity(&eng, &windows)?;
     let tasks = zero_shot_suite(&eng, &corpus, items, seed)?;
-    report_eval(model, kind.label(), ppl, &tasks);
+    report_eval(model, kind.name(), ppl, &tasks);
     Ok(())
 }
 
@@ -252,6 +264,8 @@ fn report_eval(model: &str, label: &str, ppl: f64, tasks: &[catquant::eval::Task
 fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     let model = args.flag("model").unwrap_or("small").to_string();
     let mode = args.flag("mode").unwrap_or("fp").to_string();
+    let engine_kind = args.flag("engine").unwrap_or("pjrt").to_string();
+    let artifact = args.flag("artifact").map(std::path::PathBuf::from);
     let n_requests = args.usize_flag("requests", 16);
     let max_new = args.usize_flag("max-new", 24);
     let temperature: f64 = args
@@ -259,34 +273,98 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.8);
     let seed = args.u64_flag("seed", 0);
+    anyhow::ensure!(
+        engine_kind == "pjrt" || engine_kind == "native",
+        "unknown --engine {engine_kind} (expected pjrt or native)"
+    );
+    anyhow::ensure!(
+        !(mode == "fp" && artifact.is_some()),
+        "--artifact has no effect with --mode fp; drop the flag or pick a quantized mode"
+    );
 
     let manifest2 = manifest.clone();
     let model2 = model.clone();
     let mode2 = mode.clone();
+    let batcher_cfg = BatcherCfg::default();
+    let max_batch = batcher_cfg.max_batch;
     let coord = Coordinator::start(
         move || {
-            let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
-            let zoo = exp::load_zoo(&manifest2, &model2, seed).expect("zoo");
             let sampling = SamplingCfg { temperature, seed };
-            let gen: Box<dyn GenEngine> = if mode2 == "fp" {
-                Box::new(
-                    PjrtGenerator::fp(engine, &model2, &zoo.model.params, sampling)
-                        .expect("generator"),
-                )
-            } else {
-                let (qc, _) = build_quant_config(
+            // Weights load without a calibration pass; only a pipeline
+            // (re)build below pays calibration — the cost artifacts
+            // exist to keep off the boot path.
+            let native = exp::load_model(&manifest2, &model2).expect("model");
+            // A prebuilt artifact boots in milliseconds. A stale/corrupt
+            // one falls back to a fresh build instead of wedging the
+            // worker — but the on-disk artifact is the user's (possibly
+            // a very different plan), so it is never overwritten.
+            let try_artifact = |native: &catquant::model::NativeModel| {
+                let dir = artifact.as_ref()?;
+                if !dir.join("artifact.json").exists() {
+                    return None;
+                }
+                let t0 = std::time::Instant::now();
+                match load_artifact(dir, native) {
+                    Ok(qc) => {
+                        eprintln!(
+                            "[serve] loaded artifact {} in {:.0} ms (no calibration run)",
+                            dir.display(),
+                            t0.elapsed().as_secs_f64() * 1e3
+                        );
+                        Some(qc)
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[serve] artifact {} unusable ({e}); serving a fresh \
+                             cat-block W4A4 build (artifact left untouched)",
+                            dir.display()
+                        );
+                        None
+                    }
+                }
+            };
+            let build = || {
+                let zoo = exp::load_zoo(&manifest2, &model2, seed).expect("zoo");
+                let (qc, rep) = build_quant_config(
                     &zoo.model,
                     &zoo.calib,
-                    PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed),
-                );
-                Box::new(
-                    PjrtGenerator::quant(engine, &model2, &zoo.model.params, &qc, sampling)
-                        .expect("generator"),
+                    &PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed)
+                        .plan(),
                 )
+                .expect("pipeline");
+                if let Some(dir) = &artifact {
+                    if !dir.join("artifact.json").exists() {
+                        save_artifact(&qc, &rep, dir).expect("save artifact");
+                        eprintln!("[serve] built + saved artifact to {}", dir.display());
+                    }
+                }
+                qc
+            };
+            let gen: Box<dyn GenEngine> = match (engine_kind.as_str(), mode2 == "fp") {
+                ("native", true) => Box::new(NativeGenerator::fp(native, max_batch, sampling)),
+                ("native", false) => {
+                    let qc = try_artifact(&native).unwrap_or_else(build);
+                    Box::new(NativeGenerator::quant(native, qc, max_batch, sampling))
+                }
+                (_, true) => {
+                    let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+                    Box::new(
+                        PjrtGenerator::fp(engine, &model2, &native.params, sampling)
+                            .expect("generator"),
+                    )
+                }
+                (_, false) => {
+                    let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+                    let qc = try_artifact(&native).unwrap_or_else(build);
+                    Box::new(
+                        PjrtGenerator::quant(engine, &model2, &native.params, &qc, sampling)
+                            .expect("generator"),
+                    )
+                }
             };
             gen
         },
-        BatcherCfg::default(),
+        batcher_cfg,
     );
 
     // Open-loop synthetic client: prompts drawn from the eval corpus.

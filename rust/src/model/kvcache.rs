@@ -137,7 +137,7 @@ impl KvCache {
     }
 
     /// The packed cache's activation grid `(scheme, clip_ratio)`, if
-    /// packed — decode steps assert it matches `qc.act`, since cached
+    /// packed — decode steps assert it matches `qc.kv_act`, since cached
     /// codes from one grid are meaningless under another.
     pub(crate) fn packed_grid(&self) -> Option<(QScheme, f64)> {
         match self.layers.first() {

@@ -18,5 +18,6 @@ pub use kvcache::KvCache;
 pub use loader::{load_catw, CatwTensor};
 pub use native::{softmax_row, NativeModel, ProbeCapture};
 pub use quantized::{
-    group_of_linear, LayerGroup, QuantConfig, QuantizedLinear, QuantizedWeightsSet, ALL_GROUPS,
+    group_of_linear, LayerGroup, LinearId, QuantConfig, QuantizedLinear, QuantizedWeightsSet,
+    ALL_GROUPS,
 };

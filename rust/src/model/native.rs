@@ -6,7 +6,7 @@
 //! graphs to f32 precision.
 
 use super::kvcache::{KvCache, LayerKv};
-use super::{ModelConfig, QuantConfig};
+use super::{LayerGroup, LinearId, ModelConfig, QuantConfig};
 use crate::linalg::{matmul_a_bt, matmul_a_bt_cached, par, qmatmul_a_bt_panels, Mat};
 use crate::quant::{quantize_activations_per_token, QuantizedTensor};
 use anyhow::{bail, Context, Result};
@@ -142,7 +142,7 @@ impl NativeModel {
         assert!(!tokens.is_empty(), "prefill needs at least one token");
         let mut cache = match qc {
             None => KvCache::fp(&self.cfg),
-            Some(qc) => KvCache::packed(&self.cfg, qc.act.scheme, qc.act.clip_ratio),
+            Some(qc) => KvCache::packed(&self.cfg, qc.kv_act.scheme, qc.kv_act.clip_ratio),
         };
         let logits = self.forward_impl(tokens, qc, None, None, Some(&mut cache), true);
         (logits, cache)
@@ -180,8 +180,8 @@ impl NativeModel {
             );
             if let (Some((scheme, clip)), Some(qc)) = (c.packed_grid(), qc) {
                 assert!(
-                    scheme == qc.act.scheme && clip == qc.act.clip_ratio,
-                    "cache activation grid does not match qc.act"
+                    scheme == qc.kv_act.scheme && clip == qc.kv_act.clip_ratio,
+                    "cache activation grid does not match qc.kv_act"
                 );
             }
         }
@@ -201,11 +201,9 @@ impl NativeModel {
         let mut rowbuf = vec![0.0f64; cfg.d];
         let scale = 1.0 / (cfg.head_dim() as f64).sqrt();
         for i in 0..cfg.n_layers {
-            let pfx = format!("blocks.{i}.");
-            let h = rmsnorm(&x, self.p(&format!("{pfx}ln1")));
-            let mut qkv = self
-                .linear_group(&h, &pfx, &["q_proj", "k_proj", "v_proj"], "t_attn", qc, None)
-                .into_iter();
+            let h = rmsnorm(&x, self.p(&format!("blocks.{i}.ln1")));
+            let mut qkv =
+                self.linear_group(&h, i, LayerGroup::AttnIn, qc, None).into_iter();
             let q = qkv.next().unwrap();
             let k = qkv.next().unwrap();
             let v = qkv.next().unwrap();
@@ -229,10 +227,9 @@ impl NativeModel {
                     att.row_mut(bi),
                 );
             }
-            let o =
-                self.linear_group(&att, &pfx, &["o_proj"], "t_o", qc, None).pop().unwrap();
+            let o = self.linear_group(&att, i, LayerGroup::OIn, qc, None).pop().unwrap();
             x = x.add(&o);
-            self.mlp_block(&mut x, &pfx, qc, None, None);
+            self.mlp_block(&mut x, i, qc, None, None);
         }
         for c in caches.iter_mut() {
             c.advance(1);
@@ -274,14 +271,12 @@ impl NativeModel {
             }
         }
         for i in 0..cfg.n_layers {
-            let pfx = format!("blocks.{i}.");
-            let h = rmsnorm(&x, self.p(&format!("{pfx}ln1")));
+            let h = rmsnorm(&x, self.p(&format!("blocks.{i}.ln1")));
             if let Some(pr) = probe.as_deref_mut() {
                 pr.attn_in[i].push(h.clone());
             }
-            let mut qkv = self
-                .linear_group(&h, &pfx, &["q_proj", "k_proj", "v_proj"], "t_attn", qc, dense)
-                .into_iter();
+            let mut qkv =
+                self.linear_group(&h, i, LayerGroup::AttnIn, qc, dense).into_iter();
             let q = qkv.next().unwrap();
             let mut k = qkv.next().unwrap();
             let mut v = qkv.next().unwrap();
@@ -306,13 +301,12 @@ impl NativeModel {
             if let Some(pr) = probe.as_deref_mut() {
                 pr.o_in[i].push(att.clone());
             }
-            let o =
-                self.linear_group(&att, &pfx, &["o_proj"], "t_o", qc, dense).pop().unwrap();
+            let o = self.linear_group(&att, i, LayerGroup::OIn, qc, dense).pop().unwrap();
             x = x.add(&o);
             let mlp_probe = probe
                 .as_deref_mut()
                 .map(|pr| (&mut pr.mlp_in[i], &mut pr.down_in[i]));
-            self.mlp_block(&mut x, &pfx, qc, dense, mlp_probe);
+            self.mlp_block(&mut x, i, qc, dense, mlp_probe);
         }
         if let Some(cache) = cache {
             cache.advance(s);
@@ -332,7 +326,7 @@ impl NativeModel {
     fn mlp_block(
         &self,
         x: &mut Mat,
-        pfx: &str,
+        block: usize,
         qc: Option<&QuantConfig>,
         dense: Option<&HashMap<String, Mat>>,
         probe: Option<(&mut Vec<Mat>, &mut Vec<Mat>)>,
@@ -343,13 +337,11 @@ impl NativeModel {
             Some((a, b)) => (Some(a), Some(b)),
             None => (None, None),
         };
-        let h = rmsnorm(x, self.p(&format!("{pfx}ln2")));
+        let h = rmsnorm(x, self.p(&format!("blocks.{block}.ln2")));
         if let Some(p) = probe_h {
             p.push(h.clone());
         }
-        let mut gu = self
-            .linear_group(&h, pfx, &["gate_proj", "up_proj"], "t_mlp", qc, dense)
-            .into_iter();
+        let mut gu = self.linear_group(&h, block, LayerGroup::MlpIn, qc, dense).into_iter();
         let gate = gu.next().unwrap();
         let up = gu.next().unwrap();
         let mut hidden = Mat::zeros(s, ff);
@@ -362,7 +354,7 @@ impl NativeModel {
             p.push(hidden.clone());
         }
         let down = self
-            .linear_group(&hidden, pfx, &["down_proj"], "t_down", qc, dense)
+            .linear_group(&hidden, block, LayerGroup::DownIn, qc, dense)
             .pop()
             .unwrap();
         x.add_in_place(&down);
@@ -371,19 +363,21 @@ impl NativeModel {
     /// One group of (possibly transformed + quantized) linears. Layers in
     /// a group share their input, so the transform matmul and the
     /// per-token quantization happen once per group — not once per linear
-    /// (q/k/v share one transformed+quantized activation). The quantized
-    /// path produces integer codes for the packed i32-accumulate kernel;
-    /// `dense` routes through the historical fake-quant f64 reference
-    /// over pre-dequantized mats instead (parity tests, bench A/B).
+    /// (q/k/v share one transformed+quantized activation), on the
+    /// *group's* activation grid (`qc.act_for`) — the seam mixed-precision
+    /// plans execute through. The quantized path produces integer codes
+    /// for the packed i32-accumulate kernel; `dense` routes through the
+    /// historical fake-quant f64 reference over pre-dequantized mats
+    /// instead (parity tests, bench A/B).
     fn linear_group(
         &self,
         x: &Mat,
-        pfx: &str,
-        lins: &[&str],
-        tshort: &str,
+        block: usize,
+        group: LayerGroup,
         qc: Option<&QuantConfig>,
         dense: Option<&HashMap<String, Mat>>,
     ) -> Vec<Mat> {
+        let lins = group.linears();
         // Model weights and transforms are static across calls, so the
         // cached dispatcher's persistent panels serve every decode step
         // (large prefill shapes fall through to the row-partitioned
@@ -391,10 +385,10 @@ impl NativeModel {
         let Some(qc) = qc else {
             return lins
                 .iter()
-                .map(|lin| matmul_a_bt_cached(x, self.p(&format!("{pfx}{lin}"))))
+                .map(|lin| matmul_a_bt_cached(x, self.p(&format!("blocks.{block}.{lin}"))))
                 .collect();
         };
-        let tname = format!("{pfx}{tshort}");
+        let tname = group.t_name(block);
         let xt_store;
         let xin: &Mat = match qc.transforms.get(&tname) {
             Some(t) => {
@@ -403,29 +397,30 @@ impl NativeModel {
             }
             None => x,
         };
+        let act = qc.act_for(group);
         match dense {
             Some(weights) => {
                 let (xq, _) =
-                    quantize_activations_per_token(xin, qc.act.scheme, qc.act.clip_ratio);
+                    quantize_activations_per_token(xin, act.scheme, act.clip_ratio);
                 lins.iter()
-                    .map(|lin| {
-                        let name = format!("{pfx}{lin}");
+                    .map(|&lin| {
+                        let id = LinearId::new(block, lin);
                         let w = weights
-                            .get(&name)
-                            .unwrap_or_else(|| panic!("missing dense weight {name}"));
+                            .get(&id.to_string())
+                            .unwrap_or_else(|| panic!("missing dense weight {id}"));
                         matmul_a_bt(&xq, w)
                     })
                     .collect()
             }
             None => {
-                let xq = QuantizedTensor::quantize_acts(xin, qc.act.scheme, qc.act.clip_ratio);
+                let xq = QuantizedTensor::quantize_acts(xin, act.scheme, act.clip_ratio);
                 lins.iter()
-                    .map(|lin| {
-                        let name = format!("{pfx}{lin}");
+                    .map(|&lin| {
+                        let id = LinearId::new(block, lin);
                         let ql = qc
                             .linears
-                            .get(&name)
-                            .unwrap_or_else(|| panic!("missing packed weight {name}"));
+                            .get(&id)
+                            .unwrap_or_else(|| panic!("missing packed weight {id}"));
                         qmatmul_a_bt_panels(&xq.view(), &ql.weight.view(), ql.panels())
                     })
                     .collect()
@@ -454,7 +449,7 @@ fn silu(v: f64) -> f64 {
 }
 
 fn kv_quant(x: &Mat, qc: &QuantConfig) -> Mat {
-    quantize_activations_per_token(x, qc.act.scheme, qc.act.clip_ratio).0
+    quantize_activations_per_token(x, qc.kv_act.scheme, qc.kv_act.clip_ratio).0
 }
 
 /// Numerically-stable softmax over a mutable row.

@@ -5,15 +5,21 @@
 //! forward executes the packed codes directly through the integer kernel;
 //! the PJRT graphs still consume dense f32 runtime arguments, so the
 //! `ArgPack` dequantizes once per pack build.
+//!
+//! Built configs are persistable: [`crate::runtime::save_artifact`] /
+//! [`crate::runtime::load_artifact`] round-trip a `QuantConfig` through a
+//! versioned on-disk artifact bit-exactly, so serving processes load in
+//! milliseconds instead of re-running calibration + GPTQ at boot.
 
 use super::{ModelConfig, NativeModel};
 use crate::linalg::{Mat, QPanels};
 use crate::quant::{quantize_weights_rtn, ActQuantCfg, QScheme, QuantizedTensor, WeightQuantCfg};
 use std::collections::HashMap;
+use std::fmt;
 
 /// The four transform groups per block (layers sharing an input share a
 /// transform — paper §3).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum LayerGroup {
     /// q/k/v projections (post-ln1 input).
     AttnIn,
@@ -66,16 +72,92 @@ impl LayerGroup {
             LayerGroup::DownIn => "down_proj",
         }
     }
+
+    /// Stable machine key (plan echoes, artifact manifests).
+    pub fn key(&self) -> &'static str {
+        match self {
+            LayerGroup::AttnIn => "attn_in",
+            LayerGroup::OIn => "o_in",
+            LayerGroup::MlpIn => "mlp_in",
+            LayerGroup::DownIn => "down_in",
+        }
+    }
+
+    /// Inverse of [`Self::key`].
+    pub fn from_key(key: &str) -> Option<LayerGroup> {
+        ALL_GROUPS.into_iter().find(|g| g.key() == key)
+    }
+}
+
+/// Canonical `(group, &'static name)` for a linear's short name.
+fn canonical_linear(name: &str) -> Option<(LayerGroup, &'static str)> {
+    for g in ALL_GROUPS {
+        for &lin in g.linears() {
+            if lin == name {
+                return Some((g, lin));
+            }
+        }
+    }
+    None
 }
 
 /// Map a linear layer's short name to its input group.
 pub fn group_of_linear(name: &str) -> LayerGroup {
-    match name {
-        "q_proj" | "k_proj" | "v_proj" => LayerGroup::AttnIn,
-        "o_proj" => LayerGroup::OIn,
-        "gate_proj" | "up_proj" => LayerGroup::MlpIn,
-        "down_proj" => LayerGroup::DownIn,
-        _ => panic!("unknown linear {name}"),
+    canonical_linear(name).unwrap_or_else(|| panic!("unknown linear {name}")).0
+}
+
+/// Typed identity of one quantized linear layer: which block, which
+/// projection. Identity is `(block, name)` — the input group is fully
+/// derivable from the name ([`Self::group`]), so it is not stored (no
+/// way to construct an id whose group contradicts its name). The single
+/// [`fmt::Display`] impl produces the parameter-store name
+/// (`blocks.{block}.{name}`) that used to be rebuilt by `format!` at
+/// every call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LinearId {
+    block: usize,
+    name: &'static str,
+}
+
+impl LinearId {
+    /// Build from a block index and a linear short name (`"q_proj"`…).
+    /// Panics on unknown names — ids are only minted from the static
+    /// group tables.
+    pub fn new(block: usize, name: &str) -> LinearId {
+        let (_, name) =
+            canonical_linear(name).unwrap_or_else(|| panic!("unknown linear {name}"));
+        LinearId { block, name }
+    }
+
+    /// Parse a parameter-store name (`"blocks.3.q_proj"`). Returns `None`
+    /// for non-linear parameters (embeddings, norms, transforms).
+    pub fn parse(param: &str) -> Option<LinearId> {
+        let rest = param.strip_prefix("blocks.")?;
+        let (block, name) = rest.split_once('.')?;
+        let block: usize = block.parse().ok()?;
+        let (_, name) = canonical_linear(name)?;
+        Some(LinearId { block, name })
+    }
+
+    /// The transformer block this linear lives in.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// The linear's canonical short name (`"q_proj"`…).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The layer group whose input this linear consumes (derived).
+    pub fn group(&self) -> LayerGroup {
+        group_of_linear(self.name)
+    }
+}
+
+impl fmt::Display for LinearId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "blocks.{}.{}", self.block, self.name)
     }
 }
 
@@ -123,13 +205,20 @@ impl QuantizedLinear {
 }
 
 /// Everything a quantized forward needs beyond the FP weights.
+///
+/// Activation quantization is **per layer group** — the seam mixed-
+/// precision plans (e.g. attention W8A8 / MLP W4A4) flow through. The
+/// KV cache keeps its own grid (`kv_act`), which a uniform plan pins to
+/// the shared activation config, preserving the historical behavior.
 pub struct QuantConfig {
-    pub act: ActQuantCfg,
-    pub weight_bits: u32,
+    /// Per-group activation quantization (the group input's dynamic grid).
+    pub acts: HashMap<LayerGroup, ActQuantCfg>,
+    /// Per-token grid for cached K/V rows.
+    pub kv_act: ActQuantCfg,
     /// Transform name (`blocks.i.t_*`) → `T` (applied as `x·Tᵀ`).
     pub transforms: HashMap<String, Mat>,
-    /// Full weight name (`blocks.i.*_proj`) → packed fused `W·T⁻¹` codes.
-    pub linears: HashMap<String, QuantizedLinear>,
+    /// Linear id → packed fused `W·T⁻¹` codes.
+    pub linears: HashMap<LinearId, QuantizedLinear>,
 }
 
 /// Bundle of `QuantConfig` + run metadata (which transform/quantizer built
@@ -140,6 +229,49 @@ pub struct QuantizedWeightsSet {
 }
 
 impl QuantConfig {
+    /// The activation quantization of one layer group.
+    pub fn act_for(&self, group: LayerGroup) -> ActQuantCfg {
+        *self
+            .acts
+            .get(&group)
+            .unwrap_or_else(|| panic!("no activation cfg for group {}", group.key()))
+    }
+
+    /// Set every group's activation cfg (and the KV grid) to `act` —
+    /// the uniform-plan shape all pre-plan configs had.
+    pub fn set_uniform_act(&mut self, act: ActQuantCfg) {
+        for g in ALL_GROUPS {
+            self.acts.insert(g, act);
+        }
+        self.kv_act = act;
+    }
+
+    /// One `act` entry per group (uniform-plan construction helper).
+    pub fn uniform_acts(act: ActQuantCfg) -> HashMap<LayerGroup, ActQuantCfg> {
+        ALL_GROUPS.into_iter().map(|g| (g, act)).collect()
+    }
+
+    /// The single activation config shared by every group *and* the KV
+    /// grid, if this config is uniform — `None` for mixed-precision
+    /// configs. Engines whose activation quantization is baked in (the
+    /// compiled PJRT A4 graphs) must check this before serving.
+    pub fn uniform_act(&self) -> Option<ActQuantCfg> {
+        let a = self.act_for(ALL_GROUPS[0]);
+        let same = |b: ActQuantCfg| b.scheme == a.scheme && b.clip_ratio == a.clip_ratio;
+        if ALL_GROUPS.into_iter().all(|g| same(self.act_for(g))) && same(self.kv_act) {
+            Some(a)
+        } else {
+            None
+        }
+    }
+
+    /// Look up a packed linear by its parameter-store name
+    /// (`"blocks.3.q_proj"`) — the string-keyed seam the PJRT `ArgPack`
+    /// walks `param_spec` through.
+    pub fn linear_named(&self, param: &str) -> Option<&QuantizedLinear> {
+        LinearId::parse(param).and_then(|id| self.linears.get(&id))
+    }
+
     /// Identity transforms + RTN(minmax) weights at `bits` — the "None"
     /// baseline and the tests' fixture.
     pub fn identity_for_test(model: &NativeModel, bits: u32) -> QuantConfig {
@@ -153,25 +285,26 @@ impl QuantConfig {
         for i in 0..cfg.n_layers {
             for g in ALL_GROUPS {
                 for lin in g.linears() {
-                    let name = format!("blocks.{i}.{lin}");
-                    let w = &model.params[&name];
-                    linears
-                        .insert(name, QuantizedLinear::new(quantize_weights_rtn(w, wq).codes));
+                    let id = LinearId::new(i, lin);
+                    let w = &model.params[&id.to_string()];
+                    linears.insert(id, QuantizedLinear::new(quantize_weights_rtn(w, wq).codes));
                 }
             }
         }
+        let act = ActQuantCfg { scheme: QScheme::asym(bits), clip_ratio: 1.0 };
         QuantConfig {
-            act: ActQuantCfg { scheme: QScheme::asym(bits), clip_ratio: 1.0 },
-            weight_bits: bits,
+            acts: Self::uniform_acts(act),
+            kv_act: act,
             transforms,
             linears,
         }
     }
 
-    /// Dense f64 view of every packed weight — the fake-quant reference
-    /// for parity tests and the dense side of A/B benches.
+    /// Dense f64 view of every packed weight, keyed by parameter-store
+    /// name — the fake-quant reference for parity tests and the dense
+    /// side of A/B benches.
     pub fn deq_weights(&self) -> HashMap<String, Mat> {
-        self.linears.iter().map(|(k, l)| (k.clone(), l.deq())).collect()
+        self.linears.iter().map(|(id, l)| (id.to_string(), l.deq())).collect()
     }
 
     /// Total packed bytes across all linears (vs `8·out·in` per f64 mat).
@@ -225,6 +358,35 @@ mod tests {
     }
 
     #[test]
+    fn group_keys_roundtrip() {
+        for g in ALL_GROUPS {
+            assert_eq!(LayerGroup::from_key(g.key()), Some(g));
+        }
+        assert_eq!(LayerGroup::from_key("qkv_proj"), None);
+    }
+
+    #[test]
+    fn linear_id_display_and_parse() {
+        let id = LinearId::new(3, "gate_proj");
+        assert_eq!(id.group(), LayerGroup::MlpIn);
+        assert_eq!(id.block(), 3);
+        assert_eq!(id.name(), "gate_proj");
+        assert_eq!(id.to_string(), "blocks.3.gate_proj");
+        assert_eq!(LinearId::parse("blocks.3.gate_proj"), Some(id));
+        // Non-linear params and malformed names don't parse.
+        assert_eq!(LinearId::parse("blocks.0.ln1"), None);
+        assert_eq!(LinearId::parse("blocks.x.q_proj"), None);
+        assert_eq!(LinearId::parse("tok_emb"), None);
+        // Every canonical linear round-trips through Display.
+        for g in ALL_GROUPS {
+            for lin in g.linears() {
+                let id = LinearId::new(7, lin);
+                assert_eq!(LinearId::parse(&id.to_string()), Some(id));
+            }
+        }
+    }
+
+    #[test]
     fn identity_config_packs_every_linear() {
         let cfg = ModelConfig::zoo("tiny").unwrap();
         let model = NativeModel::init_random(cfg.clone(), 9);
@@ -234,7 +396,10 @@ mod tests {
         let f64_bytes: usize = qc
             .linears
             .keys()
-            .map(|n| model.params[n].rows() * model.params[n].cols() * 8)
+            .map(|id| {
+                let m = &model.params[&id.to_string()];
+                m.rows() * m.cols() * 8
+            })
             .sum();
         // Nibble-packed W4 sits far below the f64 footprint (~16×; the
         // per-row metadata keeps it shy of exact).
@@ -245,5 +410,24 @@ mod tests {
         let panel_bytes: usize = qc.linears.values().map(|l| l.panel_bytes()).sum();
         assert!(panel_bytes > qc.packed_bytes() / 2, "panels are unpacked codes");
         assert!(panel_bytes * 4 <= f64_bytes, "panels stay well under f64");
+    }
+
+    #[test]
+    fn per_group_acts_are_addressable() {
+        let cfg = ModelConfig::zoo("tiny").unwrap();
+        let model = NativeModel::init_random(cfg, 10);
+        let mut qc = QuantConfig::identity_for_test(&model, 4);
+        assert_eq!(qc.act_for(LayerGroup::MlpIn).scheme.bits, 4);
+        let eight = ActQuantCfg { scheme: QScheme::asym(8), clip_ratio: 1.0 };
+        assert_eq!(qc.uniform_act().map(|a| a.scheme.bits), Some(4));
+        qc.acts.insert(LayerGroup::MlpIn, eight);
+        assert_eq!(qc.act_for(LayerGroup::MlpIn).scheme.bits, 8);
+        assert_eq!(qc.act_for(LayerGroup::AttnIn).scheme.bits, 4);
+        // Mixed configs are no longer uniform (the PJRT A4 gate).
+        assert!(qc.uniform_act().is_none());
+        qc.set_uniform_act(eight);
+        assert_eq!(qc.act_for(LayerGroup::AttnIn).scheme.bits, 8);
+        assert_eq!(qc.kv_act.scheme.bits, 8);
+        assert_eq!(qc.uniform_act().map(|a| a.scheme.bits), Some(8));
     }
 }

@@ -4,66 +4,25 @@
 //! (block, group), so [`build_quant_config`] fans the per-group builds
 //! out across the [`crate::linalg::par`] worker pool; result merging is
 //! index-ordered, so reports and maps are identical to the serial build.
+//!
+//! The pipeline consumes a [`QuantPlan`](super::QuantPlan): per-group
+//! transform recipes (resolved through the open registry in
+//! [`crate::transforms::recipe`]), quantizer algorithms, and bit-widths.
+//! Plan validation happens up front — the fan-out never sees an invalid
+//! configuration.
 
+use super::plan::{QuantPlan, ResolvedPlan, WeightQuantizer};
 use crate::calib::CalibStats;
 use crate::linalg::{par, syrk_at_a, Mat};
-use crate::model::LayerGroup;
-use crate::model::{NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
-use crate::quant::{
-    gptq_quantize, quantize_weights_rtn, ActQuantCfg, GptqConfig, QScheme, RangeEstimator,
-    WeightQuantCfg,
-};
+use crate::model::{LayerGroup, LinearId, NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
+use crate::quant::{gptq_quantize, quantize_weights_rtn, ActQuantCfg, GptqConfig, WeightQuantCfg};
 use crate::sqnr::approx_sqnr_joint;
-use crate::transforms::{
-    cat_block, cat_optimal, kronecker_cat, seed_search_rotation, smooth_quant_scale, Transform,
-    TransformKind,
-};
+use crate::transforms::{self, RecipeCtx, RecipeRef, Transform, TransformKind};
+use anyhow::Result;
 use std::collections::HashMap;
 
-/// Which weight quantizer a run uses (Table 1's two blocks).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WeightQuantizer {
-    Rtn,
-    Gptq,
-}
-
-impl WeightQuantizer {
-    pub fn label(&self) -> &'static str {
-        match self {
-            WeightQuantizer::Rtn => "RTN",
-            WeightQuantizer::Gptq => "GPTQ",
-        }
-    }
-}
-
-/// One experiment cell's configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct PipelineCfg {
-    pub kind: TransformKind,
-    pub weight_quantizer: WeightQuantizer,
-    pub bits_w: u32,
-    pub bits_a: u32,
-    /// CAT block size `k` (clamped to the group dim).
-    pub cat_block: usize,
-    /// Seed: controls calibration subsampling and rotation draws — the
-    /// replication axis of Table 1's ±std.
-    pub seed: u64,
-}
-
-impl PipelineCfg {
-    pub fn w4a4(kind: TransformKind, wq: WeightQuantizer, seed: u64) -> PipelineCfg {
-        PipelineCfg {
-            kind,
-            weight_quantizer: wq,
-            bits_w: 4,
-            bits_a: 4,
-            cat_block: 128,
-            seed,
-        }
-    }
-}
-
-/// What the pipeline reports per run (feeds EXPERIMENTS.md).
+/// What the pipeline reports per run (feeds EXPERIMENTS.md and the
+/// artifact manifest's plan echo).
 #[derive(Clone, Debug, Default)]
 pub struct PipelineReport {
     /// Per-group (block, group label, transform build millis).
@@ -72,9 +31,14 @@ pub struct PipelineReport {
     pub mean_sqnr_db: f64,
     /// Chosen activation clip ratio (trained variants).
     pub act_clip: f64,
+    /// Resolved-plan echo: `(group key, summary)` pairs plus seed.
+    pub plan: Vec<(String, String)>,
 }
 
-/// Build the transform for one layer group.
+/// Build the transform for one layer group — the closed-enum convenience
+/// wrapper over the recipe registry (the figure experiments' entrypoint;
+/// plans address recipes by name directly).
+#[allow(clippy::too_many_arguments)]
 pub fn group_transform(
     kind: TransformKind,
     x_sample: &Mat,
@@ -85,54 +49,62 @@ pub fn group_transform(
     cat_k: usize,
     seed: u64,
 ) -> Transform {
-    let d = sigma_x.rows();
-    let sigma_w = {
-        let mut s = Mat::zeros(d, d);
-        for w in ws {
-            s.add_in_place(&syrk_at_a(w));
-        }
-        s
-    };
-    match kind {
-        TransformKind::None => Transform::identity(d),
-        TransformKind::SmoothQuant => smooth_quant_scale(x_sample, ws, 0.5),
-        TransformKind::QuaRot => {
-            // One fixed randomized Hadamard (seeded but unsearched).
-            let mut rng = crate::linalg::Rng::new(seed ^ 0x9A407);
-            if crate::linalg::is_pow2(d) {
-                Transform::orthogonal("quarot", crate::linalg::randomized_hadamard(d, &mut rng))
-            } else {
-                Transform::orthogonal("quarot", crate::linalg::random_orthogonal(d, &mut rng))
-            }
-        }
-        TransformKind::SpinQuant => seed_search_rotation(x_sample, ws, act, wq, 8, seed),
-        TransformKind::CatBlock | TransformKind::CatBlockTrained => {
-            cat_block(sigma_x, &sigma_w, cat_k.min(d), seed)
-        }
-        TransformKind::FlatQuant => kronecker_cat(sigma_x, &sigma_w, seed),
-        TransformKind::CatOptimal => cat_optimal(sigma_x, &sigma_w, seed),
-        TransformKind::CatBlockPermuted => {
-            crate::transforms::permuted_cat_block(sigma_x, &sigma_w, cat_k.min(d), seed)
-        }
-    }
+    let sigma_w = sum_gram(sigma_x.rows(), ws);
+    let recipe = transforms::recipe(kind.name())
+        .unwrap_or_else(|| panic!("builtin recipe {} missing from registry", kind.name()));
+    recipe.fit(&RecipeCtx {
+        x_sample,
+        sigma_x,
+        ws,
+        sigma_w: &sigma_w,
+        act,
+        wq,
+        cat_block: cat_k,
+        seed,
+    })
 }
 
-/// Run the full PTQ pipeline for one config.
+/// `Σ WᵀW` over the group's weights.
+fn sum_gram(d: usize, ws: &[&Mat]) -> Mat {
+    let mut s = Mat::zeros(d, d);
+    for w in ws {
+        s.add_in_place(&syrk_at_a(w));
+    }
+    s
+}
+
+/// Run the full PTQ pipeline for one plan.
 pub fn build_quant_config(
     model: &NativeModel,
     calib: &CalibStats,
-    cfg: PipelineCfg,
+    plan: &QuantPlan,
+) -> Result<(QuantConfig, PipelineReport)> {
+    let resolved = plan.resolve()?;
+    Ok(build_resolved(model, calib, &resolved))
+}
+
+fn build_resolved(
+    model: &NativeModel,
+    calib: &CalibStats,
+    resolved: &ResolvedPlan,
 ) -> (QuantConfig, PipelineReport) {
     let mcfg = &model.cfg;
-    let act = ActQuantCfg { scheme: QScheme::asym(cfg.bits_a), clip_ratio: 1.0 };
-    let wq = WeightQuantCfg {
-        scheme: QScheme::sym(cfg.bits_w),
-        range: RangeEstimator::LpNorm { p: 2.4 },
-    };
 
-    let mut transforms = HashMap::new();
+    // Recipes fetched once per group (registry lock stays off the
+    // fan-out hot path); plan validation guarantees presence.
+    let recipes: HashMap<LayerGroup, RecipeRef> = ALL_GROUPS
+        .into_iter()
+        .map(|g| {
+            let name = &resolved.group(g).recipe;
+            let r = transforms::recipe(name)
+                .unwrap_or_else(|| panic!("recipe {name} vanished after validation"));
+            (g, r)
+        })
+        .collect();
+
+    let mut transforms_map = HashMap::new();
     let mut linears = HashMap::new();
-    let mut report = PipelineReport::default();
+    let mut report = PipelineReport { plan: resolved.summary(), ..Default::default() };
     let mut sqnr_acc = Vec::new();
 
     // One independent build job per (block, group); fanned out across the
@@ -141,7 +113,7 @@ pub fn build_quant_config(
         t_name: String,
         timing: (String, f64),
         t_mat: Mat,
-        weights: Vec<(String, QuantizedLinear)>,
+        weights: Vec<(LinearId, QuantizedLinear)>,
         sqnrs: Vec<f64>,
     }
 
@@ -150,27 +122,27 @@ pub fn build_quant_config(
         .collect();
 
     let built: Vec<GroupBuild> = par::par_map(jobs, par::num_threads(), |(block, g)| {
+        let gp = resolved.group(g);
         let t_name = g.t_name(block);
         let stats = calib.sigma(&t_name);
         let sigma_x = stats.sigma();
         let x_sample = stats.sample();
-        let ws: Vec<&Mat> = g
-            .linears()
-            .iter()
-            .map(|lin| &model.params[&format!("blocks.{block}.{lin}")])
-            .collect();
+        let ids: Vec<LinearId> =
+            g.linears().iter().map(|&lin| LinearId::new(block, lin)).collect();
+        let ws: Vec<&Mat> = ids.iter().map(|id| &model.params[&id.to_string()]).collect();
+        let sigma_w = sum_gram(sigma_x.rows(), &ws);
 
         let t0 = std::time::Instant::now();
-        let t = group_transform(
-            cfg.kind,
-            &x_sample,
-            &sigma_x,
-            &ws,
-            act,
-            wq,
-            cfg.cat_block,
-            cfg.seed.wrapping_add((block * 13) as u64),
-        );
+        let t = recipes[&g].fit(&RecipeCtx {
+            x_sample: &x_sample,
+            sigma_x: &sigma_x,
+            ws: &ws,
+            sigma_w: &sigma_w,
+            act: gp.acts,
+            wq: gp.weights,
+            cat_block: gp.cat_block,
+            seed: resolved.seed.wrapping_add((block * 13) as u64),
+        });
         let timing = (format!("{block}.{}", g.label()), t0.elapsed().as_secs_f64() * 1e3);
 
         // Fuse + quantize each weight of the group.
@@ -178,18 +150,18 @@ pub fn build_quant_config(
         let sigma_xt = t.conjugate_sigma(&sigma_x);
         let mut weights = Vec::new();
         let mut sqnrs = Vec::new();
-        for lin in g.linears() {
-            let name = format!("blocks.{block}.{lin}");
-            let w = &model.params[&name];
+        for (id, w) in ids.iter().zip(&ws) {
             let w_fused = t.fuse_weights(w);
-            let codes = match cfg.weight_quantizer {
-                WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, wq).codes,
+            let codes = match gp.quantizer {
+                WeightQuantizer::Rtn => quantize_weights_rtn(&w_fused, gp.weights).codes,
                 WeightQuantizer::Gptq => {
-                    gptq_quantize(&w_fused, &sigma_xt, wq, GptqConfig::default()).codes
+                    gptq_quantize(&w_fused, &sigma_xt, gp.weights, GptqConfig::default()).codes
                 }
             };
-            sqnrs.push(10.0 * approx_sqnr_joint(&xt_sample, &w_fused, act, wq).log10());
-            weights.push((name, QuantizedLinear::new(codes)));
+            sqnrs.push(
+                10.0 * approx_sqnr_joint(&xt_sample, &w_fused, gp.acts, gp.weights).log10(),
+            );
+            weights.push((*id, QuantizedLinear::new(codes)));
         }
         GroupBuild { t_name, timing, t_mat: t.matrix().clone(), weights, sqnrs }
     });
@@ -197,37 +169,49 @@ pub fn build_quant_config(
     for gb in built {
         report.transform_ms.push(gb.timing);
         sqnr_acc.extend(gb.sqnrs);
-        for (name, ql) in gb.weights {
-            linears.insert(name, ql);
+        for (id, ql) in gb.weights {
+            linears.insert(id, ql);
         }
-        transforms.insert(gb.t_name, gb.t_mat);
+        transforms_map.insert(gb.t_name, gb.t_mat);
     }
     report.mean_sqnr_db = sqnr_acc.iter().sum::<f64>() / sqnr_acc.len().max(1) as f64;
 
     // "Trained" variants: learnable clipping — grid-search the activation
-    // clip ratio maximizing the mean post-transform SQNR proxy (the
-    // paper attributes most of the trained gain to learnable clipping).
-    // The transformed sample and the dequantized fused weight are
-    // computed once per (block, group, linear) — not once per clip
-    // candidate — and each candidate's score accumulates in the same
-    // order as the historical clip-outermost loop.
-    let mut act_final = act;
-    if cfg.kind == TransformKind::CatBlockTrained {
+    // clip ratio maximizing the mean post-transform SQNR proxy over the
+    // groups whose recipe is the trained one (the paper attributes most
+    // of the trained gain to learnable clipping). The transformed sample
+    // and the dequantized fused weight are computed once per
+    // (block, group, linear) — not once per clip candidate — and each
+    // candidate's score accumulates in the same order as the historical
+    // clip-outermost loop.
+    let trained: Vec<LayerGroup> = ALL_GROUPS
+        .into_iter()
+        .filter(|g| resolved.group(*g).recipe == "cat-block-trained")
+        .collect();
+    let mut acts: HashMap<LayerGroup, ActQuantCfg> =
+        ALL_GROUPS.into_iter().map(|g| (g, resolved.group(g).acts)).collect();
+    let mut kv_act = resolved.kv_act;
+    report.act_clip = 1.0;
+    if !trained.is_empty() {
         const CLIPS: [f64; 5] = [1.0, 0.95, 0.9, 0.85, 0.8];
         let mut acc = [0.0f64; CLIPS.len()];
         let mut n = 0usize;
         for block in 0..mcfg.n_layers {
             for g in ALL_GROUPS {
+                if !trained.contains(&g) {
+                    continue;
+                }
+                let gp = resolved.group(g);
                 let t_name = g.t_name(block);
                 let stats = calib.sigma(&t_name);
                 let x = stats.sample();
-                let xt = crate::linalg::matmul_a_bt(&x, &transforms[&t_name]);
-                for lin in g.linears() {
-                    let name = format!("blocks.{block}.{lin}");
-                    let wf = linears[&name].deq();
+                let xt = crate::linalg::matmul_a_bt(&x, &transforms_map[&t_name]);
+                for &lin in g.linears() {
+                    let id = LinearId::new(block, lin);
+                    let wf = linears[&id].deq();
                     for (ci, &clip) in CLIPS.iter().enumerate() {
-                        let cand = ActQuantCfg { scheme: act.scheme, clip_ratio: clip };
-                        acc[ci] += approx_sqnr_joint(&xt, &wf, cand, wq).ln();
+                        let cand = ActQuantCfg { scheme: gp.acts.scheme, clip_ratio: clip };
+                        acc[ci] += approx_sqnr_joint(&xt, &wf, cand, gp.weights).ln();
                     }
                     n += 1;
                 }
@@ -240,17 +224,36 @@ pub fn build_quant_config(
                 best = (score, clip);
             }
         }
-        act_final = ActQuantCfg { scheme: act.scheme, clip_ratio: best.1 };
+        for &g in &trained {
+            if let Some(a) = acts.get_mut(&g) {
+                a.clip_ratio = best.1;
+            }
+        }
+        // Uniform trained plans historically carried the trained clip
+        // into the KV grid too; keep that unless the plan pinned kv_acts
+        // explicitly (mixed plans leave the KV grid at its base clip).
+        if !resolved.kv_explicit && trained.len() == ALL_GROUPS.len() {
+            kv_act.clip_ratio = best.1;
+        }
         report.act_clip = best.1;
-    } else {
-        report.act_clip = 1.0;
+        // Re-echo the plan with the *chosen* clip, so the artifact
+        // manifest records what is actually served, not the pre-search
+        // clip=1 placeholder.
+        let mut echoed = resolved.clone();
+        for &g in &trained {
+            if let Some(gp) = echoed.groups.get_mut(&g) {
+                gp.acts.clip_ratio = best.1;
+            }
+        }
+        echoed.kv_act = kv_act;
+        report.plan = echoed.summary();
     }
 
     (
         QuantConfig {
-            act: act_final,
-            weight_bits: cfg.bits_w,
-            transforms,
+            acts,
+            kv_act,
+            transforms: transforms_map,
             linears,
         },
         report,
@@ -262,6 +265,8 @@ mod tests {
     use super::*;
     use crate::calib::calibrate;
     use crate::model::ModelConfig;
+    use crate::pipeline::PipelineCfg;
+    use crate::quant::QScheme;
 
     fn setup() -> (NativeModel, CalibStats) {
         let cfg = ModelConfig {
@@ -302,7 +307,7 @@ mod tests {
                 cat_block: 8,
                 seed: 0,
             };
-            let (qc, _) = build_quant_config(&model, &calib, pcfg);
+            let (qc, _) = build_quant_config(&model, &calib, &pcfg.plan()).unwrap();
             let q = model.forward_quant(&toks, &qc);
             let rel = fp.max_abs_diff(&q) / fp.max_abs().max(1e-9);
             assert!(rel < 0.08, "{kind:?}: 12-bit run strayed {rel} from fp");
@@ -316,8 +321,9 @@ mod tests {
             let (_, rep) = build_quant_config(
                 &model,
                 &calib,
-                PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0),
-            );
+                &PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0).plan(),
+            )
+            .unwrap();
             rep.mean_sqnr_db
         };
         let none = run(TransformKind::None);
@@ -331,10 +337,15 @@ mod tests {
         let (qc, rep) = build_quant_config(
             &model,
             &calib,
-            PipelineCfg::w4a4(TransformKind::CatBlockTrained, WeightQuantizer::Rtn, 0),
-        );
+            &PipelineCfg::w4a4(TransformKind::CatBlockTrained, WeightQuantizer::Rtn, 0).plan(),
+        )
+        .unwrap();
         assert!(rep.act_clip > 0.7 && rep.act_clip <= 1.0);
-        assert_eq!(qc.act.clip_ratio, rep.act_clip);
+        for g in ALL_GROUPS {
+            assert_eq!(qc.act_for(g).clip_ratio, rep.act_clip);
+        }
+        // A uniform trained plan carries the clip into the KV grid.
+        assert_eq!(qc.kv_act.clip_ratio, rep.act_clip);
     }
 
     #[test]
@@ -343,8 +354,9 @@ mod tests {
         let (qc, _) = build_quant_config(
             &model,
             &calib,
-            PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Gptq, 0),
-        );
+            &PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Gptq, 0).plan(),
+        )
+        .unwrap();
         assert_eq!(qc.linears.len(), 2 * 7);
         assert!(qc
             .linears
@@ -359,8 +371,9 @@ mod tests {
             build_quant_config(
                 &model,
                 &calib,
-                PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, seed),
+                &PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, seed).plan(),
             )
+            .unwrap()
             .0
         };
         let a = build(TransformKind::QuaRot, 1);
@@ -370,5 +383,75 @@ mod tests {
         let a = build(TransformKind::None, 1);
         let b = build(TransformKind::None, 2);
         assert_eq!(a.transforms[key], b.transforms[key]);
+    }
+
+    #[test]
+    fn mixed_precision_plan_builds_per_group() {
+        // Attention W8A8 / MLP W4A4 with a per-group transform override —
+        // the acceptance-criteria shape.
+        let (model, calib) = setup();
+        let plan = QuantPlan::new()
+            .transform("cat-block")
+            .bits(4, 4)
+            .cat_block(8)
+            .for_group(LayerGroup::AttnIn, |g| g.bits(8, 8))
+            .for_group(LayerGroup::OIn, |g| g.bits(8, 8).transform("identity"));
+        let (qc, rep) = build_quant_config(&model, &calib, &plan).unwrap();
+        // Per-group weight bit-widths landed in the packed codes.
+        let q_attn = &qc.linears[&LinearId::new(0, "q_proj")];
+        let q_mlp = &qc.linears[&LinearId::new(0, "gate_proj")];
+        assert_eq!(q_attn.weight.scheme().bits, 8);
+        assert_eq!(q_mlp.weight.scheme().bits, 4);
+        // Per-group activation grids.
+        assert_eq!(qc.act_for(LayerGroup::AttnIn).scheme.bits, 8);
+        assert_eq!(qc.act_for(LayerGroup::MlpIn).scheme.bits, 4);
+        // The o-group override swapped its transform to the identity.
+        assert_eq!(
+            qc.transforms["blocks.0.t_o"].max_abs_diff(&Mat::eye(32)),
+            0.0,
+            "o-group transform should be the identity"
+        );
+        assert!(
+            qc.transforms["blocks.0.t_mlp"].max_abs_diff(&Mat::eye(32)) > 0.0,
+            "mlp group keeps cat-block"
+        );
+        // The mixed forward executes end to end.
+        let toks: Vec<u8> = (0..10).map(|i| (i * 23) as u8).collect();
+        let out = model.forward_quant(&toks, &qc);
+        assert!(out.as_slice().iter().all(|v| v.is_finite()));
+        // The plan echo names every group.
+        assert_eq!(rep.plan.len(), ALL_GROUPS.len() + 2);
+    }
+
+    #[test]
+    fn invalid_plans_error_before_the_fanout() {
+        let (model, calib) = setup();
+        for plan in [
+            QuantPlan::new().bits(0, 4),
+            QuantPlan::new().bits(4, 17),
+            QuantPlan::new().cat_block(0),
+            QuantPlan::new().transform("definitely-not-registered"),
+        ] {
+            let msg = match build_quant_config(&model, &calib, &plan) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("plan should have been rejected"),
+            };
+            assert!(msg.contains("attn_in"), "error should name the group: {msg}");
+        }
+    }
+
+    #[test]
+    fn kv_acts_can_differ_from_group_acts() {
+        let (model, calib) = setup();
+        let plan = QuantPlan::new()
+            .transform("identity")
+            .bits(4, 4)
+            .kv_acts(ActQuantCfg { scheme: QScheme::asym(8), clip_ratio: 1.0 });
+        let (qc, _) = build_quant_config(&model, &calib, &plan).unwrap();
+        assert_eq!(qc.kv_act.scheme.bits, 8);
+        assert_eq!(qc.act_for(LayerGroup::AttnIn).scheme.bits, 4);
+        let toks = [1u8, 2, 3, 4, 5];
+        let out = model.forward_quant(&toks, &qc);
+        assert!(out.as_slice().iter().all(|v| v.is_finite()));
     }
 }

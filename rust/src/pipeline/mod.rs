@@ -1,10 +1,17 @@
 //! The post-training-quantization pipeline:
 //! calibrate → build per-group transforms → fuse into weights → quantize
-//! (RTN or GPTQ) → a [`QuantConfig`] both engines can execute.
+//! (RTN or GPTQ) → a [`QuantConfig`](crate::model::QuantConfig) both
+//! engines can execute (and the artifact layer can persist).
 //!
-//! This is the L3 system the paper's §6 experiment grid drives: each
-//! Table 1 cell is one [`PipelineCfg`] run.
+//! This is the L3 system the paper's §6 experiment grid drives. Runs are
+//! described by a [`QuantPlan`] — per-group transform recipes,
+//! quantizers, and bit-widths; the legacy [`PipelineCfg`] lowers into a
+//! uniform plan via [`PipelineCfg::plan`].
 
 mod build;
+mod plan;
 
-pub use build::{build_quant_config, group_transform, PipelineCfg, PipelineReport, WeightQuantizer};
+pub use build::{build_quant_config, group_transform, PipelineReport};
+pub use plan::{
+    GroupCfg, GroupPlan, PipelineCfg, PlanError, QuantPlan, ResolvedPlan, WeightQuantizer,
+};

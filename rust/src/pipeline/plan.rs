@@ -1,0 +1,549 @@
+//! Quantization *plans*: the builder API the pipeline consumes.
+//!
+//! The paper treats the transform, the quantizer, and the bit-width as
+//! independent axes of one SQNR objective; a [`QuantPlan`] exposes
+//! exactly those axes, resolved **per layer group**: a base
+//! configuration (`.transform(..)`, `.quantizer(..)`, `.bits(w, a)`,
+//! `.weights(..)`, `.acts(..)`, `.cat_block(..)`) plus per-group
+//! overrides (`.for_group(group, |g| ..)`), so mixed-precision runs
+//! (attention W8A8 / MLP W4A4) and per-group transform choices are
+//! first-class. Transforms are addressed by *registry name*
+//! ([`crate::transforms::recipe`]), so externally registered recipes
+//! plug in without touching the crate.
+//!
+//! [`QuantPlan::resolve`] validates the plan up front — bad bit-widths,
+//! a zero CAT block, or an unregistered recipe produce a [`PlanError`]
+//! naming the offending group instead of a panic mid-fan-out.
+//!
+//! [`PipelineCfg`] survives as a thin **deprecated** shim that lowers
+//! into a uniform plan ([`PipelineCfg::plan`]) so the Table 1 / figure
+//! experiment grids are unchanged.
+
+use crate::model::{LayerGroup, ALL_GROUPS};
+use crate::quant::{ActQuantCfg, QScheme, RangeEstimator, WeightQuantCfg};
+use crate::transforms::{self, TransformKind};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Which weight quantization algorithm packs a group's weights
+/// (Table 1's two blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightQuantizer {
+    Rtn,
+    Gptq,
+}
+
+impl WeightQuantizer {
+    /// Canonical name — the single string table, shared by tables, plan
+    /// echoes, and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightQuantizer::Rtn => "rtn",
+            WeightQuantizer::Gptq => "gptq",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(name: &str) -> Option<WeightQuantizer> {
+        [WeightQuantizer::Rtn, WeightQuantizer::Gptq]
+            .into_iter()
+            .find(|q| q.name() == name)
+    }
+}
+
+impl fmt::Display for WeightQuantizer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Fully-resolved quantization settings for one layer group.
+#[derive(Clone, Debug)]
+pub struct GroupPlan {
+    /// Transform recipe registry name.
+    pub recipe: String,
+    /// Weight quantization algorithm.
+    pub quantizer: WeightQuantizer,
+    /// Weight scheme + range estimation.
+    pub weights: WeightQuantCfg,
+    /// Activation scheme + clip.
+    pub acts: ActQuantCfg,
+    /// CAT block size `k` (clamped to the group dim by the recipes).
+    pub cat_block: usize,
+}
+
+impl Default for GroupPlan {
+    /// The paper's §6 setup at W4A4 with no transform: symmetric
+    /// per-channel `L_{2.4}` weights, dynamic asymmetric per-token acts.
+    fn default() -> GroupPlan {
+        GroupPlan {
+            recipe: "identity".into(),
+            quantizer: WeightQuantizer::Rtn,
+            weights: WeightQuantCfg {
+                scheme: QScheme::sym(4),
+                range: RangeEstimator::LpNorm { p: 2.4 },
+            },
+            acts: ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 },
+            cat_block: 128,
+        }
+    }
+}
+
+impl GroupPlan {
+    /// One-line human summary (plan echoes, artifact manifests).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} W{}A{} cat_block={} clip={}",
+            self.recipe,
+            self.quantizer,
+            self.weights.scheme.bits,
+            self.acts.scheme.bits,
+            self.cat_block,
+            self.acts.clip_ratio
+        )
+    }
+}
+
+/// Partial per-group settings collected by [`QuantPlan::for_group`] and
+/// applied over the base at resolve time.
+#[derive(Clone, Debug, Default)]
+struct GroupOverride {
+    recipe: Option<String>,
+    quantizer: Option<WeightQuantizer>,
+    weights: Option<WeightQuantCfg>,
+    acts: Option<ActQuantCfg>,
+    bits: Option<(u32, u32)>,
+    cat_block: Option<usize>,
+}
+
+/// Scoped builder handed to [`QuantPlan::for_group`] closures — the same
+/// knobs as the plan-level setters, recorded as a partial override.
+#[derive(Debug, Default)]
+pub struct GroupCfg {
+    ov: GroupOverride,
+}
+
+impl GroupCfg {
+    /// Use transform recipe `name` for this group.
+    pub fn transform(mut self, name: impl Into<String>) -> GroupCfg {
+        self.ov.recipe = Some(name.into());
+        self
+    }
+
+    /// Weight quantization algorithm for this group.
+    pub fn quantizer(mut self, q: WeightQuantizer) -> GroupCfg {
+        self.ov.quantizer = Some(q);
+        self
+    }
+
+    /// Full weight quantization config for this group.
+    pub fn weights(mut self, w: WeightQuantCfg) -> GroupCfg {
+        self.ov.weights = Some(w);
+        self
+    }
+
+    /// Full activation quantization config for this group.
+    pub fn acts(mut self, a: ActQuantCfg) -> GroupCfg {
+        self.ov.acts = Some(a);
+        self
+    }
+
+    /// Weight/activation bit-widths for this group (keeps each scheme's
+    /// symmetry and the weight range estimator; applied after any
+    /// `weights`/`acts` override).
+    pub fn bits(mut self, w: u32, a: u32) -> GroupCfg {
+        self.ov.bits = Some((w, a));
+        self
+    }
+
+    /// CAT block size for this group.
+    pub fn cat_block(mut self, k: usize) -> GroupCfg {
+        self.ov.cat_block = Some(k);
+        self
+    }
+}
+
+/// What a plan failed validation on, naming the offending group.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// A bit-width of 0 or above 16.
+    BadBits { group: LayerGroup, which: &'static str, bits: u32 },
+    /// KV-cache bit-width of 0 or above 16.
+    BadKvBits { bits: u32 },
+    /// `cat_block` of 0.
+    BadCatBlock { group: LayerGroup },
+    /// A recipe name missing from the transform registry.
+    UnknownRecipe { group: LayerGroup, name: String },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::BadBits { group, which, bits } => write!(
+                f,
+                "group {}: {which} = {bits} out of range (want 1..=16)",
+                group.key()
+            ),
+            PlanError::BadKvBits { bits } => {
+                write!(f, "kv_acts bits = {bits} out of range (want 1..=16)")
+            }
+            PlanError::BadCatBlock { group } => {
+                write!(f, "group {}: cat_block must be >= 1", group.key())
+            }
+            PlanError::UnknownRecipe { group, name } => write!(
+                f,
+                "group {}: transform recipe {name:?} is not registered (known: {})",
+                group.key(),
+                transforms::recipe_names().join(", ")
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// A validated plan: one concrete [`GroupPlan`] per layer group, the KV
+/// grid, and the run seed. Produced by [`QuantPlan::resolve`]; consumed
+/// by [`crate::pipeline::build_quant_config`].
+#[derive(Clone, Debug)]
+pub struct ResolvedPlan {
+    pub groups: HashMap<LayerGroup, GroupPlan>,
+    pub kv_act: ActQuantCfg,
+    /// Whether `kv_act` was pinned explicitly (vs defaulted to the base
+    /// activation config — the uniform-plan shape, which also inherits
+    /// the trained clip).
+    pub kv_explicit: bool,
+    pub seed: u64,
+}
+
+impl ResolvedPlan {
+    pub fn group(&self, g: LayerGroup) -> &GroupPlan {
+        &self.groups[&g]
+    }
+
+    /// Per-group plan echo (`(group key, summary)` pairs in `ALL_GROUPS`
+    /// order, plus the seed) — what the artifact manifest records.
+    pub fn summary(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = ALL_GROUPS
+            .into_iter()
+            .map(|g| (g.key().to_string(), self.groups[&g].summary()))
+            .collect();
+        out.push((
+            "kv".into(),
+            format!(
+                "A{} sym={} clip={}",
+                self.kv_act.scheme.bits, self.kv_act.scheme.symmetric, self.kv_act.clip_ratio
+            ),
+        ));
+        out.push(("seed".into(), self.seed.to_string()));
+        out
+    }
+}
+
+/// Builder for a quantization run: base settings plus per-group
+/// overrides. See the module docs for the shape; `resolve()` (called by
+/// the pipeline) validates and produces a [`ResolvedPlan`].
+#[derive(Clone, Debug, Default)]
+pub struct QuantPlan {
+    base: GroupPlan,
+    overrides: HashMap<LayerGroup, GroupOverride>,
+    kv_acts: Option<ActQuantCfg>,
+    seed: u64,
+}
+
+impl QuantPlan {
+    /// A uniform W4A4 plan with no transform (see [`GroupPlan::default`]).
+    pub fn new() -> QuantPlan {
+        QuantPlan::default()
+    }
+
+    /// Base transform recipe (registry name).
+    pub fn transform(mut self, name: impl Into<String>) -> QuantPlan {
+        self.base.recipe = name.into();
+        self
+    }
+
+    /// Base weight quantization algorithm.
+    pub fn quantizer(mut self, q: WeightQuantizer) -> QuantPlan {
+        self.base.quantizer = q;
+        self
+    }
+
+    /// Base weight quantization config.
+    pub fn weights(mut self, w: WeightQuantCfg) -> QuantPlan {
+        self.base.weights = w;
+        self
+    }
+
+    /// Base activation quantization config.
+    pub fn acts(mut self, a: ActQuantCfg) -> QuantPlan {
+        self.base.acts = a;
+        self
+    }
+
+    /// Base weight/activation bit-widths (keeps each scheme's symmetry
+    /// and the weight range estimator).
+    pub fn bits(mut self, w: u32, a: u32) -> QuantPlan {
+        self.base.weights.scheme.bits = w;
+        self.base.acts.scheme.bits = a;
+        self
+    }
+
+    /// Base CAT block size.
+    pub fn cat_block(mut self, k: usize) -> QuantPlan {
+        self.base.cat_block = k;
+        self
+    }
+
+    /// Run seed: calibration subsampling and rotation draws — the
+    /// replication axis of Table 1's ±std.
+    pub fn seed(mut self, seed: u64) -> QuantPlan {
+        self.seed = seed;
+        self
+    }
+
+    /// Pin the KV-cache grid explicitly (defaults to the base activation
+    /// config, which is the historical uniform behavior).
+    pub fn kv_acts(mut self, a: ActQuantCfg) -> QuantPlan {
+        self.kv_acts = Some(a);
+        self
+    }
+
+    /// Override settings for one layer group. Overrides are partial —
+    /// unset knobs fall through to the base at resolve time — and
+    /// successive calls for the same group merge.
+    ///
+    /// ```ignore
+    /// let plan = QuantPlan::new()
+    ///     .transform("cat-block")
+    ///     .bits(4, 4)
+    ///     .for_group(LayerGroup::AttnIn, |g| g.bits(8, 8))
+    ///     .for_group(LayerGroup::OIn, |g| g.bits(8, 8));
+    /// ```
+    pub fn for_group(
+        mut self,
+        group: LayerGroup,
+        f: impl FnOnce(GroupCfg) -> GroupCfg,
+    ) -> QuantPlan {
+        let current = self.overrides.remove(&group).unwrap_or_default();
+        let out = f(GroupCfg { ov: current });
+        self.overrides.insert(group, out.ov);
+        self
+    }
+
+    /// Validate and resolve into one concrete [`GroupPlan`] per group.
+    pub fn resolve(&self) -> Result<ResolvedPlan, PlanError> {
+        let mut groups = HashMap::new();
+        for g in ALL_GROUPS {
+            let mut gp = self.base.clone();
+            if let Some(ov) = self.overrides.get(&g) {
+                if let Some(w) = ov.weights {
+                    gp.weights = w;
+                }
+                if let Some(a) = ov.acts {
+                    gp.acts = a;
+                }
+                if let Some((bw, ba)) = ov.bits {
+                    gp.weights.scheme.bits = bw;
+                    gp.acts.scheme.bits = ba;
+                }
+                if let Some(q) = ov.quantizer {
+                    gp.quantizer = q;
+                }
+                if let Some(k) = ov.cat_block {
+                    gp.cat_block = k;
+                }
+                if let Some(r) = &ov.recipe {
+                    gp.recipe = r.clone();
+                }
+            }
+            validate_group(g, &gp)?;
+            groups.insert(g, gp);
+        }
+        let kv_act = self.kv_acts.unwrap_or(self.base.acts);
+        if !(1..=16).contains(&kv_act.scheme.bits) {
+            return Err(PlanError::BadKvBits { bits: kv_act.scheme.bits });
+        }
+        Ok(ResolvedPlan {
+            groups,
+            kv_act,
+            kv_explicit: self.kv_acts.is_some(),
+            seed: self.seed,
+        })
+    }
+}
+
+fn validate_group(group: LayerGroup, gp: &GroupPlan) -> Result<(), PlanError> {
+    for (which, bits) in
+        [("bits_w", gp.weights.scheme.bits), ("bits_a", gp.acts.scheme.bits)]
+    {
+        if !(1..=16).contains(&bits) {
+            return Err(PlanError::BadBits { group, which, bits });
+        }
+    }
+    if gp.cat_block == 0 {
+        return Err(PlanError::BadCatBlock { group });
+    }
+    if !transforms::has_recipe(&gp.recipe) {
+        return Err(PlanError::UnknownRecipe { group, name: gp.recipe.clone() });
+    }
+    Ok(())
+}
+
+/// **Deprecated** flat configuration — one transform, one quantizer, one
+/// global bit-width. Kept so the Table 1 / figure experiment grids read
+/// unchanged; [`Self::plan`] lowers it into the uniform [`QuantPlan`] it
+/// always was. New code should build a `QuantPlan` directly.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineCfg {
+    pub kind: TransformKind,
+    pub weight_quantizer: WeightQuantizer,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    /// CAT block size `k` (clamped to the group dim).
+    pub cat_block: usize,
+    /// Seed: controls calibration subsampling and rotation draws — the
+    /// replication axis of Table 1's ±std.
+    pub seed: u64,
+}
+
+impl PipelineCfg {
+    pub fn w4a4(kind: TransformKind, wq: WeightQuantizer, seed: u64) -> PipelineCfg {
+        PipelineCfg {
+            kind,
+            weight_quantizer: wq,
+            bits_w: 4,
+            bits_a: 4,
+            cat_block: 128,
+            seed,
+        }
+    }
+
+    /// Lower into the equivalent uniform [`QuantPlan`].
+    pub fn plan(&self) -> QuantPlan {
+        QuantPlan::new()
+            .transform(self.kind.name())
+            .quantizer(self.weight_quantizer)
+            .bits(self.bits_w, self.bits_a)
+            .cat_block(self.cat_block)
+            .seed(self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_plan_resolves_to_identical_groups() {
+        let plan = QuantPlan::new()
+            .transform("cat-block")
+            .quantizer(WeightQuantizer::Gptq)
+            .bits(4, 8)
+            .cat_block(32)
+            .seed(7);
+        let r = plan.resolve().unwrap();
+        assert_eq!(r.seed, 7);
+        assert!(!r.kv_explicit);
+        assert_eq!(r.kv_act.scheme.bits, 8);
+        for g in ALL_GROUPS {
+            let gp = r.group(g);
+            assert_eq!(gp.recipe, "cat-block");
+            assert_eq!(gp.quantizer, WeightQuantizer::Gptq);
+            assert_eq!(gp.weights.scheme.bits, 4);
+            assert!(gp.weights.scheme.symmetric);
+            assert_eq!(gp.acts.scheme.bits, 8);
+            assert!(!gp.acts.scheme.symmetric);
+            assert_eq!(gp.cat_block, 32);
+        }
+    }
+
+    #[test]
+    fn for_group_overrides_are_partial_and_merge() {
+        let plan = QuantPlan::new()
+            .transform("cat-block")
+            .bits(4, 4)
+            .for_group(LayerGroup::AttnIn, |g| g.bits(8, 8))
+            .for_group(LayerGroup::AttnIn, |g| g.transform("identity"))
+            .for_group(LayerGroup::DownIn, |g| g.cat_block(16));
+        let r = plan.resolve().unwrap();
+        // Two for_group calls on AttnIn merged: both the bits and the
+        // recipe override survive.
+        let attn = r.group(LayerGroup::AttnIn);
+        assert_eq!(attn.weights.scheme.bits, 8);
+        assert_eq!(attn.recipe, "identity");
+        // Unset knobs fall through to the base.
+        assert_eq!(attn.quantizer, WeightQuantizer::Rtn);
+        assert_eq!(attn.cat_block, 128);
+        let down = r.group(LayerGroup::DownIn);
+        assert_eq!(down.cat_block, 16);
+        assert_eq!(down.recipe, "cat-block");
+        assert_eq!(down.weights.scheme.bits, 4);
+        // Untouched group is pure base.
+        assert_eq!(r.group(LayerGroup::MlpIn).weights.scheme.bits, 4);
+    }
+
+    #[test]
+    fn validation_rejects_bad_bits_naming_the_group() {
+        let err = QuantPlan::new().bits(0, 4).resolve().unwrap_err();
+        assert!(matches!(err, PlanError::BadBits { which: "bits_w", bits: 0, .. }), "{err}");
+        let err = QuantPlan::new()
+            .for_group(LayerGroup::MlpIn, |g| g.bits(4, 20))
+            .resolve()
+            .unwrap_err();
+        match &err {
+            PlanError::BadBits { group, which, bits } => {
+                assert_eq!(*group, LayerGroup::MlpIn);
+                assert_eq!(*which, "bits_a");
+                assert_eq!(*bits, 20);
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        assert!(err.to_string().contains("mlp_in"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_zero_cat_block_and_unknown_recipe() {
+        let err = QuantPlan::new().cat_block(0).resolve().unwrap_err();
+        assert!(matches!(err, PlanError::BadCatBlock { .. }), "{err}");
+        let err = QuantPlan::new().transform("no-such-recipe").resolve().unwrap_err();
+        match &err {
+            PlanError::UnknownRecipe { name, .. } => assert_eq!(name, "no-such-recipe"),
+            other => panic!("wrong error {other:?}"),
+        }
+        assert!(err.to_string().contains("no-such-recipe"), "{err}");
+        let err = QuantPlan::new()
+            .kv_acts(ActQuantCfg { scheme: QScheme::asym(17), clip_ratio: 1.0 })
+            .resolve()
+            .unwrap_err();
+        assert!(matches!(err, PlanError::BadKvBits { bits: 17 }), "{err}");
+    }
+
+    #[test]
+    fn pipeline_cfg_lowers_to_the_same_uniform_plan() {
+        let cfg = PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Gptq, 3);
+        let r = cfg.plan().resolve().unwrap();
+        assert_eq!(r.seed, 3);
+        for g in ALL_GROUPS {
+            let gp = r.group(g);
+            assert_eq!(gp.recipe, "cat-block");
+            assert_eq!(gp.quantizer, WeightQuantizer::Gptq);
+            assert_eq!(gp.weights.scheme.bits, 4);
+            assert_eq!(gp.acts.scheme.bits, 4);
+            assert_eq!(gp.acts.clip_ratio, 1.0);
+            assert_eq!(gp.cat_block, 128);
+            assert!(matches!(gp.weights.range, RangeEstimator::LpNorm { .. }));
+        }
+    }
+
+    #[test]
+    fn summary_covers_all_groups() {
+        let r = QuantPlan::new().resolve().unwrap();
+        let s = r.summary();
+        assert_eq!(s.len(), ALL_GROUPS.len() + 2);
+        for (g, (key, line)) in ALL_GROUPS.into_iter().zip(&s) {
+            assert_eq!(key, g.key());
+            assert!(line.contains("identity"), "{line}");
+        }
+    }
+}

@@ -360,6 +360,82 @@ impl QuantizedTensor {
     pub fn packed_bytes(&self) -> usize {
         self.store.code_bytes() + self.rows * (8 + 4 + 8)
     }
+
+    /// Serialized length of [`Self::code_bytes_le`] for a `rows × cols`
+    /// tensor on `scheme` — what the artifact loader validates blob
+    /// slices against.
+    pub fn code_bytes_len(rows: usize, cols: usize, scheme: QScheme) -> usize {
+        if scheme.bits <= 4 {
+            rows * cols.div_ceil(2)
+        } else if scheme.bits <= 8 {
+            rows * cols
+        } else {
+            rows * cols * std::mem::size_of::<i32>()
+        }
+    }
+
+    /// The packed code store as little-endian bytes (the artifact blob
+    /// payload). Nibble and byte stores serialize as-is; wide codes as
+    /// i32 LE. Round-trips bit-exactly through [`Self::from_parts`].
+    pub fn code_bytes_le(&self) -> Vec<u8> {
+        match &self.store {
+            Store::Nibble(d) => d.clone(),
+            Store::Byte(d) => d.iter().map(|&v| v as u8).collect(),
+            Store::Wide(d) => {
+                let mut out = Vec::with_capacity(d.len() * 4);
+                for &v in d {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    /// Rebuild a tensor from serialized parts (the artifact loader).
+    /// Validates every length; blob *integrity* (bit flips) is the
+    /// caller's checksum's job.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        scheme: QScheme,
+        code_bytes: &[u8],
+        scales: Vec<f64>,
+        zps: Vec<i32>,
+        row_sums: Vec<i64>,
+    ) -> anyhow::Result<QuantizedTensor> {
+        anyhow::ensure!(
+            (1..=24).contains(&scheme.bits),
+            "unsupported bit width {}",
+            scheme.bits
+        );
+        anyhow::ensure!(
+            scales.len() == rows && zps.len() == rows && row_sums.len() == rows,
+            "per-row metadata length mismatch: rows {rows} vs scales {} zps {} sums {}",
+            scales.len(),
+            zps.len(),
+            row_sums.len()
+        );
+        let want = Self::code_bytes_len(rows, cols, scheme);
+        anyhow::ensure!(
+            code_bytes.len() == want,
+            "code byte length mismatch: {} vs expected {want} ({rows}x{cols} @ {} bits)",
+            code_bytes.len(),
+            scheme.bits
+        );
+        let store = if scheme.bits <= 4 {
+            Store::Nibble(code_bytes.to_vec())
+        } else if scheme.bits <= 8 {
+            Store::Byte(code_bytes.iter().map(|&b| b as i8).collect())
+        } else {
+            Store::Wide(
+                code_bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        };
+        Ok(QuantizedTensor { rows, cols, scheme, store, scales, zps, row_sums })
+    }
 }
 
 #[cfg(test)]
@@ -463,6 +539,63 @@ mod tests {
                 assert_eq!(buf, full.row(i), "row {i}");
             }
         }
+    }
+
+    #[test]
+    fn serialized_parts_roundtrip_every_store() {
+        // Nibble (4), Byte (8), Wide (12), sym and asym, odd widths.
+        for bits in [2u32, 4, 8, 12] {
+            for sym in [true, false] {
+                let scheme = if sym { QScheme::sym(bits) } else { QScheme::asym(bits) };
+                let x = random(6, 19, 500 + bits as u64 + sym as u64);
+                let t = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+                let bytes = t.code_bytes_le();
+                assert_eq!(bytes.len(), QuantizedTensor::code_bytes_len(6, 19, scheme));
+                let v = t.view();
+                let back = QuantizedTensor::from_parts(
+                    6,
+                    19,
+                    scheme,
+                    &bytes,
+                    t.scales().to_vec(),
+                    v.zps.to_vec(),
+                    v.row_sums.to_vec(),
+                )
+                .unwrap();
+                assert_eq!(back.deq().max_abs_diff(&t.deq()), 0.0, "bits {bits} sym {sym}");
+                assert_eq!(back.view().row_sums, t.view().row_sums);
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_lengths() {
+        let x = random(4, 8, 77);
+        let t = QuantizedTensor::quantize_acts(&x, QScheme::asym(4), 1.0);
+        let bytes = t.code_bytes_le();
+        let v = t.view();
+        // Truncated codes.
+        assert!(QuantizedTensor::from_parts(
+            4,
+            8,
+            QScheme::asym(4),
+            &bytes[..bytes.len() - 1],
+            t.scales().to_vec(),
+            v.zps.to_vec(),
+            v.row_sums.to_vec(),
+        )
+        .is_err());
+        // Short metadata.
+        assert!(QuantizedTensor::from_parts(
+            4,
+            8,
+            QScheme::asym(4),
+            &bytes,
+            t.scales()[..3].to_vec(),
+            v.zps.to_vec(),
+            v.row_sums.to_vec(),
+        )
+        .is_err());
     }
 
     #[test]

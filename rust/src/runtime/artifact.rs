@@ -1,0 +1,393 @@
+//! Serializable quantization artifacts.
+//!
+//! A built [`QuantConfig`] is expensive — calibration forwards, transform
+//! fits, GPTQ column sweeps — but a *server* should pay that once,
+//! offline. [`save_artifact`] persists a config as:
+//!
+//! * `artifact.json` — a versioned manifest: the resolved-plan echo and
+//!   report, per-group activation schemes, every transform matrix, and
+//!   per-linear metadata (shape, scheme, per-row scales / zero-points /
+//!   code-sums, blob offsets). Numbers are written with Rust's
+//!   shortest-round-trip float formatting, so every f64 reparses
+//!   bit-exactly.
+//! * `codes.bin` — one little-endian blob of the packed integer codes,
+//!   FNV-1a-checksummed by the manifest. The manifest checksums *itself*
+//!   too (`manifest_fnv64` over the canonical dump minus that key), so a
+//!   flipped digit in a scale or transform entry is rejected at load,
+//!   not served. Both files are written to temp names and renamed, so a
+//!   kill mid-save never leaves a manifest that points at missing or
+//!   half-written data.
+//!
+//! [`load_artifact`] validates the version, the blob checksum and
+//! length, and every shape against the serving model, then rebuilds the
+//! packed tensors *and their persistent kernel panels* — the loaded
+//! config is bit-exact against the in-memory build (`forward_quant`,
+//! prefill/decode: diff == 0.0), at a wall-clock cost of reading bytes
+//! rather than re-running the pipeline.
+
+use crate::linalg::Mat;
+use crate::model::{LinearId, NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
+use crate::pipeline::PipelineReport;
+use crate::quant::{ActQuantCfg, QScheme, QuantizedTensor};
+use crate::runtime::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+/// Artifact format version — bumped on any incompatible layout change;
+/// the loader refuses other versions.
+pub const ARTIFACT_VERSION: usize = 1;
+
+const ARTIFACT_FORMAT: &str = "catquant.artifact";
+const MANIFEST_FILE: &str = "artifact.json";
+const CODES_FILE: &str = "codes.bin";
+/// Manifest key holding the manifest's own checksum. The checksum is
+/// computed over the canonical dump of the manifest *without* this key;
+/// the loader removes it, re-dumps (parse→dump is byte-stable for
+/// manifests produced by [`save_artifact`]), and compares.
+const MANIFEST_FNV_KEY: &str = "manifest_fnv64";
+
+/// FNV-1a over the code blob — cheap corruption detection.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn scheme_json(scheme: QScheme, clip_ratio: Option<f64>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bits".to_string(), Json::Num(scheme.bits as f64));
+    m.insert("symmetric".to_string(), Json::Bool(scheme.symmetric));
+    if let Some(c) = clip_ratio {
+        m.insert("clip_ratio".to_string(), Json::Num(c));
+    }
+    Json::Obj(m)
+}
+
+fn parse_act(j: &Json) -> Result<ActQuantCfg> {
+    let bits = j.at("bits")?.as_usize()? as u32;
+    anyhow::ensure!((1..=24).contains(&bits), "activation bits {bits} out of range");
+    let symmetric = j.at("symmetric")?.as_bool()?;
+    let clip_ratio = j.at("clip_ratio")?.as_f64()?;
+    let scheme = if symmetric { QScheme::sym(bits) } else { QScheme::asym(bits) };
+    Ok(ActQuantCfg { scheme, clip_ratio })
+}
+
+fn f64_arr(values: impl Iterator<Item = f64>) -> Json {
+    Json::Arr(values.map(Json::Num).collect())
+}
+
+/// Report metrics may legitimately be non-finite (e.g. an SQNR of +inf
+/// when a layer's error is exactly zero); `Json::Num` would emit an
+/// `inf` token the parser cannot read back, so those are stored as
+/// strings (the loader never parses report metrics).
+fn metric_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn parse_f64_arr(j: &Json, want_len: usize, what: &str) -> Result<Vec<f64>> {
+    let a = j.as_arr()?;
+    anyhow::ensure!(a.len() == want_len, "{what}: length {} != {want_len}", a.len());
+    a.iter().map(|v| v.as_f64()).collect()
+}
+
+/// Persist `qc` (+ the build report / plan echo) under `dir`.
+pub fn save_artifact(qc: &QuantConfig, report: &PipelineReport, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+
+    let mut blob: Vec<u8> = Vec::new();
+    let mut linears = BTreeMap::new();
+    // Deterministic blob layout: sort by (block, name).
+    let mut ids: Vec<&LinearId> = qc.linears.keys().collect();
+    ids.sort_by_key(|id| (id.block(), id.name()));
+    for id in ids {
+        let ql = &qc.linears[id];
+        let t = &ql.weight;
+        anyhow::ensure!(
+            t.scales().iter().all(|s| s.is_finite()),
+            "refusing to save {id}: non-finite scale"
+        );
+        let offset = blob.len();
+        blob.extend_from_slice(&t.code_bytes_le());
+        let v = t.view();
+        let mut e = BTreeMap::new();
+        e.insert("rows".to_string(), Json::Num(t.rows() as f64));
+        e.insert("cols".to_string(), Json::Num(t.cols() as f64));
+        e.insert("scheme".to_string(), scheme_json(t.scheme(), None));
+        e.insert("group".to_string(), Json::Str(id.group().key().to_string()));
+        e.insert("offset".to_string(), Json::Num(offset as f64));
+        e.insert("len".to_string(), Json::Num((blob.len() - offset) as f64));
+        e.insert("scales".to_string(), f64_arr(t.scales().iter().copied()));
+        e.insert("zps".to_string(), f64_arr(v.zps.iter().map(|&z| z as f64)));
+        e.insert("row_sums".to_string(), f64_arr(v.row_sums.iter().map(|&s| s as f64)));
+        linears.insert(id.to_string(), Json::Obj(e));
+    }
+
+    let mut transforms = BTreeMap::new();
+    for (name, t) in &qc.transforms {
+        anyhow::ensure!(
+            t.as_slice().iter().all(|v| v.is_finite()),
+            "refusing to save transform {name}: non-finite entry"
+        );
+        let mut e = BTreeMap::new();
+        e.insert("rows".to_string(), Json::Num(t.rows() as f64));
+        e.insert("cols".to_string(), Json::Num(t.cols() as f64));
+        e.insert("data".to_string(), f64_arr(t.as_slice().iter().copied()));
+        transforms.insert(name.clone(), Json::Obj(e));
+    }
+
+    let mut acts = BTreeMap::new();
+    for g in ALL_GROUPS {
+        let a = qc.act_for(g);
+        acts.insert(g.key().to_string(), scheme_json(a.scheme, Some(a.clip_ratio)));
+    }
+
+    let mut rep = BTreeMap::new();
+    rep.insert("mean_sqnr_db".to_string(), metric_json(report.mean_sqnr_db));
+    rep.insert("act_clip".to_string(), metric_json(report.act_clip));
+    rep.insert(
+        "plan".to_string(),
+        Json::Arr(
+            report
+                .plan
+                .iter()
+                .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+                .collect(),
+        ),
+    );
+
+    let mut codes = BTreeMap::new();
+    codes.insert("file".to_string(), Json::Str(CODES_FILE.to_string()));
+    codes.insert("bytes".to_string(), Json::Num(blob.len() as f64));
+    codes.insert("fnv64".to_string(), Json::Str(format!("{:016x}", fnv1a64(&blob))));
+
+    let mut root = BTreeMap::new();
+    root.insert("format".to_string(), Json::Str(ARTIFACT_FORMAT.to_string()));
+    root.insert("version".to_string(), Json::Num(ARTIFACT_VERSION as f64));
+    root.insert("codes".to_string(), Json::Obj(codes));
+    root.insert("acts".to_string(), Json::Obj(acts));
+    root.insert(
+        "kv_act".to_string(),
+        scheme_json(qc.kv_act.scheme, Some(qc.kv_act.clip_ratio)),
+    );
+    root.insert("report".to_string(), Json::Obj(rep));
+    root.insert("transforms".to_string(), Json::Obj(transforms));
+    root.insert("linears".to_string(), Json::Obj(linears));
+
+    // Self-checksum over the canonical dump (without the checksum key),
+    // so manifest corruption — not just blob corruption — is caught.
+    // Wrap/unwrap instead of cloning: the manifest tree holds every
+    // transform matrix, so a deep clone would double peak memory here.
+    let wrapped = Json::Obj(root);
+    let canonical = wrapped.dump();
+    let Json::Obj(mut root) = wrapped else { unreachable!() };
+    root.insert(
+        MANIFEST_FNV_KEY.to_string(),
+        Json::Str(format!("{:016x}", fnv1a64(canonical.as_bytes()))),
+    );
+
+    // Temp-write + rename both files, manifest last: a kill mid-save can
+    // leave stray `.tmp` files but never a manifest naming missing or
+    // partial data.
+    write_atomic(&dir.join(CODES_FILE), &blob)?;
+    write_atomic(&dir.join(MANIFEST_FILE), Json::Obj(root).dump().as_bytes())?;
+    Ok(())
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Load an artifact saved by [`save_artifact`], validating it against
+/// the serving `model` (shapes, coverage) and its own checksum/version.
+/// `QPanels` are rebuilt per linear, so the returned config serves at
+/// full speed immediately.
+pub fn load_artifact(dir: &Path, model: &NativeModel) -> Result<QuantConfig> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading artifact manifest {}", mpath.display()))?;
+    let mut j = Json::parse(&text).context("parsing artifact manifest")?;
+
+    let format = j.at("format")?.as_str()?;
+    anyhow::ensure!(format == ARTIFACT_FORMAT, "not a catquant artifact (format {format:?})");
+    let version = j.at("version")?.as_usize()?;
+    anyhow::ensure!(
+        version == ARTIFACT_VERSION,
+        "unsupported artifact version {version} (this build reads version {ARTIFACT_VERSION})"
+    );
+
+    // Manifest self-check: re-dump the parsed manifest without the
+    // checksum key (parse→dump is byte-stable for saved manifests) and
+    // compare. Catches corrupted scales/zero-points/transform entries,
+    // which the blob checksum cannot see. The key is *removed* from the
+    // owned tree (nothing below reads it) rather than cloning the whole
+    // manifest — it holds every transform matrix.
+    let want_manifest_fnv = j.at(MANIFEST_FNV_KEY)?.as_str()?.to_string();
+    if let Json::Obj(m) = &mut j {
+        m.remove(MANIFEST_FNV_KEY);
+    }
+    let got_manifest_fnv = format!("{:016x}", fnv1a64(j.dump().as_bytes()));
+    anyhow::ensure!(
+        got_manifest_fnv == want_manifest_fnv,
+        "artifact manifest corrupted: checksum {got_manifest_fnv} != recorded {want_manifest_fnv}"
+    );
+
+    let codes_meta = j.at("codes")?;
+    let blob_path = dir.join(codes_meta.at("file")?.as_str()?);
+    let blob = std::fs::read(&blob_path)
+        .with_context(|| format!("reading artifact blob {}", blob_path.display()))?;
+    let want_bytes = codes_meta.at("bytes")?.as_usize()?;
+    anyhow::ensure!(
+        blob.len() == want_bytes,
+        "artifact blob truncated: {} bytes on disk, manifest says {want_bytes}",
+        blob.len()
+    );
+    let want_fnv = codes_meta.at("fnv64")?.as_str()?;
+    let got_fnv = format!("{:016x}", fnv1a64(&blob));
+    anyhow::ensure!(
+        got_fnv == want_fnv,
+        "artifact blob corrupted: checksum {got_fnv} != manifest {want_fnv}"
+    );
+
+    let mut acts = HashMap::new();
+    let acts_j = j.at("acts")?;
+    for g in ALL_GROUPS {
+        let entry = acts_j
+            .at(g.key())
+            .with_context(|| format!("artifact missing activation cfg for group {}", g.key()))?;
+        acts.insert(g, parse_act(entry)?);
+    }
+    let kv_act = parse_act(j.at("kv_act")?).context("parsing kv_act")?;
+
+    // Transforms: validated against the model's transform spec.
+    let spec: HashMap<String, Vec<usize>> = model.cfg.transform_spec().into_iter().collect();
+    let mut transforms = HashMap::new();
+    for (name, entry) in j.at("transforms")?.as_obj()? {
+        let rows = entry.at("rows")?.as_usize()?;
+        let cols = entry.at("cols")?.as_usize()?;
+        let Some(shape) = spec.get(name) else {
+            bail!("artifact transform {name} is not in the model's transform spec");
+        };
+        anyhow::ensure!(
+            shape[..] == [rows, cols],
+            "transform {name}: artifact shape {rows}x{cols} != model spec {shape:?}"
+        );
+        let data =
+            parse_f64_arr(entry.at("data")?, rows * cols, &format!("transform {name} data"))?;
+        transforms.insert(name.clone(), Mat::from_vec(rows, cols, data));
+    }
+    for name in spec.keys() {
+        anyhow::ensure!(transforms.contains_key(name), "artifact missing transform {name}");
+    }
+
+    let mut linears = HashMap::new();
+    for (key, entry) in j.at("linears")?.as_obj()? {
+        let id = LinearId::parse(key)
+            .with_context(|| format!("artifact linear {key} is not a known linear id"))?;
+        let rows = entry.at("rows")?.as_usize()?;
+        let cols = entry.at("cols")?.as_usize()?;
+        let w = model
+            .params
+            .get(key)
+            .with_context(|| format!("serving model has no parameter {key}"))?;
+        anyhow::ensure!(
+            w.rows() == rows && w.cols() == cols,
+            "linear {key}: artifact shape {rows}x{cols} != model {}x{}",
+            w.rows(),
+            w.cols()
+        );
+        let scheme_j = entry.at("scheme")?;
+        let bits = scheme_j.at("bits")?.as_usize()? as u32;
+        anyhow::ensure!(
+            (1..=24).contains(&bits),
+            "linear {key}: bits {bits} out of range"
+        );
+        let scheme = if scheme_j.at("symmetric")?.as_bool()? {
+            QScheme::sym(bits)
+        } else {
+            QScheme::asym(bits)
+        };
+        let offset = entry.at("offset")?.as_usize()?;
+        let len = entry.at("len")?.as_usize()?;
+        anyhow::ensure!(
+            offset.checked_add(len).is_some_and(|end| end <= blob.len()),
+            "linear {key}: blob slice {offset}+{len} exceeds blob length {} (truncated?)",
+            blob.len()
+        );
+        let scales = parse_f64_arr(entry.at("scales")?, rows, &format!("{key} scales"))?;
+        let zps: Vec<i32> = parse_f64_arr(entry.at("zps")?, rows, &format!("{key} zps"))?
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        let row_sums: Vec<i64> =
+            parse_f64_arr(entry.at("row_sums")?, rows, &format!("{key} row_sums"))?
+                .into_iter()
+                .map(|v| v as i64)
+                .collect();
+        let tensor = QuantizedTensor::from_parts(
+            rows,
+            cols,
+            scheme,
+            &blob[offset..offset + len],
+            scales,
+            zps,
+            row_sums,
+        )
+        .with_context(|| format!("rebuilding packed codes for {key}"))?;
+        linears.insert(id, QuantizedLinear::new(tensor));
+    }
+
+    // Coverage: every linear of the serving model must be present.
+    for block in 0..model.cfg.n_layers {
+        for g in ALL_GROUPS {
+            for &lin in g.linears() {
+                let id = LinearId::new(block, lin);
+                anyhow::ensure!(
+                    linears.contains_key(&id),
+                    "artifact missing packed weights for {id}"
+                );
+            }
+        }
+    }
+
+    Ok(QuantConfig { acts, kv_act, transforms, linears })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vector() {
+        // Known FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn act_json_roundtrip() {
+        for (scheme, clip) in [
+            (QScheme::asym(4), 1.0),
+            (QScheme::sym(8), 0.9),
+            (QScheme::asym(16), 0.85),
+        ] {
+            let j = scheme_json(scheme, Some(clip));
+            let text = j.dump();
+            let back = parse_act(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.scheme, scheme);
+            assert_eq!(back.clip_ratio, clip);
+        }
+    }
+}

@@ -36,14 +36,32 @@ impl ArgPack {
     /// in `transform_spec` order — the graphs consume dense f32 runtime
     /// args, so this is the one seam that still materializes f64 mats
     /// from the codes.
+    ///
+    /// The compiled quant graphs (`*_a4`) quantize activations at a
+    /// *baked-in* uniform asymmetric A4, so every PJRT consumer of a
+    /// `QuantConfig` funnels through this check: mixed-precision or
+    /// non-A4 plans are rejected here instead of served/evaluated with
+    /// numerics that match neither the plan nor the native engine.
     pub fn quant(
         model: &ModelEntry,
         params: &HashMap<String, Mat>,
         qc: &QuantConfig,
     ) -> Result<ArgPack> {
+        let act = qc.uniform_act().ok_or_else(|| {
+            anyhow::anyhow!(
+                "the compiled A4 graphs cannot serve a mixed-precision config; \
+                 use the native engine for per-group activation plans"
+            )
+        })?;
+        anyhow::ensure!(
+            act.scheme.bits == 4 && !act.scheme.symmetric,
+            "the compiled A4 graphs expect asymmetric 4-bit activations, got {}-bit {}",
+            act.scheme.bits,
+            if act.scheme.symmetric { "symmetric" } else { "asymmetric" }
+        );
         let mut literals = Vec::new();
         for (name, shape) in model.config.param_spec() {
-            let lit = match qc.linears.get(&name) {
+            let lit = match qc.linear_named(&name) {
                 Some(lin) => mat_literal(&lin.deq(), &shape)?,
                 None => {
                     let m = params

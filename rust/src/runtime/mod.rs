@@ -1,14 +1,22 @@
-//! Artifact runtime: manifest parsing + PJRT execution.
+//! Artifact runtime: manifest parsing, quantization artifacts, and PJRT
+//! execution.
 //!
 //! The request path is `Rust → PJRT CPU client → compiled HLO`; python is
 //! build-time only. [`PjrtEngine`] loads `artifacts/hlo/*.hlo.txt` (HLO
 //! *text* — see `python/compile/aot.py` for why not serialized protos),
 //! compiles each graph once, and executes with weights/transforms as
 //! runtime arguments so one executable serves every quantization config.
+//!
+//! [`save_artifact`] / [`load_artifact`] persist a built
+//! [`QuantConfig`](crate::model::QuantConfig) so serving processes load
+//! prebuilt transforms + packed codes in milliseconds instead of
+//! re-running calibration and GPTQ at boot.
 
+mod artifact;
 mod engine;
 pub mod json;
 mod manifest;
 
+pub use artifact::{load_artifact, save_artifact, ARTIFACT_VERSION};
 pub use engine::{literal_to_mat, token_literal, ArgPack, DevicePack, PjrtEngine};
 pub use manifest::{GraphEntry, Manifest, ModelEntry};

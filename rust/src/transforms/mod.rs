@@ -16,6 +16,7 @@
 mod cat;
 mod kronecker;
 mod permuted;
+mod recipe;
 mod rotation;
 mod scaling;
 mod transform;
@@ -23,11 +24,18 @@ mod transform;
 pub use cat::{cat_block, cat_block_raw, cat_m_hat, cat_optimal};
 pub use kronecker::{kronecker_cat, kronecker_factor_dims, partial_trace_factors};
 pub use permuted::{correlation_ordering, permuted_cat_block};
+pub use recipe::{
+    has_recipe, recipe, recipe_names, register_fn_recipe, register_recipe, RecipeCtx, RecipeRef,
+    TransformRecipe,
+};
 pub use rotation::seed_search_rotation;
 pub use scaling::{smooth_quant_scale, diag_align_scale};
 pub use transform::Transform;
 
-/// Which transform family to build — the experiment grid's axis.
+/// The built-in transform families — the closed enum the experiment grid
+/// iterates over. Each variant maps onto one registry recipe name
+/// ([`Self::name`]); the open end of the axis is the registry itself
+/// ([`register_recipe`]), which plans address by name directly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransformKind {
     None,
@@ -44,18 +52,41 @@ pub enum TransformKind {
 }
 
 impl TransformKind {
-    pub fn label(&self) -> &'static str {
+    /// The registry recipe name — the one string table for transform
+    /// identity, shared by plans, tables, logs, and the CLI.
+    pub fn name(&self) -> &'static str {
         match self {
-            TransformKind::None => "None",
-            TransformKind::SmoothQuant => "SmoothQuant",
-            TransformKind::QuaRot => "QuaRot",
-            TransformKind::SpinQuant => "SpinQuant",
-            TransformKind::CatBlock => "CAT (block)",
-            TransformKind::CatBlockTrained => "CAT (block) w/ train",
-            TransformKind::FlatQuant => "FlatQuant",
-            TransformKind::CatOptimal => "CAT (optimal)",
-            TransformKind::CatBlockPermuted => "CAT (perm-block)",
+            TransformKind::None => "identity",
+            TransformKind::SmoothQuant => "smoothquant",
+            TransformKind::QuaRot => "quarot",
+            TransformKind::SpinQuant => "spinquant",
+            TransformKind::CatBlock => "cat-block",
+            TransformKind::CatBlockTrained => "cat-block-trained",
+            TransformKind::FlatQuant => "kronecker",
+            TransformKind::CatOptimal => "cat-optimal",
+            TransformKind::CatBlockPermuted => "cat-block-permuted",
         }
+    }
+
+    /// Inverse of [`Self::name`] (exact registry names only; CLI aliases
+    /// live in the CLI).
+    pub fn from_name(name: &str) -> Option<TransformKind> {
+        Self::all().iter().copied().find(|k| k.name() == name)
+    }
+
+    /// Every built-in kind.
+    pub fn all() -> &'static [TransformKind] {
+        &[
+            TransformKind::None,
+            TransformKind::SmoothQuant,
+            TransformKind::QuaRot,
+            TransformKind::SpinQuant,
+            TransformKind::CatBlock,
+            TransformKind::CatBlockTrained,
+            TransformKind::FlatQuant,
+            TransformKind::CatOptimal,
+            TransformKind::CatBlockPermuted,
+        ]
     }
 
     /// All Table 1 rows, in the paper's order.
@@ -69,5 +100,25 @@ impl TransformKind {
             TransformKind::FlatQuant,
             TransformKind::CatBlockTrained,
         ]
+    }
+}
+
+impl std::fmt::Display for TransformKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::TransformKind;
+
+    #[test]
+    fn every_kind_has_a_registered_recipe() {
+        for &k in TransformKind::all() {
+            assert!(super::has_recipe(k.name()), "{k:?} → {} unregistered", k.name());
+            assert_eq!(TransformKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(TransformKind::from_name("no-such-recipe"), None);
     }
 }

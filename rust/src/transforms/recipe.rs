@@ -1,0 +1,266 @@
+//! Transform *recipes*: named, registrable builders of [`Transform`]s.
+//!
+//! The paper treats the transform as one independent axis of the SQNR
+//! objective; this module makes that axis open. A [`TransformRecipe`]
+//! knows how to fit a transform from one layer group's calibration
+//! statistics ([`RecipeCtx`]), and the process-wide registry maps recipe
+//! *names* (the strings a [`crate::pipeline::QuantPlan`] carries) to
+//! recipe objects. Every built-in transform of the zoo is pre-registered;
+//! external code can add its own with [`register_recipe`] (or the
+//! closure shorthand [`register_fn_recipe`]) without touching this crate
+//! — the adaptive-transform space WUSH/FPTQuant explore plugs in here.
+
+use super::Transform;
+use crate::linalg::Mat;
+use crate::quant::{ActQuantCfg, WeightQuantCfg};
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Everything a recipe may draw on to fit one layer group's transform.
+///
+/// All statistics are *pre-transform*: the calibration pass's row
+/// subsample and autocorrelation of the group input, plus the group's
+/// weight matrices and their summed Gram matrix.
+pub struct RecipeCtx<'a> {
+    /// Row subsample of the group input (`tokens × d`).
+    pub x_sample: &'a Mat,
+    /// Group-input autocorrelation `Σ_x = E[xxᵀ]` (`d × d`).
+    pub sigma_x: &'a Mat,
+    /// The group's weight matrices (`out × d` each).
+    pub ws: &'a [&'a Mat],
+    /// `Σ_w = Σ WᵀW` over the group's weights (`d × d`).
+    pub sigma_w: &'a Mat,
+    /// Activation quantization the transform will be judged under.
+    pub act: ActQuantCfg,
+    /// Weight quantization the transform will be judged under.
+    pub wq: WeightQuantCfg,
+    /// CAT block size `k` (recipes clamp to the group dim themselves).
+    pub cat_block: usize,
+    /// Per-group seed (already block-tweaked by the pipeline).
+    pub seed: u64,
+}
+
+impl RecipeCtx<'_> {
+    /// Input dimensionality of the group.
+    pub fn dim(&self) -> usize {
+        self.sigma_x.rows()
+    }
+}
+
+/// A named transform builder. Implementations must be `Send + Sync`:
+/// the pipeline fans group builds out across the worker pool.
+pub trait TransformRecipe: Send + Sync {
+    /// Registry name (what a plan's `.transform(name)` refers to).
+    fn name(&self) -> &str;
+    /// Fit a transform for one layer group.
+    fn fit(&self, ctx: &RecipeCtx) -> Transform;
+}
+
+/// Shared handle to a registered recipe.
+pub type RecipeRef = Arc<dyn TransformRecipe>;
+
+/// A recipe defined by a closure — the shorthand external code and tests
+/// use to register custom transforms.
+struct FnRecipe<F: Fn(&RecipeCtx) -> Transform + Send + Sync> {
+    name: String,
+    f: F,
+}
+
+impl<F: Fn(&RecipeCtx) -> Transform + Send + Sync> TransformRecipe for FnRecipe<F> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fit(&self, ctx: &RecipeCtx) -> Transform {
+        (self.f)(ctx)
+    }
+}
+
+fn registry() -> &'static RwLock<HashMap<String, RecipeRef>> {
+    static REGISTRY: OnceLock<RwLock<HashMap<String, RecipeRef>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(builtin_recipes()))
+}
+
+/// Register (or replace) a recipe under its own name.
+pub fn register_recipe(recipe: RecipeRef) {
+    let name = recipe.name().to_string();
+    registry().write().unwrap().insert(name, recipe);
+}
+
+/// Register a closure as a recipe under `name`.
+pub fn register_fn_recipe(
+    name: impl Into<String>,
+    f: impl Fn(&RecipeCtx) -> Transform + Send + Sync + 'static,
+) {
+    register_recipe(Arc::new(FnRecipe { name: name.into(), f }));
+}
+
+/// Look up a recipe by name.
+pub fn recipe(name: &str) -> Option<RecipeRef> {
+    registry().read().unwrap().get(name).cloned()
+}
+
+/// Whether `name` is registered (what plan validation checks).
+pub fn has_recipe(name: &str) -> bool {
+    registry().read().unwrap().contains_key(name)
+}
+
+/// All registered recipe names, sorted.
+pub fn recipe_names() -> Vec<String> {
+    let mut names: Vec<String> = registry().read().unwrap().keys().cloned().collect();
+    names.sort();
+    names
+}
+
+/// The built-in zoo, registered on first registry access. Names are the
+/// single source of truth for transform labels — `TransformKind::name`
+/// maps the closed enum onto them.
+fn builtin_recipes() -> HashMap<String, RecipeRef> {
+    let builtins: Vec<RecipeRef> = vec![
+        Arc::new(FnRecipe {
+            name: "identity".into(),
+            f: |ctx: &RecipeCtx| Transform::identity(ctx.dim()),
+        }),
+        Arc::new(FnRecipe {
+            name: "smoothquant".into(),
+            f: |ctx: &RecipeCtx| super::smooth_quant_scale(ctx.x_sample, ctx.ws, 0.5),
+        }),
+        Arc::new(FnRecipe {
+            name: "quarot".into(),
+            // One fixed randomized Hadamard (seeded but unsearched).
+            f: |ctx: &RecipeCtx| {
+                let d = ctx.dim();
+                let mut rng = crate::linalg::Rng::new(ctx.seed ^ 0x9A407);
+                if crate::linalg::is_pow2(d) {
+                    Transform::orthogonal(
+                        "quarot",
+                        crate::linalg::randomized_hadamard(d, &mut rng),
+                    )
+                } else {
+                    Transform::orthogonal("quarot", crate::linalg::random_orthogonal(d, &mut rng))
+                }
+            },
+        }),
+        Arc::new(FnRecipe {
+            name: "spinquant".into(),
+            f: |ctx: &RecipeCtx| {
+                super::seed_search_rotation(ctx.x_sample, ctx.ws, ctx.act, ctx.wq, 8, ctx.seed)
+            },
+        }),
+        Arc::new(FnRecipe {
+            name: "cat-block".into(),
+            f: |ctx: &RecipeCtx| {
+                super::cat_block(ctx.sigma_x, ctx.sigma_w, ctx.cat_block.min(ctx.dim()), ctx.seed)
+            },
+        }),
+        // Same fit as cat-block; the *trained* part (learnable activation
+        // clipping) is a plan-level post-pass in the pipeline, not a
+        // property of the transform itself.
+        Arc::new(FnRecipe {
+            name: "cat-block-trained".into(),
+            f: |ctx: &RecipeCtx| {
+                super::cat_block(ctx.sigma_x, ctx.sigma_w, ctx.cat_block.min(ctx.dim()), ctx.seed)
+            },
+        }),
+        Arc::new(FnRecipe {
+            name: "kronecker".into(),
+            f: |ctx: &RecipeCtx| super::kronecker_cat(ctx.sigma_x, ctx.sigma_w, ctx.seed),
+        }),
+        Arc::new(FnRecipe {
+            name: "cat-optimal".into(),
+            f: |ctx: &RecipeCtx| super::cat_optimal(ctx.sigma_x, ctx.sigma_w, ctx.seed),
+        }),
+        Arc::new(FnRecipe {
+            name: "cat-block-permuted".into(),
+            f: |ctx: &RecipeCtx| {
+                super::permuted_cat_block(
+                    ctx.sigma_x,
+                    ctx.sigma_w,
+                    ctx.cat_block.min(ctx.dim()),
+                    ctx.seed,
+                )
+            },
+        }),
+    ];
+    builtins.into_iter().map(|r| (r.name().to_string(), r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{syrk_at_a, Rng};
+    use crate::quant::QScheme;
+
+    fn ctx_fixture(d: usize, seed: u64) -> (Mat, Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(64, d, |_, _| rng.normal());
+        let w = Mat::from_fn(d, d, |_, _| rng.normal() * 0.05);
+        let sigma_x = syrk_at_a(&x).scale(1.0 / 64.0);
+        let sigma_w = syrk_at_a(&w);
+        (x, w, sigma_x, sigma_w)
+    }
+
+    #[test]
+    fn builtins_are_registered() {
+        for name in [
+            "identity",
+            "smoothquant",
+            "quarot",
+            "spinquant",
+            "cat-block",
+            "cat-block-trained",
+            "kronecker",
+            "cat-optimal",
+            "cat-block-permuted",
+        ] {
+            assert!(has_recipe(name), "missing builtin {name}");
+        }
+        let names = recipe_names();
+        assert!(names.len() >= 9);
+        assert!(names.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+    }
+
+    #[test]
+    fn builtin_fit_matches_direct_builder() {
+        let (x, w, sigma_x, sigma_w) = ctx_fixture(16, 3);
+        let ws = [&w];
+        let ctx = RecipeCtx {
+            x_sample: &x,
+            sigma_x: &sigma_x,
+            ws: &ws,
+            sigma_w: &sigma_w,
+            act: ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 },
+            wq: WeightQuantCfg::minmax(4),
+            cat_block: 8,
+            seed: 5,
+        };
+        let via_registry = recipe("cat-block").unwrap().fit(&ctx);
+        let direct = super::super::cat_block(&sigma_x, &sigma_w, 8, 5);
+        assert_eq!(via_registry.matrix().max_abs_diff(direct.matrix()), 0.0);
+        let ident = recipe("identity").unwrap().fit(&ctx);
+        assert_eq!(ident.matrix().max_abs_diff(&Mat::eye(16)), 0.0);
+    }
+
+    #[test]
+    fn external_recipes_register_and_fit() {
+        register_fn_recipe("test-double", |ctx: &RecipeCtx| {
+            Transform::diagonal("test-double", &vec![2.0; ctx.dim()])
+        });
+        assert!(has_recipe("test-double"));
+        let (x, w, sigma_x, sigma_w) = ctx_fixture(8, 4);
+        let ws = [&w];
+        let ctx = RecipeCtx {
+            x_sample: &x,
+            sigma_x: &sigma_x,
+            ws: &ws,
+            sigma_w: &sigma_w,
+            act: ActQuantCfg { scheme: QScheme::asym(4), clip_ratio: 1.0 },
+            wq: WeightQuantCfg::minmax(4),
+            cat_block: 4,
+            seed: 0,
+        };
+        let t = recipe("test-double").unwrap().fit(&ctx);
+        assert_eq!(t.matrix()[(0, 0)], 2.0);
+        assert!(t.inversion_error() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Artifact round-trip properties: `load_artifact(save_artifact(qc))`
+//! must be **bit-exact** against the in-memory build — identical
+//! `forward_quant` logits and identical prefill/decode outputs — across
+//! bit widths, activation schemes, and mixed per-group plans. Corrupted,
+//! truncated, and version-mismatched artifacts must fail loudly at load.
+//!
+//! CI runs this suite under `CATQUANT_THREADS=1` and `=8`: serialization
+//! must not depend on worker count (the pipeline's fan-out is
+//! merge-ordered, and the blob layout is id-sorted).
+
+use catquant::calib::{calibrate, CalibStats};
+use catquant::coordinator::{GenEngine, NativeGenerator, SamplingCfg};
+use catquant::model::{LayerGroup, ModelConfig, NativeModel, QuantConfig};
+use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
+use catquant::quant::{ActQuantCfg, QScheme};
+use catquant::runtime::{load_artifact, save_artifact};
+use std::path::PathBuf;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 16, vocab: 256 }
+}
+
+fn setup(seed: u64) -> (NativeModel, CalibStats) {
+    let model = NativeModel::init_random(tiny_cfg(), seed);
+    let mut rng = catquant::linalg::Rng::new(5);
+    let seqs: Vec<Vec<u8>> =
+        (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+    let calib = calibrate(&model, &seqs, 256, 0);
+    (model, calib)
+}
+
+/// `load_artifact` failure message (`QuantConfig` is not `Debug`, so no
+/// `unwrap_err`).
+fn load_err(dir: &std::path::Path, model: &NativeModel) -> String {
+    match load_artifact(dir, model) {
+        Ok(_) => panic!("load should have failed"),
+        Err(e) => e.to_string(),
+    }
+}
+
+/// Unique scratch dir per test (tests in one binary run concurrently).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("catquant-artifact-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn toks() -> Vec<u8> {
+    (0..12).map(|i| (i * 17 + 3) as u8).collect()
+}
+
+/// Round-trip `qc` through disk and assert full bit-exactness: forward,
+/// prefill logits, and a few decode steps all diff == 0.0.
+fn assert_roundtrip_exact(model: &NativeModel, qc: &QuantConfig, tag: &str) {
+    let dir = scratch(tag);
+    let report = catquant::pipeline::PipelineReport::default();
+    save_artifact(qc, &report, &dir).expect("save");
+    let loaded = load_artifact(&dir, model).expect("load");
+
+    let toks = toks();
+    let a = model.forward_quant(&toks, qc);
+    let b = model.forward_quant(&toks, &loaded);
+    assert_eq!(a.max_abs_diff(&b), 0.0, "{tag}: forward_quant diverged");
+
+    // Prefill + batched decode parity (packed KV caches on both sides).
+    let (la, mut ca) = model.prefill(&toks[..5], Some(qc));
+    let (lb, mut cb) = model.prefill(&toks[..5], Some(&loaded));
+    assert_eq!(la.max_abs_diff(&lb), 0.0, "{tag}: prefill diverged");
+    for s in 0..4u8 {
+        let next = [(s * 37 + 11) % 251];
+        let da = model.decode_step(&mut [&mut ca], &next, Some(qc));
+        let db = model.decode_step(&mut [&mut cb], &next, Some(&loaded));
+        assert_eq!(da.max_abs_diff(&db), 0.0, "{tag}: decode step {s} diverged");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn roundtrip_bit_exact_across_bits_and_schemes() {
+    let (model, calib) = setup(11);
+    for bits in [4u32, 8] {
+        for sym_act in [false, true] {
+            let scheme = if sym_act { QScheme::sym(bits) } else { QScheme::asym(bits) };
+            let plan = QuantPlan::new()
+                .transform("cat-block")
+                .quantizer(WeightQuantizer::Rtn)
+                .bits(bits, bits)
+                .acts(ActQuantCfg { scheme, clip_ratio: 1.0 })
+                .cat_block(8)
+                .seed(0);
+            let (qc, _) = build_quant_config(&model, &calib, &plan).unwrap();
+            assert_roundtrip_exact(&model, &qc, &format!("b{bits}-sym{sym_act}"));
+        }
+    }
+}
+
+#[test]
+fn roundtrip_bit_exact_with_gptq_and_trained_clip() {
+    let (model, calib) = setup(12);
+    let plan = QuantPlan::new()
+        .transform("cat-block-trained")
+        .quantizer(WeightQuantizer::Gptq)
+        .bits(4, 4)
+        .cat_block(8)
+        .seed(1);
+    let (qc, rep) = build_quant_config(&model, &calib, &plan).unwrap();
+    assert!(rep.act_clip > 0.0);
+    assert_roundtrip_exact(&model, &qc, "gptq-trained");
+}
+
+#[test]
+fn mixed_plan_roundtrips_and_serves_from_artifact() {
+    // The acceptance-criteria shape: attention W8A8 / MLP W4A4, built,
+    // serialized, and served end-to-end through NativeGenerator.
+    let (model, calib) = setup(13);
+    let plan = QuantPlan::new()
+        .transform("cat-block")
+        .quantizer(WeightQuantizer::Rtn)
+        .bits(4, 4)
+        .cat_block(8)
+        .seed(0)
+        .for_group(LayerGroup::AttnIn, |g| g.bits(8, 8))
+        .for_group(LayerGroup::OIn, |g| g.bits(8, 8).transform("identity"));
+    let (qc, _) = build_quant_config(&model, &calib, &plan).unwrap();
+    assert_roundtrip_exact(&model, &qc, "mixed");
+
+    // Serve from the saved artifact; generated tokens must match the
+    // in-memory config token for token (same sampling stream).
+    let dir = scratch("mixed-serve");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let sampling = SamplingCfg { temperature: 0.8, seed: 9 };
+    let prompts = [vec![1u8, 2, 3], vec![7u8, 7], vec![9u8]];
+    let mut from_mem =
+        NativeGenerator::quant(NativeModel::init_random(tiny_cfg(), 13), qc, 4, sampling);
+    let mut from_art = NativeGenerator::quant_from_artifact(
+        NativeModel::init_random(tiny_cfg(), 13),
+        &dir,
+        4,
+        sampling,
+    )
+    .expect("artifact generator");
+    let a = from_mem.generate_batch(&prompts, 6).unwrap();
+    let b = from_art.generate_batch(&prompts, 6).unwrap();
+    assert_eq!(a, b, "artifact-served tokens must match in-memory serving");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn version_mismatch_is_rejected() {
+    let (model, _) = setup(14);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("version");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let mpath = dir.join("artifact.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    assert!(text.contains("\"version\":1"), "manifest should carry version 1");
+    std::fs::write(&mpath, text.replace("\"version\":1", "\"version\":99")).unwrap();
+    let err = load_err(&dir, &model);
+    assert!(err.contains("version"), "error should mention the version: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_blob_is_rejected() {
+    let (model, _) = setup(15);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("corrupt");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let bpath = dir.join("codes.bin");
+    let mut blob = std::fs::read(&bpath).unwrap();
+    let mid = blob.len() / 2;
+    blob[mid] ^= 0xFF;
+    std::fs::write(&bpath, &blob).unwrap();
+    let err = load_err(&dir, &model);
+    assert!(err.contains("corrupt"), "error should mention corruption: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_manifest_is_rejected() {
+    // The blob checksum can't see the manifest's numeric payload
+    // (scales, zero-points, transforms); the manifest self-checksum
+    // must catch a flipped digit there.
+    let (model, _) = setup(19);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("manifest-corrupt");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let mpath = dir.join("artifact.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    assert!(text.contains("\"row_sums\":["), "manifest should carry row sums");
+    // Prepend a digit to the first row-sum: still valid JSON, different
+    // numeric content.
+    std::fs::write(&mpath, text.replacen("\"row_sums\":[", "\"row_sums\":[9", 1)).unwrap();
+    let err = load_err(&dir, &model);
+    assert!(err.contains("manifest corrupted"), "error should blame the manifest: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_blob_is_rejected() {
+    let (model, _) = setup(16);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("truncate");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let bpath = dir.join("codes.bin");
+    let blob = std::fs::read(&bpath).unwrap();
+    std::fs::write(&bpath, &blob[..blob.len() - 3]).unwrap();
+    let err = load_err(&dir, &model);
+    assert!(err.contains("truncated"), "error should mention truncation: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wrong_model_is_rejected() {
+    // An artifact saved for one architecture must not load into another.
+    let (model, _) = setup(17);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("wrong-model");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let mut other_cfg = tiny_cfg();
+    other_cfg.d = 64;
+    other_cfg.ff = 128;
+    let other = NativeModel::init_random(other_cfg, 17);
+    assert!(load_artifact(&dir, &other).is_err(), "shape mismatch must be rejected");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn externally_registered_recipe_flows_through_plan_and_artifact() {
+    // The open end of the transform axis: a recipe registered outside
+    // the crate builds through a plan and its transforms round-trip
+    // through the artifact like any built-in.
+    catquant::transforms::register_fn_recipe(
+        "roundtrip-ext-scale",
+        |ctx: &catquant::transforms::RecipeCtx| {
+            catquant::transforms::Transform::diagonal(
+                "roundtrip-ext-scale",
+                &vec![0.5; ctx.dim()],
+            )
+        },
+    );
+    let (model, calib) = setup(18);
+    let plan = QuantPlan::new().transform("roundtrip-ext-scale").bits(8, 8).seed(0);
+    let (qc, _) = build_quant_config(&model, &calib, &plan).unwrap();
+    assert_roundtrip_exact(&model, &qc, "ext-recipe");
+}

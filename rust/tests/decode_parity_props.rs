@@ -13,7 +13,7 @@
 //! batches) must never change a result.
 
 use catquant::model::{KvCache, ModelConfig, NativeModel, QuantConfig};
-use catquant::quant::QScheme;
+use catquant::quant::{ActQuantCfg, QScheme};
 
 const QUANT_TOL: f64 = 1e-9;
 
@@ -112,7 +112,7 @@ fn quant_decode_matches_forward_quant() {
         for sym in [false, true] {
             let mut qc = QuantConfig::identity_for_test(&model, bits);
             if sym {
-                qc.act.scheme = QScheme::sym(bits);
+                qc.set_uniform_act(ActQuantCfg { scheme: QScheme::sym(bits), clip_ratio: 1.0 });
             }
             let label = format!("quant bits={bits} sym={sym}");
             let batches: Vec<Vec<Vec<u8>>> = vec![

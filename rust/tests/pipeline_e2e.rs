@@ -102,8 +102,9 @@ fn cat_w4a4_ppl_closer_to_fp_than_naive() {
         let (qc, _) = build_quant_config(
             &zoo.model,
             &zoo.calib,
-            PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0),
-        );
+            &PipelineCfg::w4a4(kind, WeightQuantizer::Rtn, 0).plan(),
+        )
+        .unwrap();
         let eng =
             PjrtLogits::quant(engine.clone(), "tiny", &zoo.model.params, &qc, 4).unwrap();
         perplexity(&eng, &windows).unwrap()
@@ -144,8 +145,9 @@ fn gptq_no_worse_than_rtn_on_ppl() {
         let (qc, _) = build_quant_config(
             &zoo.model,
             &zoo.calib,
-            PipelineCfg::w4a4(TransformKind::QuaRot, wq, 0),
-        );
+            &PipelineCfg::w4a4(TransformKind::QuaRot, wq, 0).plan(),
+        )
+        .unwrap();
         let eng =
             PjrtLogits::quant(engine.clone(), "tiny", &zoo.model.params, &qc, 4).unwrap();
         perplexity(&eng, &windows).unwrap()
@@ -174,8 +176,9 @@ fn zero_shot_fp_beats_heavily_quantized() {
     let (qc, _) = build_quant_config(
         &zoo.model,
         &zoo.calib,
-        PipelineCfg::w4a4(TransformKind::None, WeightQuantizer::Rtn, 0),
-    );
+        &PipelineCfg::w4a4(TransformKind::None, WeightQuantizer::Rtn, 0).plan(),
+    )
+    .unwrap();
     let q = PjrtLogits::quant(engine, "tiny", &zoo.model.params, &qc, 4).unwrap();
     let q_acc = acc(&q);
     eprintln!("0-shot: fp {fp_acc:.3} vs none-W4A4 {q_acc:.3}");

@@ -174,7 +174,8 @@ fn pipeline_built_config_packed_matches_dense() {
         (TransformKind::QuaRot, WeightQuantizer::Rtn),
         (TransformKind::CatBlock, WeightQuantizer::Gptq),
     ] {
-        let (qc, _) = build_quant_config(&model, &calib, PipelineCfg::w4a4(kind, wq, 0));
+        let (qc, _) =
+            build_quant_config(&model, &calib, &PipelineCfg::w4a4(kind, wq, 0).plan()).unwrap();
         let packed = model.forward_quant(&toks, &qc);
         let dense = model.forward_quant_dense(&toks, &qc, &qc.deq_weights());
         let rel = rel_err(&dense, &packed);
