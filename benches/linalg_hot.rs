@@ -5,17 +5,23 @@
 //!
 //! Run: `cargo bench --bench linalg_hot` (full sweep) or
 //! `cargo bench --bench linalg_hot -- --quick` (CI perf smoke: runs the
-//! 512³ tiled-vs-reference A/B only and **exits nonzero if the tiled
-//! kernel is not faster** — the hard gate against silent kernel
-//! regressions).
+//! 512³ tiled-vs-reference A/B plus the SIMD-vs-scalar-ISA A/B and
+//! **exits nonzero if the tiled kernel is not faster than the reference
+//! or the SIMD path is not faster than the forced-scalar path** — the
+//! hard gates against silent kernel regressions; the SIMD gate skips,
+//! not fails, on hosts with no SIMD ISA).
 //!
-//! Both modes write `BENCH_linalg.json` — machine-readable records
-//! `{kernel, shape, threads, ms_per_iter, gflops, speedup}` — which CI
-//! uploads as an artifact so the perf trajectory is recorded per run.
+//! Both modes write `BENCH_linalg.json` — a `meta` header (detected /
+//! active ISA, `CATQUANT_SIMD`/`CATQUANT_THREADS`, worker count, so perf
+//! trajectories are comparable across machines) plus machine-readable
+//! `records` `{kernel, shape, isa, threads, ms_per_iter, gflops,
+//! speedup}` — which CI uploads as an artifact so the perf trajectory is
+//! recorded per run.
 
 use catquant::linalg::{
     eigh, fwht_inplace, geometric_mean, matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b,
-    matmul_at_b_serial, matmul_serial, matmul_serial_ref, par, syrk_at_a, Cholesky, Mat, Rng,
+    matmul_at_b_serial, matmul_serial, matmul_serial_ref, par, simd, syrk_at_a, Cholesky, Mat,
+    Rng,
 };
 use std::time::Instant;
 
@@ -23,6 +29,8 @@ use std::time::Instant;
 struct Rec {
     kernel: String,
     shape: String,
+    /// The `linalg::simd` ISA active while this record was measured.
+    isa: String,
     threads: usize,
     ms_per_iter: f64,
     gflops: f64,
@@ -30,14 +38,30 @@ struct Rec {
     speedup: f64,
 }
 
+/// The metadata header shared by the BENCH_*.json files: where the
+/// numbers came from, so trajectories are comparable across machines.
+fn meta_json(bench: &str) -> String {
+    let env_or = |k: &str| std::env::var(k).unwrap_or_else(|_| "unset".into());
+    format!(
+        "{{\"bench\": \"{bench}\", \"isa_detected\": \"{}\", \"isa_active\": \"{}\", \
+         \"catquant_simd\": \"{}\", \"catquant_threads\": \"{}\", \"workers\": {}}}",
+        simd::detected().name(),
+        simd::active().name(),
+        env_or("CATQUANT_SIMD"),
+        env_or("CATQUANT_THREADS"),
+        par::num_threads()
+    )
+}
+
 fn write_json(path: &str, recs: &[Rec]) {
-    let mut s = String::from("[\n");
+    let mut s = format!("{{\"meta\": {},\n \"records\": [\n", meta_json("linalg_hot"));
     for (i, r) in recs.iter().enumerate() {
         s.push_str(&format!(
-            "  {{\"bench\": \"linalg_hot\", \"kernel\": \"{}\", \"shape\": \"{}\", \
-             \"threads\": {}, \"ms_per_iter\": {:.6}, \"gflops\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            "  {{\"kernel\": \"{}\", \"shape\": \"{}\", \"isa\": \"{}\", \"threads\": {}, \
+             \"ms_per_iter\": {:.6}, \"gflops\": {:.3}, \"speedup\": {:.3}}}{}\n",
             r.kernel,
             r.shape,
+            r.isa,
             r.threads,
             r.ms_per_iter,
             r.gflops,
@@ -45,7 +69,7 @@ fn write_json(path: &str, recs: &[Rec]) {
             if i + 1 < recs.len() { "," } else { "" }
         ));
     }
-    s.push_str("]\n");
+    s.push_str("]}\n");
     match std::fs::write(path, s) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
@@ -92,6 +116,7 @@ fn ref_vs_tiled(n: usize, iters: usize, recs: &mut Vec<Rec>) -> (f64, f64) {
     recs.push(Rec {
         kernel: "matmul_serial_ref".into(),
         shape: format!("{n}x{n}x{n}"),
+        isa: simd::active().name().into(),
         threads: 1,
         ms_per_iter: t_ref * 1e3,
         gflops: gf / t_ref,
@@ -103,6 +128,7 @@ fn ref_vs_tiled(n: usize, iters: usize, recs: &mut Vec<Rec>) -> (f64, f64) {
         // speedup is measured against the retained reference.
         kernel: "matmul_tiled_vs_ref".into(),
         shape: format!("{n}x{n}x{n}"),
+        isa: simd::active().name().into(),
         threads: 1,
         ms_per_iter: t_tiled * 1e3,
         gflops: gf / t_tiled,
@@ -111,16 +137,74 @@ fn ref_vs_tiled(n: usize, iters: usize, recs: &mut Vec<Rec>) -> (f64, f64) {
     (t_ref, t_tiled)
 }
 
+/// Forced-scalar vs best-detected-ISA A/B on the serial tiled kernel at
+/// `n³` (same binary, `simd::set_active` flip — results are
+/// bit-identical, only speed moves). Returns `None` (and records
+/// nothing) when the host has no SIMD ISA; CI's gate skips, not fails.
+fn simd_vs_scalar_gemm(n: usize, iters: usize, recs: &mut Vec<Rec>) -> Option<(f64, f64)> {
+    let best = simd::detected();
+    if best == simd::Isa::Scalar {
+        println!("simd vs scalar {n}³: skipped (no SIMD ISA on this host)");
+        return None;
+    }
+    let a = random(n, n, 31);
+    let b = random(n, n, 32);
+    let gf = 2.0 * (n as f64).powi(3) / 1e9;
+    let prev = simd::active();
+    simd::set_active(simd::Isa::Scalar);
+    let t_scalar = time(&format!("matmul {n}³ serial ISA=scalar"), iters, || {
+        std::hint::black_box(matmul_serial(&a, &b));
+    });
+    simd::set_active(best);
+    let t_simd = time(&format!("matmul {n}³ serial ISA={}", best.name()), iters, || {
+        std::hint::black_box(matmul_serial(&a, &b));
+    });
+    simd::set_active(prev);
+    println!(
+        "{:<44} {:>6.2} -> {:.2} GFLOP/s ({:.2}× vs scalar ISA)",
+        format!("  -> {} lane gain {n}³", best.name()),
+        gf / t_scalar,
+        gf / t_simd,
+        t_scalar / t_simd
+    );
+    recs.push(Rec {
+        kernel: "matmul_tiled_scalar_isa".into(),
+        shape: format!("{n}x{n}x{n}"),
+        isa: "scalar".into(),
+        threads: 1,
+        ms_per_iter: t_scalar * 1e3,
+        gflops: gf / t_scalar,
+        speedup: 1.0,
+    });
+    recs.push(Rec {
+        kernel: "matmul_tiled_simd_isa".into(),
+        shape: format!("{n}x{n}x{n}"),
+        isa: best.name().into(),
+        threads: 1,
+        ms_per_iter: t_simd * 1e3,
+        gflops: gf / t_simd,
+        speedup: t_scalar / t_simd,
+    });
+    Some((t_scalar, t_simd))
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let workers = par::num_threads();
     let mut recs: Vec<Rec> = Vec::new();
     println!("== linalg hot paths ==");
-    println!("workers: {workers} (CATQUANT_THREADS to override)\n");
+    println!(
+        "workers: {workers} (CATQUANT_THREADS to override) | simd: {} active, {} detected \
+         (CATQUANT_SIMD to force)\n",
+        simd::active().name(),
+        simd::detected().name()
+    );
 
     if quick {
-        // CI perf smoke: one 512³ tiled-vs-reference A/B, hard-gated.
+        // CI perf smoke: the 512³ tiled-vs-reference A/B plus the
+        // SIMD-vs-scalar-ISA A/B, both hard-gated.
         let (t_ref, t_tiled) = ref_vs_tiled(512, 3, &mut recs);
+        let simd_ab = simd_vs_scalar_gemm(512, 3, &mut recs);
         write_json("BENCH_linalg.json", &recs);
         if t_tiled >= t_ref {
             eprintln!(
@@ -135,6 +219,26 @@ fn main() {
             "perf smoke OK: tiled 512³ is {:.2}× the reference kernel",
             t_ref / t_tiled
         );
+        match simd_ab {
+            None => println!("perf smoke: simd gate skipped (no SIMD ISA)"),
+            Some((t_scalar, t_simd)) => {
+                if t_simd >= t_scalar {
+                    eprintln!(
+                        "PERF REGRESSION: {} tiled matmul 512³ ({:.1} ms) is not faster \
+                         than the forced-scalar ISA ({:.1} ms)",
+                        simd::detected().name(),
+                        t_simd * 1e3,
+                        t_scalar * 1e3
+                    );
+                    std::process::exit(1);
+                }
+                println!(
+                    "perf smoke OK: {} 512³ is {:.2}× the scalar ISA",
+                    simd::detected().name(),
+                    t_scalar / t_simd
+                );
+            }
+        }
         return;
     }
 
@@ -161,6 +265,7 @@ fn main() {
         recs.push(Rec {
             kernel: "matmul_serial_tiled".into(),
             shape: format!("{n}x{n}x{n}"),
+            isa: simd::active().name().into(),
             threads: 1,
             ms_per_iter: t_ser * 1e3,
             gflops: gf / t_ser,
@@ -169,6 +274,7 @@ fn main() {
         recs.push(Rec {
             kernel: "matmul_dispatched".into(),
             shape: format!("{n}x{n}x{n}"),
+            isa: simd::active().name().into(),
             // Effective worker count: 128³ sits below PAR_MIN_FMA and
             // runs serial — the JSON must not attribute it to the pool.
             threads: par::threads_for(n * n * n, n),
@@ -177,8 +283,11 @@ fn main() {
             speedup: t_ser / t_par,
         });
     }
-    // The single-thread tiling acceptance A/B.
+    // The single-thread tiling acceptance A/B, then the ISA A/B (the PR 6
+    // acceptance measurement: explicit SIMD lanes vs the forced-scalar
+    // path on the same binary).
     ref_vs_tiled(512, 4, &mut recs);
+    simd_vs_scalar_gemm(512, 4, &mut recs);
     {
         let x = random(2048, 256, 3);
         let gf_syrk = (2048.0 * 256.0 * 256.0) / 1e9; // full-product FLOP for comparability
@@ -200,6 +309,7 @@ fn main() {
         recs.push(Rec {
             kernel: "matmul_at_b".into(),
             shape: "2048x256->256x256".into(),
+            isa: simd::active().name().into(),
             threads: par::threads_for(2048 * 256 * 256, 256),
             ms_per_iter: t_full * 1e3,
             gflops: 2.0 * gf_syrk / t_full,
@@ -208,6 +318,7 @@ fn main() {
         recs.push(Rec {
             kernel: "syrk_at_a".into(),
             shape: "2048x256->256x256".into(),
+            isa: simd::active().name().into(),
             threads: par::threads_for(2048 * 256 * 256 / 2, 256),
             ms_per_iter: t_syrk * 1e3,
             gflops: 2.0 * gf_syrk / t_syrk,
@@ -224,6 +335,7 @@ fn main() {
         recs.push(Rec {
             kernel: "matmul_a_bt".into(),
             shape: "2048x256x256".into(),
+            isa: simd::active().name().into(),
             threads: par::threads_for(2048 * 256 * 256, 2048),
             ms_per_iter: t_par * 1e3,
             gflops: 2.0 * 2048.0 * 256.0 * 256.0 / 1e9 / t_par,

@@ -4,14 +4,19 @@
 //!
 //! Run: `cargo bench --bench quant_hot` (full) or
 //! `cargo bench --bench quant_hot -- --quick` (CI perf smoke: runs the
-//! small-m panel A/B only and exits nonzero if persistent panels are not
-//! faster than per-call unpacking).
+//! small-m panel A/B and the decode-shape qGEMV SIMD-vs-scalar A/B and
+//! exits nonzero if persistent panels are not faster than per-call
+//! unpacking, or if the SIMD integer path misses its multiplier — ≥2×
+//! over the forced-scalar ISA on AVX2/AVX-512 hosts, >1× on NEON;
+//! skipped, not failed, on hosts with no SIMD ISA).
 //!
-//! Both modes write `BENCH_quant.json` (machine-readable records; CI
-//! uploads the file as an artifact).
+//! Both modes write `BENCH_quant.json` — a `meta` header (detected /
+//! active ISA, `CATQUANT_SIMD`/`CATQUANT_THREADS`, worker count) plus
+//! machine-readable `records` with a per-record `isa` field; CI uploads
+//! the file as an artifact.
 
 use catquant::linalg::{
-    matmul_a_bt, qmatmul_a_bt, qmatmul_a_bt_panels, syrk_at_a, Mat, QPanels, Rng,
+    matmul_a_bt, par, qmatmul_a_bt, qmatmul_a_bt_panels, simd, syrk_at_a, Mat, QPanels, Rng,
 };
 use catquant::quant::{
     gptq_quantize, quantize_activations_per_token, quantize_weights_rtn, GptqConfig, QScheme,
@@ -23,26 +28,44 @@ use std::time::Instant;
 struct Rec {
     kernel: String,
     shape: String,
+    /// The `linalg::simd` ISA active while this record was measured.
+    isa: String,
     threads: usize,
     ms_per_iter: f64,
     speedup: f64,
 }
 
+/// Metadata header: where the numbers came from, so perf trajectories
+/// are comparable across machines.
+fn meta_json(bench: &str) -> String {
+    let env_or = |k: &str| std::env::var(k).unwrap_or_else(|_| "unset".into());
+    format!(
+        "{{\"bench\": \"{bench}\", \"isa_detected\": \"{}\", \"isa_active\": \"{}\", \
+         \"catquant_simd\": \"{}\", \"catquant_threads\": \"{}\", \"workers\": {}}}",
+        simd::detected().name(),
+        simd::active().name(),
+        env_or("CATQUANT_SIMD"),
+        env_or("CATQUANT_THREADS"),
+        par::num_threads()
+    )
+}
+
 fn write_json(path: &str, recs: &[Rec]) {
-    let mut s = String::from("[\n");
+    let mut s = format!("{{\"meta\": {},\n \"records\": [\n", meta_json("quant_hot"));
     for (i, r) in recs.iter().enumerate() {
         s.push_str(&format!(
-            "  {{\"bench\": \"quant_hot\", \"kernel\": \"{}\", \"shape\": \"{}\", \
-             \"threads\": {}, \"ms_per_iter\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            "  {{\"kernel\": \"{}\", \"shape\": \"{}\", \"isa\": \"{}\", \"threads\": {}, \
+             \"ms_per_iter\": {:.6}, \"speedup\": {:.3}}}{}\n",
             r.kernel,
             r.shape,
+            r.isa,
             r.threads,
             r.ms_per_iter,
             r.speedup,
             if i + 1 < recs.len() { "," } else { "" }
         ));
     }
-    s.push_str("]\n");
+    s.push_str("]}\n");
     match std::fs::write(path, s) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
@@ -99,6 +122,7 @@ fn small_m_panel_ab(
     recs.push(Rec {
         kernel: "qmatmul_per_call".into(),
         shape: format!("{m}x{k}x{n}"),
+        isa: simd::active().name().into(),
         threads,
         ms_per_iter: t_call * 1e3,
         speedup: 1.0,
@@ -106,6 +130,7 @@ fn small_m_panel_ab(
     recs.push(Rec {
         kernel: "qmatmul_panels".into(),
         shape: format!("{m}x{k}x{n}"),
+        isa: simd::active().name().into(),
         threads,
         ms_per_iter: t_panel * 1e3,
         speedup: t_call / t_panel,
@@ -113,14 +138,80 @@ fn small_m_panel_ab(
     (t_call, t_panel)
 }
 
+/// Decode-shape qGEMV (persistent panels, small m) with the integer
+/// kernel forced to the scalar ISA vs the best detected SIMD path —
+/// the PR 6 acceptance measurement (`madd_epi16`/`vmlal` lanes vs the
+/// 8-lane scalar dot). Returns `None` (skip, not fail) when the host
+/// has no SIMD ISA.
+fn qgemv_simd_vs_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    iters: usize,
+    recs: &mut Vec<Rec>,
+) -> Option<(f64, f64)> {
+    let best = simd::detected();
+    if best == simd::Isa::Scalar {
+        println!("qGEMV simd vs scalar: skipped (no SIMD ISA on this host)");
+        return None;
+    }
+    let mut rng = Rng::new(177);
+    let x = Mat::from_fn(m, k, |_, _| rng.normal());
+    let w = Mat::from_fn(n, k, |_, _| rng.normal() * 0.05);
+    let scheme = QScheme::asym(4);
+    let xq = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+    let wq = QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+    let panels: QPanels = wq.panels();
+    let threads = par::threads_for(m * k * n, n);
+    let prev = simd::active();
+    simd::set_active(simd::Isa::Scalar);
+    let t_scalar = time(&format!("qGEMV m={m} ({k}→{n}) ISA=scalar"), iters, || {
+        std::hint::black_box(qmatmul_a_bt_panels(&xq.view(), &wq.view(), &panels));
+    });
+    simd::set_active(best);
+    let t_simd = time(&format!("qGEMV m={m} ({k}→{n}) ISA={}", best.name()), iters, || {
+        std::hint::black_box(qmatmul_a_bt_panels(&xq.view(), &wq.view(), &panels));
+    });
+    simd::set_active(prev);
+    println!(
+        "{:<48} {:>9.2}×",
+        format!("  -> {} qGEMV speedup vs scalar ISA", best.name()),
+        t_scalar / t_simd
+    );
+    recs.push(Rec {
+        kernel: "qgemv_panels_scalar_isa".into(),
+        shape: format!("{m}x{k}x{n}"),
+        isa: "scalar".into(),
+        threads,
+        ms_per_iter: t_scalar * 1e3,
+        speedup: 1.0,
+    });
+    recs.push(Rec {
+        kernel: "qgemv_panels_simd_isa".into(),
+        shape: format!("{m}x{k}x{n}"),
+        isa: best.name().into(),
+        threads,
+        ms_per_iter: t_simd * 1e3,
+        speedup: t_scalar / t_simd,
+    });
+    Some((t_scalar, t_simd))
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut recs: Vec<Rec> = Vec::new();
     println!("== quantization hot paths ==");
+    println!(
+        "simd: {} active, {} detected (CATQUANT_SIMD to force)\n",
+        simd::active().name(),
+        simd::detected().name()
+    );
 
     if quick {
-        // CI perf smoke: decode-shaped panel A/B, gated.
+        // CI perf smoke: decode-shaped panel A/B plus the qGEMV
+        // SIMD-vs-scalar A/B, both gated.
         let (t_call, t_panel) = small_m_panel_ab(4, 256, 512, 200, &mut recs);
+        let simd_ab = qgemv_simd_vs_scalar(4, 256, 512, 300, &mut recs);
         write_json("BENCH_quant.json", &recs);
         if t_panel >= t_call {
             eprintln!(
@@ -132,6 +223,30 @@ fn main() {
             std::process::exit(1);
         }
         println!("perf smoke OK: panels are {:.2}× per-call unpack", t_call / t_panel);
+        match simd_ab {
+            None => println!("perf smoke: qGEMV simd gate skipped (no SIMD ISA)"),
+            Some((t_scalar, t_simd)) => {
+                // Acceptance: ≥2× on the wide-vector x86 paths; NEON's
+                // 8-lane vmlal only has to beat the scalar kernel.
+                let need = match simd::detected() {
+                    simd::Isa::Avx2 | simd::Isa::Avx512 => 2.0,
+                    _ => 1.0,
+                };
+                let got = t_scalar / t_simd;
+                if got < need {
+                    eprintln!(
+                        "PERF REGRESSION: {} qGEMV is {got:.2}× the scalar ISA at the \
+                         decode shape (gate: ≥{need:.1}×)",
+                        simd::detected().name()
+                    );
+                    std::process::exit(1);
+                }
+                println!(
+                    "perf smoke OK: {} qGEMV is {got:.2}× the scalar ISA (gate ≥{need:.1}×)",
+                    simd::detected().name()
+                );
+            }
+        }
         return;
     }
 
@@ -198,6 +313,7 @@ fn main() {
     recs.push(Rec {
         kernel: "dense_fakequant_linear".into(),
         shape: "2048x256x512".into(),
+        isa: simd::active().name().into(),
         threads,
         ms_per_iter: t_dense * 1e3,
         speedup: 1.0,
@@ -205,6 +321,7 @@ fn main() {
     recs.push(Rec {
         kernel: "packed_qmatmul_linear".into(),
         shape: "2048x256x512".into(),
+        isa: simd::active().name().into(),
         threads,
         ms_per_iter: t_packed * 1e3,
         speedup: t_dense / t_packed,
@@ -218,6 +335,7 @@ fn main() {
     recs.push(Rec {
         kernel: "packed_qmatmul_panels_linear".into(),
         shape: "2048x256x512".into(),
+        isa: simd::active().name().into(),
         threads,
         ms_per_iter: t_panels * 1e3,
         speedup: t_dense / t_panels,
@@ -238,6 +356,14 @@ fn main() {
     println!("\n== persistent panels vs per-call unpack (W4A4, k=256, n=512) ==");
     for m in [1usize, 4, 16] {
         small_m_panel_ab(m, 256, 512, 400 / m.max(1), &mut recs);
+    }
+
+    // ---- SIMD ISA vs forced-scalar at decode shapes -------------------
+    // The PR 6 acceptance A/B: explicit madd_epi16/vmlal lanes vs the
+    // 8-lane scalar integer dot, per-call state flip, bit-identical out.
+    println!("\n== qGEMV SIMD ISA vs scalar ISA (W4A4 panels, k=256, n=512) ==");
+    for m in [1usize, 4, 16] {
+        qgemv_simd_vs_scalar(m, 256, 512, 400 / m.max(1), &mut recs);
     }
     write_json("BENCH_quant.json", &recs);
 }

@@ -188,11 +188,22 @@ fn artifact_vs_rebuild(cfg: &ModelConfig, quick: bool) -> anyhow::Result<()> {
          save {save_ms:.2} ms, {artifact_bytes} B on disk, bit-exact)",
         rebuild_ms / load_ms.max(1e-9)
     );
+    // Same meta header shape as BENCH_linalg/BENCH_quant: detected and
+    // active ISA plus the forcing env knobs, so boot-cost trajectories
+    // are comparable across machines.
+    let env_or = |k: &str| std::env::var(k).unwrap_or_else(|_| "unset".into());
     let json = format!(
-        "[\n  {{\"bench\": \"serve_throughput\", \"section\": \"artifact_boot\", \
+        "{{\"meta\": {{\"bench\": \"serve_throughput\", \"isa_detected\": \"{}\", \
+         \"isa_active\": \"{}\", \"catquant_simd\": \"{}\", \"catquant_threads\": \"{}\", \
+         \"workers\": {}}},\n \"records\": [\n  {{\"section\": \"artifact_boot\", \
          \"quick\": {quick}, \"threads\": {}, \"rebuild_ms\": {rebuild_ms:.3}, \
          \"artifact_load_ms\": {load_ms:.3}, \"artifact_save_ms\": {save_ms:.3}, \
-         \"load_speedup\": {:.1}, \"artifact_bytes\": {artifact_bytes}}}\n]\n",
+         \"load_speedup\": {:.1}, \"artifact_bytes\": {artifact_bytes}}}\n]}}\n",
+        catquant::linalg::simd::detected().name(),
+        catquant::linalg::simd::active().name(),
+        env_or("CATQUANT_SIMD"),
+        env_or("CATQUANT_THREADS"),
+        catquant::linalg::par::num_threads(),
         catquant::linalg::par::num_threads(),
         rebuild_ms / load_ms.max(1e-9)
     );

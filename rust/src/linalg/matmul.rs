@@ -25,8 +25,18 @@
 //! on dense data they were a mispredicted branch per FMA and made kernel
 //! timing data-dependent (no sparse fast path is retained — the bench
 //! showed no shape in the pipeline where it paid; see PERF.md).
+//!
+//! Since PR 6 the micro-kernels themselves live behind the
+//! [`super::simd`] dispatch seam: `mk4`/`mk1` (packed panels) and the
+//! strided full-tile kernel (`matmul_at_b`/`syrk`) pick an explicit
+//! AVX-512/AVX2/NEON path at runtime (`CATQUANT_SIMD` knob), with the
+//! scalar kernels retained as the always-compiled reference. The SIMD
+//! paths vectorize across the NR output columns with unfused mul+add,
+//! so each element keeps its single ascending-`k` accumulator and every
+//! path stays bit-identical — the loops in this file are unchanged in
+//! meaning, only the innermost tile bodies moved.
 
-use super::{par, Mat};
+use super::{par, simd, Mat};
 
 const KC: usize = 256; // k-panel kept hot in L1/L2
 
@@ -101,41 +111,11 @@ impl BtPanels {
 // ---------------------------------------------------------------------
 // Micro-kernels (shared by matmul / matmul_a_bt / the panel GEMV path)
 // ---------------------------------------------------------------------
-
-/// 4×NR register-tile micro-kernel over a packed panel:
-/// `acc[r][c] += Σ_kk a_r[kk] · panel[kk·NR + c]`, `kk` ascending. The
-/// 32 accumulators live in registers; the panel row is one contiguous
-/// `NR`-wide load per step.
-#[inline]
-fn mk4(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], panel: &[f64], acc: &mut [[f64; NR]; MR]) {
-    debug_assert_eq!(panel.len() % NR, 0);
-    debug_assert_eq!(a0.len(), panel.len() / NR);
-    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
-        // Fixed-size view: compile-time length, so the c-loop fully
-        // unrolls and bounds checks vanish.
-        let brow: &[f64; NR] = brow.try_into().unwrap();
-        let x = [a0[kk], a1[kk], a2[kk], a3[kk]];
-        for (r, xr) in x.iter().enumerate() {
-            for (c, &bv) in brow.iter().enumerate() {
-                acc[r][c] += xr * bv;
-            }
-        }
-    }
-}
-
-/// Single-row variant of [`mk4`] (tile-height remainders): NR
-/// independent accumulator chains, `kk` ascending.
-#[inline]
-fn mk1(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
-    debug_assert_eq!(a0.len(), panel.len() / NR);
-    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
-        let brow: &[f64; NR] = brow.try_into().unwrap();
-        let x = a0[kk];
-        for (c, &bv) in brow.iter().enumerate() {
-            acc[c] += x * bv;
-        }
-    }
-}
+//
+// The 4×NR panel micro-kernels (`simd::mk4`/`simd::mk1`) and the strided
+// full-tile kernel (`simd::tile4x8_strided`) live in `super::simd` since
+// PR 6: one accumulator per output element, `kk` ascending, dispatched
+// at runtime across AVX-512/AVX2/NEON/scalar — all bit-identical.
 
 /// Load the `w`-wide live part of an output tile into `acc` (the k-block
 /// loop stores and reloads partial sums; an f64 round-trip through memory
@@ -219,7 +199,7 @@ fn gemm_tiled_rows(
                 while i0 < i_main {
                     let mut acc = [[0.0f64; NR]; MR];
                     load_acc(out, n, i0, j0, w, &mut acc);
-                    mk4(
+                    simd::mk4(
                         &a.row(r0 + i0)[k0..k1],
                         &a.row(r0 + i0 + 1)[k0..k1],
                         &a.row(r0 + i0 + 2)[k0..k1],
@@ -233,7 +213,7 @@ fn gemm_tiled_rows(
                 for i in i_main..rows {
                     let mut acc = [0.0f64; NR];
                     acc[..w].copy_from_slice(&out[i * n + j0..i * n + j0 + w]);
-                    mk1(&a.row(r0 + i)[k0..k1], panel, &mut acc);
+                    simd::mk1(&a.row(r0 + i)[k0..k1], panel, &mut acc);
                     out[i * n + j0..i * n + j0 + w].copy_from_slice(&acc[..w]);
                 }
                 j0 += w;
@@ -281,17 +261,7 @@ pub(crate) fn matmul_at_b_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f64]) {
             while j0 < j_main {
                 let mut acc = [[0.0f64; NR]; MR];
                 load_acc(out, n, i0, j0, NR, &mut acc);
-                for kk in k0..k1 {
-                    let arow: &[f64; MR] =
-                        (&ad[kk * m + c0..kk * m + c0 + MR]).try_into().unwrap();
-                    let brow: &[f64; NR] =
-                        (&bd[kk * n + j0..kk * n + j0 + NR]).try_into().unwrap();
-                    for (r, &xr) in arow.iter().enumerate() {
-                        for (c, &bv) in brow.iter().enumerate() {
-                            acc[r][c] += xr * bv;
-                        }
-                    }
-                }
+                simd::tile4x8_strided(ad, m, c0, bd, n, j0, k0, k1, &mut acc);
                 store_acc(out, n, i0, j0, NR, &acc);
                 j0 += NR;
             }
@@ -351,16 +321,7 @@ pub(crate) fn syrk_rows(a: &Mat, r0: usize, out: &mut [f64]) {
                 if mr == MR && w == NR {
                     let mut acc = [[0.0f64; NR]; MR];
                     load_acc(out, m, i0, j0, NR, &mut acc);
-                    for kk in k0..k1 {
-                        let arow = &ad[kk * m..(kk + 1) * m];
-                        let av: &[f64; MR] = (&arow[gi..gi + MR]).try_into().unwrap();
-                        let bv: &[f64; NR] = (&arow[j0..j0 + NR]).try_into().unwrap();
-                        for (r, &xr) in av.iter().enumerate() {
-                            for (c, &b) in bv.iter().enumerate() {
-                                acc[r][c] += xr * b;
-                            }
-                        }
-                    }
+                    simd::tile4x8_strided(ad, m, gi, ad, m, j0, k0, k1, &mut acc);
                     store_acc(out, m, i0, j0, NR, &acc);
                 } else {
                     for kk in k0..k1 {
@@ -441,7 +402,7 @@ pub(crate) fn matmul_a_bt_ct_rows_panel(a: &Mat, bp: &BtPanels, j0: usize, out: 
         let mut i0 = 0;
         while i0 < i_main {
             let mut acc = [[0.0f64; NR]; MR];
-            mk4(a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3), pan, &mut acc);
+            simd::mk4(a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3), pan, &mut acc);
             for (r, accr) in acc.iter().enumerate() {
                 for c in 0..width {
                     out[(j - j0 + c) * m + i0 + r] = accr[c_lo + c];
@@ -451,7 +412,7 @@ pub(crate) fn matmul_a_bt_ct_rows_panel(a: &Mat, bp: &BtPanels, j0: usize, out: 
         }
         for i in i_main..m {
             let mut acc = [0.0f64; NR];
-            mk1(a.row(i), pan, &mut acc);
+            simd::mk1(a.row(i), pan, &mut acc);
             for c in 0..width {
                 out[(j - j0 + c) * m + i] = acc[c_lo + c];
             }

@@ -25,6 +25,12 @@
 //! [`qmatmul_a_bt`] is the integer sibling: packed quantized codes in,
 //! i32/i64-accumulated dot products plus the affine correction out —
 //! the serving path's true low-bit kernel (see [`qkernel`](self)).
+//!
+//! The innermost micro-kernels — the i16 dot and the 4×8 f64 tiles —
+//! dispatch at runtime across explicit AVX-512/AVX2/NEON `std::arch`
+//! paths ([`simd`], `CATQUANT_SIMD` knob); every path is bit-identical
+//! to the always-compiled scalar reference, so ISA choice is a pure
+//! speed decision that the exactness properties above never see.
 
 mod chol;
 mod eigen;
@@ -36,6 +42,7 @@ mod orthogonal;
 pub mod par;
 mod qkernel;
 mod rng;
+pub mod simd;
 
 pub use chol::Cholesky;
 pub use eigen::{eigh, Eigh};
@@ -49,5 +56,6 @@ pub use matmul::{
 pub use orthogonal::random_orthogonal;
 pub use qkernel::{
     qmatmul_a_bt, qmatmul_a_bt_panels, qmatmul_a_bt_serial, QCodes, QMatView, QPanels,
+    MAX_I16_PATH_COLS,
 };
 pub use rng::Rng;

@@ -11,7 +11,11 @@
 //!   borrowed inputs (`&Mat`) flow in without `Arc` or `'static` bounds.
 //! * **Determinism.** Kernels partition *output rows* only; each row is
 //!   accumulated in the exact serial order, so parallel results are
-//!   bit-identical to the serial reference at any worker count.
+//!   bit-identical to the serial reference at any worker count. Since
+//!   PR 6 the same holds across instruction sets: the [`super::simd`]
+//!   micro-kernel paths (AVX-512/AVX2/NEON/scalar, `CATQUANT_SIMD`) all
+//!   preserve each element's single ascending-`k` accumulator, so worker
+//!   count × ISA is a pure speed matrix — every cell bit-identical.
 //! * **Serial fallback.** Below [`PAR_MIN_FMA`] fused multiply-adds the
 //!   spawn cost (tens of µs) outweighs the win and dispatchers stay on
 //!   the serial kernels.

@@ -24,7 +24,7 @@
 //! `quant` in the crate layering.
 
 use super::matmul::{transpose_ct_into, GEMV_MAX_ROWS};
-use super::{par, Mat};
+use super::{par, simd, Mat};
 
 /// Packed integer codes of one row-quantized matrix.
 #[derive(Clone, Copy)]
@@ -69,9 +69,15 @@ impl QMatView<'_> {
             QCodes::Nibble(data) => {
                 let stride = self.cols.div_ceil(2);
                 let row = &data[i * stride..(i + 1) * stride];
-                for (j, o) in out.iter_mut().enumerate() {
-                    let b = row[j / 2];
-                    *o = if j % 2 == 0 { (b & 0x0F) as i32 } else { (b >> 4) as i32 };
+                // Two codes per byte: pair output elements with source
+                // bytes so the loop carries no per-element parity branch.
+                let mut pairs = out.chunks_exact_mut(2);
+                for (o2, &b) in (&mut pairs).zip(row) {
+                    o2[0] = (b & 0x0F) as i32;
+                    o2[1] = (b >> 4) as i32;
+                }
+                if let [last] = pairs.into_remainder() {
+                    *last = (row[self.cols / 2] & 0x0F) as i32;
                 }
             }
             QCodes::Byte(data) => {
@@ -94,9 +100,14 @@ impl QMatView<'_> {
             QCodes::Nibble(data) => {
                 let stride = self.cols.div_ceil(2);
                 let row = &data[i * stride..(i + 1) * stride];
-                for (j, o) in out.iter_mut().enumerate() {
-                    let b = row[j / 2];
-                    *o = if j % 2 == 0 { (b & 0x0F) as i16 } else { (b >> 4) as i16 };
+                // Branch-free two-codes-per-byte loop (see unpack_row_i32).
+                let mut pairs = out.chunks_exact_mut(2);
+                for (o2, &b) in (&mut pairs).zip(row) {
+                    o2[0] = (b & 0x0F) as i16;
+                    o2[1] = (b >> 4) as i16;
+                }
+                if let [last] = pairs.into_remainder() {
+                    *last = (row[self.cols / 2] & 0x0F) as i16;
                 }
             }
             QCodes::Byte(data) => {
@@ -111,10 +122,15 @@ impl QMatView<'_> {
 }
 
 /// Upper bound on `k` for the i16/i32 fast path: stored codes are at most
-/// 128 in magnitude (nibble ≤ 15, centered byte ≤ 128), so each of the 8
-/// lane accumulators sees `k/8` products of magnitude ≤ 2^14; `k ≤ 2^19`
-/// keeps every lane at ≤ 2^30 < `i32::MAX` with 2× margin.
-const MAX_I16_PATH_COLS: usize = 1 << 19;
+/// 128 in magnitude (nibble ≤ 15, centered byte ≤ 128), so each i16
+/// product is ≤ 2^14 and every dispatchable [`super::simd`] path keeps
+/// its i32 lane accumulators in range at `k ≤ 2^19` — scalar and NEON
+/// lanes see `k/8` products (≤ k·2^11 = 2^30), AVX2 `madd` lanes `k/16`
+/// pair-sums of ≤ 2^15 (= 2^30), AVX-512 `k/32` pair-sums (= 2^29); all
+/// ≤ 2^30 < `i32::MAX` with 2× margin, on any ISA. The boundary test in
+/// `rust/tests/kernel_tile_props.rs` drives ±max-code vectors at exactly
+/// this `k` through every supported path.
+pub const MAX_I16_PATH_COLS: usize = 1 << 19;
 
 /// Persistent unpacked panels of a *static* packed operand (weights):
 /// the codes of every row unpacked **once** into the contiguous
@@ -442,27 +458,14 @@ fn qmatmul_rows_wide(x: &QMatView, w: &QMatView, wbuf: &[i32], r0: usize, out: &
     }
 }
 
-/// Eight-lane i16×i16→i32 dot product. Like the f64 `dot` in
-/// `super::matmul`, independent accumulators break the dependency chain
-/// so LLVM emits SIMD integer lanes; unlike f64, integer addition is
-/// associative, so the lane split cannot perturb the result.
+/// i16×i16→i32-lane→i64 dot product, dispatched across the runtime ISA
+/// paths in [`super::simd`] (AVX-512/AVX2 `madd_epi16`, NEON `vmlal`,
+/// the eight-lane scalar reference). Integer accumulation is exact, so
+/// the path choice can never change a result — see `simd`'s module docs
+/// for the per-ISA overflow bounds behind [`MAX_I16_PATH_COLS`].
 #[inline]
 fn qdot_i16(a: &[i16], b: &[i16]) -> i64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0i32; 8];
-    let ca = a.chunks_exact(8);
-    let cb = b.chunks_exact(8);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for (l, s) in acc.iter_mut().enumerate() {
-            *s += xa[l] as i32 * xb[l] as i32;
-        }
-    }
-    let mut tail = 0i32;
-    for (&x, &y) in ra.iter().zip(rb) {
-        tail += x as i32 * y as i32;
-    }
-    acc.iter().map(|&v| v as i64).sum::<i64>() + tail as i64
+    simd::qdot_i16(a, b)
 }
 
 #[cfg(test)]
@@ -608,9 +611,35 @@ mod tests {
 
     #[test]
     fn qdot_matches_naive() {
+        // The per-ISA suites live in super::simd; this pins the local
+        // wrapper the kernels actually call.
         let a: Vec<i16> = (0..37).map(|v| (v * 7 % 19) - 9).collect();
         let b: Vec<i16> = (0..37).map(|v| (v * 5 % 23) - 11).collect();
         let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
         assert_eq!(qdot_i16(&a, &b), naive);
+    }
+
+    #[test]
+    fn nibble_unpack_even_cols_has_no_tail() {
+        // Even cols: the chunked two-codes-per-byte loop consumes the
+        // whole row with an empty remainder.
+        let data = [0x21u8, 0x43];
+        let scales = [1.0];
+        let zps = [0];
+        let sums = [10i64];
+        let v = QMatView {
+            rows: 1,
+            cols: 4,
+            codes: QCodes::Nibble(&data),
+            scales: &scales,
+            zps: &zps,
+            row_sums: &sums,
+        };
+        let mut out = [0i32; 4];
+        v.unpack_row_i32(0, &mut out);
+        assert_eq!(out, [1, 2, 3, 4]);
+        let mut out16 = [0i16; 4];
+        v.unpack_row_i16(0, &mut out16);
+        assert_eq!(out16, [1, 2, 3, 4]);
     }
 }

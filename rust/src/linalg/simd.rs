@@ -1,0 +1,870 @@
+//! Runtime-dispatched SIMD micro-kernels (`std::arch`) for the two
+//! hottest inner loops: the i16×i16→i32 quantized dot ([`qdot_i16`])
+//! and the 4×8 f64 register tiles ([`mk4`]/[`mk1`]/[`tile4x8_strided`]).
+//!
+//! # Dispatch
+//!
+//! The active ISA is resolved once per process from the `CATQUANT_SIMD`
+//! env knob (`auto|avx512|avx2|neon|scalar`, default `auto`) and runtime
+//! feature detection (`is_x86_feature_detected!`); `auto` picks the best
+//! supported path (AVX-512 > AVX2 > NEON > scalar). Benches and tests
+//! can flip the path in-process via [`set_active`] (scalar-vs-SIMD A/Bs
+//! share one binary) or call the `*_with` variants to pin an ISA per
+//! call without touching global state. The scalar kernels are always
+//! compiled and are the reference every SIMD path must match.
+//!
+//! # Bit-exactness
+//!
+//! Every path here is **bit-identical** to the scalar reference
+//! (`kernel_tile_props` pins this at `== 0.0`):
+//!
+//! - The f64 kernels vectorize *across the NR=8 output columns*: each
+//!   SIMD lane holds a different output element's single accumulator and
+//!   `k` still walks in ascending order, so each element sees exactly
+//!   the scalar sequence of operations. The multiplies and adds are kept
+//!   **unfused** (`mul_pd` + `add_pd`, never `fmadd`): the scalar kernel
+//!   `acc += x·b` rounds twice per step, and a fused FMA would round
+//!   once — a different result. The speedup comes from lane width, not
+//!   fusion.
+//! - The integer dot is exact in any association (no rounding), so
+//!   `madd_epi16`-style pairwise grouping is free to differ from the
+//!   scalar 8-lane split.
+//!
+//! # Overflow safety (`qdot_i16`)
+//!
+//! Stored codes are ≤ 128 in magnitude, so each i16 product is ≤ 2^14.
+//! At the fast-path bound `k = MAX_I16_PATH_COLS = 2^19`
+//! (see [`super::qkernel`]), the per-lane i32 accumulators stay in
+//! range on every path:
+//!
+//! | path    | lanes | products/lane/step | lane bound at k = 2^19 |
+//! |---------|-------|--------------------|------------------------|
+//! | scalar  | 8×i32 | 1 (≤ 2^14)         | k/8·2^14 = 2^30        |
+//! | AVX2    | 8×i32 | 2 (madd, ≤ 2^15)   | k/16·2^15 = 2^30       |
+//! | AVX-512 | 16×i32| 2 (madd, ≤ 2^15)   | k/32·2^15 = 2^29       |
+//! | NEON    | 2×4×i32| 1 (vmlal, ≤ 2^14) | k/8·2^14 = 2^30        |
+//!
+//! All ≤ 2^30 < `i32::MAX` with 2× margin; lane totals then widen to
+//! i64. The boundary property test in `kernel_tile_props` drives
+//! ±max-code vectors at exactly `k = 2^19` through every supported ISA.
+
+use super::matmul::{MR, NR};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set paths the kernels can dispatch to.
+#[repr(u8)]
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable reference kernels (always available, always compiled).
+    Scalar = 0,
+    /// aarch64 NEON (`vmlal` integer widening MLA, 2-wide f64 lanes).
+    Neon = 1,
+    /// x86-64 AVX2 (`_mm256_madd_epi16`, 4-wide f64 lanes).
+    Avx2 = 2,
+    /// x86-64 AVX-512 F+BW (`_mm512_madd_epi16`, 8-wide f64 lanes).
+    Avx512 = 3,
+}
+
+impl Isa {
+    /// Every ISA, worst to best (iteration order for tests/benches).
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Neon, Isa::Avx2, Isa::Avx512];
+
+    /// The `CATQUANT_SIMD` spelling of this ISA.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    fn from_u8(v: u8) -> Isa {
+        match v {
+            0 => Isa::Scalar,
+            1 => Isa::Neon,
+            2 => Isa::Avx2,
+            3 => Isa::Avx512,
+            _ => unreachable!("invalid Isa discriminant {v}"),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn x86_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn x86_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn x86_avx512() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn x86_avx512() -> bool {
+    false
+}
+
+fn arm_neon() -> bool {
+    // NEON is a mandatory aarch64 feature; no runtime probe needed.
+    cfg!(target_arch = "aarch64")
+}
+
+/// Whether this host can execute `isa`'s kernels.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Neon => arm_neon(),
+        Isa::Avx2 => x86_avx2(),
+        Isa::Avx512 => x86_avx512(),
+    }
+}
+
+/// Best ISA this host supports (what `CATQUANT_SIMD=auto` resolves to).
+pub fn detected() -> Isa {
+    if supported(Isa::Avx512) {
+        Isa::Avx512
+    } else if supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if supported(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+const UNRESOLVED: u8 = u8::MAX;
+
+/// Resolved-once active ISA ([`UNRESOLVED`] until first use; benches may
+/// overwrite it via [`set_active`]).
+static ACTIVE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+fn resolve_from_env() -> Isa {
+    let Ok(raw) = std::env::var("CATQUANT_SIMD") else {
+        return detected();
+    };
+    let req = raw.trim().to_ascii_lowercase();
+    let want = match req.as_str() {
+        "" | "auto" => return detected(),
+        "scalar" => Isa::Scalar,
+        "neon" => Isa::Neon,
+        "avx2" => Isa::Avx2,
+        "avx512" => Isa::Avx512,
+        other => {
+            eprintln!(
+                "CATQUANT_SIMD={other:?}: unknown (want auto|avx512|avx2|neon|scalar); \
+                 using {}",
+                detected().name()
+            );
+            return detected();
+        }
+    };
+    if supported(want) {
+        want
+    } else {
+        eprintln!(
+            "CATQUANT_SIMD={}: not supported on this host; using {}",
+            want.name(),
+            detected().name()
+        );
+        detected()
+    }
+}
+
+/// The ISA the dispatching kernels currently use. Resolved from
+/// `CATQUANT_SIMD` + feature detection on first call, then cached.
+pub fn active() -> Isa {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != UNRESOLVED {
+        return Isa::from_u8(v);
+    }
+    let isa = resolve_from_env();
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    isa
+}
+
+/// Force the active ISA (benches A/B scalar vs SIMD in one process;
+/// tests pin paths). Returns `false` — and changes nothing — if the
+/// host can't execute `isa`. Every path is bit-identical, so flipping
+/// this mid-computation can never change a result, only its speed.
+pub fn set_active(isa: Isa) -> bool {
+    if !supported(isa) {
+        return false;
+    }
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    true
+}
+
+// ---------------------------------------------------------------------
+// qdot_i16 — i16×i16→i32-lane→i64 dot product
+// ---------------------------------------------------------------------
+
+/// Dispatching i16 dot product (see module docs for the per-ISA
+/// overflow bounds). Integer accumulation is exact, so every path
+/// returns the same value.
+#[inline]
+pub fn qdot_i16(a: &[i16], b: &[i16]) -> i64 {
+    qdot_i16_with(active(), a, b)
+}
+
+/// [`qdot_i16`] on an explicit ISA (`isa` must be [`supported`]) —
+/// per-ISA tests and benches without global state.
+pub fn qdot_i16_with(isa: Isa, a: &[i16], b: &[i16]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(supported(isa));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::qdot_i16_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { x86::qdot_i16_avx512(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::qdot_i16_neon(a, b) },
+        _ => qdot_i16_scalar(a, b),
+    }
+}
+
+/// Eight-lane scalar reference (the pre-SIMD kernel, kept verbatim).
+/// Independent accumulators break the dependency chain so LLVM can emit
+/// SIMD integer lanes even at the default target; unlike f64, integer
+/// addition is associative, so the lane split cannot perturb the result.
+fn qdot_i16_scalar(a: &[i16], b: &[i16]) -> i64 {
+    let mut acc = [0i32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += xa[l] as i32 * xb[l] as i32;
+        }
+    }
+    let mut tail = 0i32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        tail += x as i32 * y as i32;
+    }
+    acc.iter().map(|&v| v as i64).sum::<i64>() + tail as i64
+}
+
+// ---------------------------------------------------------------------
+// f64 register-tile micro-kernels
+// ---------------------------------------------------------------------
+
+/// 4×NR register-tile micro-kernel over a packed panel:
+/// `acc[r][c] += Σ_kk a_r[kk] · panel[kk·NR + c]`, `kk` ascending.
+/// Dispatching wrapper; all paths bit-identical (see module docs).
+#[inline]
+pub(crate) fn mk4(
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    mk4_with(active(), a0, a1, a2, a3, panel, acc)
+}
+
+/// [`mk4`] on an explicit ISA (tests pin paths without global state).
+pub(crate) fn mk4_with(
+    isa: Isa,
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    debug_assert_eq!(panel.len() % NR, 0);
+    debug_assert_eq!(a0.len(), panel.len() / NR);
+    debug_assert!(supported(isa));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::mk4_avx2(a0, a1, a2, a3, panel, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { x86::mk4_avx512(a0, a1, a2, a3, panel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::mk4_neon(a0, a1, a2, a3, panel, acc) },
+        _ => mk4_scalar(a0, a1, a2, a3, panel, acc),
+    }
+}
+
+/// Single-row variant of [`mk4`] (tile-height remainders): NR
+/// independent accumulator chains, `kk` ascending.
+#[inline]
+pub(crate) fn mk1(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+    mk1_with(active(), a0, panel, acc)
+}
+
+/// [`mk1`] on an explicit ISA.
+pub(crate) fn mk1_with(isa: Isa, a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+    debug_assert_eq!(a0.len(), panel.len() / NR);
+    debug_assert!(supported(isa));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::mk1_avx2(a0, panel, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { x86::mk1_avx512(a0, panel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::mk1_neon(a0, panel, acc) },
+        _ => mk1_scalar(a0, panel, acc),
+    }
+}
+
+/// Full MR×NR tile over *strided* row-major operands (the
+/// `matmul_at_b` / `syrk` shape, where both operands are read as row
+/// slices instead of packed panels):
+/// `acc[r][c] += Σ_{kk∈[k0,k1)} ad[kk·astride + a0 + r] · bd[kk·bstride + b0 + c]`.
+/// Callers guarantee the full tile is in range (`a0 + MR ≤ astride`,
+/// `b0 + NR ≤ bstride`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile4x8_strided(
+    ad: &[f64],
+    astride: usize,
+    a0: usize,
+    bd: &[f64],
+    bstride: usize,
+    b0: usize,
+    k0: usize,
+    k1: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    tile4x8_strided_with(active(), ad, astride, a0, bd, bstride, b0, k0, k1, acc)
+}
+
+/// [`tile4x8_strided`] on an explicit ISA.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile4x8_strided_with(
+    isa: Isa,
+    ad: &[f64],
+    astride: usize,
+    a0: usize,
+    bd: &[f64],
+    bstride: usize,
+    b0: usize,
+    k0: usize,
+    k1: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    debug_assert!(supported(isa));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::tile4x8_avx2(ad, astride, a0, bd, bstride, b0, k0, k1, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            x86::tile4x8_avx512(ad, astride, a0, bd, bstride, b0, k0, k1, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::tile4x8_neon(ad, astride, a0, bd, bstride, b0, k0, k1, acc) },
+        _ => tile4x8_scalar(ad, astride, a0, bd, bstride, b0, k0, k1, acc),
+    }
+}
+
+/// Scalar reference for [`mk4`] (the pre-SIMD kernel, kept verbatim).
+fn mk4_scalar(
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+        // Fixed-size view: compile-time length, so the c-loop fully
+        // unrolls and bounds checks vanish.
+        let brow: &[f64; NR] = brow.try_into().unwrap();
+        let x = [a0[kk], a1[kk], a2[kk], a3[kk]];
+        for (r, xr) in x.iter().enumerate() {
+            for (c, &bv) in brow.iter().enumerate() {
+                acc[r][c] += xr * bv;
+            }
+        }
+    }
+}
+
+/// Scalar reference for [`mk1`].
+fn mk1_scalar(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+    for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+        let brow: &[f64; NR] = brow.try_into().unwrap();
+        let x = a0[kk];
+        for (c, &bv) in brow.iter().enumerate() {
+            acc[c] += x * bv;
+        }
+    }
+}
+
+/// Scalar reference for [`tile4x8_strided`] (the inner loop
+/// `matmul_at_b_rows`/`syrk_rows` ran inline before the dispatch seam).
+#[allow(clippy::too_many_arguments)]
+fn tile4x8_scalar(
+    ad: &[f64],
+    astride: usize,
+    a0: usize,
+    bd: &[f64],
+    bstride: usize,
+    b0: usize,
+    k0: usize,
+    k1: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    for kk in k0..k1 {
+        let ap: &[f64; MR] = (&ad[kk * astride + a0..kk * astride + a0 + MR]).try_into().unwrap();
+        let bp: &[f64; NR] = (&bd[kk * bstride + b0..kk * bstride + b0 + NR]).try_into().unwrap();
+        for (accr, &x) in acc.iter_mut().zip(ap) {
+            for (av, &bv) in accr.iter_mut().zip(bp) {
+                *av += x * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86-64: AVX2 / AVX-512
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    #![allow(clippy::too_many_arguments)]
+
+    use super::super::matmul::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// `madd_epi16` pairwise dot: 16 i16 per step into 8 i32 lanes.
+    /// Each madd lane is a sum of two ≤2^14 products (≤2^15); k/16
+    /// steps keep lanes ≤ k·2^11 — in range through k = 2^19.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn qdot_i16_avx2(a: &[i16], b: &[i16]) -> i64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 16;
+        let mut acc = _mm256_setzero_si256();
+        for i in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i * 16) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i * 16) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        }
+        let lanes: [i32; 8] = std::mem::transmute(acc);
+        let mut total: i64 = lanes.iter().map(|&v| v as i64).sum();
+        for i in chunks * 16..n {
+            total += a[i] as i64 * b[i] as i64;
+        }
+        total
+    }
+
+    /// 32 i16 per step into 16 i32 lanes (lanes ≤ k·2^10).
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub(super) unsafe fn qdot_i16_avx512(a: &[i16], b: &[i16]) -> i64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 32;
+        let mut acc = _mm512_setzero_si512();
+        for i in 0..chunks {
+            let va = _mm512_loadu_epi16(a.as_ptr().add(i * 32));
+            let vb = _mm512_loadu_epi16(b.as_ptr().add(i * 32));
+            acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vb));
+        }
+        let lanes: [i32; 16] = std::mem::transmute(acc);
+        let mut total: i64 = lanes.iter().map(|&v| v as i64).sum();
+        for i in chunks * 32..n {
+            total += a[i] as i64 * b[i] as i64;
+        }
+        total
+    }
+
+    // The f64 kernels below keep multiply and add unfused (`mul_pd` +
+    // `add_pd`, never `fmadd`): the scalar reference rounds twice per
+    // step, and bit-exactness is part of the kernel contract.
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mk4_avx2(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        panel: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let a = [a0, a1, a2, a3];
+        let mut va = [[_mm256_setzero_pd(); 2]; MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            vr[0] = _mm256_loadu_pd(accr.as_ptr());
+            vr[1] = _mm256_loadu_pd(accr.as_ptr().add(4));
+        }
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let bl = _mm256_loadu_pd(brow.as_ptr());
+            let bh = _mm256_loadu_pd(brow.as_ptr().add(4));
+            for (vr, ar) in va.iter_mut().zip(&a) {
+                let x = _mm256_set1_pd(ar[kk]);
+                vr[0] = _mm256_add_pd(vr[0], _mm256_mul_pd(x, bl));
+                vr[1] = _mm256_add_pd(vr[1], _mm256_mul_pd(x, bh));
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            _mm256_storeu_pd(accr.as_mut_ptr(), vr[0]);
+            _mm256_storeu_pd(accr.as_mut_ptr().add(4), vr[1]);
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn mk4_avx512(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        panel: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let a = [a0, a1, a2, a3];
+        let mut va = [_mm512_setzero_pd(); MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            *vr = _mm512_loadu_pd(accr.as_ptr());
+        }
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let bv = _mm512_loadu_pd(brow.as_ptr());
+            for (vr, ar) in va.iter_mut().zip(&a) {
+                let x = _mm512_set1_pd(ar[kk]);
+                *vr = _mm512_add_pd(*vr, _mm512_mul_pd(x, bv));
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            _mm512_storeu_pd(accr.as_mut_ptr(), *vr);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mk1_avx2(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+        let mut vl = _mm256_loadu_pd(acc.as_ptr());
+        let mut vh = _mm256_loadu_pd(acc.as_ptr().add(4));
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let x = _mm256_set1_pd(a0[kk]);
+            vl = _mm256_add_pd(vl, _mm256_mul_pd(x, _mm256_loadu_pd(brow.as_ptr())));
+            vh = _mm256_add_pd(vh, _mm256_mul_pd(x, _mm256_loadu_pd(brow.as_ptr().add(4))));
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), vl);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), vh);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn mk1_avx512(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+        let mut v = _mm512_loadu_pd(acc.as_ptr());
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let x = _mm512_set1_pd(a0[kk]);
+            v = _mm512_add_pd(v, _mm512_mul_pd(x, _mm512_loadu_pd(brow.as_ptr())));
+        }
+        _mm512_storeu_pd(acc.as_mut_ptr(), v);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tile4x8_avx2(
+        ad: &[f64],
+        astride: usize,
+        a0: usize,
+        bd: &[f64],
+        bstride: usize,
+        b0: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut va = [[_mm256_setzero_pd(); 2]; MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            vr[0] = _mm256_loadu_pd(accr.as_ptr());
+            vr[1] = _mm256_loadu_pd(accr.as_ptr().add(4));
+        }
+        for kk in k0..k1 {
+            let ap = &ad[kk * astride + a0..kk * astride + a0 + MR];
+            let bp = &bd[kk * bstride + b0..kk * bstride + b0 + NR];
+            let bl = _mm256_loadu_pd(bp.as_ptr());
+            let bh = _mm256_loadu_pd(bp.as_ptr().add(4));
+            for (vr, &x) in va.iter_mut().zip(ap) {
+                let xv = _mm256_set1_pd(x);
+                vr[0] = _mm256_add_pd(vr[0], _mm256_mul_pd(xv, bl));
+                vr[1] = _mm256_add_pd(vr[1], _mm256_mul_pd(xv, bh));
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            _mm256_storeu_pd(accr.as_mut_ptr(), vr[0]);
+            _mm256_storeu_pd(accr.as_mut_ptr().add(4), vr[1]);
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn tile4x8_avx512(
+        ad: &[f64],
+        astride: usize,
+        a0: usize,
+        bd: &[f64],
+        bstride: usize,
+        b0: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut va = [_mm512_setzero_pd(); MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            *vr = _mm512_loadu_pd(accr.as_ptr());
+        }
+        for kk in k0..k1 {
+            let ap = &ad[kk * astride + a0..kk * astride + a0 + MR];
+            let bp = &bd[kk * bstride + b0..kk * bstride + b0 + NR];
+            let bv = _mm512_loadu_pd(bp.as_ptr());
+            for (vr, &x) in va.iter_mut().zip(ap) {
+                *vr = _mm512_add_pd(*vr, _mm512_mul_pd(_mm512_set1_pd(x), bv));
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            _mm512_storeu_pd(accr.as_mut_ptr(), *vr);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    #![allow(clippy::too_many_arguments)]
+
+    use super::super::matmul::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// `vmlal` widening MLA: 8 i16 per step into 2×4 i32 lanes (each
+    /// lane one ≤2^14 product per step — the scalar bound exactly).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn qdot_i16_neon(a: &[i16], b: &[i16]) -> i64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut lo = vdupq_n_s32(0);
+        let mut hi = vdupq_n_s32(0);
+        for i in 0..chunks {
+            let va = vld1q_s16(a.as_ptr().add(i * 8));
+            let vb = vld1q_s16(b.as_ptr().add(i * 8));
+            lo = vmlal_s16(lo, vget_low_s16(va), vget_low_s16(vb));
+            hi = vmlal_high_s16(hi, va, vb);
+        }
+        let mut total = vaddlvq_s32(lo) + vaddlvq_s32(hi);
+        for i in chunks * 8..n {
+            total += a[i] as i64 * b[i] as i64;
+        }
+        total
+    }
+
+    // f64 kernels: unfused `vmulq` + `vaddq` (never `vfmaq`) — the
+    // scalar reference rounds twice per step and bit-exactness is part
+    // of the kernel contract.
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mk4_neon(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        panel: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let a = [a0, a1, a2, a3];
+        let mut va = [[vdupq_n_f64(0.0); 4]; MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            for (q, vq) in vr.iter_mut().enumerate() {
+                *vq = vld1q_f64(accr.as_ptr().add(q * 2));
+            }
+        }
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let mut b = [vdupq_n_f64(0.0); 4];
+            for (q, bq) in b.iter_mut().enumerate() {
+                *bq = vld1q_f64(brow.as_ptr().add(q * 2));
+            }
+            for (vr, ar) in va.iter_mut().zip(&a) {
+                let x = vdupq_n_f64(ar[kk]);
+                for (vq, &bq) in vr.iter_mut().zip(&b) {
+                    *vq = vaddq_f64(*vq, vmulq_f64(x, bq));
+                }
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            for (q, vq) in vr.iter().enumerate() {
+                vst1q_f64(accr.as_mut_ptr().add(q * 2), *vq);
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mk1_neon(a0: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+        let mut va = [vdupq_n_f64(0.0); 4];
+        for (q, vq) in va.iter_mut().enumerate() {
+            *vq = vld1q_f64(acc.as_ptr().add(q * 2));
+        }
+        for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+            let x = vdupq_n_f64(a0[kk]);
+            for (q, vq) in va.iter_mut().enumerate() {
+                let bq = vld1q_f64(brow.as_ptr().add(q * 2));
+                *vq = vaddq_f64(*vq, vmulq_f64(x, bq));
+            }
+        }
+        for (q, vq) in va.iter().enumerate() {
+            vst1q_f64(acc.as_mut_ptr().add(q * 2), *vq);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile4x8_neon(
+        ad: &[f64],
+        astride: usize,
+        a0: usize,
+        bd: &[f64],
+        bstride: usize,
+        b0: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut va = [[vdupq_n_f64(0.0); 4]; MR];
+        for (vr, accr) in va.iter_mut().zip(acc.iter()) {
+            for (q, vq) in vr.iter_mut().enumerate() {
+                *vq = vld1q_f64(accr.as_ptr().add(q * 2));
+            }
+        }
+        for kk in k0..k1 {
+            let ap = &ad[kk * astride + a0..kk * astride + a0 + MR];
+            let bp = &bd[kk * bstride + b0..kk * bstride + b0 + NR];
+            let mut b = [vdupq_n_f64(0.0); 4];
+            for (q, bq) in b.iter_mut().enumerate() {
+                *bq = vld1q_f64(bp.as_ptr().add(q * 2));
+            }
+            for (vr, &x) in va.iter_mut().zip(ap) {
+                let xv = vdupq_n_f64(x);
+                for (vq, &bq) in vr.iter_mut().zip(&b) {
+                    *vq = vaddq_f64(*vq, vmulq_f64(xv, bq));
+                }
+            }
+        }
+        for (accr, vr) in acc.iter_mut().zip(&va) {
+            for (q, vq) in vr.iter().enumerate() {
+                vst1q_f64(accr.as_mut_ptr().add(q * 2), *vq);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn supported_isas() -> Vec<Isa> {
+        Isa::ALL.into_iter().filter(|&i| supported(i)).collect()
+    }
+
+    #[test]
+    fn active_is_supported_and_settable() {
+        assert!(supported(active()));
+        assert!(supported(detected()));
+        let prev = active();
+        assert!(set_active(Isa::Scalar));
+        assert_eq!(active(), Isa::Scalar);
+        assert!(set_active(prev));
+        assert_eq!(active(), prev);
+    }
+
+    #[test]
+    fn qdot_every_isa_matches_naive() {
+        // Lengths straddle every chunk width (8/16/32) and their tails.
+        let mut rng = Rng::new(42);
+        for len in [0usize, 1, 7, 8, 15, 16, 17, 31, 32, 33, 63, 257] {
+            let a: Vec<i16> = (0..len).map(|_| (rng.below(257) as i16) - 128).collect();
+            let b: Vec<i16> = (0..len).map(|_| (rng.below(257) as i16) - 128).collect();
+            let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            for isa in supported_isas() {
+                assert_eq!(qdot_i16_with(isa, &a, &b), naive, "{} len {len}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn qdot_every_isa_survives_adversarial_max_codes() {
+        // ±max-magnitude stored codes: every product is +2^14, the
+        // worst case for the i32 lane accumulators. A long-but-cheap
+        // smoke here; the full k = MAX_I16_PATH_COLS boundary proof
+        // lives in rust/tests/kernel_tile_props.rs.
+        let k = 1 << 14;
+        let a = vec![-128i16; k];
+        let b = vec![-128i16; k];
+        let want = (k as i64) << 14;
+        for isa in supported_isas() {
+            assert_eq!(qdot_i16_with(isa, &a, &b), want, "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn f64_kernels_every_isa_bit_equal_to_scalar() {
+        // k straddles the chunk loop (0/1/odd/KC-ish); accumulators
+        // start non-zero to exercise the load/accumulate/store path.
+        let mut rng = Rng::new(7);
+        for k in [0usize, 1, 3, 8, 37, 256] {
+            let a: Vec<Vec<f64>> =
+                (0..MR).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+            let panel: Vec<f64> = (0..k * NR).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..MR * NR).map(|_| rng.normal()).collect();
+
+            let mut want4 = [[0.0; NR]; MR];
+            for (r, row) in want4.iter_mut().enumerate() {
+                row.copy_from_slice(&init[r * NR..(r + 1) * NR]);
+            }
+            let mut want1 = [0.0; NR];
+            want1.copy_from_slice(&init[..NR]);
+            mk4_scalar(&a[0], &a[1], &a[2], &a[3], &panel, &mut want4);
+            mk1_scalar(&a[0], &panel, &mut want1);
+
+            for isa in supported_isas() {
+                let mut got4 = [[0.0; NR]; MR];
+                for (r, row) in got4.iter_mut().enumerate() {
+                    row.copy_from_slice(&init[r * NR..(r + 1) * NR]);
+                }
+                mk4_with(isa, &a[0], &a[1], &a[2], &a[3], &panel, &mut got4);
+                assert_eq!(got4, want4, "mk4 {} k={k}", isa.name());
+
+                let mut got1 = [0.0; NR];
+                got1.copy_from_slice(&init[..NR]);
+                mk1_with(isa, &a[0], &panel, &mut got1);
+                assert_eq!(got1, want1, "mk1 {} k={k}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn strided_tile_every_isa_bit_equal_to_scalar() {
+        let mut rng = Rng::new(11);
+        let (astride, bstride) = (9, 13);
+        for (k0, k1) in [(0usize, 5usize), (2, 2), (0, 256), (100, 301)] {
+            let ad: Vec<f64> = (0..k1 * astride).map(|_| rng.normal()).collect();
+            let bd: Vec<f64> = (0..k1 * bstride).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..MR * NR).map(|_| rng.normal()).collect();
+            for (a0, b0) in [(0usize, 0usize), (5, 5), (3, 1)] {
+                let mut want = [[0.0; NR]; MR];
+                for (r, row) in want.iter_mut().enumerate() {
+                    row.copy_from_slice(&init[r * NR..(r + 1) * NR]);
+                }
+                tile4x8_scalar(&ad, astride, a0, &bd, bstride, b0, k0, k1, &mut want);
+                for isa in supported_isas() {
+                    let mut got = [[0.0; NR]; MR];
+                    for (r, row) in got.iter_mut().enumerate() {
+                        row.copy_from_slice(&init[r * NR..(r + 1) * NR]);
+                    }
+                    tile4x8_strided_with(isa, &ad, astride, a0, &bd, bstride, b0, k0, k1, &mut got);
+                    assert_eq!(got, want, "tile {} k=[{k0},{k1})", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qdot_dispatcher_matches_naive() {
+        let a: Vec<i16> = (0..37).map(|v| (v * 7 % 19) - 9).collect();
+        let b: Vec<i16> = (0..37).map(|v| (v * 5 % 23) - 11).collect();
+        let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+        assert_eq!(qdot_i16(&a, &b), naive);
+    }
+}

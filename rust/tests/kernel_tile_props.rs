@@ -9,13 +9,16 @@
 //! Shapes deliberately straddle every boundary: the MR=4/NR=8 register
 //! tile, the KC=256 k-block, and panel edges (1, 7, tile±1, KC±1).
 //!
-//! CI runs this suite under `CATQUANT_THREADS ∈ {1, 8}` alongside the
-//! quant/decode parity suites.
+//! CI runs this suite under `CATQUANT_THREADS ∈ {1, 8}` ×
+//! `CATQUANT_SIMD ∈ {scalar, auto}` alongside the quant/decode parity
+//! suites; the forced-ISA tests below additionally pin every *supported*
+//! `linalg::simd` path against the scalar reference in one process.
 
 use catquant::linalg::{
     matmul, matmul_a_bt, matmul_a_bt_cached, matmul_a_bt_serial, matmul_at_b,
     matmul_at_b_serial, matmul_serial, matmul_serial_ref, par, qmatmul_a_bt,
-    qmatmul_a_bt_panels, qmatmul_a_bt_serial, syrk_at_a, Mat, QPanels, Rng,
+    qmatmul_a_bt_panels, qmatmul_a_bt_serial, simd, syrk_at_a, Mat, QCodes, QMatView, QPanels,
+    Rng, MAX_I16_PATH_COLS,
 };
 use catquant::quant::{QScheme, QuantizedTensor};
 
@@ -218,6 +221,131 @@ fn persistent_qpanels_match_unpack_per_call_bit_exactly() {
             }
         }
     }
+}
+
+#[test]
+fn every_supported_isa_is_bit_identical_to_scalar() {
+    // The PR 6 acceptance property: for each ISA this host can execute,
+    // force it and re-run every f64 kernel family (tiled GEMM, AᵀB,
+    // A·Bᵀ + GEMV/panel-cached paths, syrk) and the integer kernel over
+    // boundary-straddling shapes; results must equal the forced-scalar
+    // reference with max-abs-diff exactly 0.0 (SIMD lanes hold one
+    // output element's accumulator each, ascending k, unfused mul+add).
+    let prev = simd::active();
+    for &(m, k, n) in
+        &[(1usize, 7usize, 1usize), (4, 256, 8), (5, 257, 9), (12, 33, 40), (33, 255, 65)]
+    {
+        let seed = (m * 1_000_000 + k * 1_000 + n) as u64;
+        let a = random(m, k, seed);
+        let b = random(k, n, seed + 1);
+        let bt = random(n, k, seed + 2);
+        let tall = random(k, m, seed + 3);
+        let xq = QuantizedTensor::quantize_acts(&a, QScheme::asym(4), 1.0);
+        let wq = QuantizedTensor::quantize_acts(&bt, QScheme::asym(4), 1.0);
+        let wpanels = wq.panels();
+
+        assert!(simd::set_active(simd::Isa::Scalar));
+        let want_mm = matmul_serial(&a, &b);
+        let want_atb = matmul_at_b_serial(&tall, &b);
+        let want_abt = matmul_a_bt_serial(&a, &bt);
+        let want_syrk = syrk_at_a(&tall);
+        let want_q = qmatmul_a_bt(&xq.view(), &wq.view());
+
+        for isa in simd::Isa::ALL {
+            if !simd::supported(isa) {
+                continue;
+            }
+            assert!(simd::set_active(isa));
+            let tag = isa.name();
+            assert_eq!(matmul_serial(&a, &b).max_abs_diff(&want_mm), 0.0, "mm {tag} {m}x{k}x{n}");
+            assert_eq!(
+                matmul_at_b_serial(&tall, &b).max_abs_diff(&want_atb),
+                0.0,
+                "atb {tag} {m}x{k}x{n}"
+            );
+            assert_eq!(
+                matmul_a_bt_serial(&a, &bt).max_abs_diff(&want_abt),
+                0.0,
+                "abt {tag} {m}x{k}x{n}"
+            );
+            assert_eq!(
+                matmul_a_bt_cached(&a, &bt).max_abs_diff(&want_abt),
+                0.0,
+                "abt cached {tag} {m}x{k}x{n}"
+            );
+            assert_eq!(syrk_at_a(&tall).max_abs_diff(&want_syrk), 0.0, "syrk {tag}");
+            assert_eq!(
+                qmatmul_a_bt(&xq.view(), &wq.view()).max_abs_diff(&want_q),
+                0.0,
+                "qmm {tag} {m}x{k}x{n}"
+            );
+            assert_eq!(
+                qmatmul_a_bt_panels(&xq.view(), &wq.view(), &wpanels).max_abs_diff(&want_q),
+                0.0,
+                "qmm panels {tag} {m}x{k}x{n}"
+            );
+        }
+    }
+    assert!(simd::set_active(prev));
+}
+
+#[test]
+fn qdot_cannot_overflow_at_max_i16_path_cols() {
+    // Adversarial ±max-magnitude stored codes at exactly
+    // k = MAX_I16_PATH_COLS: every product is +2^14, so each path's i32
+    // lane accumulators reach their documented worst case (2^30 scalar /
+    // AVX2 / NEON, 2^29 AVX-512). Any lane overflow would wrap and miss
+    // the exact total 2^19 · 2^14 = 2^33.
+    let k = MAX_I16_PATH_COLS;
+    let neg = vec![-128i16; k];
+    let pos = vec![127i16; k];
+    for isa in simd::Isa::ALL {
+        if !simd::supported(isa) {
+            continue;
+        }
+        let tag = isa.name();
+        assert_eq!(simd::qdot_i16_with(isa, &neg, &neg), (k as i64) << 14, "{tag} -128·-128");
+        assert_eq!(
+            simd::qdot_i16_with(isa, &pos, &pos),
+            k as i64 * 127 * 127,
+            "{tag} 127·127"
+        );
+        assert_eq!(
+            simd::qdot_i16_with(isa, &pos, &neg),
+            k as i64 * 127 * -128,
+            "{tag} 127·-128"
+        );
+    }
+    // And through the full kernel: a 1×k Byte-coded GEMV (the shape the
+    // i16 row path takes) must reproduce the exact dot as f64 — 2^33 is
+    // far inside f64's integer range.
+    let codes = vec![-128i8; k];
+    let scales = [1.0];
+    let zps = [0];
+    let sums = [-(128i64 * k as i64)];
+    let v = QMatView {
+        rows: 1,
+        cols: k,
+        codes: QCodes::Byte(&codes),
+        scales: &scales,
+        zps: &zps,
+        row_sums: &sums,
+    };
+    let c = qmatmul_a_bt(&v, &v);
+    assert_eq!(c[(0, 0)], ((k as i64) << 14) as f64);
+    // Mixed-sign row at the same k: exercises cancellation across lanes.
+    let mixed: Vec<i8> = (0..k).map(|j| if j % 2 == 0 { 127 } else { -128 }).collect();
+    let msum = [mixed.iter().map(|&v| v as i64).sum::<i64>()];
+    let vm = QMatView {
+        rows: 1,
+        cols: k,
+        codes: QCodes::Byte(&mixed),
+        scales: &scales,
+        zps: &zps,
+        row_sums: &msum,
+    };
+    let want: i64 = (k as i64 / 2) * (127 * 127 + 128 * 128);
+    assert_eq!(qmatmul_a_bt(&vm, &vm)[(0, 0)], want as f64);
 }
 
 #[test]

@@ -4,12 +4,15 @@
 //! is exact in integer arithmetic, so any divergence beyond ~1e-12
 //! relative is a packing or kernel bug.
 //!
-//! CI runs this suite under `CATQUANT_THREADS=1` and `=8`; integer
-//! accumulation is exact, so the results must be bit-identical at any
-//! worker count.
+//! CI runs this suite under `CATQUANT_THREADS ∈ {1, 8}` ×
+//! `CATQUANT_SIMD ∈ {scalar, auto}`; integer accumulation is exact, so
+//! the results must be bit-identical at any worker count and on any
+//! instruction-set path.
 
 use catquant::calib::calibrate;
-use catquant::linalg::{matmul_a_bt, matmul_at_b, qmatmul_a_bt, qmatmul_a_bt_serial, Mat, Rng};
+use catquant::linalg::{
+    matmul_a_bt, matmul_at_b, qmatmul_a_bt, qmatmul_a_bt_serial, simd, Mat, Rng,
+};
 use catquant::model::{ModelConfig, NativeModel, QuantConfig};
 use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
 use catquant::quant::{
@@ -98,6 +101,40 @@ fn wide_bit_widths_take_the_exact_i64_path() {
         let rel = rel_err(&dense, &packed);
         assert!(rel <= TOL, "bits={bits}: rel {rel}");
     }
+}
+
+#[test]
+fn quantized_kernel_is_bit_identical_on_every_isa_path() {
+    // Integer dots are exact under any association, so flipping the
+    // simd dispatch between scalar/NEON/AVX2/AVX-512 must never move a
+    // single bit of the packed kernel's output — decode (small-m) and
+    // prefill (row-partitioned) shapes, nibble and byte stores.
+    let prev = simd::active();
+    for &(m, k, n) in &[(1usize, 33usize, 96usize), (4, 256, 64), (40, 257, 24)] {
+        for bits in [4u32, 8] {
+            let x = random(m, k, 500 + (m + k) as u64);
+            let w = random(n, k, 600 + (n + k) as u64).scale(0.1);
+            let scheme = QScheme::asym(bits);
+            let xp = QuantizedTensor::quantize_acts(&x, scheme, 1.0);
+            let wp = QuantizedTensor::quantize_acts(&w, scheme, 1.0);
+            assert!(simd::set_active(simd::Isa::Scalar));
+            let want = qmatmul_a_bt(&xp.view(), &wp.view());
+            for isa in simd::Isa::ALL {
+                if !simd::supported(isa) {
+                    continue;
+                }
+                assert!(simd::set_active(isa));
+                let got = qmatmul_a_bt(&xp.view(), &wp.view());
+                assert_eq!(
+                    got.max_abs_diff(&want),
+                    0.0,
+                    "{} {m}x{k}x{n} bits {bits}",
+                    isa.name()
+                );
+            }
+        }
+    }
+    assert!(simd::set_active(prev));
 }
 
 #[test]
