@@ -15,9 +15,10 @@
 
 use catquant::calib::calibrate;
 use catquant::coordinator::{
-    BatcherCfg, Coordinator, GenEngine, NativeGenerator, SamplingCfg, ServeMetrics,
+    BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, SamplingCfg,
+    ServeMetrics, StepEngine,
 };
-use catquant::model::{KvCache, ModelConfig, NativeModel, QuantConfig};
+use catquant::model::{KvCache, KvPoolCfg, ModelConfig, NativeModel, QuantConfig};
 use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
 use catquant::runtime::{load_artifact, save_artifact};
 use std::time::Instant;
@@ -136,12 +137,138 @@ fn serve_native(
     coord.shutdown()
 }
 
+/// §Continuous batching: the same open-loop Poisson workload served by
+/// the static dynamic-batching coordinator vs the continuous scheduler
+/// over the paged KV pool. Heterogeneous `max_new` is the point: static
+/// batches decode every member to the batch-wide max and make arrivals
+/// wait for batch formation; continuous sequences join mid-decode and
+/// leave at their own length. Greedy outputs are asserted bit-identical
+/// to per-sequence decode, and continuous must beat static on *useful*
+/// decode rate (delivered tokens per decode second) and p95 latency —
+/// the CI gate. Returns the `BENCH_serve.json` record.
+fn open_loop_poisson(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
+    let (n_req, plen, mean_gap_ms) =
+        if quick { (10usize, 8usize, 2.0f64) } else { (24, 32, 8.0) };
+    let (short, long) = if quick { (3usize, 10usize) } else { (4, 32) };
+    let max_news: Vec<usize> =
+        (0..n_req).map(|i| if i % 2 == 0 { short } else { long }).collect();
+    let prompts: Vec<Vec<u8>> = (0..n_req).map(|i| tokens(plen - (i % 3), 60 + i)).collect();
+    let sampling = SamplingCfg { temperature: 0.0, seed: 3 };
+
+    // Greedy per-sequence reference: what every request must receive
+    // bit-for-bit, no matter how it was batched or preempted.
+    let mut reference = Vec::with_capacity(n_req);
+    for (p, &mn) in prompts.iter().zip(&max_news) {
+        let mut solo =
+            NativeGenerator::fp(NativeModel::init_random(cfg.clone(), 7), 1, sampling);
+        reference.push(solo.generate_batch(&[p.clone()], mn)?.remove(0));
+    }
+
+    // Seeded Poisson process: exponential inter-arrival gaps.
+    let mut rng = catquant::linalg::Rng::new(0xA881);
+    let mut arrivals = Vec::with_capacity(n_req);
+    let mut t = 0.0f64;
+    for _ in 0..n_req {
+        t += -mean_gap_ms * (1.0 - rng.uniform()).ln();
+        arrivals.push(std::time::Duration::from_secs_f64(t / 1e3));
+    }
+
+    let submit_all = |coord: &Coordinator| {
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            let now = t0.elapsed();
+            if arrivals[i] > now {
+                std::thread::sleep(arrivals[i] - now);
+            }
+            rxs.push(coord.submit(prompts[i].clone(), max_news[i]));
+        }
+        rxs
+    };
+    // Delivered tokens per decode second — static batching decodes
+    // batch-wide max_new for everyone, so its wasted tail work shows up
+    // here as a lower rate.
+    let useful = |m: &ServeMetrics| {
+        if m.engine.decode_time.is_zero() {
+            0.0
+        } else {
+            m.tokens_out as f64 / m.engine.decode_time.as_secs_f64()
+        }
+    };
+
+    // Arm A: static dynamic batching.
+    let model = NativeModel::init_random(cfg.clone(), 7);
+    let coord = Coordinator::start(
+        move || Box::new(NativeGenerator::fp(model, 4, sampling)) as Box<dyn GenEngine>,
+        BatcherCfg { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
+    );
+    for rx in submit_all(&coord) {
+        rx.recv()?;
+    }
+    let stat = coord.shutdown();
+
+    // Arm B: continuous scheduler over the paged pool (same weights,
+    // same arrivals).
+    let model = NativeModel::init_random(cfg.clone(), 7);
+    let coord = Coordinator::start_continuous(
+        move || {
+            Box::new(NativeGenerator::fp(model, 4, sampling).with_serve_pool(
+                KvPoolCfg::default(),
+                true,
+            )) as Box<dyn StepEngine>
+        },
+        ContinuousCfg::default(),
+    );
+    let outs: Result<Vec<Vec<u8>>, _> =
+        submit_all(&coord).into_iter().map(|rx| rx.recv().map(|r| r.tokens)).collect();
+    let cont = coord.shutdown();
+    for (o, want) in outs?.iter().zip(&reference) {
+        assert_eq!(o, want, "continuous batching must be bit-exact vs per-sequence decode");
+    }
+
+    let (s_rate, c_rate) = (useful(&stat), useful(&cont));
+    let s_p95 = stat.request_latency.quantile(0.95);
+    let c_p95 = cont.request_latency.quantile(0.95);
+    println!(
+        "open-loop poisson ({n_req} reqs, gap {mean_gap_ms} ms, max_new {short}/{long}):\n\
+           static     useful {s_rate:.1} tok/s  p50 {:?} p95 {s_p95:?}\n\
+           continuous useful {c_rate:.1} tok/s  p50 {:?} p95 {c_p95:?}  \
+         (queue_mean {:.2}, kv_peak {} B, prefix_hit_rate {:.0}%, bit-exact)",
+        stat.request_latency.quantile(0.5),
+        cont.request_latency.quantile(0.5),
+        cont.mean_queue_depth(),
+        cont.kv_peak_bytes,
+        cont.prefix_hit_rate() * 100.0,
+    );
+    assert!(
+        c_rate > s_rate && c_p95 <= s_p95,
+        "continuous must beat static: useful {c_rate:.1} vs {s_rate:.1} tok/s, \
+         p95 {c_p95:?} vs {s_p95:?}"
+    );
+    Ok(format!(
+        "  {{\"section\": \"open_loop\", \"quick\": {quick}, \"requests\": {n_req}, \
+         \"mean_gap_ms\": {mean_gap_ms}, \"static_useful_tok_s\": {s_rate:.1}, \
+         \"continuous_useful_tok_s\": {c_rate:.1}, \"static_p50_ms\": {:.3}, \
+         \"continuous_p50_ms\": {:.3}, \"static_p95_ms\": {:.3}, \
+         \"continuous_p95_ms\": {:.3}, \"preemptions\": {}, \"rejected\": {}, \
+         \"prefix_hit_rate\": {:.3}, \"kv_peak_bytes\": {}, \"bit_exact\": true}}",
+        stat.request_latency.quantile(0.5).as_secs_f64() * 1e3,
+        cont.request_latency.quantile(0.5).as_secs_f64() * 1e3,
+        s_p95.as_secs_f64() * 1e3,
+        c_p95.as_secs_f64() * 1e3,
+        cont.preemptions,
+        cont.rejected,
+        cont.prefix_hit_rate(),
+        cont.kv_peak_bytes,
+    ))
+}
+
 /// §Artifacts: what a serving process pays at boot — re-running
 /// calibration + the pipeline vs loading the saved artifact. Asserts the
-/// loaded config is bit-exact, reports both wall-clocks, and emits
-/// `BENCH_serve.json` (uploaded by CI) so the boot-cost trajectory is
+/// loaded config is bit-exact, reports both wall-clocks, and returns the
+/// `BENCH_serve.json` record so the boot-cost trajectory is
 /// machine-recorded per run.
-fn artifact_vs_rebuild(cfg: &ModelConfig, quick: bool) -> anyhow::Result<()> {
+fn artifact_vs_rebuild(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
     let model = NativeModel::init_random(cfg.clone(), 21);
     let n_seqs = if quick { 6 } else { 16 };
     let seqs: Vec<Vec<u8>> = (0..n_seqs).map(|i| tokens(cfg.seq.min(24), 40 + i)).collect();
@@ -188,30 +315,36 @@ fn artifact_vs_rebuild(cfg: &ModelConfig, quick: bool) -> anyhow::Result<()> {
          save {save_ms:.2} ms, {artifact_bytes} B on disk, bit-exact)",
         rebuild_ms / load_ms.max(1e-9)
     );
-    // Same meta header shape as BENCH_linalg/BENCH_quant: detected and
-    // active ISA plus the forcing env knobs, so boot-cost trajectories
-    // are comparable across machines.
+    Ok(format!(
+        "  {{\"section\": \"artifact_boot\", \"quick\": {quick}, \"threads\": {}, \
+         \"rebuild_ms\": {rebuild_ms:.3}, \"artifact_load_ms\": {load_ms:.3}, \
+         \"artifact_save_ms\": {save_ms:.3}, \"load_speedup\": {:.1}, \
+         \"artifact_bytes\": {artifact_bytes}}}",
+        catquant::linalg::par::num_threads(),
+        rebuild_ms / load_ms.max(1e-9)
+    ))
+}
+
+/// Emit `BENCH_serve.json` (uploaded by CI). Same meta header shape as
+/// BENCH_linalg/BENCH_quant: detected and active ISA plus the forcing
+/// env knobs, so trajectories are comparable across machines.
+fn write_bench_json(records: &[String]) {
     let env_or = |k: &str| std::env::var(k).unwrap_or_else(|_| "unset".into());
     let json = format!(
         "{{\"meta\": {{\"bench\": \"serve_throughput\", \"isa_detected\": \"{}\", \
          \"isa_active\": \"{}\", \"catquant_simd\": \"{}\", \"catquant_threads\": \"{}\", \
-         \"workers\": {}}},\n \"records\": [\n  {{\"section\": \"artifact_boot\", \
-         \"quick\": {quick}, \"threads\": {}, \"rebuild_ms\": {rebuild_ms:.3}, \
-         \"artifact_load_ms\": {load_ms:.3}, \"artifact_save_ms\": {save_ms:.3}, \
-         \"load_speedup\": {:.1}, \"artifact_bytes\": {artifact_bytes}}}\n]}}\n",
+         \"workers\": {}}},\n \"records\": [\n{}\n]}}\n",
         catquant::linalg::simd::detected().name(),
         catquant::linalg::simd::active().name(),
         env_or("CATQUANT_SIMD"),
         env_or("CATQUANT_THREADS"),
         catquant::linalg::par::num_threads(),
-        catquant::linalg::par::num_threads(),
-        rebuild_ms / load_ms.max(1e-9)
+        records.join(",\n")
     );
     match std::fs::write("BENCH_serve.json", json) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }
-    Ok(())
 }
 
 /// §Perf A/B (PJRT only): per-decode-call cost with the weight pack passed
@@ -293,10 +426,15 @@ fn main() -> anyhow::Result<()> {
         println!("{:<9} {}", if quantized { "CAT-W4A4" } else { "FP" }, m.summary());
     }
 
-    // 3. Server boot: artifact load vs calibration rebuild (bit-exact).
-    artifact_vs_rebuild(&cfg, quick)?;
+    // 3. Open-loop Poisson arrivals: static vs continuous batching, with
+    //    the continuous-beats-static gate and bit-exactness assertion.
+    let open_record = open_loop_poisson(&cfg, quick)?;
 
-    // 4. PJRT device-pack A/B when a compiled manifest exists.
+    // 4. Server boot: artifact load vs calibration rebuild (bit-exact).
+    let boot_record = artifact_vs_rebuild(&cfg, quick)?;
+    write_bench_json(&[boot_record, open_record]);
+
+    // 5. PJRT device-pack A/B when a compiled manifest exists.
     if !quick {
         pjrt_pack_upload_ab()?;
     }

@@ -38,6 +38,10 @@ pub struct EngineStats {
     pub prefill_tokens: u64,
     /// Tokens produced by incremental decode steps.
     pub decode_tokens: u64,
+    /// Prompts clamped to the positional budget before serving — a
+    /// capacity-pressure signal, not an error (the tail of the prompt is
+    /// served).
+    pub truncated_prompts: u64,
 }
 
 impl EngineStats {
@@ -46,6 +50,76 @@ impl EngineStats {
         self.decode_time += other.decode_time;
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
+        self.truncated_prompts += other.truncated_prompts;
+    }
+}
+
+/// KV-pool and prefix-cache gauges a [`StepEngine`] reports every tick —
+/// the observability feed for `ServeMetrics` (page occupancy, prefix hit
+/// rate) and the admission controller's watermark input.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub live_bytes: usize,
+    pub peak_bytes: usize,
+    /// `usize::MAX` means unbounded.
+    pub budget_bytes: usize,
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+}
+
+/// What [`StepEngine::admit`] did with a prompt.
+pub enum AdmitOutcome {
+    /// Prefill ran and the first token is sampled; the id names the
+    /// sequence in every later `step`/`take_output` call.
+    Admitted(u64),
+    /// No slot or page capacity right now — the prompt is handed back
+    /// untouched so the caller can retry without having cloned it.
+    NoCapacity(Vec<u8>),
+}
+
+/// A step-granular generation engine: sequences join mid-decode, advance
+/// one token per [`Self::step`], and leave individually — the seam the
+/// continuous-batching scheduler drives, replacing the
+/// `generate_batch`-only API where every member waits for the slowest.
+///
+/// Like [`GenEngine`], implementations need not be `Send`; the
+/// coordinator constructs them on the worker thread via a factory.
+pub trait StepEngine {
+    /// Try to admit a sequence: prefill its prompt (possibly reusing
+    /// shared prefix pages) and sample its first token.
+    fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome>;
+
+    /// One batched decode step over every running sequence. Returns the
+    /// ids that finished (their own `max_new` or positional capacity) —
+    /// collect them with [`Self::take_output`].
+    fn step(&mut self) -> Result<Vec<u64>>;
+
+    /// Take a sequence's generated tokens, releasing its KV pages. Also
+    /// valid on a preempted sequence (finish-with-what-it-has).
+    fn take_output(&mut self, id: u64) -> Option<Vec<u8>>;
+
+    /// Ids preempted (pages reclaimed) since the last call; each either
+    /// resumes via [`Self::resume`] or is finished via
+    /// [`Self::take_output`].
+    fn take_preempted(&mut self) -> Vec<u64>;
+
+    /// Re-prefill a preempted sequence and rejoin the running batch;
+    /// `false` when there is still no capacity. Resuming consumes no RNG,
+    /// so sampled outputs are independent of preemption timing.
+    fn resume(&mut self, id: u64) -> Result<bool>;
+
+    /// Sequences currently running (admitted, not finished/preempted).
+    fn running(&self) -> usize;
+
+    /// Hard cap on concurrently running sequences.
+    fn max_concurrent(&self) -> usize;
+
+    /// Current pool/prefix gauges.
+    fn pool_stats(&self) -> PoolStats;
+
+    /// Drain phase accounting (see [`GenEngine::take_stats`]).
+    fn take_stats(&mut self) -> EngineStats {
+        EngineStats::default()
     }
 }
 

@@ -11,6 +11,9 @@ pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
     sum_us: u64,
+    /// Largest recorded value — caps quantile estimates, so the overflow
+    /// bucket reports a real latency instead of a sentinel.
+    max_us: u64,
 }
 
 impl Histogram {
@@ -23,7 +26,7 @@ impl Histogram {
             b *= 1.25;
         }
         let n = buckets.len();
-        Histogram { buckets, counts: vec![0; n + 1], total: 0, sum_us: 0 }
+        Histogram { buckets, counts: vec![0; n + 1], total: 0, sum_us: 0, max_us: 0 }
     }
 
     pub fn record(&mut self, d: Duration) {
@@ -32,6 +35,7 @@ impl Histogram {
         self.counts[idx] += 1;
         self.total += 1;
         self.sum_us += us;
+        self.max_us = self.max_us.max(us);
     }
 
     pub fn count(&self) -> u64 {
@@ -45,7 +49,14 @@ impl Histogram {
         Duration::from_micros(self.sum_us / self.total)
     }
 
-    /// Upper bound of the bucket containing quantile `q`.
+    /// Largest recorded value.
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket containing quantile `q`, clamped to the
+    /// max recorded value — samples past the last bucket report that real
+    /// maximum rather than a sentinel.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.total == 0 {
             return Duration::ZERO;
@@ -55,11 +66,11 @@ impl Histogram {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                let us = if i < self.buckets.len() { self.buckets[i] } else { u64::MAX / 2 };
-                return Duration::from_micros(us);
+                let us = if i < self.buckets.len() { self.buckets[i] } else { self.max_us };
+                return Duration::from_micros(us.min(self.max_us));
             }
         }
-        Duration::from_micros(*self.buckets.last().unwrap())
+        Duration::from_micros(self.max_us)
     }
 }
 
@@ -82,6 +93,21 @@ pub struct ServeMetrics {
     pub elapsed: Duration,
     /// Accumulated engine phase split (prefill vs decode).
     pub engine: EngineStats,
+    /// Scheduler queue depth sampled once per tick (continuous path).
+    pub queue_depth: Vec<usize>,
+    /// Requests refused by backpressure (queue cap or unservable size).
+    pub rejected: u64,
+    /// Sequences evicted under page-budget pressure (each re-prefills on
+    /// resume).
+    pub preemptions: u64,
+    /// KV page-pool gauges (live/peak/budget bytes; budget `usize::MAX`
+    /// means unbounded).
+    pub kv_live_bytes: usize,
+    pub kv_peak_bytes: usize,
+    pub kv_budget_bytes: usize,
+    /// Prompt-prefix cache counters.
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
 }
 
 impl ServeMetrics {
@@ -117,10 +143,43 @@ impl ServeMetrics {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth.is_empty() {
+            return 0.0;
+        }
+        self.queue_depth.iter().sum::<usize>() as f64 / self.queue_depth.len() as f64
+    }
+
+    pub fn max_queue_depth(&self) -> usize {
+        self.queue_depth.iter().copied().max().unwrap_or(0)
+    }
+
+    /// `kv_live / kv_budget` (0.0 when unbounded).
+    pub fn kv_occupancy(&self) -> f64 {
+        if self.kv_budget_bytes == 0 || self.kv_budget_bytes == usize::MAX {
+            return 0.0;
+        }
+        self.kv_live_bytes as f64 / self.kv_budget_bytes as f64
+    }
+
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     pub fn summary(&self) -> String {
+        let budget = if self.kv_budget_bytes == usize::MAX {
+            "inf".to_string()
+        } else {
+            format!("{}", self.kv_budget_bytes)
+        };
         format!(
             "requests={} tokens={} throughput={:.1} tok/s decode={:.1} tok/s prefill={:.1} tok/s \
-             mean_batch={:.2} ttft_p50={:?} p50={:?} p95={:?} mean={:?}",
+             mean_batch={:.2} ttft_p50={:?} p50={:?} p95={:?} p99={:?} mean={:?}\n\
+             queue_mean={:.2} queue_max={} kv_live={}B kv_peak={}B kv_budget={}B \
+             kv_occupancy={:.1}% prefix_hit_rate={:.1}% preemptions={} rejected={} truncated={}",
             self.requests,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -130,7 +189,18 @@ impl ServeMetrics {
             self.ttft.quantile(0.5),
             self.request_latency.quantile(0.5),
             self.request_latency.quantile(0.95),
+            self.request_latency.quantile(0.99),
             self.request_latency.mean(),
+            self.mean_queue_depth(),
+            self.max_queue_depth(),
+            self.kv_live_bytes,
+            self.kv_peak_bytes,
+            budget,
+            self.kv_occupancy() * 100.0,
+            self.prefix_hit_rate() * 100.0,
+            self.preemptions,
+            self.rejected,
+            self.engine.truncated_prompts,
         )
     }
 }
@@ -169,6 +239,54 @@ mod tests {
     }
 
     #[test]
+    fn overflow_bucket_clamps_to_max_recorded() {
+        // A sample past the last bucket (~100 s) used to report the
+        // u64::MAX/2 sentinel; it must report the real max instead.
+        let mut h = Histogram::new();
+        let big = Duration::from_secs(200);
+        h.record(big);
+        assert_eq!(h.quantile(0.99), big);
+        assert_eq!(h.max(), big);
+        // Mixed: the overflow sample caps, in-range quantiles clamp to
+        // the max rather than a bucket bound above it.
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(3));
+        h.record(big);
+        assert_eq!(h.quantile(1.0), big);
+        assert!(h.quantile(0.25) <= Duration::from_micros(4));
+    }
+
+    #[test]
+    fn summary_surfaces_serving_gauges() {
+        let m = ServeMetrics {
+            queue_depth: vec![0, 3, 1],
+            rejected: 2,
+            preemptions: 4,
+            kv_live_bytes: 512,
+            kv_peak_bytes: 1024,
+            kv_budget_bytes: 2048,
+            prefix_hits: 3,
+            prefix_lookups: 4,
+            engine: EngineStats { truncated_prompts: 7, ..Default::default() },
+            ..Default::default()
+        };
+        assert!((m.mean_queue_depth() - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.max_queue_depth(), 3);
+        assert!((m.kv_occupancy() - 0.25).abs() < 1e-9);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        let s = m.summary();
+        for needle in
+            ["p99=", "queue_max=3", "kv_live=512B", "preemptions=4", "rejected=2", "truncated=7"]
+        {
+            assert!(s.contains(needle), "summary missing {needle}: {s}");
+        }
+        // Unbounded pools print an inf budget, not usize::MAX.
+        let z = ServeMetrics { kv_budget_bytes: usize::MAX, ..Default::default() };
+        assert!(z.summary().contains("kv_budget=infB"));
+        assert_eq!(z.kv_occupancy(), 0.0);
+    }
+
+    #[test]
     fn throughput_math() {
         let m = ServeMetrics {
             tokens_out: 500,
@@ -186,6 +304,7 @@ mod tests {
                 decode_time: Duration::from_secs(2),
                 prefill_tokens: 1000,
                 decode_tokens: 300,
+                truncated_prompts: 0,
             },
             ..Default::default()
         };

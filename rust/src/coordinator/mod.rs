@@ -20,10 +20,14 @@ mod batcher;
 mod generate;
 mod metrics;
 mod native_gen;
+mod scheduler;
 mod server;
 
 pub use batcher::{BatcherCfg, DynamicBatcher};
-pub use generate::{EngineStats, GenEngine, PjrtGenerator, SamplingCfg};
+pub use generate::{
+    AdmitOutcome, EngineStats, GenEngine, PjrtGenerator, PoolStats, SamplingCfg, StepEngine,
+};
 pub use metrics::{Histogram, ServeMetrics};
 pub use native_gen::NativeGenerator;
+pub use scheduler::{ContinuousCfg, Scheduler};
 pub use server::{Coordinator, GenRequest, GenResponse};

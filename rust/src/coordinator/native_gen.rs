@@ -12,11 +12,32 @@
 //! O(T²·d) full-prefix recompute a naive loop pays — see PERF.md's
 //! decode section for measured numbers.
 
-use super::generate::{sample_index, EngineStats, GenEngine, SamplingCfg};
+use super::generate::{
+    sample_index, AdmitOutcome, EngineStats, GenEngine, PoolStats, SamplingCfg, StepEngine,
+};
 use crate::linalg::{par, Rng};
-use crate::model::{KvCache, NativeModel, QuantConfig};
+use crate::model::{KvCache, KvPagePool, KvPoolCfg, NativeModel, PrefixCache, QuantConfig};
 use anyhow::Result;
 use std::time::Instant;
+
+/// One in-flight (or finished-awaiting-collection) sequence of the
+/// step-granular serving path.
+struct StepSeq {
+    /// The fitted prompt (kept for re-prefill on resume).
+    prompt: Vec<u8>,
+    /// Generated tokens so far (first one sampled at admit).
+    out: Vec<u8>,
+    max_new: usize,
+    /// The already-sampled token the next decode step feeds.
+    next: u8,
+    /// `None` while preempted (pages reclaimed) or after collection.
+    cache: Option<KvCache>,
+    /// Per-sequence sampling stream (seeded from the engine seed and the
+    /// sequence id), so draws never depend on which other sequences
+    /// happen to share a step — sampled outputs are schedule-independent.
+    rng: Rng,
+    done: bool,
+}
 
 /// Native prefill+decode generator (FP or packed-quantized).
 pub struct NativeGenerator {
@@ -26,6 +47,18 @@ pub struct NativeGenerator {
     rng: Rng,
     max_batch: usize,
     stats: EngineStats,
+    /// Page pool for step-granular serving (unbounded unless configured
+    /// via [`Self::with_serve_pool`]).
+    pool: KvPagePool,
+    /// Prompt-prefix page sharing (off unless configured).
+    prefix: Option<PrefixCache>,
+    /// Sequence slab; ids are indices (never reused within an engine).
+    seqs: Vec<StepSeq>,
+    /// Running sequence indices in admission order — preemption evicts
+    /// from the back, so FCFS service order is preserved.
+    running: Vec<usize>,
+    /// Preempted ids not yet drained by the scheduler.
+    preempted_out: Vec<u64>,
 }
 
 impl NativeGenerator {
@@ -74,24 +107,98 @@ impl NativeGenerator {
             rng: Rng::new(sampling.seed ^ 0x5A113),
             max_batch,
             stats: EngineStats::default(),
+            pool: KvPagePool::unbounded(),
+            prefix: None,
+            seqs: Vec::new(),
+            running: Vec::new(),
+            preempted_out: Vec::new(),
         }
     }
 
+    /// Serve KV from a bounded page pool, optionally sharing prompt-prefix
+    /// pages across sequences — the continuous-batching configuration.
+    /// Affects the step-granular ([`StepEngine`]) path; `generate_batch`
+    /// keeps per-call unbounded caches.
+    pub fn with_serve_pool(mut self, cfg: KvPoolCfg, prefix_sharing: bool) -> Self {
+        self.pool = KvPagePool::new(cfg);
+        self.prefix = if prefix_sharing {
+            Some(PrefixCache::new(cfg.page_rows, 2 * self.model.cfg.n_layers))
+        } else {
+            None
+        };
+        self
+    }
+
     /// Clamp a prompt so at least one generated token fits under the
-    /// positional budget; an empty prompt becomes a single BOS token.
-    fn fit_prompt(&self, p: &[u8]) -> Vec<u8> {
+    /// positional budget (counting the truncation — capacity pressure is
+    /// surfaced, not swallowed); an empty prompt becomes a single BOS
+    /// token. Owns the prompt so the common in-budget case moves it.
+    fn fit_owned(&mut self, p: Vec<u8>) -> Vec<u8> {
         let max_prompt = self.model.cfg.seq - 1;
         if p.is_empty() {
             vec![0]
         } else if p.len() > max_prompt {
+            self.stats.truncated_prompts += 1;
             p[p.len() - max_prompt..].to_vec()
         } else {
-            p.to_vec()
+            p
         }
     }
 
     fn sample(&mut self, logits: &[f64]) -> u8 {
         sample_index(logits, self.sampling.temperature, &mut self.rng) as u8
+    }
+
+    /// A fresh cache on the serving pool, mode matching the engine path.
+    fn new_cache(&self) -> KvCache {
+        match &self.qc {
+            None => KvCache::fp_in(&self.model.cfg, &self.pool),
+            Some(q) => {
+                KvCache::packed_in(&self.model.cfg, q.kv_act.scheme, q.kv_act.clip_ratio, &self.pool)
+            }
+        }
+    }
+
+    fn seq_rng(&self, id: u64) -> Rng {
+        Rng::new(self.sampling.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5A117)
+    }
+
+    /// Build a cache holding `toks` (prefix-hit pages + prefill of the
+    /// rest), reserving pages up front and evicting idle prefix entries
+    /// under pressure. Returns the cache and the last-row logits, or
+    /// `None` when the pool has no capacity (left exactly as found —
+    /// dropping the partial cache releases anything reserved).
+    fn build_cache(&mut self, toks: &[u8]) -> Option<(KvCache, crate::linalg::Mat)> {
+        let mut cache = self.new_cache();
+        let mut start = 0usize;
+        if let Some(trie) = self.prefix.as_mut() {
+            if let Some(hit) = trie.lookup(toks) {
+                start = hit.matched;
+                cache.seed_prefix(hit);
+            }
+        }
+        let suffix = toks.len() - start;
+        while !cache.reserve_tokens(suffix) {
+            let evicted = match self.prefix.as_mut() {
+                Some(t) => t.evict_lru(1),
+                None => 0,
+            };
+            if evicted == 0 {
+                return None;
+            }
+        }
+        let t0 = Instant::now();
+        let logits = self.model.prefill_into(&toks[start..], self.qc.as_ref(), &mut cache);
+        self.stats.prefill_time += t0.elapsed();
+        self.stats.prefill_tokens += suffix as u64;
+        Some((cache, logits))
+    }
+
+    /// Reclaim a running sequence's pages; it re-prefills on resume.
+    fn preempt(&mut self, idx: usize) {
+        self.seqs[idx].cache = None;
+        self.running.retain(|&r| r != idx);
+        self.preempted_out.push(idx as u64);
     }
 }
 
@@ -106,7 +213,10 @@ impl GenEngine for NativeGenerator {
         // Prefill: one full-sequence pass per prompt, fanned out across
         // the worker pool (each inner forward then stays serial — one
         // level of parallelism, sequence-granular).
-        let fitted: Vec<Vec<u8>> = prompts.iter().map(|p| self.fit_prompt(p)).collect();
+        let mut fitted: Vec<Vec<u8>> = Vec::with_capacity(real);
+        for p in prompts {
+            fitted.push(self.fit_owned(p.clone()));
+        }
         let prompt_tokens: u64 = fitted.iter().map(|p| p.len() as u64).sum();
         let t0 = Instant::now();
         let (model, qc) = (&self.model, self.qc.as_ref());
@@ -164,6 +274,174 @@ impl GenEngine for NativeGenerator {
     }
 }
 
+impl StepEngine for NativeGenerator {
+    fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
+        if self.running.len() >= self.max_batch {
+            return Ok(AdmitOutcome::NoCapacity(prompt));
+        }
+        let fitted = self.fit_owned(prompt);
+        let Some((cache, logits)) = self.build_cache(&fitted) else {
+            // Hand the *fitted* prompt back: a retry won't double-count
+            // the truncation, and the queued copy shrinks to what will
+            // actually be served.
+            return Ok(AdmitOutcome::NoCapacity(fitted));
+        };
+        if let Some(trie) = self.prefix.as_mut() {
+            trie.insert(&fitted, |s, c| cache.stream_page(s, c));
+        }
+        let id = self.seqs.len() as u64;
+        let mut rng = self.seq_rng(id);
+        let tok = sample_index(logits.row(0), self.sampling.temperature, &mut rng) as u8;
+        let done = max_new <= 1 || !cache.has_room();
+        self.seqs.push(StepSeq {
+            prompt: fitted,
+            out: vec![tok],
+            max_new: max_new.max(1),
+            next: tok,
+            cache: Some(cache),
+            rng,
+            done,
+        });
+        self.running.push(id as usize);
+        Ok(AdmitOutcome::Admitted(id))
+    }
+
+    fn step(&mut self) -> Result<Vec<u64>> {
+        // Sequences that finished at admit time (or last step) leave
+        // before the batch forms — leaving is individual, never gated on
+        // neighbours.
+        let mut finished = Vec::new();
+        let seqs = &self.seqs;
+        self.running.retain(|&i| {
+            if seqs[i].done {
+                finished.push(i as u64);
+                false
+            } else {
+                true
+            }
+        });
+        if self.running.is_empty() {
+            return Ok(finished);
+        }
+        // Reserve this step's page per sequence; under a refused budget,
+        // evict idle prefix entries first, then preempt the
+        // most-recently-admitted sequence (FCFS-preserving LRU: the
+        // newest arrival has waited least and re-prefills cheapest via
+        // the prefix cache).
+        let mut active = self.running.clone();
+        let mut i = 0;
+        while i < active.len() {
+            let idx = active[i];
+            if self.seqs[idx].cache.as_mut().expect("running seq has a cache").reserve_tokens(1) {
+                i += 1;
+                continue;
+            }
+            if let Some(t) = self.prefix.as_mut() {
+                if t.evict_lru(1) > 0 {
+                    continue;
+                }
+            }
+            if active.len() == 1 {
+                // Sole survivor and the pool still refuses one row: the
+                // pool is smaller than one sequence — finish with what it
+                // has rather than livelock.
+                self.seqs[idx].done = true;
+                self.running.retain(|&r| r != idx);
+                finished.push(idx as u64);
+                return Ok(finished);
+            }
+            let victim = *active.last().unwrap();
+            self.preempt(victim);
+            active.pop();
+        }
+        // Decode the surviving batch: caches move out of the slab for the
+        // duration of the step (simultaneous &mut borrows), then return.
+        let toks: Vec<u8> = active.iter().map(|&i| self.seqs[i].next).collect();
+        let mut taken: Vec<KvCache> =
+            active.iter().map(|&i| self.seqs[i].cache.take().expect("reserved above")).collect();
+        let t0 = Instant::now();
+        let logits = {
+            let mut refs: Vec<&mut KvCache> = taken.iter_mut().collect();
+            self.model.decode_step(&mut refs, &toks, self.qc.as_ref())
+        };
+        self.stats.decode_time += t0.elapsed();
+        self.stats.decode_tokens += active.len() as u64;
+        for (r, (&idx, cache)) in active.iter().zip(taken).enumerate() {
+            let s = &mut self.seqs[idx];
+            let tok = sample_index(logits.row(r), self.sampling.temperature, &mut s.rng) as u8;
+            s.out.push(tok);
+            s.next = tok;
+            let room = cache.has_room();
+            s.cache = Some(cache);
+            if s.out.len() >= s.max_new || !room {
+                s.done = true;
+                finished.push(idx as u64);
+            }
+        }
+        let seqs = &self.seqs;
+        self.running.retain(|&i| !seqs[i].done);
+        Ok(finished)
+    }
+
+    fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+        let idx = id as usize;
+        let s = self.seqs.get_mut(idx)?;
+        s.done = true;
+        s.cache = None;
+        s.prompt = Vec::new();
+        self.running.retain(|&r| r != idx);
+        Some(std::mem::take(&mut s.out))
+    }
+
+    fn take_preempted(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.preempted_out)
+    }
+
+    fn resume(&mut self, id: u64) -> Result<bool> {
+        let idx = id as usize;
+        if self.running.len() >= self.max_batch {
+            return Ok(false);
+        }
+        let s = &self.seqs[idx];
+        assert!(!s.done && s.cache.is_none(), "resume target must be preempted");
+        // The cache held prompt + out[..n-1] rows at preemption (the last
+        // sampled token was drawn but not yet fed). Re-prefill exactly
+        // those rows — prefix pages usually cover the prompt, so this is
+        // cheap — and discard the logits: `next` was already drawn, so
+        // resume consumes no RNG and sampling is preemption-independent.
+        let mut toks = s.prompt.clone();
+        toks.extend_from_slice(&s.out[..s.out.len() - 1]);
+        let Some((cache, _logits)) = self.build_cache(&toks) else {
+            return Ok(false);
+        };
+        self.seqs[idx].cache = Some(cache);
+        self.running.push(idx);
+        Ok(true)
+    }
+
+    fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    fn max_concurrent(&self) -> usize {
+        self.max_batch
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            live_bytes: self.pool.live_bytes(),
+            peak_bytes: self.pool.peak_bytes(),
+            budget_bytes: self.pool.budget_bytes(),
+            prefix_hits: self.prefix.as_ref().map(|t| t.hits()).unwrap_or(0),
+            prefix_lookups: self.prefix.as_ref().map(|t| t.lookups()).unwrap_or(0),
+        }
+    }
+
+    fn take_stats(&mut self) -> EngineStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,11 +470,11 @@ mod tests {
         for o in &out {
             assert_eq!(o.len(), 5);
         }
-        let stats = g.take_stats();
+        let stats = GenEngine::take_stats(&mut g);
         assert_eq!(stats.prefill_tokens, 9);
         // 3 sequences × 4 decode steps (first token comes from prefill).
         assert_eq!(stats.decode_tokens, 12);
-        assert_eq!(g.take_stats().prefill_tokens, 0, "stats drained");
+        assert_eq!(GenEngine::take_stats(&mut g).prefill_tokens, 0, "stats drained");
     }
 
     #[test]
@@ -234,6 +512,123 @@ mod tests {
         let mut g = NativeGenerator::fp(tiny(), 2, SamplingCfg::default());
         let out = g.generate_batch(&[vec![1u8; 14]], 10).unwrap();
         assert_eq!(out[0].len(), 3);
+    }
+
+    #[test]
+    fn step_engine_matches_per_sequence_reference() {
+        // Greedy continuous decode with a mid-decode join must produce,
+        // per sequence, exactly the tokens a solo generate_batch run
+        // produces — join/leave cannot move a bit.
+        let sampling = SamplingCfg::default();
+        let prompts: [&[u8]; 3] = [&[3, 1, 4], &[7, 7], &[1, 2, 3, 4, 5]];
+        let max_news = [6usize, 3, 4];
+        let mut want = Vec::new();
+        for (p, &mn) in prompts.iter().zip(&max_news) {
+            let mut r = NativeGenerator::fp(tiny(), 1, sampling);
+            want.push(r.generate_batch(&[p.to_vec()], mn).unwrap().remove(0));
+        }
+        let mut g = NativeGenerator::fp(tiny(), 4, sampling)
+            .with_serve_pool(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX }, true);
+        assert!(matches!(g.admit(prompts[0].to_vec(), max_news[0]).unwrap(), AdmitOutcome::Admitted(0)));
+        assert!(matches!(g.admit(prompts[1].to_vec(), max_news[1]).unwrap(), AdmitOutcome::Admitted(1)));
+        let mut outs: Vec<Option<Vec<u8>>> = vec![None; 3];
+        for step in 0..32 {
+            if step == 1 {
+                // Joins while the first two are mid-decode.
+                assert!(matches!(
+                    g.admit(prompts[2].to_vec(), max_news[2]).unwrap(),
+                    AdmitOutcome::Admitted(2)
+                ));
+            }
+            for id in g.step().unwrap() {
+                outs[id as usize] = Some(g.take_output(id).unwrap());
+            }
+            if outs.iter().all(|o| o.is_some()) {
+                break;
+            }
+        }
+        for (o, w) in outs.iter().zip(&want) {
+            assert_eq!(o.as_ref().unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn preemption_and_resume_are_bit_exact_and_budgeted() {
+        let sampling = SamplingCfg::default();
+        let p0 = vec![1u8, 2, 3, 4, 5];
+        let p1 = vec![9u8, 8, 7];
+        let mn = 8;
+        let w0 = NativeGenerator::fp(tiny(), 1, sampling)
+            .generate_batch(&[p0.clone()], mn)
+            .unwrap()
+            .remove(0);
+        let w1 = NativeGenerator::fp(tiny(), 1, sampling)
+            .generate_batch(&[p1.clone()], mn)
+            .unwrap()
+            .remove(0);
+        // 4-row f64 pages at d=32 are 1 KiB; each sequence peaks at 16
+        // pages (4 streams × 4 pages), so a 20-page budget admits both
+        // but cannot hold both fully grown — preemption must kick in.
+        let cfgp = KvPoolCfg { page_rows: 4, budget_bytes: 20 * 1024 };
+        let mut g = NativeGenerator::fp(tiny(), 4, sampling).with_serve_pool(cfgp, false);
+        assert!(matches!(g.admit(p0.clone(), mn).unwrap(), AdmitOutcome::Admitted(0)));
+        assert!(matches!(g.admit(p1.clone(), mn).unwrap(), AdmitOutcome::Admitted(1)));
+        let mut outs: [Option<Vec<u8>>; 2] = [None, None];
+        let mut waiting: Vec<u64> = Vec::new();
+        let mut preemptions = 0usize;
+        for _ in 0..64 {
+            if outs.iter().all(|o| o.is_some()) {
+                break;
+            }
+            waiting.retain(|&id| !g.resume(id).unwrap());
+            for id in g.step().unwrap() {
+                outs[id as usize] = Some(g.take_output(id).unwrap());
+            }
+            let newly = g.take_preempted();
+            preemptions += newly.len();
+            waiting.extend(newly);
+            let ps = g.pool_stats();
+            assert!(ps.live_bytes <= ps.budget_bytes, "budget exceeded");
+            assert!(ps.peak_bytes <= ps.budget_bytes, "budget exceeded at peak");
+        }
+        assert!(preemptions > 0, "budget was sized to force preemption");
+        assert_eq!(outs[0].as_ref().unwrap(), &w0, "survivor diverged");
+        assert_eq!(outs[1].as_ref().unwrap(), &w1, "preempted+resumed sequence diverged");
+    }
+
+    #[test]
+    fn prefix_sharing_skips_shared_prefill() {
+        let sampling = SamplingCfg::default();
+        let shared: Vec<u8> = (1..=8).collect();
+        let mut a = shared.clone();
+        a.push(42);
+        let mut b = shared.clone();
+        b.push(17);
+        let mut g = NativeGenerator::fp(tiny(), 4, sampling)
+            .with_serve_pool(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX }, true);
+        assert!(matches!(g.admit(a, 2).unwrap(), AdmitOutcome::Admitted(0)));
+        assert_eq!(StepEngine::take_stats(&mut g).prefill_tokens, 9);
+        assert!(matches!(g.admit(b.clone(), 2).unwrap(), AdmitOutcome::Admitted(1)));
+        // 8 shared tokens (two full 4-row chunks) come from the trie;
+        // only the divergent tail prefills.
+        assert_eq!(StepEngine::take_stats(&mut g).prefill_tokens, 1);
+        let ps = g.pool_stats();
+        assert_eq!((ps.prefix_hits, ps.prefix_lookups), (1, 2));
+        // Shared pages must not change what gets generated.
+        let want = NativeGenerator::fp(tiny(), 1, sampling)
+            .generate_batch(&[b], 2)
+            .unwrap()
+            .remove(0);
+        let mut got = None;
+        while g.running() > 0 {
+            for id in g.step().unwrap() {
+                let out = g.take_output(id).unwrap();
+                if id == 1 {
+                    got = Some(out);
+                }
+            }
+        }
+        assert_eq!(got.unwrap(), want);
     }
 
     #[test]

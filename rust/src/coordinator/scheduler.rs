@@ -1,0 +1,438 @@
+//! Continuous-batching scheduler: the in-flight replacement for the
+//! one-shot batch loop.
+//!
+//! Each [`Scheduler::tick`] resumes what it can, admits from the queue up
+//! to the engine's slot cap and the page-pool watermark, runs one batched
+//! decode step, and replies to whatever finished — so sequences join
+//! mid-decode and leave individually at their own `max_new` instead of
+//! idling until the slowest member of a static batch drains.
+//!
+//! Backpressure is two-level: a bounded wait queue (`max_queue`, overflow
+//! rejected immediately) and an admission watermark on page-pool
+//! occupancy (new prefills stop while the pool is nearly full, leaving
+//! headroom for running sequences to grow). When growth still exhausts
+//! the budget, the engine preempts (newest first) and the scheduler
+//! resumes the victims front-first once pages free up. A liveness rule
+//! guarantees ticks always make progress: with an empty engine, a
+//! preempted sequence that cannot resume finishes with the tokens it has,
+//! and a queued request that cannot admit is rejected rather than wedging
+//! the queue.
+
+use super::{AdmitOutcome, GenRequest, GenResponse, ServeMetrics, StepEngine};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Continuous-serving policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ContinuousCfg {
+    /// Bounded wait queue: requests arriving past this depth are rejected
+    /// immediately (`GenResponse::rejected`).
+    pub max_queue: usize,
+    /// Stop admitting new sequences while page-pool occupancy is at or
+    /// above this fraction, reserving the remainder for in-flight growth.
+    pub admit_watermark: f64,
+}
+
+impl Default for ContinuousCfg {
+    fn default() -> Self {
+        ContinuousCfg { max_queue: 256, admit_watermark: 0.9 }
+    }
+}
+
+/// Drives a [`StepEngine`] one batched token at a time.
+pub struct Scheduler {
+    engine: Box<dyn StepEngine>,
+    cfg: ContinuousCfg,
+    queue: VecDeque<GenRequest>,
+    /// Engine sequence id → the request it serves (present while running
+    /// *or* preempted).
+    inflight: HashMap<u64, GenRequest>,
+    /// Preempted ids awaiting capacity, oldest first.
+    preempted: VecDeque<u64>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    started: Instant,
+}
+
+impl Scheduler {
+    pub fn new(
+        engine: Box<dyn StepEngine>,
+        cfg: ContinuousCfg,
+        metrics: Arc<Mutex<ServeMetrics>>,
+    ) -> Scheduler {
+        Scheduler {
+            engine,
+            cfg,
+            queue: VecDeque::new(),
+            inflight: HashMap::new(),
+            preempted: VecDeque::new(),
+            metrics,
+            started: Instant::now(),
+        }
+    }
+
+    /// Accept or reject an incoming request (bounded-queue backpressure).
+    pub fn enqueue(&mut self, req: GenRequest) {
+        if self.queue.len() >= self.cfg.max_queue {
+            self.metrics.lock().unwrap().rejected += 1;
+            let _ = req.reply.send(GenResponse {
+                id: req.id,
+                tokens: Vec::new(),
+                latency: req.enqueued.elapsed(),
+                batch_size: 0,
+                rejected: true,
+            });
+            return;
+        }
+        self.queue.push_back(req);
+    }
+
+    /// Nothing queued, running, or preempted.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.inflight.is_empty()
+    }
+
+    fn occupancy(&self) -> f64 {
+        let ps = self.engine.pool_stats();
+        if ps.budget_bytes == 0 || ps.budget_bytes == usize::MAX {
+            return 0.0;
+        }
+        ps.live_bytes as f64 / ps.budget_bytes as f64
+    }
+
+    /// One scheduling round: resume → admit → step → reply → account.
+    pub fn tick(&mut self) -> Result<()> {
+        // Resume preempted sequences front-first (FCFS among victims);
+        // stop at the first that still lacks capacity to keep ordering.
+        let mut resumed = 0usize;
+        while let Some(&id) = self.preempted.front() {
+            if !self.engine.resume(id)? {
+                break;
+            }
+            self.preempted.pop_front();
+            resumed += 1;
+        }
+
+        // Admit from the queue while slots and pages allow. An empty
+        // engine bypasses the watermark: occupancy held by shared prefix
+        // pages alone must not wedge an idle server.
+        let mut admitted = 0usize;
+        let mut ttfts: Vec<Duration> = Vec::new();
+        while !self.queue.is_empty()
+            && self.engine.running() < self.engine.max_concurrent()
+            && (self.engine.running() == 0 || self.occupancy() < self.cfg.admit_watermark)
+        {
+            let mut req = self.queue.pop_front().expect("queue non-empty");
+            let prompt = std::mem::take(&mut req.prompt);
+            match self.engine.admit(prompt, req.max_new)? {
+                AdmitOutcome::Admitted(id) => {
+                    // TTFT: queueing wait + this request's own prefill +
+                    // first sample, all inside `admit`.
+                    ttfts.push(req.enqueued.elapsed());
+                    self.inflight.insert(id, req);
+                    admitted += 1;
+                }
+                AdmitOutcome::NoCapacity(p) => {
+                    req.prompt = p;
+                    self.queue.push_front(req);
+                    break;
+                }
+            }
+        }
+
+        let bsz = self.engine.running();
+        let finished = if bsz > 0 { self.engine.step()? } else { Vec::new() };
+
+        let mut done: Vec<(GenRequest, Vec<u8>)> = Vec::new();
+        for id in finished {
+            if let Some(req) = self.inflight.remove(&id) {
+                let tokens = self.engine.take_output(id).unwrap_or_default();
+                done.push((req, tokens));
+            }
+        }
+
+        let newly = self.engine.take_preempted();
+        let n_preempted = newly.len() as u64;
+        self.preempted.extend(newly);
+
+        // Liveness: a tick that did nothing with an empty engine would
+        // repeat forever. Retire one blocked head: a preempted sequence
+        // finishes with the tokens it already generated; a queued request
+        // that cannot ever admit (e.g. needs more pages than exist) is
+        // rejected.
+        let mut forced_rejects = 0u64;
+        if resumed == 0 && admitted == 0 && bsz == 0 && self.engine.running() == 0 {
+            if let Some(id) = self.preempted.pop_front() {
+                if let Some(req) = self.inflight.remove(&id) {
+                    let tokens = self.engine.take_output(id).unwrap_or_default();
+                    done.push((req, tokens));
+                }
+            } else if let Some(req) = self.queue.pop_front() {
+                forced_rejects = 1;
+                let _ = req.reply.send(GenResponse {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    latency: req.enqueued.elapsed(),
+                    batch_size: 0,
+                    rejected: true,
+                });
+            }
+        }
+
+        let ps = self.engine.pool_stats();
+        let stats = self.engine.take_stats();
+        let mut met = self.metrics.lock().unwrap();
+        for t in ttfts {
+            met.ttft.record(t);
+        }
+        for (req, tokens) in done {
+            let latency = req.enqueued.elapsed();
+            let tokens: Vec<u8> = tokens.into_iter().take(req.max_new).collect();
+            met.requests += 1;
+            met.tokens_out += tokens.len() as u64;
+            met.request_latency.record(latency);
+            let _ = req.reply.send(GenResponse {
+                id: req.id,
+                tokens,
+                latency,
+                batch_size: bsz,
+                rejected: false,
+            });
+        }
+        met.preemptions += n_preempted;
+        met.rejected += forced_rejects;
+        met.queue_depth.push(self.queue.len());
+        if bsz > 0 {
+            met.batch_sizes.push(bsz);
+        }
+        met.kv_live_bytes = ps.live_bytes;
+        met.kv_peak_bytes = ps.peak_bytes;
+        met.kv_budget_bytes = ps.budget_bytes;
+        met.prefix_hits = ps.prefix_hits;
+        met.prefix_lookups = ps.prefix_lookups;
+        met.engine.accumulate(&stats);
+        met.elapsed = self.started.elapsed();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PoolStats;
+
+    /// Scriptable step engine: each step appends one `id as u8` token to
+    /// every running sequence; a sequence finishes at its own `max_new`.
+    struct MockEngine {
+        slots: usize,
+        /// Longest admissible prompt (models the page budget).
+        admit_cap: usize,
+        /// Preempt every running sequence on the first `step` call.
+        preempt_on_first_step: bool,
+        allow_resume: bool,
+        did_preempt: bool,
+        running: Vec<u64>,
+        seqs: HashMap<u64, (Vec<u8>, usize)>,
+        pending_preempt: Vec<u64>,
+        next_id: u64,
+    }
+
+    impl MockEngine {
+        fn new(slots: usize) -> MockEngine {
+            MockEngine {
+                slots,
+                admit_cap: usize::MAX,
+                preempt_on_first_step: false,
+                allow_resume: true,
+                did_preempt: false,
+                running: Vec::new(),
+                seqs: HashMap::new(),
+                pending_preempt: Vec::new(),
+                next_id: 0,
+            }
+        }
+    }
+
+    impl StepEngine for MockEngine {
+        fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
+            if self.running.len() >= self.slots || prompt.len() > self.admit_cap {
+                return Ok(AdmitOutcome::NoCapacity(prompt));
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            self.seqs.insert(id, (vec![id as u8], max_new.max(1)));
+            self.running.push(id);
+            Ok(AdmitOutcome::Admitted(id))
+        }
+
+        fn step(&mut self) -> Result<Vec<u64>> {
+            if self.preempt_on_first_step && !self.did_preempt {
+                self.did_preempt = true;
+                self.pending_preempt.append(&mut self.running);
+                return Ok(Vec::new());
+            }
+            let mut finished = Vec::new();
+            for &id in &self.running {
+                let (out, max_new) = self.seqs.get_mut(&id).unwrap();
+                if out.len() < *max_new {
+                    out.push(id as u8);
+                }
+                if out.len() >= *max_new {
+                    finished.push(id);
+                }
+            }
+            self.running.retain(|id| !finished.contains(id));
+            Ok(finished)
+        }
+
+        fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+            self.running.retain(|&r| r != id);
+            self.seqs.remove(&id).map(|(out, _)| out)
+        }
+
+        fn take_preempted(&mut self) -> Vec<u64> {
+            std::mem::take(&mut self.pending_preempt)
+        }
+
+        fn resume(&mut self, id: u64) -> Result<bool> {
+            if !self.allow_resume || self.running.len() >= self.slots {
+                return Ok(false);
+            }
+            self.running.push(id);
+            Ok(true)
+        }
+
+        fn running(&self) -> usize {
+            self.running.len()
+        }
+
+        fn max_concurrent(&self) -> usize {
+            self.slots
+        }
+
+        fn pool_stats(&self) -> PoolStats {
+            PoolStats::default()
+        }
+    }
+
+    fn drain(sched: &mut Scheduler) {
+        let mut guard = 0;
+        while !sched.idle() {
+            sched.tick().unwrap();
+            guard += 1;
+            assert!(guard < 1000, "scheduler failed to drain");
+        }
+    }
+
+    #[test]
+    fn sequences_join_and_leave_individually() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(4)),
+            ContinuousCfg::default(),
+            metrics.clone(),
+        );
+        // Different max_new: each leaves at its own length, none waits
+        // for the batch-wide max.
+        let mut rxs = Vec::new();
+        for (i, max_new) in [5usize, 1, 3].iter().enumerate() {
+            let (req, rx) = GenRequest::new(i as u64, vec![7; 2], *max_new);
+            sched.enqueue(req);
+            rxs.push((rx, *max_new));
+        }
+        drain(&mut sched);
+        for (rx, max_new) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(!resp.rejected);
+            assert_eq!(resp.tokens.len(), max_new);
+        }
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.requests, 3);
+        assert_eq!(met.tokens_out, 9);
+        assert_eq!(met.rejected, 0);
+        // The short sequence left while the long one kept running, so
+        // batch size varied across ticks.
+        assert!(met.batch_sizes.iter().any(|&b| b == 3), "{:?}", met.batch_sizes);
+        assert!(met.batch_sizes.iter().any(|&b| b < 3), "{:?}", met.batch_sizes);
+        assert_eq!(met.ttft.count(), 3);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(1)),
+            ContinuousCfg { max_queue: 1, ..Default::default() },
+            metrics.clone(),
+        );
+        let (a, rxa) = GenRequest::new(0, vec![1], 2);
+        let (b, rxb) = GenRequest::new(1, vec![2], 2);
+        sched.enqueue(a);
+        sched.enqueue(b); // queue full → rejected before any tick
+        let rb = rxb.recv().unwrap();
+        assert!(rb.rejected);
+        assert!(rb.tokens.is_empty());
+        drain(&mut sched);
+        assert!(!rxa.recv().unwrap().rejected);
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.rejected, 1);
+        assert_eq!(met.requests, 1);
+    }
+
+    #[test]
+    fn unservable_request_rejected_not_wedged() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut engine = MockEngine::new(2);
+        engine.admit_cap = 4; // prompts longer than 4 can never fit
+        let mut sched =
+            Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+        let (bad, rx_bad) = GenRequest::new(0, vec![9; 100], 3);
+        let (ok, rx_ok) = GenRequest::new(1, vec![9; 2], 2);
+        sched.enqueue(bad);
+        sched.enqueue(ok);
+        drain(&mut sched);
+        assert!(rx_bad.recv().unwrap().rejected);
+        let resp = rx_ok.recv().unwrap();
+        assert!(!resp.rejected);
+        assert_eq!(resp.tokens.len(), 2);
+        assert_eq!(metrics.lock().unwrap().rejected, 1);
+    }
+
+    #[test]
+    fn unresumable_preempted_sequence_finishes_with_partial_output() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut engine = MockEngine::new(2);
+        engine.preempt_on_first_step = true;
+        engine.allow_resume = false;
+        let mut sched =
+            Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+        let (req, rx) = GenRequest::new(0, vec![3; 2], 5);
+        sched.enqueue(req);
+        drain(&mut sched);
+        let resp = rx.recv().unwrap();
+        // Finished with what it had: the first token from admit, not the
+        // full five, and not a rejection.
+        assert!(!resp.rejected);
+        assert_eq!(resp.tokens.len(), 1);
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.preemptions, 1);
+        assert_eq!(met.requests, 1);
+    }
+
+    #[test]
+    fn preempted_sequences_resume_and_complete() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut engine = MockEngine::new(2);
+        engine.preempt_on_first_step = true; // resume allowed (default)
+        let mut sched =
+            Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+        let (req, rx) = GenRequest::new(0, vec![3; 2], 4);
+        sched.enqueue(req);
+        drain(&mut sched);
+        let resp = rx.recv().unwrap();
+        assert!(!resp.rejected);
+        assert_eq!(resp.tokens.len(), 4);
+        assert_eq!(metrics.lock().unwrap().preemptions, 1);
+    }
+}

@@ -1,7 +1,7 @@
 //! The coordinator: request intake → dynamic batcher → worker → responses.
 
-use super::{BatcherCfg, DynamicBatcher, GenEngine, ServeMetrics};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use super::{BatcherCfg, ContinuousCfg, DynamicBatcher, GenEngine, Scheduler, ServeMetrics, StepEngine};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -10,8 +10,18 @@ pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u8>,
     pub max_new: usize,
-    enqueued: Instant,
-    reply: Sender<GenResponse>,
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: Sender<GenResponse>,
+}
+
+#[cfg(test)]
+impl GenRequest {
+    /// Build a request plus its reply receiver directly, bypassing a
+    /// [`Coordinator`] — for driving a [`Scheduler`] in unit tests.
+    pub(crate) fn new(id: u64, prompt: Vec<u8>, max_new: usize) -> (GenRequest, Receiver<GenResponse>) {
+        let (reply, rx) = channel();
+        (GenRequest { id, prompt, max_new, enqueued: Instant::now(), reply }, rx)
+    }
 }
 
 /// A generation response.
@@ -21,6 +31,9 @@ pub struct GenResponse {
     pub tokens: Vec<u8>,
     pub latency: std::time::Duration,
     pub batch_size: usize,
+    /// Refused by backpressure (bounded queue overflow, or a request the
+    /// engine can never serve); `tokens` is empty.
+    pub rejected: bool,
 }
 
 /// Client handle + worker thread. Dropping the handle (or calling
@@ -54,10 +67,13 @@ impl Coordinator {
             let mut engine = make_engine();
             let started = Instant::now();
             let batcher = DynamicBatcher::new(rx, cfg);
-            while let Some(batch) = batcher.next_batch() {
+            while let Some(mut batch) = batcher.next_batch() {
                 let bsz = batch.len();
                 let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
-                let prompts: Vec<Vec<u8>> = batch.iter().map(|r| r.prompt.clone()).collect();
+                // Move the prompts out — requests only carry them in, so
+                // serving a batch needn't duplicate every prompt buffer.
+                let prompts: Vec<Vec<u8>> =
+                    batch.iter_mut().map(|r| std::mem::take(&mut r.prompt)).collect();
                 // The graph batch width may be smaller than the batch the
                 // policy admitted; chunk. Stats drain per chunk so TTFT
                 // can charge each request its own chunk's start offset
@@ -99,9 +115,63 @@ impl Coordinator {
                         tokens: tokens.into_iter().take(req.max_new).collect(),
                         latency,
                         batch_size: bsz,
+                        rejected: false,
                     });
                 }
                 met.elapsed = now - started;
+            }
+        });
+        Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// Start the continuous-batching serving loop on a worker thread.
+    ///
+    /// Unlike [`Coordinator::start`], requests do not wait for a batch to
+    /// form or for batch-mates to finish: the worker drains the intake
+    /// channel into a [`Scheduler`] and ticks it — sequences join the
+    /// running batch mid-decode and leave individually at their own
+    /// `max_new`. Backpressure (bounded queue + page-pool admission
+    /// watermark) can refuse requests; check [`GenResponse::rejected`].
+    pub fn start_continuous<F>(make_engine: F, cfg: ContinuousCfg) -> Coordinator
+    where
+        F: FnOnce() -> Box<dyn StepEngine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<GenRequest>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut sched = Scheduler::new(make_engine(), cfg, m2);
+            let mut open = true;
+            while open || !sched.idle() {
+                if open && sched.idle() {
+                    // Nothing to do: block for the next request instead
+                    // of spinning.
+                    match rx.recv() {
+                        Ok(r) => sched.enqueue(r),
+                        Err(_) => open = false,
+                    }
+                }
+                // Drain whatever else arrived so this tick sees the full
+                // queue (join happens at tick granularity).
+                while open {
+                    match rx.try_recv() {
+                        Ok(r) => sched.enqueue(r),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => open = false,
+                    }
+                }
+                if sched.idle() {
+                    continue;
+                }
+                if let Err(e) = sched.tick() {
+                    eprintln!("continuous serving failed: {e:#}");
+                    break;
+                }
             }
         });
         Coordinator {
@@ -246,6 +316,7 @@ mod tests {
                     decode_time: Duration::from_millis(20),
                     prefill_tokens: 5,
                     decode_tokens: 7,
+                    ..Default::default()
                 }
             }
         }
@@ -271,6 +342,91 @@ mod tests {
         assert_eq!(met.ttft.count(), met.requests);
         assert!(met.ttft.quantile(0.5) >= Duration::from_millis(10));
         assert!(met.decode_tok_s() > 0.0);
+    }
+
+    #[test]
+    fn continuous_serves_and_answers() {
+        use crate::coordinator::{AdmitOutcome, ContinuousCfg, PoolStats, StepEngine};
+
+        /// Step engine echoing prompt bytes back one per step, 2 slots.
+        struct StepEcho {
+            seqs: std::collections::HashMap<u64, (Vec<u8>, Vec<u8>, usize)>,
+            running: Vec<u64>,
+            next_id: u64,
+        }
+        impl StepEngine for StepEcho {
+            fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
+                if self.running.len() >= self.max_concurrent() {
+                    return Ok(AdmitOutcome::NoCapacity(prompt));
+                }
+                let id = self.next_id;
+                self.next_id += 1;
+                let mut remaining = prompt;
+                remaining.reverse();
+                let first = remaining.pop().unwrap_or(0);
+                self.seqs.insert(id, (remaining, vec![first], max_new.max(1)));
+                self.running.push(id);
+                Ok(AdmitOutcome::Admitted(id))
+            }
+            fn step(&mut self) -> Result<Vec<u64>> {
+                let mut fin = Vec::new();
+                for &id in &self.running {
+                    let (rem, out, max_new) = self.seqs.get_mut(&id).unwrap();
+                    if out.len() < *max_new {
+                        out.push(rem.pop().unwrap_or(0));
+                    }
+                    if out.len() >= *max_new {
+                        fin.push(id);
+                    }
+                }
+                self.running.retain(|id| !fin.contains(id));
+                Ok(fin)
+            }
+            fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+                self.running.retain(|&r| r != id);
+                self.seqs.remove(&id).map(|(_, out, _)| out)
+            }
+            fn take_preempted(&mut self) -> Vec<u64> {
+                Vec::new()
+            }
+            fn resume(&mut self, _id: u64) -> Result<bool> {
+                Ok(false)
+            }
+            fn running(&self) -> usize {
+                self.running.len()
+            }
+            fn max_concurrent(&self) -> usize {
+                2
+            }
+            fn pool_stats(&self) -> PoolStats {
+                PoolStats::default()
+            }
+        }
+
+        let coord = Coordinator::start_continuous(
+            || {
+                Box::new(StepEcho {
+                    seqs: Default::default(),
+                    running: Vec::new(),
+                    next_id: 0,
+                }) as Box<dyn StepEngine>
+            },
+            ContinuousCfg::default(),
+        );
+        // 4 requests through 2 slots: the scheduler queues the overflow
+        // and admits as slots free, mid-decode of whoever is running.
+        let rxs: Vec<_> =
+            (0..4u8).map(|i| coord.submit(vec![10 + i, 20 + i, 30], 2)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(!resp.rejected);
+            assert_eq!(resp.tokens, vec![10 + i as u8, 20 + i as u8]);
+        }
+        let met = coord.shutdown();
+        assert_eq!(met.requests, 4);
+        assert_eq!(met.tokens_out, 8);
+        assert_eq!(met.rejected, 0);
+        assert!(!met.queue_depth.is_empty());
     }
 
     #[test]

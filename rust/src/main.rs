@@ -6,6 +6,7 @@
 //! catquant quantize --model small --transform cat [--wquant gptq] [--save-artifact DIR]
 //! catquant eval --model small --transform cat [--wquant rtn] [--windows N]
 //! catquant serve --model small --mode fp|cat-w4a4 [--engine pjrt|native] [--artifact DIR] [--requests N] [--max-new N]
+//!                [--continuous] [--kv-budget-mb N] [--page-rows N] [--prefix-sharing true|false] [--max-queue N] [--admit-watermark F]
 //! ```
 //!
 //! Argument parsing is hand-rolled: the offline vendor set has no clap.
@@ -13,8 +14,10 @@
 use anyhow::{bail, Context, Result};
 use catquant::calib::Corpus;
 use catquant::coordinator::{
-    BatcherCfg, Coordinator, GenEngine, NativeGenerator, PjrtGenerator, SamplingCfg,
+    BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, PjrtGenerator,
+    SamplingCfg, StepEngine,
 };
+use catquant::model::KvPoolCfg;
 use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits};
 use catquant::experiments as exp;
 use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
@@ -261,6 +264,55 @@ fn report_eval(model: &str, label: &str, ppl: f64, tasks: &[catquant::eval::Task
     println!("  0-shot avg: {mean:.1}%");
 }
 
+/// Quantization state for native serving: a prebuilt artifact boots in
+/// milliseconds; a missing/stale one falls back to a fresh cat-block
+/// W4A4 build (saved back when an artifact dir was given and empty). The
+/// on-disk artifact is the user's — never overwritten.
+fn native_quant_config(
+    manifest: &Manifest,
+    model: &str,
+    native: &catquant::model::NativeModel,
+    artifact: Option<&std::path::Path>,
+    seed: u64,
+) -> catquant::model::QuantConfig {
+    if let Some(dir) = artifact {
+        if dir.join("artifact.json").exists() {
+            let t0 = std::time::Instant::now();
+            match load_artifact(dir, native) {
+                Ok(qc) => {
+                    eprintln!(
+                        "[serve] loaded artifact {} in {:.0} ms (no calibration run)",
+                        dir.display(),
+                        t0.elapsed().as_secs_f64() * 1e3
+                    );
+                    return qc;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[serve] artifact {} unusable ({e}); serving a fresh \
+                         cat-block W4A4 build (artifact left untouched)",
+                        dir.display()
+                    );
+                }
+            }
+        }
+    }
+    let zoo = exp::load_zoo(manifest, model, seed).expect("zoo");
+    let (qc, rep) = build_quant_config(
+        &zoo.model,
+        &zoo.calib,
+        &PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed).plan(),
+    )
+    .expect("pipeline");
+    if let Some(dir) = artifact {
+        if !dir.join("artifact.json").exists() {
+            save_artifact(&qc, &rep, dir).expect("save artifact");
+            eprintln!("[serve] built + saved artifact to {}", dir.display());
+        }
+    }
+    qc
+}
+
 fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     let model = args.flag("model").unwrap_or("small").to_string();
     let mode = args.flag("mode").unwrap_or("fp").to_string();
@@ -273,6 +325,14 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.8);
     let seed = args.u64_flag("seed", 0);
+    // Continuous-batching knobs (native engine only).
+    let continuous = args.flag("continuous").map(|v| v != "false").unwrap_or(false);
+    let page_rows = args.usize_flag("page-rows", catquant::model::DEFAULT_PAGE_ROWS);
+    let kv_budget_mb = args.usize_flag("kv-budget-mb", 64);
+    let prefix_sharing = args.flag("prefix-sharing").map(|v| v != "false").unwrap_or(true);
+    let max_queue = args.usize_flag("max-queue", 256);
+    let admit_watermark: f64 =
+        args.flag("admit-watermark").and_then(|v| v.parse().ok()).unwrap_or(0.9);
     anyhow::ensure!(
         engine_kind == "pjrt" || engine_kind == "native",
         "unknown --engine {engine_kind} (expected pjrt or native)"
@@ -281,100 +341,107 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
         !(mode == "fp" && artifact.is_some()),
         "--artifact has no effect with --mode fp; drop the flag or pick a quantized mode"
     );
+    anyhow::ensure!(
+        !continuous || engine_kind == "native",
+        "--continuous requires --engine native (the step-granular path)"
+    );
 
     let manifest2 = manifest.clone();
     let model2 = model.clone();
     let mode2 = mode.clone();
     let batcher_cfg = BatcherCfg::default();
     let max_batch = batcher_cfg.max_batch;
-    let coord = Coordinator::start(
-        move || {
-            let sampling = SamplingCfg { temperature, seed };
-            // Weights load without a calibration pass; only a pipeline
-            // (re)build below pays calibration — the cost artifacts
-            // exist to keep off the boot path.
-            let native = exp::load_model(&manifest2, &model2).expect("model");
-            // A prebuilt artifact boots in milliseconds. A stale/corrupt
-            // one falls back to a fresh build instead of wedging the
-            // worker — but the on-disk artifact is the user's (possibly
-            // a very different plan), so it is never overwritten.
-            let try_artifact = |native: &catquant::model::NativeModel| {
-                let dir = artifact.as_ref()?;
-                if !dir.join("artifact.json").exists() {
-                    return None;
-                }
-                let t0 = std::time::Instant::now();
-                match load_artifact(dir, native) {
-                    Ok(qc) => {
-                        eprintln!(
-                            "[serve] loaded artifact {} in {:.0} ms (no calibration run)",
-                            dir.display(),
-                            t0.elapsed().as_secs_f64() * 1e3
+    let coord = if continuous {
+        let pool_cfg = KvPoolCfg { page_rows, budget_bytes: kv_budget_mb << 20 };
+        let artifact2 = artifact.clone();
+        Coordinator::start_continuous(
+            move || {
+                let sampling = SamplingCfg { temperature, seed };
+                let native = exp::load_model(&manifest2, &model2).expect("model");
+                let g = if mode2 == "fp" {
+                    NativeGenerator::fp(native, max_batch, sampling)
+                } else {
+                    let qc = native_quant_config(
+                        &manifest2,
+                        &model2,
+                        &native,
+                        artifact2.as_deref(),
+                        seed,
+                    );
+                    NativeGenerator::quant(native, qc, max_batch, sampling)
+                };
+                Box::new(g.with_serve_pool(pool_cfg, prefix_sharing)) as Box<dyn StepEngine>
+            },
+            ContinuousCfg { max_queue, admit_watermark },
+        )
+    } else {
+        Coordinator::start(
+            move || {
+                let sampling = SamplingCfg { temperature, seed };
+                // Weights load without a calibration pass; only a pipeline
+                // (re)build pays calibration — the cost artifacts exist to
+                // keep off the boot path.
+                let native = exp::load_model(&manifest2, &model2).expect("model");
+                let gen: Box<dyn GenEngine> = match (engine_kind.as_str(), mode2 == "fp") {
+                    ("native", true) => {
+                        Box::new(NativeGenerator::fp(native, max_batch, sampling))
+                    }
+                    ("native", false) => {
+                        let qc = native_quant_config(
+                            &manifest2,
+                            &model2,
+                            &native,
+                            artifact.as_deref(),
+                            seed,
                         );
-                        Some(qc)
+                        Box::new(NativeGenerator::quant(native, qc, max_batch, sampling))
                     }
-                    Err(e) => {
-                        eprintln!(
-                            "[serve] artifact {} unusable ({e}); serving a fresh \
-                             cat-block W4A4 build (artifact left untouched)",
-                            dir.display()
+                    (_, true) => {
+                        let engine =
+                            Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+                        Box::new(
+                            PjrtGenerator::fp(engine, &model2, &native.params, sampling)
+                                .expect("generator"),
+                        )
+                    }
+                    (_, false) => {
+                        let engine =
+                            Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
+                        let qc = native_quant_config(
+                            &manifest2,
+                            &model2,
+                            &native,
+                            artifact.as_deref(),
+                            seed,
                         );
-                        None
+                        Box::new(
+                            PjrtGenerator::quant(engine, &model2, &native.params, &qc, sampling)
+                                .expect("generator"),
+                        )
                     }
-                }
-            };
-            let build = || {
-                let zoo = exp::load_zoo(&manifest2, &model2, seed).expect("zoo");
-                let (qc, rep) = build_quant_config(
-                    &zoo.model,
-                    &zoo.calib,
-                    &PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed)
-                        .plan(),
-                )
-                .expect("pipeline");
-                if let Some(dir) = &artifact {
-                    if !dir.join("artifact.json").exists() {
-                        save_artifact(&qc, &rep, dir).expect("save artifact");
-                        eprintln!("[serve] built + saved artifact to {}", dir.display());
-                    }
-                }
-                qc
-            };
-            let gen: Box<dyn GenEngine> = match (engine_kind.as_str(), mode2 == "fp") {
-                ("native", true) => Box::new(NativeGenerator::fp(native, max_batch, sampling)),
-                ("native", false) => {
-                    let qc = try_artifact(&native).unwrap_or_else(build);
-                    Box::new(NativeGenerator::quant(native, qc, max_batch, sampling))
-                }
-                (_, true) => {
-                    let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
-                    Box::new(
-                        PjrtGenerator::fp(engine, &model2, &native.params, sampling)
-                            .expect("generator"),
-                    )
-                }
-                (_, false) => {
-                    let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
-                    let qc = try_artifact(&native).unwrap_or_else(build);
-                    Box::new(
-                        PjrtGenerator::quant(engine, &model2, &native.params, &qc, sampling)
-                            .expect("generator"),
-                    )
-                }
-            };
-            gen
-        },
-        batcher_cfg,
-    );
+                };
+                gen
+            },
+            batcher_cfg,
+        )
+    };
 
     // Open-loop synthetic client: prompts drawn from the eval corpus.
     let corpus = Corpus::load(&manifest.corpus_eval)?;
     let prompts = corpus.sample_sequences(n_requests, manifest.prompt_len, seed ^ 0xC11E17);
-    println!("serving {n_requests} requests (model={model} mode={mode} max_new={max_new}) ...");
+    let sched = if continuous { "continuous" } else { "static" };
+    println!(
+        "serving {n_requests} requests (model={model} mode={mode} max_new={max_new} scheduler={sched}) ..."
+    );
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = prompts.into_iter().map(|p| coord.submit(p, max_new)).collect();
+    let mut rejected = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
+        if resp.rejected {
+            rejected += 1;
+            continue;
+        }
         if i < 3 {
             println!(
                 "  req {i}: {} tokens in {:?} (batch={}) -> {:?}...",
@@ -384,6 +451,9 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                 &resp.tokens[..resp.tokens.len().min(8)]
             );
         }
+    }
+    if rejected > 0 {
+        println!("  {rejected} requests rejected by backpressure");
     }
     let wall = t0.elapsed();
     let metrics = coord.shutdown();

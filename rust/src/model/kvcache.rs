@@ -1,8 +1,16 @@
-//! Per-sequence KV cache for incremental decode.
+//! Per-sequence KV cache for incremental decode, backed by pool pages.
 //!
 //! One [`KvCache`] holds, per layer, the attention keys and values of
 //! every token processed so far — the state that turns generation from
 //! O(T²) full-prefix recomputes into O(T) single-token steps.
+//!
+//! Since the paged rework, a cache is a **page table**: each K/V stream
+//! is a `Vec<Arc<KvPage>>` over fixed-size pages allocated from a
+//! [`KvPagePool`] (see [`super::kvpool`]). `row(i)` resolves through the
+//! table to `pages[i / page_rows]`, row `i % page_rows`. Pages may be
+//! shared with other sequences (prefix cache hits, [`KvCache::fork`]);
+//! an append into a shared page copies it first, so writers can never
+//! corrupt a neighbour.
 //!
 //! Two storage modes, matching the two native forward paths:
 //!
@@ -10,95 +18,147 @@
 //! * **Packed** — per-token *integer activation codes*
 //!   ([`QuantizedTensor`]). The quantized forward fake-quantizes K/V
 //!   per token, and per-token grids are row-local, so a token's codes
-//!   never change as the sequence grows; dequantizing a cached row is
-//!   bit-identical to the fake-quant value the full forward would
-//!   compute. A W4A4 cache therefore stores ~1/16 the bytes of the FP
-//!   cache while reproducing `forward_quant` logits exactly.
+//!   never change as the sequence grows — and never change when its row
+//!   moves into a page, which is why paging preserves bit-exactness vs
+//!   `forward`/`forward_quant` by construction. A W4A4 cache stores a
+//!   fraction of the FP bytes while reproducing logits exactly.
+//!
+//! [`QuantizedTensor`]: crate::quant::QuantizedTensor
 
+use crate::model::kvpool::{KvPage, KvPagePool, PageMode, PoolState, PrefixHit};
 use crate::model::ModelConfig;
-use crate::quant::{QScheme, QuantizedTensor};
+use crate::quant::QScheme;
+use std::sync::Arc;
 
-/// Growable K or V storage for one layer.
-pub(crate) enum KvStore {
-    /// Row-major f64 rows (`len × cols`).
-    Fp { data: Vec<f64>, cols: usize },
-    /// Packed per-token codes on the activation scheme's grid.
-    Packed { codes: QuantizedTensor, clip_ratio: f64 },
+/// One K or V stream of a sequence: a page table over pool-owned pages.
+pub(crate) struct KvStream {
+    pages: Vec<Arc<KvPage>>,
+    len: usize,
+    cols: usize,
+    mode: PageMode,
+    pool: Arc<PoolState>,
 }
 
-impl KvStore {
-    /// `cap_rows` pre-reserves the positional budget so the decode hot
-    /// loop's pushes never reallocate mid-generation.
-    fn fp(cols: usize, cap_rows: usize) -> KvStore {
-        KvStore::Fp { data: Vec::with_capacity(cols * cap_rows), cols }
+impl KvStream {
+    fn new(cols: usize, mode: PageMode, pool: &Arc<PoolState>) -> KvStream {
+        KvStream { pages: Vec::new(), len: 0, cols, mode, pool: pool.clone() }
     }
 
-    fn packed(cols: usize, scheme: QScheme, clip_ratio: f64, cap_rows: usize) -> KvStore {
-        KvStore::Packed {
-            codes: QuantizedTensor::empty_with_capacity(cols, scheme, cap_rows),
-            clip_ratio,
+    fn page_rows(&self) -> usize {
+        self.pool.cfg.page_rows
+    }
+
+    /// Grow the page table so `extra` more rows fit without allocating in
+    /// the push hot path. All-or-nothing per stream: returns `false` (and
+    /// leaves previously reserved pages in place) when the pool budget
+    /// refuses a page — the caller rolls the whole cache back with
+    /// [`Self::trim_reserved`].
+    pub(crate) fn reserve_rows(&mut self, extra: usize) -> bool {
+        let need = (self.len + extra).div_ceil(self.page_rows());
+        while self.pages.len() < need {
+            match KvPage::alloc(&self.pool, self.cols, self.mode) {
+                Some(p) => self.pages.push(p),
+                None => return false,
+            }
         }
+        true
+    }
+
+    /// Drop reserved-but-unused tail pages (rollback of a failed or
+    /// abandoned reservation), releasing their pool charge.
+    pub(crate) fn trim_reserved(&mut self) {
+        let keep = self.len.div_ceil(self.page_rows());
+        self.pages.truncate(keep);
+    }
+
+    /// The page the next pushed row lands in, uniquely held: allocates a
+    /// fresh page at a page boundary, copies a shared page first
+    /// (copy-on-write). Panics when the pool refuses either charge —
+    /// serving callers reserve via [`KvCache::reserve_tokens`] first, so
+    /// the push path itself never fails.
+    fn writable_tail(&mut self) -> &mut KvPage {
+        let pi = self.len / self.page_rows();
+        if pi == self.pages.len() {
+            let page = KvPage::alloc(&self.pool, self.cols, self.mode)
+                .expect("KV page budget exhausted: reserve_tokens before pushing");
+            self.pages.push(page);
+        }
+        if Arc::get_mut(&mut self.pages[pi]).is_none() {
+            let copy = KvPage::cow_clone(&self.pages[pi])
+                .expect("KV page budget exhausted during copy-on-write");
+            self.pages[pi] = copy;
+        }
+        Arc::get_mut(&mut self.pages[pi]).expect("page uniquely held after CoW")
     }
 
     /// Append one token row. Packed mode quantizes on the row's dynamic
     /// per-token grid (the same grid `kv_quant` would pick).
     pub(crate) fn push(&mut self, row: &[f64]) {
-        match self {
-            KvStore::Fp { data, cols } => {
-                debug_assert_eq!(row.len(), *cols);
-                data.extend_from_slice(row);
-            }
-            KvStore::Packed { codes, clip_ratio } => codes.push_row(row, *clip_ratio),
-        }
+        self.writable_tail().store.push(row);
+        self.len += 1;
     }
 
     /// Append one token row and write the value attention should see
     /// back into `out`: the raw row for FP, the dequantized pushed codes
     /// for packed — bit-identical to per-token fake-quant of `row`.
     pub(crate) fn push_fake_quant(&mut self, row: &[f64], out: &mut [f64]) {
-        self.push(row);
-        match self {
-            KvStore::Fp { .. } => out.copy_from_slice(row),
-            KvStore::Packed { codes, .. } => codes.deq_row_into(codes.rows() - 1, out),
-        }
+        self.writable_tail().store.push_fake_quant(row, out);
+        self.len += 1;
     }
 
-    /// Borrow token row `i`, dequantizing into `buf` when packed. The FP
-    /// mode returns the stored slice; `buf` must be `cols` wide.
+    /// Borrow token row `i`, resolving through the page table and
+    /// dequantizing into `buf` when packed (`buf` must be `cols` wide).
     pub(crate) fn row<'a>(&'a self, i: usize, buf: &'a mut [f64]) -> &'a [f64] {
-        match self {
-            KvStore::Fp { data, cols } => &data[i * cols..(i + 1) * cols],
-            KvStore::Packed { codes, .. } => {
-                codes.deq_row_into(i, buf);
-                buf
-            }
-        }
+        debug_assert!(i < self.len);
+        let pr = self.page_rows();
+        self.pages[i / pr].store.row(i % pr, buf)
     }
 
-    fn len(&self) -> usize {
-        match self {
-            KvStore::Fp { data, cols } => data.len() / cols,
-            KvStore::Packed { codes, .. } => codes.rows(),
-        }
+    pub(crate) fn len(&self) -> usize {
+        self.len
     }
 
+    /// Pool bytes charged by this stream's pages. Shared pages count in
+    /// every table that references them; the pool's `live_bytes` is the
+    /// deduplicated truth.
     fn bytes(&self) -> usize {
-        match self {
-            KvStore::Fp { data, .. } => data.len() * std::mem::size_of::<f64>(),
-            KvStore::Packed { codes, .. } => codes.packed_bytes(),
+        self.pages.iter().map(|p| p.bytes()).sum()
+    }
+
+    /// Share page `chunk` (must be full) — the prefix trie's handle.
+    fn page(&self, chunk: usize) -> Arc<KvPage> {
+        debug_assert!((chunk + 1) * self.page_rows() <= self.len, "only full pages are shared");
+        self.pages[chunk].clone()
+    }
+
+    /// Seed an empty stream with shared full pages covering `rows` rows.
+    fn seed(&mut self, pages: Vec<Arc<KvPage>>, rows: usize) {
+        assert_eq!(self.len, 0, "seed_prefix on a non-empty cache");
+        assert_eq!(rows, pages.len() * self.page_rows(), "prefix pages must be full");
+        self.pages = pages;
+        self.len = rows;
+    }
+
+    fn fork(&self) -> KvStream {
+        KvStream {
+            pages: self.pages.clone(),
+            len: self.len,
+            cols: self.cols,
+            mode: self.mode,
+            pool: self.pool.clone(),
         }
     }
 }
 
-/// K and V stores for one layer.
+/// K and V streams for one layer.
 pub(crate) struct LayerKv {
-    pub(crate) k: KvStore,
-    pub(crate) v: KvStore,
+    pub(crate) k: KvStream,
+    pub(crate) v: KvStream,
 }
 
-/// The incremental-decode state of one sequence: per-layer K/V plus the
-/// number of tokens processed. Built by [`NativeModel::prefill`] and
-/// advanced by [`NativeModel::decode_step`].
+/// The incremental-decode state of one sequence: per-layer K/V page
+/// tables plus the number of tokens processed. Built by
+/// [`NativeModel::prefill`] and advanced by [`NativeModel::decode_step`].
 ///
 /// [`NativeModel::prefill`]: crate::model::NativeModel::prefill
 /// [`NativeModel::decode_step`]: crate::model::NativeModel::decode_step
@@ -107,27 +167,45 @@ pub struct KvCache {
     len: usize,
     /// Max tokens (the model's positional-embedding budget).
     capacity: usize,
+    pool: KvPagePool,
 }
 
 impl KvCache {
-    /// FP cache for `cfg` (K/V storage pre-reserved to the positional
-    /// budget — no reallocation during decode).
-    pub fn fp(cfg: &ModelConfig) -> KvCache {
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerKv { k: KvStore::fp(cfg.d, cfg.seq), v: KvStore::fp(cfg.d, cfg.seq) })
-            .collect();
-        KvCache { layers, len: 0, capacity: cfg.seq }
-    }
-
-    /// Packed cache on the quantized path's activation grid.
-    pub fn packed(cfg: &ModelConfig, scheme: QScheme, clip_ratio: f64) -> KvCache {
+    fn build(cfg: &ModelConfig, mode: PageMode, pool: &KvPagePool) -> KvCache {
         let layers = (0..cfg.n_layers)
             .map(|_| LayerKv {
-                k: KvStore::packed(cfg.d, scheme, clip_ratio, cfg.seq),
-                v: KvStore::packed(cfg.d, scheme, clip_ratio, cfg.seq),
+                k: KvStream::new(cfg.d, mode, pool.state()),
+                v: KvStream::new(cfg.d, mode, pool.state()),
             })
             .collect();
-        KvCache { layers, len: 0, capacity: cfg.seq }
+        KvCache { layers, len: 0, capacity: cfg.seq, pool: pool.clone() }
+    }
+
+    /// FP cache for `cfg` on a private unbounded pool — the standalone
+    /// path (evals, tests) where no serving budget applies.
+    pub fn fp(cfg: &ModelConfig) -> KvCache {
+        Self::fp_in(cfg, &KvPagePool::unbounded())
+    }
+
+    /// Packed cache on the quantized path's activation grid, private
+    /// unbounded pool.
+    pub fn packed(cfg: &ModelConfig, scheme: QScheme, clip_ratio: f64) -> KvCache {
+        Self::packed_in(cfg, scheme, clip_ratio, &KvPagePool::unbounded())
+    }
+
+    /// FP cache drawing pages from a shared serving pool.
+    pub fn fp_in(cfg: &ModelConfig, pool: &KvPagePool) -> KvCache {
+        Self::build(cfg, PageMode::Fp, pool)
+    }
+
+    /// Packed cache drawing pages from a shared serving pool.
+    pub fn packed_in(
+        cfg: &ModelConfig,
+        scheme: QScheme,
+        clip_ratio: f64,
+        pool: &KvPagePool,
+    ) -> KvCache {
+        Self::build(cfg, PageMode::Packed { scheme, clip_ratio }, pool)
     }
 
     /// Whether this cache stores packed codes (the quantized path) —
@@ -140,10 +218,8 @@ impl KvCache {
     /// packed — decode steps assert it matches `qc.kv_act`, since cached
     /// codes from one grid are meaningless under another.
     pub(crate) fn packed_grid(&self) -> Option<(QScheme, f64)> {
-        match self.layers.first() {
-            Some(LayerKv { k: KvStore::Packed { codes, clip_ratio }, .. }) => {
-                Some((codes.scheme(), *clip_ratio))
-            }
+        match self.layers.first().map(|l| l.k.mode) {
+            Some(PageMode::Packed { scheme, clip_ratio }) => Some((scheme, clip_ratio)),
             _ => None,
         }
     }
@@ -167,6 +243,33 @@ impl KvCache {
         self.capacity
     }
 
+    /// The pool this cache's pages charge against.
+    pub fn pool(&self) -> &KvPagePool {
+        &self.pool
+    }
+
+    /// Reserve page capacity for `n` more tokens across every stream.
+    /// All-or-nothing: on a budget refusal every stream's unused reserved
+    /// pages are rolled back and `false` is returned, so a failed
+    /// admission leaves the pool exactly as it found it.
+    pub fn reserve_tokens(&mut self, n: usize) -> bool {
+        for l in &mut self.layers {
+            if !l.k.reserve_rows(n) || !l.v.reserve_rows(n) {
+                self.trim_reserved();
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop reserved-but-unused tail pages on every stream.
+    pub fn trim_reserved(&mut self) {
+        for l in &mut self.layers {
+            l.k.trim_reserved();
+            l.v.trim_reserved();
+        }
+    }
+
     /// Advance the token count by `n` after every layer has pushed its
     /// K/V rows for those tokens.
     pub(crate) fn advance(&mut self, n: usize) {
@@ -174,8 +277,51 @@ impl KvCache {
         debug_assert!(self.layers.iter().all(|l| l.k.len() == self.len && l.v.len() == self.len));
     }
 
-    /// Total K/V bytes held (packed codes + grids, or raw f64) — the
-    /// footprint number PERF.md's decode section reports.
+    /// A second table over the same pages: O(layers) to create, shares
+    /// every page by refcount, and copy-on-write isolates the first
+    /// divergent append. Both forks read back bit-identical rows for the
+    /// shared prefix forever.
+    pub fn fork(&self) -> KvCache {
+        KvCache {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerKv { k: l.k.fork(), v: l.v.fork() })
+                .collect(),
+            len: self.len,
+            capacity: self.capacity,
+            pool: self.pool.clone(),
+        }
+    }
+
+    /// Seed an empty cache with a prefix-cache hit: each stream's table
+    /// starts with the shared full pages, and `len()` jumps to
+    /// `hit.matched` so prefill continues from there. Stream order is
+    /// `layer0.k, layer0.v, layer1.k, …` (the same order
+    /// [`Self::stream_page`] exposes).
+    pub(crate) fn seed_prefix(&mut self, hit: PrefixHit) {
+        assert_eq!(self.len, 0, "seed_prefix on a non-empty cache");
+        assert_eq!(hit.pages.len(), 2 * self.layers.len(), "prefix streams mismatch");
+        let mut it = hit.pages.into_iter();
+        for l in &mut self.layers {
+            l.k.seed(it.next().expect("stream count checked"), hit.matched);
+            l.v.seed(it.next().expect("stream count checked"), hit.matched);
+        }
+        self.len = hit.matched;
+    }
+
+    /// Share full page `chunk` of stream `stream` (order as in
+    /// [`Self::seed_prefix`]) — what the prefix trie stores on insert.
+    pub(crate) fn stream_page(&self, stream: usize, chunk: usize) -> Arc<KvPage> {
+        let l = &self.layers[stream / 2];
+        let s = if stream % 2 == 0 { &l.k } else { &l.v };
+        s.page(chunk)
+    }
+
+    /// Total pool bytes this cache's page tables charge (packed codes +
+    /// grids, or raw f64 rows, rounded up to whole pages) — the footprint
+    /// number PERF.md's decode section reports. Pages shared with other
+    /// caches are included; the pool's `live_bytes` deduplicates.
     pub fn kv_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
     }
@@ -185,24 +331,32 @@ impl KvCache {
 mod tests {
     use super::*;
     use crate::linalg::Rng;
+    use crate::model::kvpool::{page_bytes, KvPoolCfg};
 
     fn cfg() -> ModelConfig {
         ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 16, vocab: 256 }
+    }
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.normal()).collect()).collect()
+    }
+
+    fn push_row(c: &mut KvCache, r: &[f64]) {
+        for l in &mut c.layers {
+            l.k.push(r);
+            l.v.push(r);
+        }
+        c.advance(1);
     }
 
     #[test]
     fn fp_cache_roundtrips_rows() {
         let cfg = cfg();
         let mut c = KvCache::fp(&cfg);
-        let mut rng = Rng::new(1);
-        let rows: Vec<Vec<f64>> =
-            (0..3).map(|_| (0..cfg.d).map(|_| rng.normal()).collect()).collect();
+        let rows = rows(3, cfg.d, 1);
         for r in &rows {
-            for l in &mut c.layers {
-                l.k.push(r);
-                l.v.push(r);
-            }
-            c.advance(1);
+            push_row(&mut c, r);
         }
         assert_eq!(c.len(), 3);
         let mut buf = vec![0.0; cfg.d];
@@ -212,20 +366,30 @@ mod tests {
     }
 
     #[test]
+    fn rows_roundtrip_across_page_boundaries() {
+        let cfg = cfg();
+        let pool = KvPagePool::new(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX });
+        let mut c = KvCache::fp_in(&cfg, &pool);
+        let rows = rows(11, cfg.d, 7);
+        for r in &rows {
+            push_row(&mut c, r);
+        }
+        // 11 rows over 4-row pages = 3 pages per stream.
+        let mut buf = vec![0.0; cfg.d];
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(c.layers[0].v.row(i, &mut buf), r.as_slice());
+        }
+        assert_eq!(c.kv_bytes(), 4 * 3 * page_bytes(cfg.d, PageMode::Fp, 4));
+    }
+
+    #[test]
     fn packed_cache_is_smaller_than_fp() {
         let cfg = cfg();
         let mut fp = KvCache::fp(&cfg);
         let mut pk = KvCache::packed(&cfg, QScheme::asym(4), 1.0);
-        let mut rng = Rng::new(2);
-        for _ in 0..8 {
-            let row: Vec<f64> = (0..cfg.d).map(|_| rng.normal()).collect();
-            for c in [&mut fp, &mut pk] {
-                for l in &mut c.layers {
-                    l.k.push(&row);
-                    l.v.push(&row);
-                }
-                c.advance(1);
-            }
+        for row in &rows(8, cfg.d, 2) {
+            push_row(&mut fp, row);
+            push_row(&mut pk, row);
         }
         // 4-bit codes + per-row grids sit well under the f64 rows.
         assert!(pk.kv_bytes() * 4 < fp.kv_bytes(), "{} vs {}", pk.kv_bytes(), fp.kv_bytes());
@@ -237,13 +401,77 @@ mod tests {
         let mut c = KvCache::fp(&cfg);
         assert!(c.has_room());
         for _ in 0..cfg.seq {
-            for l in &mut c.layers {
-                l.k.push(&vec![0.0; cfg.d]);
-                l.v.push(&vec![0.0; cfg.d]);
-            }
-            c.advance(1);
+            push_row(&mut c, &vec![0.0; cfg.d]);
         }
         assert!(!c.has_room());
         assert_eq!(c.capacity(), cfg.seq);
+    }
+
+    #[test]
+    fn fork_shares_pages_then_copies_on_write() {
+        let cfg = cfg();
+        let pool = KvPagePool::new(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX });
+        let mut a = KvCache::fp_in(&cfg, &pool);
+        let shared = rows(6, cfg.d, 3);
+        for r in &shared {
+            push_row(&mut a, r);
+        }
+        let bytes_one = pool.live_bytes();
+        let mut b = a.fork();
+        // Forking allocates nothing.
+        assert_eq!(pool.live_bytes(), bytes_one);
+        // Divergent appends: each fork CoW-copies only the partial tail
+        // page of each stream (full pages stay shared).
+        let ra = rows(1, cfg.d, 4);
+        let rb = rows(1, cfg.d, 5);
+        push_row(&mut a, &ra[0]);
+        push_row(&mut b, &rb[0]);
+        let per_stream = page_bytes(cfg.d, PageMode::Fp, 4);
+        assert_eq!(pool.live_bytes(), bytes_one + 2 * 4 * per_stream);
+        // Shared prefix identical, divergent row isolated.
+        let mut buf = vec![0.0; cfg.d];
+        for i in 0..6 {
+            assert_eq!(a.layers[0].k.row(i, &mut buf).to_vec(), shared[i]);
+            assert_eq!(b.layers[0].k.row(i, &mut buf).to_vec(), shared[i]);
+        }
+        assert_eq!(a.layers[0].k.row(6, &mut buf), ra[0].as_slice());
+        assert_eq!(b.layers[0].k.row(6, &mut buf), rb[0].as_slice());
+        drop(a);
+        drop(b);
+        assert_eq!(pool.live_bytes(), 0);
+    }
+
+    #[test]
+    fn reserve_is_all_or_nothing_under_budget() {
+        let cfg = cfg();
+        // Budget: 4 streams × 1 page fits, a second page per stream does
+        // not all fit.
+        let per_stream = page_bytes(cfg.d, PageMode::Fp, 4);
+        let pool = KvPagePool::new(KvPoolCfg { page_rows: 4, budget_bytes: 6 * per_stream });
+        let mut c = KvCache::fp_in(&cfg, &pool);
+        assert!(c.reserve_tokens(4));
+        assert_eq!(pool.live_bytes(), 4 * per_stream);
+        // Needs 4 more pages, only 2 fit: must roll back to exactly the
+        // pre-call state.
+        assert!(!c.reserve_tokens(8));
+        assert_eq!(pool.live_bytes(), 4 * per_stream);
+        // Rows already reserved still push fine.
+        for r in &rows(4, cfg.d, 6) {
+            push_row(&mut c, r);
+        }
+        assert_eq!(c.len(), 4);
+        drop(c);
+        assert_eq!(pool.live_bytes(), 0);
+    }
+
+    #[test]
+    fn packed_grid_survives_paging() {
+        let cfg = cfg();
+        let pk = KvCache::packed(&cfg, QScheme::asym(4), 0.9);
+        assert!(pk.is_packed());
+        let (s, cr) = pk.packed_grid().unwrap();
+        assert_eq!(s, QScheme::asym(4));
+        assert_eq!(cr, 0.9);
+        assert!(KvCache::fp(&cfg).packed_grid().is_none());
     }
 }

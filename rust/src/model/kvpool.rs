@@ -1,0 +1,583 @@
+//! Paged KV allocation: fixed-size pages of token rows under a global
+//! byte budget, refcounted so common prompt prefixes share prefill pages.
+//!
+//! The serving problem this solves: a per-sequence contiguous KV buffer
+//! reserves the *positional budget* up front, so concurrent-sequence
+//! capacity is gated by the worst case, not the live working set. Pages
+//! make KV memory fungible — a [`KvPagePool`] owns a byte budget, every
+//! sequence's cache is a table of [`KvPage`] references, and admission
+//! control becomes "can the pool charge one more page".
+//!
+//! Sharing is by reference count ([`Arc`]): the prefix trie
+//! ([`PrefixCache`]) keeps full prefill pages of previously-served
+//! prompts, and a new sequence whose prompt starts with the same tokens
+//! seeds its page table with those `Arc`s instead of recomputing the
+//! prefill. Pages are **immutable once shared** — an append into a page
+//! some other holder also references copies it first (copy-on-write), so
+//! divergence can never corrupt a neighbour. Per-token quantization grids
+//! are row-local, so none of this moves a single bit: a row reads back
+//! byte-identical no matter which page holds it or how many tables
+//! reference it.
+
+use crate::quant::{QScheme, QuantizedTensor};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Default token rows per page (the vLLM-ish sweet spot: big enough that
+/// table overhead vanishes, small enough that short sequences don't
+/// strand bytes).
+pub const DEFAULT_PAGE_ROWS: usize = 16;
+
+/// Page-pool sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolCfg {
+    /// Token rows per page.
+    pub page_rows: usize,
+    /// Hard cap on live page bytes; allocations fail above it.
+    pub budget_bytes: usize,
+}
+
+impl Default for KvPoolCfg {
+    fn default() -> Self {
+        KvPoolCfg { page_rows: DEFAULT_PAGE_ROWS, budget_bytes: 64 << 20 }
+    }
+}
+
+/// Growable K or V storage for up to one page of token rows.
+///
+/// Two modes, matching the two native forward paths: raw f64 rows (FP)
+/// and packed per-token activation codes (quantized serving). Packed
+/// rows quantize on the row's own dynamic grid, so a stored row never
+/// changes as its sequence grows — the invariant every bit-exactness
+/// guarantee in this module leans on.
+#[derive(Clone)]
+pub(crate) enum KvStore {
+    /// Row-major f64 rows (`len × cols`).
+    Fp { data: Vec<f64>, cols: usize },
+    /// Packed per-token codes on the activation scheme's grid.
+    Packed { codes: QuantizedTensor, clip_ratio: f64 },
+}
+
+impl KvStore {
+    /// `cap_rows` pre-reserves the page so pushes never reallocate.
+    pub(crate) fn fp(cols: usize, cap_rows: usize) -> KvStore {
+        KvStore::Fp { data: Vec::with_capacity(cols * cap_rows), cols }
+    }
+
+    pub(crate) fn packed(
+        cols: usize,
+        scheme: QScheme,
+        clip_ratio: f64,
+        cap_rows: usize,
+    ) -> KvStore {
+        KvStore::Packed {
+            codes: QuantizedTensor::empty_with_capacity(cols, scheme, cap_rows),
+            clip_ratio,
+        }
+    }
+
+    /// Append one token row. Packed mode quantizes on the row's dynamic
+    /// per-token grid (the same grid `kv_quant` would pick).
+    pub(crate) fn push(&mut self, row: &[f64]) {
+        match self {
+            KvStore::Fp { data, cols } => {
+                debug_assert_eq!(row.len(), *cols);
+                data.extend_from_slice(row);
+            }
+            KvStore::Packed { codes, clip_ratio } => codes.push_row(row, *clip_ratio),
+        }
+    }
+
+    /// Append one token row and write the value attention should see
+    /// back into `out`: the raw row for FP, the dequantized pushed codes
+    /// for packed — bit-identical to per-token fake-quant of `row`.
+    pub(crate) fn push_fake_quant(&mut self, row: &[f64], out: &mut [f64]) {
+        self.push(row);
+        match self {
+            KvStore::Fp { .. } => out.copy_from_slice(row),
+            KvStore::Packed { codes, .. } => codes.deq_row_into(codes.rows() - 1, out),
+        }
+    }
+
+    /// Borrow token row `i`, dequantizing into `buf` when packed. The FP
+    /// mode returns the stored slice; `buf` must be `cols` wide.
+    pub(crate) fn row<'a>(&'a self, i: usize, buf: &'a mut [f64]) -> &'a [f64] {
+        match self {
+            KvStore::Fp { data, cols } => &data[i * cols..(i + 1) * cols],
+            KvStore::Packed { codes, .. } => {
+                codes.deq_row_into(i, buf);
+                buf
+            }
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            KvStore::Fp { data, cols } => data.len() / cols,
+            KvStore::Packed { codes, .. } => codes.rows(),
+        }
+    }
+}
+
+/// Storage mode of a page/stream — which [`KvStore`] variant its rows
+/// live in, fixed at cache construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum PageMode {
+    Fp,
+    Packed { scheme: QScheme, clip_ratio: f64 },
+}
+
+/// Reserved bytes one page of `cols`-wide rows costs the pool — the
+/// *fixed* worst-case charge (codes for every slot plus per-row grid
+/// metadata), so accounting is deterministic and independent of how full
+/// the page currently is.
+pub(crate) fn page_bytes(cols: usize, mode: PageMode, page_rows: usize) -> usize {
+    match mode {
+        PageMode::Fp => page_rows * cols * std::mem::size_of::<f64>(),
+        PageMode::Packed { scheme, .. } => {
+            // Packed codes + per-row (scale f64, zp i32, code-sum i64).
+            QuantizedTensor::code_bytes_len(page_rows, cols, scheme) + page_rows * (8 + 4 + 8)
+        }
+    }
+}
+
+/// Shared pool accounting. Pages hold an `Arc` back-reference and release
+/// their charge on drop, so the pool never has to track page identities —
+/// `live` is exact by construction.
+pub(crate) struct PoolState {
+    pub(crate) cfg: KvPoolCfg,
+    live: AtomicUsize,
+    peak: AtomicUsize,
+    failed: AtomicU64,
+}
+
+impl PoolState {
+    /// Atomically charge `bytes` against the budget; false if it would
+    /// overflow the cap (the caller must not allocate).
+    fn try_charge(&self, bytes: usize) -> bool {
+        let ok = self
+            .live
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                cur.checked_add(bytes).filter(|&n| n <= self.cfg.budget_bytes)
+            })
+            .is_ok();
+        if ok {
+            self.peak.fetch_max(self.live.load(Ordering::SeqCst), Ordering::SeqCst);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn release(&self, bytes: usize) {
+        let prev = self.live.fetch_sub(bytes, Ordering::SeqCst);
+        debug_assert!(prev >= bytes, "pool released more than it charged");
+    }
+}
+
+/// A fixed-size page pool: the only allocator of KV storage on the
+/// serving path. Cloning the handle shares the pool (all accounting is
+/// atomic, so prefill fan-out threads allocate concurrently).
+#[derive(Clone)]
+pub struct KvPagePool {
+    state: Arc<PoolState>,
+}
+
+impl KvPagePool {
+    pub fn new(cfg: KvPoolCfg) -> KvPagePool {
+        assert!(cfg.page_rows >= 1, "pages must hold at least one row");
+        KvPagePool {
+            state: Arc::new(PoolState {
+                cfg,
+                live: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                failed: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool with no byte cap — the standalone-cache compatibility path
+    /// ([`super::KvCache::fp`]/[`super::KvCache::packed`] without a
+    /// serving pool).
+    pub fn unbounded() -> KvPagePool {
+        KvPagePool::new(KvPoolCfg { page_rows: DEFAULT_PAGE_ROWS, budget_bytes: usize::MAX })
+    }
+
+    pub fn cfg(&self) -> KvPoolCfg {
+        self.state.cfg
+    }
+
+    /// Bytes currently charged by live pages.
+    pub fn live_bytes(&self) -> usize {
+        self.state.live.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`Self::live_bytes`].
+    pub fn peak_bytes(&self) -> usize {
+        self.state.peak.load(Ordering::SeqCst)
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.state.cfg.budget_bytes
+    }
+
+    /// Allocation attempts refused by the budget.
+    pub fn failed_allocs(&self) -> u64 {
+        self.state.failed.load(Ordering::Relaxed)
+    }
+
+    /// `live / budget` (0.0 for an unbounded pool) — the admission
+    /// controller's watermark input.
+    pub fn occupancy(&self) -> f64 {
+        let b = self.state.cfg.budget_bytes;
+        if b == usize::MAX || b == 0 {
+            return 0.0;
+        }
+        self.live_bytes() as f64 / b as f64
+    }
+
+    pub(crate) fn state(&self) -> &Arc<PoolState> {
+        &self.state
+    }
+}
+
+/// One page of K or V token rows. The last `Arc` dropped releases the
+/// page's charge back to its pool.
+pub(crate) struct KvPage {
+    pub(crate) store: KvStore,
+    bytes: usize,
+    pool: Arc<PoolState>,
+}
+
+impl KvPage {
+    /// Allocate an empty page, charging the pool; `None` when the budget
+    /// refuses the charge.
+    pub(crate) fn alloc(pool: &Arc<PoolState>, cols: usize, mode: PageMode) -> Option<Arc<KvPage>> {
+        let pr = pool.cfg.page_rows;
+        let bytes = page_bytes(cols, mode, pr);
+        if !pool.try_charge(bytes) {
+            return None;
+        }
+        let store = match mode {
+            PageMode::Fp => KvStore::fp(cols, pr),
+            PageMode::Packed { scheme, clip_ratio } => KvStore::packed(cols, scheme, clip_ratio, pr),
+        };
+        Some(Arc::new(KvPage { store, bytes, pool: pool.clone() }))
+    }
+
+    /// Copy-on-write clone: a freshly charged page holding byte-identical
+    /// copies of `src`'s rows (codes are *copied*, never re-quantized).
+    pub(crate) fn cow_clone(src: &KvPage) -> Option<Arc<KvPage>> {
+        if !src.pool.try_charge(src.bytes) {
+            return None;
+        }
+        Some(Arc::new(KvPage {
+            store: src.store.clone(),
+            bytes: src.bytes,
+            pool: src.pool.clone(),
+        }))
+    }
+
+    /// The pool charge this page holds.
+    pub(crate) fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for KvPage {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}
+
+/// Per-stream pages of one cached prefix chunk, plus counters the
+/// returned hit reports.
+pub(crate) struct PrefixHit {
+    /// Matched prompt tokens (a multiple of `page_rows`, always leaving
+    /// at least one prompt token to prefill for logits).
+    pub(crate) matched: usize,
+    /// `pages[stream][chunk]` — the shared full pages, in stream order
+    /// `layer0.k, layer0.v, layer1.k, …`.
+    pub(crate) pages: Vec<Vec<Arc<KvPage>>>,
+}
+
+struct TrieNode {
+    /// One full page per stream for the chunk this node's edge covers.
+    pages: Vec<Arc<KvPage>>,
+    /// Edges: the next `page_rows` prompt tokens.
+    children: HashMap<Box<[u8]>, TrieNode>,
+    last_used: u64,
+}
+
+/// Radix trie over page-sized prompt chunks: common system prompts reuse
+/// refcounted prefill pages instead of recomputing them.
+///
+/// Only *full* pages are ever shared — a partially filled tail page stays
+/// private to its sequence — so shared pages are immutable by
+/// construction and appends never need to consult the trie (CoW in the
+/// page table covers mid-page forks). Entries are LRU-evicted
+/// childless-first under memory pressure; evicting an entry drops the
+/// trie's references, and the bytes come back once no live sequence
+/// shares the pages.
+pub struct PrefixCache {
+    root: TrieNode,
+    page_rows: usize,
+    streams: usize,
+    clock: u64,
+    entries: usize,
+    hits: u64,
+    lookups: u64,
+}
+
+impl PrefixCache {
+    /// `streams` is the number of page tables per sequence
+    /// (`2 × n_layers`: a K and a V stream per layer).
+    pub fn new(page_rows: usize, streams: usize) -> PrefixCache {
+        PrefixCache {
+            root: TrieNode { pages: Vec::new(), children: HashMap::new(), last_used: 0 },
+            page_rows,
+            streams,
+            clock: 0,
+            entries: 0,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Longest cached prefix of `prompt`, capped so at least one prompt
+    /// token remains to prefill (the last token's logits are always
+    /// computed fresh).
+    pub(crate) fn lookup(&mut self, prompt: &[u8]) -> Option<PrefixHit> {
+        self.lookups += 1;
+        let pr = self.page_rows;
+        let max_chunks = prompt.len().saturating_sub(1) / pr;
+        if max_chunks == 0 {
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        let mut pages: Vec<Vec<Arc<KvPage>>> = vec![Vec::new(); self.streams];
+        let mut matched = 0usize;
+        for ci in 0..max_chunks {
+            let chunk = &prompt[ci * pr..(ci + 1) * pr];
+            match node.children.get_mut(chunk) {
+                Some(child) => {
+                    child.last_used = clock;
+                    for (s, p) in child.pages.iter().enumerate() {
+                        pages[s].push(p.clone());
+                    }
+                    matched += pr;
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        if matched == 0 {
+            return None;
+        }
+        self.hits += 1;
+        Some(PrefixHit { matched, pages })
+    }
+
+    /// Register the full prefill pages of a freshly served prompt.
+    /// `page_for(stream, chunk)` hands over the sequence's page — chunks
+    /// already present keep their existing (identical-content) pages.
+    pub(crate) fn insert(
+        &mut self,
+        prompt: &[u8],
+        mut page_for: impl FnMut(usize, usize) -> Arc<KvPage>,
+    ) {
+        let pr = self.page_rows;
+        let streams = self.streams;
+        let max_chunks = prompt.len().saturating_sub(1) / pr;
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        let mut added = 0usize;
+        for ci in 0..max_chunks {
+            let chunk: Box<[u8]> = prompt[ci * pr..(ci + 1) * pr].into();
+            let child = node.children.entry(chunk).or_insert_with(|| {
+                added += 1;
+                TrieNode {
+                    pages: (0..streams).map(|s| page_for(s, ci)).collect(),
+                    children: HashMap::new(),
+                    last_used: 0,
+                }
+            });
+            child.last_used = clock;
+            node = child;
+        }
+        self.entries += added;
+    }
+
+    /// Evict up to `n` least-recently-used childless entries (deepest
+    /// first, so every surviving entry stays reachable from the root).
+    /// Returns how many were evicted.
+    pub fn evict_lru(&mut self, n: usize) -> usize {
+        let mut evicted = 0;
+        while evicted < n {
+            let Some(path) = lru_leaf_path(&self.root) else { break };
+            let mut node = &mut self.root;
+            for key in &path[..path.len() - 1] {
+                node = node.children.get_mut(key).expect("path valid");
+            }
+            node.children.remove(&path[path.len() - 1]);
+            evicted += 1;
+        }
+        self.entries -= evicted;
+        evicted
+    }
+
+    pub fn clear(&mut self) {
+        self.root.children.clear();
+        self.entries = 0;
+    }
+
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+}
+
+/// Path (edge keys from the root) to the least-recently-used childless
+/// node, or `None` if the trie is empty.
+fn lru_leaf_path(root: &TrieNode) -> Option<Vec<Box<[u8]>>> {
+    fn walk(node: &TrieNode, path: &mut Vec<Box<[u8]>>, best: &mut Option<(u64, Vec<Box<[u8]>>)>) {
+        for (key, child) in &node.children {
+            path.push(key.clone());
+            if child.children.is_empty() {
+                let older = match best {
+                    None => true,
+                    Some((t, _)) => child.last_used < *t,
+                };
+                if older {
+                    *best = Some((child.last_used, path.clone()));
+                }
+            } else {
+                walk(child, path, best);
+            }
+            path.pop();
+        }
+    }
+    let mut best = None;
+    let mut path = Vec::new();
+    walk(root, &mut path, &mut best);
+    best.map(|(_, p)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pool(pages: usize, cols: usize) -> KvPagePool {
+        let cfg = KvPoolCfg { page_rows: 4, budget_bytes: pages * page_bytes(cols, PageMode::Fp, 4) };
+        KvPagePool::new(cfg)
+    }
+
+    #[test]
+    fn charge_and_release_track_live_bytes() {
+        let pool = small_pool(2, 8);
+        let pb = page_bytes(8, PageMode::Fp, 4);
+        let a = KvPage::alloc(pool.state(), 8, PageMode::Fp).unwrap();
+        assert_eq!(pool.live_bytes(), pb);
+        let b = KvPage::alloc(pool.state(), 8, PageMode::Fp).unwrap();
+        assert_eq!(pool.live_bytes(), 2 * pb);
+        // Budget full: third page refused, counted.
+        assert!(KvPage::alloc(pool.state(), 8, PageMode::Fp).is_none());
+        assert_eq!(pool.failed_allocs(), 1);
+        drop(a);
+        assert_eq!(pool.live_bytes(), pb);
+        // Room again.
+        let c = KvPage::alloc(pool.state(), 8, PageMode::Fp).unwrap();
+        assert_eq!(pool.live_bytes(), 2 * pb);
+        assert_eq!(pool.peak_bytes(), 2 * pb);
+        drop((b, c));
+        assert_eq!(pool.live_bytes(), 0);
+    }
+
+    #[test]
+    fn cow_clone_charges_and_copies_bits() {
+        let pool = small_pool(4, 4);
+        let page = KvPage::alloc(pool.state(), 4, PageMode::Fp).unwrap();
+        // Shared page (two holders) — mutation must go through a copy.
+        let shared = page.clone();
+        assert!(Arc::strong_count(&page) > 1);
+        let before = pool.live_bytes();
+        let copy = KvPage::cow_clone(&page).unwrap();
+        assert_eq!(pool.live_bytes(), before + page.bytes());
+        assert_eq!(copy.store.len(), page.store.len());
+        drop((page, shared, copy));
+        assert_eq!(pool.live_bytes(), 0);
+    }
+
+    #[test]
+    fn packed_page_charge_is_code_bytes_plus_metadata() {
+        let scheme = QScheme::asym(4);
+        let mode = PageMode::Packed { scheme, clip_ratio: 1.0 };
+        // 4 rows × 32 cols of nibbles = 64 B codes + 4×20 B metadata.
+        assert_eq!(page_bytes(32, mode, 4), 64 + 80);
+        assert!(page_bytes(32, mode, 4) * 4 < page_bytes(32, PageMode::Fp, 4) * 2);
+    }
+
+    #[test]
+    fn trie_shares_and_evicts_lru() {
+        let pool = KvPagePool::new(KvPoolCfg { page_rows: 2, budget_bytes: usize::MAX });
+        let mk = |_: usize, _: usize| KvPage::alloc(pool.state(), 4, PageMode::Fp).unwrap();
+        let mut trie = PrefixCache::new(2, 2);
+        // Prompt of 5 tokens → 2 full chunks cached (last token never).
+        trie.insert(&[1, 2, 3, 4, 9], mk);
+        assert_eq!(trie.entries(), 2);
+        let hit = trie.lookup(&[1, 2, 3, 4, 7]).unwrap();
+        assert_eq!(hit.matched, 4);
+        assert_eq!(hit.pages.len(), 2);
+        assert_eq!(hit.pages[0].len(), 2);
+        // Diverging prompt matches only the first chunk.
+        let hit = trie.lookup(&[1, 2, 9, 9, 9]).unwrap();
+        assert_eq!(hit.matched, 2);
+        // Miss entirely.
+        assert!(trie.lookup(&[7, 7, 7, 7]).is_none());
+        assert_eq!(trie.hits(), 2);
+        assert_eq!(trie.lookups(), 3);
+        // A second branch under the shared first chunk.
+        trie.insert(&[1, 2, 8, 8, 8], mk);
+        assert_eq!(trie.entries(), 3);
+        // LRU eviction removes childless leaves first: both depth-2
+        // leaves go before the shared root chunk.
+        assert_eq!(trie.evict_lru(2), 2);
+        assert_eq!(trie.entries(), 1);
+        let hit = trie.lookup(&[1, 2, 3, 4, 7]).unwrap();
+        assert_eq!(hit.matched, 2, "root chunk survives LRU of leaves");
+        drop(hit);
+        assert_eq!(trie.evict_lru(8), 1);
+        assert!(trie.lookup(&[1, 2, 3, 4, 7]).is_none());
+        assert_eq!(pool.live_bytes(), 0, "evicted pages released");
+    }
+
+    #[test]
+    fn short_prompts_never_cached() {
+        let pool = KvPagePool::new(KvPoolCfg { page_rows: 8, budget_bytes: usize::MAX });
+        let mk = |_: usize, _: usize| KvPage::alloc(pool.state(), 4, PageMode::Fp).unwrap();
+        let mut trie = PrefixCache::new(8, 2);
+        // 8 tokens = exactly one page, but the last token must prefill →
+        // zero full chunks cacheable.
+        trie.insert(&[1, 2, 3, 4, 5, 6, 7, 8], mk);
+        assert_eq!(trie.entries(), 0);
+        assert!(trie.lookup(&[1, 2, 3, 4, 5, 6, 7, 8]).is_none());
+    }
+}

@@ -9,12 +9,14 @@
 
 mod config;
 mod kvcache;
+mod kvpool;
 mod loader;
 mod native;
 mod quantized;
 
 pub use config::ModelConfig;
 pub use kvcache::KvCache;
+pub use kvpool::{KvPagePool, KvPoolCfg, PrefixCache, DEFAULT_PAGE_ROWS};
 pub use loader::{load_catw, CatwTensor};
 pub use native::{softmax_row, NativeModel, ProbeCapture};
 pub use quantized::{

@@ -148,6 +148,92 @@ impl NativeModel {
         (logits, cache)
     }
 
+    /// Continue prefilling an existing cache with `tokens` (positions
+    /// `cache.len() ..`), returning the last-token logits (`1 × vocab`).
+    ///
+    /// This is the serving-path prefill: the cache may draw pages from a
+    /// budgeted pool (capacity is reserved up front, so a refused budget
+    /// fails here rather than mid-layer) and may already hold rows — a
+    /// prefix-cache hit seeds the shared pages and only the unmatched
+    /// prompt suffix runs through the model. Attention reads every K/V
+    /// row back through the cache (the same read path as
+    /// [`Self::decode_step`]), so FP and packed results are bit-identical
+    /// to [`Self::prefill`] on the concatenated sequence.
+    pub fn prefill_into(
+        &self,
+        tokens: &[u8],
+        qc: Option<&QuantConfig>,
+        cache: &mut KvCache,
+    ) -> Mat {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let cfg = &self.cfg;
+        let s = tokens.len();
+        let start = cache.len();
+        assert!(start + s <= cfg.seq, "sequence too long");
+        assert_eq!(cache.layers.len(), cfg.n_layers, "cache/model layer mismatch");
+        assert_eq!(
+            cache.is_packed(),
+            qc.is_some(),
+            "cache storage mode does not match the qc argument"
+        );
+        if let (Some((scheme, clip)), Some(qc)) = (cache.packed_grid(), qc) {
+            assert!(
+                scheme == qc.kv_act.scheme && clip == qc.kv_act.clip_ratio,
+                "cache activation grid does not match qc.kv_act"
+            );
+        }
+        assert!(
+            cache.reserve_tokens(s),
+            "KV page budget exhausted: admission control must reserve before prefill"
+        );
+        let tok_emb = self.p("tok_emb");
+        let pos_emb = self.p("pos_emb");
+        let mut x = Mat::zeros(s, cfg.d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            for j in 0..cfg.d {
+                x[(t, j)] = tok_emb[(tok as usize, j)] + pos_emb[(start + t, j)];
+            }
+        }
+        let mut scores = vec![0.0f64; cfg.n_heads * (start + s)];
+        let mut rowbuf = vec![0.0f64; cfg.d];
+        let scale = 1.0 / (cfg.head_dim() as f64).sqrt();
+        for i in 0..cfg.n_layers {
+            let h = rmsnorm(&x, self.p(&format!("blocks.{i}.ln1")));
+            let mut qkv =
+                self.linear_group(&h, i, LayerGroup::AttnIn, qc, None).into_iter();
+            let q = qkv.next().unwrap();
+            let k = qkv.next().unwrap();
+            let v = qkv.next().unwrap();
+            let mut att = Mat::zeros(s, cfg.d);
+            let lkv = &mut cache.layers[i];
+            for t in 0..s {
+                // Row `start + t` sees keys 0 ..= start + t: the cached
+                // prefix (possibly shared prefix-hit pages) plus this
+                // chunk's rows pushed so far.
+                let t1 = start + t + 1;
+                lkv.k.push(k.row(t));
+                lkv.v.push(v.row(t));
+                attention_decode(
+                    q.row(t),
+                    lkv,
+                    t1,
+                    cfg.n_heads,
+                    scale,
+                    &mut scores[..cfg.n_heads * t1],
+                    &mut rowbuf,
+                    att.row_mut(t),
+                );
+            }
+            let o = self.linear_group(&att, i, LayerGroup::OIn, qc, None).pop().unwrap();
+            x = x.add(&o);
+            self.mlp_block(&mut x, i, qc, None, None);
+        }
+        cache.advance(s);
+        let x = x.block(s - 1, 0, 1, cfg.d);
+        let x = rmsnorm(&x, self.p("ln_f"));
+        matmul_a_bt_cached(&x, self.p("lm_head"))
+    }
+
     /// One incremental decode step for a batch of sequences: `next[b]` is
     /// appended to `caches[b]` at its current position, and the returned
     /// `B × vocab` logits predict each sequence's following token.
@@ -184,6 +270,15 @@ impl NativeModel {
                     "cache activation grid does not match qc.kv_act"
                 );
             }
+        }
+        for c in caches.iter_mut() {
+            // Page capacity for this step's row — the scheduler preempts
+            // sequences before stepping a batch the budget can't hold, so
+            // this only fires on a mis-sized pool.
+            assert!(
+                c.reserve_tokens(1),
+                "KV page budget exhausted mid-step: preempt before stepping"
+            );
         }
         let tok_emb = self.p("tok_emb");
         let pos_emb = self.p("pos_emb");
@@ -675,6 +770,30 @@ mod tests {
             let packed = m.forward_quant(&toks, &qc);
             let rel = dense.max_abs_diff(&packed) / dense.max_abs().max(1e-30);
             assert!(rel < 1e-9, "bits {bits}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_full() {
+        // prefill_into over prompt chunks must be bit-identical to the
+        // one-shot prefill path, FP and packed, including the decode
+        // steps that follow — the invariant prefix sharing leans on.
+        let cfg = tiny_cfg();
+        let m = NativeModel::init_random(cfg.clone(), 7);
+        let toks = [3u8, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let qc_owned = QuantConfig::identity_for_test(&m, 4);
+        for qc in [None, Some(&qc_owned)] {
+            let (full, mut fcache) = m.prefill(&toks, qc);
+            let mut cache = match qc {
+                None => KvCache::fp(&cfg),
+                Some(q) => KvCache::packed(&cfg, q.kv_act.scheme, q.kv_act.clip_ratio),
+            };
+            let _ = m.prefill_into(&toks[..4], qc, &mut cache);
+            let logits = m.prefill_into(&toks[4..], qc, &mut cache);
+            assert_eq!(logits.max_abs_diff(&full), 0.0, "chunked prefill moved a bit");
+            let a = m.decode_step(&mut [&mut fcache], &[7], qc);
+            let b = m.decode_step(&mut [&mut cache], &[7], qc);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "decode diverged after chunked prefill");
         }
     }
 

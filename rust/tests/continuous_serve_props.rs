@@ -1,0 +1,217 @@
+//! Continuous-batching correctness properties, end to end through the
+//! public serving API (`Coordinator::start_continuous`) and the
+//! step-granular engine underneath it.
+//!
+//! The load-bearing claim: **scheduling never moves a bit**. Whatever the
+//! interleaving — sequences joining mid-decode, leaving at their own
+//! `max_new`, being preempted under page-budget pressure and re-prefilled
+//! on resume, or seeding from shared prefix pages — each request's greedy
+//! output must equal what a per-sequence `generate_batch` run produces,
+//! exactly (`==`, not approximately). This holds because per-token
+//! quantization grids are row-local (paged rows read back byte-identical)
+//! and decode math depends only on the sequence's own cache rows.
+//!
+//! CI runs this suite across the `CATQUANT_SIMD × CATQUANT_THREADS`
+//! matrix: kernel partitionings and dispatch must never change a served
+//! token either.
+
+use catquant::coordinator::{
+    AdmitOutcome, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, SamplingCfg,
+    StepEngine,
+};
+use catquant::model::{KvPoolCfg, ModelConfig, NativeModel, QuantConfig};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 24, vocab: 256 }
+}
+
+fn model() -> NativeModel {
+    NativeModel::init_random(tiny_cfg(), 31)
+}
+
+fn prompts_and_lengths() -> (Vec<Vec<u8>>, Vec<usize>) {
+    let prompts = vec![
+        vec![3u8, 1, 4, 1, 5],
+        vec![9u8, 2, 6],
+        vec![3u8, 1, 4, 1, 5, 9, 2], // shares a prefix with the first
+        vec![8u8],
+        vec![2u8, 7, 1, 8, 2, 8],
+    ];
+    let max_news = vec![6usize, 2, 4, 8, 3];
+    (prompts, max_news)
+}
+
+/// Per-sequence greedy reference: each prompt decoded alone.
+fn reference(quantized: bool) -> Vec<Vec<u8>> {
+    let (prompts, max_news) = prompts_and_lengths();
+    let sampling = SamplingCfg::default();
+    prompts
+        .iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| {
+            let m = model();
+            let mut g = if quantized {
+                let qc = QuantConfig::identity_for_test(&m, 4);
+                NativeGenerator::quant(m, qc, 1, sampling)
+            } else {
+                NativeGenerator::fp(m, 1, sampling)
+            };
+            g.generate_batch(&[p.clone()], mn).unwrap().remove(0)
+        })
+        .collect()
+}
+
+/// Serve the workload through `Coordinator::start_continuous` and return
+/// each request's tokens (panics on rejection — these workloads fit).
+fn serve_continuous(quantized: bool, pool: KvPoolCfg, prefix: bool) -> Vec<Vec<u8>> {
+    let (prompts, max_news) = prompts_and_lengths();
+    let coord = Coordinator::start_continuous(
+        move || {
+            let m = model();
+            let sampling = SamplingCfg::default();
+            let g = if quantized {
+                let qc = QuantConfig::identity_for_test(&m, 4);
+                NativeGenerator::quant(m, qc, 3, sampling)
+            } else {
+                NativeGenerator::fp(m, 3, sampling)
+            };
+            Box::new(g.with_serve_pool(pool, prefix)) as Box<dyn StepEngine>
+        },
+        ContinuousCfg::default(),
+    );
+    // Staggered submission: later requests join while earlier ones are
+    // mid-decode (3 engine slots force queueing too).
+    let rxs: Vec<_> = prompts
+        .iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            coord.submit(p.clone(), mn)
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|rx| {
+            let resp = rx.recv().unwrap();
+            assert!(!resp.rejected, "workload must fit this configuration");
+            resp.tokens
+        })
+        .collect()
+}
+
+#[test]
+fn continuous_fp_matches_per_sequence_reference() {
+    let want = reference(false);
+    let got = serve_continuous(false, KvPoolCfg::default(), false);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn continuous_quant_matches_per_sequence_reference() {
+    let want = reference(true);
+    let got = serve_continuous(true, KvPoolCfg::default(), false);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn prefix_sharing_is_invisible_in_outputs() {
+    let want = reference(false);
+    let got = serve_continuous(false, KvPoolCfg { page_rows: 4, ..Default::default() }, true);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn preemption_under_tiny_budget_is_bit_exact() {
+    // 4-row FP pages at d=32 are 1 KiB; one sequence fully grown uses
+    // 4 streams × up-to-6 pages. 26 pages cannot hold three grown
+    // sequences, so the engine must preempt and re-prefill — outputs
+    // still match exactly.
+    let pool = KvPoolCfg { page_rows: 4, budget_bytes: 26 * 1024 };
+    let want = reference(false);
+    let got = serve_continuous(false, pool, false);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn budget_is_never_exceeded_and_preemption_reported() {
+    let sampling = SamplingCfg::default();
+    let pool = KvPoolCfg { page_rows: 4, budget_bytes: 20 * 1024 };
+    let mut g = NativeGenerator::fp(model(), 4, sampling).with_serve_pool(pool, false);
+    let p0 = vec![1u8, 2, 3, 4, 5];
+    let p1 = vec![9u8, 8, 7];
+    let w0 = NativeGenerator::fp(model(), 1, sampling)
+        .generate_batch(&[p0.clone()], 8)
+        .unwrap()
+        .remove(0);
+    let w1 = NativeGenerator::fp(model(), 1, sampling)
+        .generate_batch(&[p1.clone()], 8)
+        .unwrap()
+        .remove(0);
+    assert!(matches!(g.admit(p0, 8).unwrap(), AdmitOutcome::Admitted(0)));
+    assert!(matches!(g.admit(p1, 8).unwrap(), AdmitOutcome::Admitted(1)));
+    let mut outs: [Option<Vec<u8>>; 2] = [None, None];
+    let mut waiting: Vec<u64> = Vec::new();
+    let mut preempted = 0usize;
+    for _ in 0..64 {
+        if outs.iter().all(|o| o.is_some()) {
+            break;
+        }
+        waiting.retain(|&id| !g.resume(id).unwrap());
+        for id in g.step().unwrap() {
+            outs[id as usize] = Some(g.take_output(id).unwrap());
+        }
+        let newly = g.take_preempted();
+        preempted += newly.len();
+        waiting.extend(newly);
+        let ps = g.pool_stats();
+        assert!(ps.live_bytes <= ps.budget_bytes, "live exceeded budget");
+        assert!(ps.peak_bytes <= ps.budget_bytes, "peak exceeded budget");
+    }
+    assert!(preempted > 0, "budget was sized to force preemption");
+    assert_eq!(outs[0].take().unwrap(), w0);
+    assert_eq!(outs[1].take().unwrap(), w1);
+}
+
+#[test]
+fn bounded_queue_rejects_and_recovers() {
+    // max_queue 1 with 3-slot engine: flood 8 requests instantly — the
+    // worker may drain some before others arrive, but anything rejected
+    // must say so and everything served must be exact.
+    let coord = Coordinator::start_continuous(
+        || {
+            Box::new(NativeGenerator::fp(model(), 2, SamplingCfg::default()))
+                as Box<dyn StepEngine>
+        },
+        ContinuousCfg { max_queue: 1, ..Default::default() },
+    );
+    let prompt = vec![5u8, 6, 7];
+    let want = NativeGenerator::fp(model(), 1, SamplingCfg::default())
+        .generate_batch(&[prompt.clone()], 4)
+        .unwrap()
+        .remove(0);
+    let rxs: Vec<_> = (0..8).map(|_| coord.submit(prompt.clone(), 4)).collect();
+    let mut served = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        if resp.rejected {
+            assert!(resp.tokens.is_empty());
+        } else {
+            assert_eq!(resp.tokens, want);
+            served += 1;
+        }
+    }
+    assert!(served >= 1, "at least the first request must be served");
+    let met = coord.shutdown();
+    assert_eq!(met.requests, served);
+}
+
+#[test]
+fn truncated_prompts_are_counted() {
+    let sampling = SamplingCfg::default();
+    let mut g = NativeGenerator::fp(model(), 2, sampling);
+    // seq = 24 → prompts longer than 23 tokens truncate.
+    let long = vec![7u8; 40];
+    let out = g.generate_batch(&[long], 1).unwrap();
+    assert_eq!(out[0].len(), 1);
+    let stats = GenEngine::take_stats(&mut g);
+    assert_eq!(stats.truncated_prompts, 1);
+}
