@@ -117,12 +117,16 @@ fn serve_native(
     max_new: usize,
     max_batch: usize,
 ) -> ServeMetrics {
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
+        // The factory may be re-invoked to respawn after an engine panic,
+        // so it clones rather than consumes the weights.
         move || {
             let sampling = SamplingCfg { temperature: 0.8, seed: 1 };
-            let g: Box<dyn GenEngine> = match qc {
-                Some(qc) => Box::new(NativeGenerator::quant(model, qc, max_batch, sampling)),
-                None => Box::new(NativeGenerator::fp(model, max_batch, sampling)),
+            let g: Box<dyn GenEngine> = match qc.clone() {
+                Some(qc) => {
+                    Box::new(NativeGenerator::quant(model.clone(), qc, max_batch, sampling))
+                }
+                None => Box::new(NativeGenerator::fp(model.clone(), max_batch, sampling)),
             };
             g
         },
@@ -198,8 +202,8 @@ fn open_loop_poisson(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
 
     // Arm A: static dynamic batching.
     let model = NativeModel::init_random(cfg.clone(), 7);
-    let coord = Coordinator::start(
-        move || Box::new(NativeGenerator::fp(model, 4, sampling)) as Box<dyn GenEngine>,
+    let mut coord = Coordinator::start(
+        move || Box::new(NativeGenerator::fp(model.clone(), 4, sampling)) as Box<dyn GenEngine>,
         BatcherCfg { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
     );
     for rx in submit_all(&coord) {
@@ -210,9 +214,9 @@ fn open_loop_poisson(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
     // Arm B: continuous scheduler over the paged pool (same weights,
     // same arrivals).
     let model = NativeModel::init_random(cfg.clone(), 7);
-    let coord = Coordinator::start_continuous(
+    let mut coord = Coordinator::start_continuous(
         move || {
-            Box::new(NativeGenerator::fp(model, 4, sampling).with_serve_pool(
+            Box::new(NativeGenerator::fp(model.clone(), 4, sampling).with_serve_pool(
                 KvPoolCfg::default(),
                 true,
             )) as Box<dyn StepEngine>

@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     let manifest2 = manifest.clone();
     let model2 = model.clone();
     let art_dir2 = art_dir.clone();
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         move || {
             let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
             // No calibration on the boot path: weights + the saved

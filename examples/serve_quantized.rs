@@ -34,7 +34,7 @@ fn run_mode(
 ) -> ServeMetrics {
     let manifest2 = manifest.clone();
     let model2 = model.to_string();
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         move || {
             let engine = Rc::new(PjrtEngine::new(manifest2.clone()).expect("engine"));
             // Serving workers load weights only — no calibration pass;

@@ -42,6 +42,12 @@ pub struct EngineStats {
     /// capacity-pressure signal, not an error (the tail of the prompt is
     /// served).
     pub truncated_prompts: u64,
+    /// Decode panics caught and contained by the engine (each triggers
+    /// a bisect-and-retry pass; none escapes to the worker).
+    pub step_panics: u64,
+    /// Sequences quarantined because they reproduced a panic alone —
+    /// each is reported as failed exactly once via `take_failed`.
+    pub quarantined: u64,
 }
 
 impl EngineStats {
@@ -51,6 +57,8 @@ impl EngineStats {
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
         self.truncated_prompts += other.truncated_prompts;
+        self.step_panics += other.step_panics;
+        self.quarantined += other.quarantined;
     }
 }
 
@@ -120,6 +128,14 @@ pub trait StepEngine {
     /// Drain phase accounting (see [`GenEngine::take_stats`]).
     fn take_stats(&mut self) -> EngineStats {
         EngineStats::default()
+    }
+
+    /// Ids quarantined by panic isolation since the last call — each is
+    /// terminal (the request failed; partial tokens, if any, are still
+    /// available via [`Self::take_output`]). Engines without panic
+    /// isolation never report any.
+    fn take_failed(&mut self) -> Vec<u64> {
+        Vec::new()
     }
 }
 

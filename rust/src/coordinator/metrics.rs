@@ -2,7 +2,15 @@
 //! prefill/decode phase split the serving benchmark reports.
 
 use super::EngineStats;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Lock a metrics mutex, recovering from poisoning. A panicked worker
+/// (contained or not) must never take metrics reporting down with it —
+/// counters are plain data, valid regardless of where a writer died.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Log-bucketed latency histogram (microsecond resolution, ~7% buckets).
 #[derive(Clone, Debug)]
@@ -95,8 +103,25 @@ pub struct ServeMetrics {
     pub engine: EngineStats,
     /// Scheduler queue depth sampled once per tick (continuous path).
     pub queue_depth: Vec<usize>,
-    /// Requests refused by backpressure (queue cap or unservable size).
+    /// Requests refused by backpressure (queue cap or unservable size),
+    /// shutdown drain, or a dead worker.
     pub rejected: u64,
+    /// Requests shed from the queue because their deadline passed before
+    /// admission.
+    pub expired: u64,
+    /// In-flight sequences cancelled at tick granularity because their
+    /// deadline passed mid-decode (KV pages released immediately;
+    /// partial tokens are returned).
+    pub cancelled: u64,
+    /// Requests terminated by an engine failure: quarantined by panic
+    /// isolation, or in flight when the engine was lost and respawned.
+    pub failed: u64,
+    /// Engine respawns after a poisoned step (capped exponential
+    /// backoff between attempts).
+    pub respawns: u64,
+    /// Queue wait of deadline-shed requests — how long doomed work sat
+    /// before the scheduler gave up on it.
+    pub shed_wait: Histogram,
     /// Sequences evicted under page-budget pressure (each re-prefills on
     /// resume).
     pub preemptions: u64,
@@ -179,7 +204,8 @@ impl ServeMetrics {
             "requests={} tokens={} throughput={:.1} tok/s decode={:.1} tok/s prefill={:.1} tok/s \
              mean_batch={:.2} ttft_p50={:?} p50={:?} p95={:?} p99={:?} mean={:?}\n\
              queue_mean={:.2} queue_max={} kv_live={}B kv_peak={}B kv_budget={}B \
-             kv_occupancy={:.1}% prefix_hit_rate={:.1}% preemptions={} rejected={} truncated={}",
+             kv_occupancy={:.1}% prefix_hit_rate={:.1}% preemptions={} rejected={} truncated={} \
+             expired={} cancelled={} failed={} respawns={} shed_wait_p50={:?}",
             self.requests,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -201,6 +227,11 @@ impl ServeMetrics {
             self.preemptions,
             self.rejected,
             self.engine.truncated_prompts,
+            self.expired,
+            self.cancelled,
+            self.failed,
+            self.respawns,
+            self.shed_wait.quantile(0.5),
         )
     }
 }
@@ -267,6 +298,10 @@ mod tests {
             kv_budget_bytes: 2048,
             prefix_hits: 3,
             prefix_lookups: 4,
+            expired: 5,
+            cancelled: 6,
+            failed: 1,
+            respawns: 2,
             engine: EngineStats { truncated_prompts: 7, ..Default::default() },
             ..Default::default()
         };
@@ -275,9 +310,19 @@ mod tests {
         assert!((m.kv_occupancy() - 0.25).abs() < 1e-9);
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
         let s = m.summary();
-        for needle in
-            ["p99=", "queue_max=3", "kv_live=512B", "preemptions=4", "rejected=2", "truncated=7"]
-        {
+        for needle in [
+            "p99=",
+            "queue_max=3",
+            "kv_live=512B",
+            "preemptions=4",
+            "rejected=2",
+            "truncated=7",
+            "expired=5",
+            "cancelled=6",
+            "failed=1",
+            "respawns=2",
+            "shed_wait_p50=",
+        ] {
             assert!(s.contains(needle), "summary missing {needle}: {s}");
         }
         // Unbounded pools print an inf budget, not usize::MAX.
@@ -304,7 +349,7 @@ mod tests {
                 decode_time: Duration::from_secs(2),
                 prefill_tokens: 1000,
                 decode_tokens: 300,
-                truncated_prompts: 0,
+                ..Default::default()
             },
             ..Default::default()
         };

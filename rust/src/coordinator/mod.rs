@@ -29,5 +29,5 @@ pub use generate::{
 };
 pub use metrics::{Histogram, ServeMetrics};
 pub use native_gen::NativeGenerator;
-pub use scheduler::{ContinuousCfg, Scheduler};
-pub use server::{Coordinator, GenRequest, GenResponse};
+pub use scheduler::{ContinuousCfg, Scheduler, Tick};
+pub use server::{Coordinator, GenRequest, GenResponse, GenStatus};

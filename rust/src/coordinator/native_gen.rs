@@ -17,7 +17,9 @@ use super::generate::{
 };
 use crate::linalg::{par, Rng};
 use crate::model::{KvCache, KvPagePool, KvPoolCfg, NativeModel, PrefixCache, QuantConfig};
+use crate::runtime::chaos::Chaos;
 use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 /// One in-flight (or finished-awaiting-collection) sequence of the
@@ -59,6 +61,11 @@ pub struct NativeGenerator {
     running: Vec<usize>,
     /// Preempted ids not yet drained by the scheduler.
     preempted_out: Vec<u64>,
+    /// Quarantined ids (reproduced a decode panic alone) not yet drained
+    /// via [`StepEngine::take_failed`].
+    failed_out: Vec<u64>,
+    /// Deterministic fault injection (off by default, zero-cost).
+    chaos: Chaos,
 }
 
 impl NativeGenerator {
@@ -112,6 +119,8 @@ impl NativeGenerator {
             seqs: Vec::new(),
             running: Vec::new(),
             preempted_out: Vec::new(),
+            failed_out: Vec::new(),
+            chaos: Chaos::off(),
         }
     }
 
@@ -127,6 +136,23 @@ impl NativeGenerator {
             None
         };
         self
+    }
+
+    /// Inject a deterministic fault plan (see [`crate::runtime::chaos`]):
+    /// planned KV-page allocation failures and decode-step panics fire at
+    /// exact counters. Call after [`Self::with_serve_pool`] — the pool is
+    /// re-armed with the same budget plus the fault plan.
+    pub fn with_chaos(mut self, chaos: Chaos) -> Self {
+        self.pool = self.pool.with_chaos(chaos.clone());
+        self.chaos = chaos;
+        self
+    }
+
+    /// Handle onto the serving page pool (shared state): lets harnesses
+    /// assert page accounting from outside the engine, e.g. that every
+    /// page returns to the pool after a drain.
+    pub fn serve_pool(&self) -> KvPagePool {
+        self.pool.clone()
     }
 
     /// Clamp a prompt so at least one generated token fits under the
@@ -199,6 +225,98 @@ impl NativeGenerator {
         self.seqs[idx].cache = None;
         self.running.retain(|&r| r != idx);
         self.preempted_out.push(idx as u64);
+    }
+
+    /// Rebuild a cache dropped when a sibling group's decode panicked:
+    /// re-prefill `prompt + out[..n-1]` (the rows the cache held) plus
+    /// one reserved row for the pending step. Bit-exact — `next` is
+    /// already sampled, so no RNG is consumed, exactly like resume.
+    fn rebuild_cache(&mut self, idx: usize) -> bool {
+        let s = &self.seqs[idx];
+        let mut toks = s.prompt.clone();
+        toks.extend_from_slice(&s.out[..s.out.len() - 1]);
+        let Some((mut cache, _logits)) = self.build_cache(&toks) else {
+            return false;
+        };
+        if !cache.reserve_tokens(1) {
+            return false;
+        }
+        self.seqs[idx].cache = Some(cache);
+        true
+    }
+
+    /// Decode one batched step for `idxs`, isolating panics: the group
+    /// runs under `catch_unwind`; on a panic the group's caches are
+    /// poisoned (dropped, pages released) and the group is bisected until
+    /// the offender decodes alone — it is quarantined (terminal, surfaced
+    /// via [`StepEngine::take_failed`]) and every other sequence retries
+    /// bit-exactly via re-prefill. Transient panics (ones that do not
+    /// reproduce) cost only the retry.
+    fn decode_group(&mut self, idxs: &[usize], step_no: u64, finished: &mut Vec<u64>) {
+        // Restore caches lost to a poisoned sibling group; a sequence the
+        // pool cannot re-seat right now is preempted, not lost.
+        let mut group: Vec<usize> = Vec::with_capacity(idxs.len());
+        for &idx in idxs {
+            if self.seqs[idx].cache.is_some() || self.rebuild_cache(idx) {
+                group.push(idx);
+            } else {
+                self.preempt(idx);
+            }
+        }
+        if group.is_empty() {
+            return;
+        }
+        let toks: Vec<u8> = group.iter().map(|&i| self.seqs[i].next).collect();
+        let ids: Vec<u64> = group.iter().map(|&i| i as u64).collect();
+        let mut taken: Vec<KvCache> =
+            group.iter().map(|&i| self.seqs[i].cache.take().expect("present above")).collect();
+        let t0 = Instant::now();
+        let stepped = {
+            let (chaos, model, qc) = (&self.chaos, &self.model, self.qc.as_ref());
+            catch_unwind(AssertUnwindSafe(|| {
+                chaos.on_decode(step_no, &ids);
+                let mut refs: Vec<&mut KvCache> = taken.iter_mut().collect();
+                model.decode_step(&mut refs, &toks, qc)
+            }))
+        };
+        self.stats.decode_time += t0.elapsed();
+        match stepped {
+            Ok(logits) => {
+                self.stats.decode_tokens += group.len() as u64;
+                for (r, (&idx, cache)) in group.iter().zip(taken).enumerate() {
+                    let s = &mut self.seqs[idx];
+                    let tok =
+                        sample_index(logits.row(r), self.sampling.temperature, &mut s.rng) as u8;
+                    s.out.push(tok);
+                    s.next = tok;
+                    let room = cache.has_room();
+                    s.cache = Some(cache);
+                    if s.out.len() >= s.max_new || !room {
+                        s.done = true;
+                        finished.push(idx as u64);
+                    }
+                }
+            }
+            Err(_) => {
+                self.stats.step_panics += 1;
+                // Mid-forward state is untrustworthy: poison the group's
+                // caches (pages return to the pool on drop).
+                drop(taken);
+                if group.len() == 1 {
+                    let idx = group[0];
+                    self.stats.quarantined += 1;
+                    self.running.retain(|&r| r != idx);
+                    let s = &mut self.seqs[idx];
+                    s.done = true;
+                    self.failed_out.push(idx as u64);
+                } else {
+                    let mid = group.len() / 2;
+                    let (left, right) = (group[..mid].to_vec(), group[mid..].to_vec());
+                    self.decode_group(&left, step_no, finished);
+                    self.decode_group(&right, step_no, finished);
+                }
+            }
+        }
     }
 }
 
@@ -354,30 +472,12 @@ impl StepEngine for NativeGenerator {
             self.preempt(victim);
             active.pop();
         }
-        // Decode the surviving batch: caches move out of the slab for the
-        // duration of the step (simultaneous &mut borrows), then return.
-        let toks: Vec<u8> = active.iter().map(|&i| self.seqs[i].next).collect();
-        let mut taken: Vec<KvCache> =
-            active.iter().map(|&i| self.seqs[i].cache.take().expect("reserved above")).collect();
-        let t0 = Instant::now();
-        let logits = {
-            let mut refs: Vec<&mut KvCache> = taken.iter_mut().collect();
-            self.model.decode_step(&mut refs, &toks, self.qc.as_ref())
-        };
-        self.stats.decode_time += t0.elapsed();
-        self.stats.decode_tokens += active.len() as u64;
-        for (r, (&idx, cache)) in active.iter().zip(taken).enumerate() {
-            let s = &mut self.seqs[idx];
-            let tok = sample_index(logits.row(r), self.sampling.temperature, &mut s.rng) as u8;
-            s.out.push(tok);
-            s.next = tok;
-            let room = cache.has_room();
-            s.cache = Some(cache);
-            if s.out.len() >= s.max_new || !room {
-                s.done = true;
-                finished.push(idx as u64);
-            }
-        }
+        // Decode the surviving batch under panic isolation: caches move
+        // out of the slab for the duration of the step (simultaneous
+        // &mut borrows), then return — unless the group panics, in which
+        // case `decode_group` bisects to the offender.
+        let step_no = self.chaos.next_step();
+        self.decode_group(&active, step_no, &mut finished);
         let seqs = &self.seqs;
         self.running.retain(|&i| !seqs[i].done);
         Ok(finished)
@@ -395,6 +495,10 @@ impl StepEngine for NativeGenerator {
 
     fn take_preempted(&mut self) -> Vec<u64> {
         std::mem::take(&mut self.preempted_out)
+    }
+
+    fn take_failed(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.failed_out)
     }
 
     fn resume(&mut self, id: u64) -> Result<bool> {

@@ -1,11 +1,12 @@
 //! Continuous-batching scheduler: the in-flight replacement for the
 //! one-shot batch loop.
 //!
-//! Each [`Scheduler::tick`] resumes what it can, admits from the queue up
-//! to the engine's slot cap and the page-pool watermark, runs one batched
-//! decode step, and replies to whatever finished — so sequences join
-//! mid-decode and leave individually at their own `max_new` instead of
-//! idling until the slowest member of a static batch drains.
+//! Each [`Scheduler::tick`] sheds expired work, resumes what it can,
+//! admits from the queue up to the engine's slot cap and the page-pool
+//! watermark, runs one batched decode step, and replies to whatever
+//! finished — so sequences join mid-decode and leave individually at
+//! their own `max_new` instead of idling until the slowest member of a
+//! static batch drains.
 //!
 //! Backpressure is two-level: a bounded wait queue (`max_queue`, overflow
 //! rejected immediately) and an admission watermark on page-pool
@@ -17,10 +18,21 @@
 //! preempted sequence that cannot resume finishes with the tokens it has,
 //! and a queued request that cannot admit is rejected rather than wedging
 //! the queue.
+//!
+//! Failure handling: requests carry optional deadlines — expired queued
+//! requests are shed before admission, expired running sequences are
+//! cancelled at tick granularity (pages released, partial output
+//! returned). The decode step runs under `catch_unwind`; a panic that
+//! escapes the engine's own isolation (or a step error) fails the
+//! in-flight set and reports [`Tick::EngineFailed`] so the supervisor
+//! can respawn via [`Scheduler::replace_engine`] — the queue survives.
 
-use super::{AdmitOutcome, GenRequest, GenResponse, ServeMetrics, StepEngine};
+use super::metrics::lock_recover;
+use super::server::respond;
+use super::{AdmitOutcome, GenRequest, GenStatus, ServeMetrics, StepEngine};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -28,17 +40,39 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Copy, Debug)]
 pub struct ContinuousCfg {
     /// Bounded wait queue: requests arriving past this depth are rejected
-    /// immediately (`GenResponse::rejected`).
+    /// immediately ([`GenStatus::Rejected`]).
     pub max_queue: usize,
     /// Stop admitting new sequences while page-pool occupancy is at or
     /// above this fraction, reserving the remainder for in-flight growth.
     pub admit_watermark: f64,
+    /// Initial delay before respawning a lost engine; doubles per
+    /// consecutive failure up to [`Self::respawn_backoff_cap`].
+    pub respawn_backoff: Duration,
+    /// Upper bound on the respawn delay.
+    pub respawn_backoff_cap: Duration,
 }
 
 impl Default for ContinuousCfg {
     fn default() -> Self {
-        ContinuousCfg { max_queue: 256, admit_watermark: 0.9 }
+        ContinuousCfg {
+            max_queue: 256,
+            admit_watermark: 0.9,
+            respawn_backoff: Duration::from_millis(10),
+            respawn_backoff_cap: Duration::from_secs(1),
+        }
     }
+}
+
+/// What a [`Scheduler::tick`] did to the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tick {
+    /// Normal round; the engine is healthy.
+    Ok,
+    /// The decode step panicked past the engine's own isolation (or
+    /// returned an error): in-flight sequences were failed, the engine
+    /// is unusable, and the caller must [`Scheduler::replace_engine`]
+    /// before ticking again. Queued requests are preserved.
+    EngineFailed,
 }
 
 /// Drives a [`StepEngine`] one batched token at a time.
@@ -53,6 +87,7 @@ pub struct Scheduler {
     preempted: VecDeque<u64>,
     metrics: Arc<Mutex<ServeMetrics>>,
     started: Instant,
+    draining: bool,
 }
 
 impl Scheduler {
@@ -69,20 +104,24 @@ impl Scheduler {
             preempted: VecDeque::new(),
             metrics,
             started: Instant::now(),
+            draining: false,
         }
     }
 
-    /// Accept or reject an incoming request (bounded-queue backpressure).
+    /// Accept or reject an incoming request (bounded-queue backpressure,
+    /// drain mode, and dead-on-arrival deadlines).
     pub fn enqueue(&mut self, req: GenRequest) {
-        if self.queue.len() >= self.cfg.max_queue {
-            self.metrics.lock().unwrap().rejected += 1;
-            let _ = req.reply.send(GenResponse {
-                id: req.id,
-                tokens: Vec::new(),
-                latency: req.enqueued.elapsed(),
-                batch_size: 0,
-                rejected: true,
-            });
+        let now = Instant::now();
+        if req.expired(now) {
+            let mut met = lock_recover(&self.metrics);
+            met.expired += 1;
+            met.shed_wait.record(now - req.enqueued);
+            respond(&req, Vec::new(), 0, GenStatus::Expired);
+            return;
+        }
+        if self.draining || self.queue.len() >= self.cfg.max_queue {
+            lock_recover(&self.metrics).rejected += 1;
+            respond(&req, Vec::new(), 0, GenStatus::Rejected);
             return;
         }
         self.queue.push_back(req);
@@ -93,6 +132,49 @@ impl Scheduler {
         self.queue.is_empty() && self.inflight.is_empty()
     }
 
+    /// Enter drain mode: queued-but-unadmitted requests get terminal
+    /// rejections now, admission stops, and only the in-flight set keeps
+    /// ticking to completion (or deadline). Idempotent.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+        if self.queue.is_empty() {
+            return;
+        }
+        let mut met = lock_recover(&self.metrics);
+        for req in self.queue.drain(..) {
+            met.rejected += 1;
+            respond(&req, Vec::new(), 0, GenStatus::Rejected);
+        }
+    }
+
+    /// Terminate everything with a terminal response: queued requests are
+    /// rejected, in-flight sequences failed. For non-recoverable errors —
+    /// clients must never hang.
+    pub fn abort(&mut self) {
+        self.begin_drain();
+        let n = self.fail_inflight();
+        lock_recover(&self.metrics).failed += n;
+    }
+
+    /// Swap in a fresh engine after [`Tick::EngineFailed`]. The failed
+    /// tick already gave every in-flight request a terminal response, so
+    /// the replacement starts from the surviving queue only.
+    pub fn replace_engine(&mut self, engine: Box<dyn StepEngine>) {
+        debug_assert!(self.inflight.is_empty(), "replace_engine with live sequences");
+        self.engine = engine;
+    }
+
+    /// Fail every in-flight request (engine state is unknown — no partial
+    /// output can be trusted). Returns how many were failed.
+    fn fail_inflight(&mut self) -> u64 {
+        let n = self.inflight.len() as u64;
+        for (_, req) in self.inflight.drain() {
+            respond(&req, Vec::new(), 0, GenStatus::Failed);
+        }
+        self.preempted.clear();
+        n
+    }
+
     fn occupancy(&self) -> f64 {
         let ps = self.engine.pool_stats();
         if ps.budget_bytes == 0 || ps.budget_bytes == usize::MAX {
@@ -101,8 +183,38 @@ impl Scheduler {
         ps.live_bytes as f64 / ps.budget_bytes as f64
     }
 
-    /// One scheduling round: resume → admit → step → reply → account.
-    pub fn tick(&mut self) -> Result<()> {
+    /// One scheduling round: shed/cancel expired → resume → admit → step
+    /// → reply → account.
+    pub fn tick(&mut self) -> Result<Tick> {
+        // Deadline shedding, queue first: expired waiters leave before
+        // they can consume an admission slot.
+        let now = Instant::now();
+        let mut shed: Vec<GenRequest> = Vec::new();
+        if self.queue.iter().any(|r| r.expired(now)) {
+            let (expired, keep): (Vec<_>, Vec<_>) =
+                self.queue.drain(..).partition(|r| r.expired(now));
+            self.queue = keep.into();
+            shed = expired;
+        }
+
+        // Deadline cancellation, in-flight: past-deadline sequences stop
+        // at tick granularity; their pages free immediately and the
+        // caller gets the bit-exact prefix generated so far.
+        let over: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, r)| r.expired(now))
+            .map(|(&id, _)| id)
+            .collect();
+        let mut cancelled: Vec<(GenRequest, Vec<u8>)> = Vec::new();
+        for id in over {
+            if let Some(req) = self.inflight.remove(&id) {
+                let tokens = self.engine.take_output(id).unwrap_or_default();
+                self.preempted.retain(|&p| p != id);
+                cancelled.push((req, tokens));
+            }
+        }
+
         // Resume preempted sequences front-first (FCFS among victims);
         // stop at the first that still lacks capacity to keep ordering.
         let mut resumed = 0usize;
@@ -141,14 +253,43 @@ impl Scheduler {
             }
         }
 
+        // The decode step is the panic frontier: engines isolate and
+        // quarantine what they can (surfacing it via `take_failed`), but
+        // a panic that escapes here means the engine itself is gone.
         let bsz = self.engine.running();
-        let finished = if bsz > 0 { self.engine.step()? } else { Vec::new() };
+        let stepped = if bsz > 0 {
+            catch_unwind(AssertUnwindSafe(|| self.engine.step()))
+        } else {
+            Ok(Ok(Vec::new()))
+        };
+        let finished = match stepped {
+            Ok(Ok(f)) => f,
+            Ok(Err(e)) => {
+                eprintln!("engine step failed: {e:#}");
+                return self.tick_engine_failed(shed, cancelled, now);
+            }
+            Err(_) => {
+                eprintln!("engine step panicked; failing in-flight sequences");
+                return self.tick_engine_failed(shed, cancelled, now);
+            }
+        };
 
         let mut done: Vec<(GenRequest, Vec<u8>)> = Vec::new();
         for id in finished {
             if let Some(req) = self.inflight.remove(&id) {
                 let tokens = self.engine.take_output(id).unwrap_or_default();
                 done.push((req, tokens));
+            }
+        }
+
+        // Sequences the engine quarantined via its own panic isolation:
+        // terminal failures, partial output returned for diagnosis.
+        let mut failed: Vec<(GenRequest, Vec<u8>)> = Vec::new();
+        for id in self.engine.take_failed() {
+            if let Some(req) = self.inflight.remove(&id) {
+                let tokens = self.engine.take_output(id).unwrap_or_default();
+                self.preempted.retain(|&p| p != id);
+                failed.push((req, tokens));
             }
         }
 
@@ -170,19 +311,14 @@ impl Scheduler {
                 }
             } else if let Some(req) = self.queue.pop_front() {
                 forced_rejects = 1;
-                let _ = req.reply.send(GenResponse {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    latency: req.enqueued.elapsed(),
-                    batch_size: 0,
-                    rejected: true,
-                });
+                respond(&req, Vec::new(), 0, GenStatus::Rejected);
             }
         }
 
         let ps = self.engine.pool_stats();
         let stats = self.engine.take_stats();
-        let mut met = self.metrics.lock().unwrap();
+        let mut met = lock_recover(&self.metrics);
+        Self::record_shed(&mut met, &shed, &cancelled, now);
         for t in ttfts {
             met.ttft.record(t);
         }
@@ -192,13 +328,18 @@ impl Scheduler {
             met.requests += 1;
             met.tokens_out += tokens.len() as u64;
             met.request_latency.record(latency);
-            let _ = req.reply.send(GenResponse {
+            let _ = req.reply.send(super::GenResponse {
                 id: req.id,
                 tokens,
                 latency,
                 batch_size: bsz,
-                rejected: false,
+                status: GenStatus::Ok,
             });
+        }
+        for (req, tokens) in failed {
+            met.failed += 1;
+            let tokens: Vec<u8> = tokens.into_iter().take(req.max_new).collect();
+            respond(&req, tokens, bsz, GenStatus::Failed);
         }
         met.preemptions += n_preempted;
         met.rejected += forced_rejects;
@@ -213,7 +354,45 @@ impl Scheduler {
         met.prefix_lookups = ps.prefix_lookups;
         met.engine.accumulate(&stats);
         met.elapsed = self.started.elapsed();
-        Ok(())
+        Ok(Tick::Ok)
+    }
+
+    /// Common exit for a tick that lost the engine: deliver this tick's
+    /// shed/cancelled responses, fail the in-flight set, keep the queue.
+    fn tick_engine_failed(
+        &mut self,
+        shed: Vec<GenRequest>,
+        cancelled: Vec<(GenRequest, Vec<u8>)>,
+        now: Instant,
+    ) -> Result<Tick> {
+        let n_failed = self.fail_inflight();
+        let mut met = lock_recover(&self.metrics);
+        Self::record_shed(&mut met, &shed, &cancelled, now);
+        met.failed += n_failed;
+        met.elapsed = self.started.elapsed();
+        Ok(Tick::EngineFailed)
+    }
+
+    /// Deliver + account deadline sheds (queued) and cancellations
+    /// (in-flight) under an already-held metrics lock.
+    fn record_shed(
+        met: &mut ServeMetrics,
+        shed: &[GenRequest],
+        cancelled: &[(GenRequest, Vec<u8>)],
+        now: Instant,
+    ) {
+        for req in shed {
+            met.expired += 1;
+            met.shed_wait.record(now - req.enqueued);
+            respond(req, Vec::new(), 0, GenStatus::Expired);
+        }
+        for (req, tokens) in cancelled {
+            met.cancelled += 1;
+            met.shed_wait.record(now - req.enqueued);
+            let tokens: Vec<u8> = tokens.iter().cloned().take(req.max_new).collect();
+            met.tokens_out += tokens.len() as u64;
+            respond(req, tokens, 0, GenStatus::Expired);
+        }
     }
 }
 
@@ -232,9 +411,16 @@ mod tests {
         preempt_on_first_step: bool,
         allow_resume: bool,
         did_preempt: bool,
+        /// Panic inside `step` on the Nth call (1-based).
+        panic_on_step: Option<usize>,
+        /// Quarantine this sequence id on the first step (models engine
+        /// panic isolation surfacing via `take_failed`).
+        quarantine_on_first_step: Option<u64>,
+        steps: usize,
         running: Vec<u64>,
         seqs: HashMap<u64, (Vec<u8>, usize)>,
         pending_preempt: Vec<u64>,
+        pending_failed: Vec<u64>,
         next_id: u64,
     }
 
@@ -246,9 +432,13 @@ mod tests {
                 preempt_on_first_step: false,
                 allow_resume: true,
                 did_preempt: false,
+                panic_on_step: None,
+                quarantine_on_first_step: None,
+                steps: 0,
                 running: Vec::new(),
                 seqs: HashMap::new(),
                 pending_preempt: Vec::new(),
+                pending_failed: Vec::new(),
                 next_id: 0,
             }
         }
@@ -267,10 +457,20 @@ mod tests {
         }
 
         fn step(&mut self) -> Result<Vec<u64>> {
+            self.steps += 1;
+            if self.panic_on_step == Some(self.steps) {
+                panic!("scripted step panic");
+            }
             if self.preempt_on_first_step && !self.did_preempt {
                 self.did_preempt = true;
                 self.pending_preempt.append(&mut self.running);
                 return Ok(Vec::new());
+            }
+            if let Some(bad) = self.quarantine_on_first_step.take() {
+                if self.running.contains(&bad) {
+                    self.running.retain(|&r| r != bad);
+                    self.pending_failed.push(bad);
+                }
             }
             let mut finished = Vec::new();
             for &id in &self.running {
@@ -293,6 +493,10 @@ mod tests {
 
         fn take_preempted(&mut self) -> Vec<u64> {
             std::mem::take(&mut self.pending_preempt)
+        }
+
+        fn take_failed(&mut self) -> Vec<u64> {
+            std::mem::take(&mut self.pending_failed)
         }
 
         fn resume(&mut self, id: u64) -> Result<bool> {
@@ -319,7 +523,7 @@ mod tests {
     fn drain(sched: &mut Scheduler) {
         let mut guard = 0;
         while !sched.idle() {
-            sched.tick().unwrap();
+            assert_eq!(sched.tick().unwrap(), Tick::Ok);
             guard += 1;
             assert!(guard < 1000, "scheduler failed to drain");
         }
@@ -344,7 +548,7 @@ mod tests {
         drain(&mut sched);
         for (rx, max_new) in rxs {
             let resp = rx.recv().unwrap();
-            assert!(!resp.rejected);
+            assert!(resp.is_ok());
             assert_eq!(resp.tokens.len(), max_new);
         }
         let met = metrics.lock().unwrap();
@@ -371,10 +575,10 @@ mod tests {
         sched.enqueue(a);
         sched.enqueue(b); // queue full → rejected before any tick
         let rb = rxb.recv().unwrap();
-        assert!(rb.rejected);
+        assert!(rb.rejected());
         assert!(rb.tokens.is_empty());
         drain(&mut sched);
-        assert!(!rxa.recv().unwrap().rejected);
+        assert!(rxa.recv().unwrap().is_ok());
         let met = metrics.lock().unwrap();
         assert_eq!(met.rejected, 1);
         assert_eq!(met.requests, 1);
@@ -392,9 +596,9 @@ mod tests {
         sched.enqueue(bad);
         sched.enqueue(ok);
         drain(&mut sched);
-        assert!(rx_bad.recv().unwrap().rejected);
+        assert!(rx_bad.recv().unwrap().rejected());
         let resp = rx_ok.recv().unwrap();
-        assert!(!resp.rejected);
+        assert!(resp.is_ok());
         assert_eq!(resp.tokens.len(), 2);
         assert_eq!(metrics.lock().unwrap().rejected, 1);
     }
@@ -413,7 +617,7 @@ mod tests {
         let resp = rx.recv().unwrap();
         // Finished with what it had: the first token from admit, not the
         // full five, and not a rejection.
-        assert!(!resp.rejected);
+        assert!(resp.is_ok());
         assert_eq!(resp.tokens.len(), 1);
         let met = metrics.lock().unwrap();
         assert_eq!(met.preemptions, 1);
@@ -431,8 +635,158 @@ mod tests {
         sched.enqueue(req);
         drain(&mut sched);
         let resp = rx.recv().unwrap();
-        assert!(!resp.rejected);
+        assert!(resp.is_ok());
         assert_eq!(resp.tokens.len(), 4);
         assert_eq!(metrics.lock().unwrap().preemptions, 1);
+    }
+
+    #[test]
+    fn expired_queued_request_is_shed_before_admission() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(1)),
+            ContinuousCfg::default(),
+            metrics.clone(),
+        );
+        // Slot-starved: `long` occupies the single slot, `dead` waits
+        // with an already-past deadline and must be shed, never admitted.
+        let (long, rx_long) = GenRequest::new(0, vec![1], 3);
+        let (dead, rx_dead) =
+            GenRequest::with_deadline(1, vec![2], 3, Instant::now() - Duration::from_millis(1));
+        sched.enqueue(long);
+        sched.tick().unwrap(); // admits `long`
+        sched.enqueue(dead);
+        drain(&mut sched);
+        assert_eq!(rx_dead.recv().unwrap().status, GenStatus::Expired);
+        assert!(rx_long.recv().unwrap().is_ok());
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.expired, 1);
+        assert_eq!(met.requests, 1);
+        assert_eq!(met.shed_wait.count(), 1);
+    }
+
+    #[test]
+    fn expired_inflight_sequence_is_cancelled_with_partial_output() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(2)),
+            ContinuousCfg::default(),
+            metrics.clone(),
+        );
+        let (req, rx) =
+            GenRequest::with_deadline(0, vec![1], 100, Instant::now() + Duration::from_millis(20));
+        sched.enqueue(req);
+        sched.tick().unwrap(); // admitted, running
+        std::thread::sleep(Duration::from_millis(30));
+        sched.tick().unwrap(); // past deadline → cancelled this tick
+        assert!(sched.idle(), "cancelled sequence must leave the scheduler");
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.status, GenStatus::Expired);
+        // Partial output: at least the first token from admit, well short
+        // of the requested 100.
+        assert!(!resp.tokens.is_empty());
+        assert!(resp.tokens.len() < 100);
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.cancelled, 1);
+        assert_eq!(met.requests, 0);
+    }
+
+    #[test]
+    fn drain_rejects_queued_and_completes_inflight() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(1)),
+            ContinuousCfg::default(),
+            metrics.clone(),
+        );
+        let (a, rxa) = GenRequest::new(0, vec![1], 3);
+        let (b, rxb) = GenRequest::new(1, vec![2], 3);
+        sched.enqueue(a);
+        sched.enqueue(b);
+        sched.tick().unwrap(); // one slot: `a` admitted, `b` queued
+        sched.begin_drain();
+        // Queued request gets its terminal rejection immediately…
+        assert!(rxb.recv().unwrap().rejected());
+        // …and a post-drain submit is rejected too.
+        let (c, rxc) = GenRequest::new(2, vec![3], 1);
+        sched.enqueue(c);
+        assert!(rxc.recv().unwrap().rejected());
+        // …while the in-flight sequence runs to its full completion.
+        drain(&mut sched);
+        let ra = rxa.recv().unwrap();
+        assert!(ra.is_ok());
+        assert_eq!(ra.tokens.len(), 3);
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.requests, 1);
+        assert_eq!(met.rejected, 2);
+    }
+
+    #[test]
+    fn step_panic_fails_inflight_preserves_queue() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut engine = MockEngine::new(1);
+        engine.panic_on_step = Some(1);
+        let mut sched =
+            Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+        let (a, rxa) = GenRequest::new(0, vec![1], 2);
+        let (b, rxb) = GenRequest::new(1, vec![2], 2);
+        sched.enqueue(a);
+        sched.enqueue(b);
+        // One slot: `a` admits then the step panics.
+        assert_eq!(sched.tick().unwrap(), Tick::EngineFailed);
+        let ra = rxa.recv().unwrap();
+        assert_eq!(ra.status, GenStatus::Failed);
+        // `b` survived in the queue; a replacement engine serves it.
+        sched.replace_engine(Box::new(MockEngine::new(1)));
+        drain(&mut sched);
+        assert!(rxb.recv().unwrap().is_ok());
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.failed, 1);
+        assert_eq!(met.requests, 1);
+    }
+
+    #[test]
+    fn engine_quarantine_surfaces_as_failed_response() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut engine = MockEngine::new(2);
+        engine.quarantine_on_first_step = Some(0);
+        let mut sched =
+            Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+        let (a, rxa) = GenRequest::new(0, vec![1], 3);
+        let (b, rxb) = GenRequest::new(1, vec![2], 3);
+        sched.enqueue(a);
+        sched.enqueue(b);
+        drain(&mut sched);
+        // Sequence 0 was quarantined by the engine's own isolation: a
+        // terminal failure carrying its partial output.
+        let ra = rxa.recv().unwrap();
+        assert_eq!(ra.status, GenStatus::Failed);
+        assert!(!ra.tokens.is_empty());
+        // Its batch-mate is untouched.
+        let rb = rxb.recv().unwrap();
+        assert!(rb.is_ok());
+        assert_eq!(rb.tokens.len(), 3);
+        let met = metrics.lock().unwrap();
+        assert_eq!(met.failed, 1);
+        assert_eq!(met.requests, 1);
+    }
+
+    #[test]
+    fn abort_terminates_everything() {
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let mut sched = Scheduler::new(
+            Box::new(MockEngine::new(1)),
+            ContinuousCfg::default(),
+            metrics.clone(),
+        );
+        let (a, rxa) = GenRequest::new(0, vec![1], 5);
+        let (b, rxb) = GenRequest::new(1, vec![2], 5);
+        sched.enqueue(a);
+        sched.enqueue(b);
+        sched.tick().unwrap(); // `a` in flight, `b` queued
+        sched.abort();
+        assert!(sched.idle());
+        assert_eq!(rxa.recv().unwrap().status, GenStatus::Failed);
+        assert_eq!(rxb.recv().unwrap().status, GenStatus::Rejected);
     }
 }

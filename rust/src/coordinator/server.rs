@@ -1,27 +1,81 @@
 //! The coordinator: request intake → dynamic batcher → worker → responses.
+//!
+//! Failure is a first-class input here: requests carry optional
+//! deadlines (shed from the queue, cancelled mid-decode), the worker
+//! isolates engine panics with `catch_unwind` + bisect (one poisoned
+//! request cannot take down its batch-mates), a lost engine is
+//! respawned with capped exponential backoff, and shutdown drains
+//! in-flight work while giving queued requests terminal rejections —
+//! every submitted request receives exactly one terminal
+//! [`GenResponse`], whatever faults occur.
 
-use super::{BatcherCfg, ContinuousCfg, DynamicBatcher, GenEngine, Scheduler, ServeMetrics, StepEngine};
+use super::metrics::lock_recover;
+use super::scheduler::Tick;
+use super::{
+    BatcherCfg, ContinuousCfg, DynamicBatcher, GenEngine, Scheduler, ServeMetrics, StepEngine,
+};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A generation request.
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u8>,
     pub max_new: usize,
+    /// Serve-by time: queued requests past it are shed before admission,
+    /// running sequences past it are cancelled at tick granularity.
+    pub deadline: Option<Instant>,
     pub(crate) enqueued: Instant,
     pub(crate) reply: Sender<GenResponse>,
 }
 
-#[cfg(test)]
 impl GenRequest {
     /// Build a request plus its reply receiver directly, bypassing a
-    /// [`Coordinator`] — for driving a [`Scheduler`] in unit tests.
-    pub(crate) fn new(id: u64, prompt: Vec<u8>, max_new: usize) -> (GenRequest, Receiver<GenResponse>) {
+    /// [`Coordinator`] — for driving a [`Scheduler`] deterministically
+    /// on the current thread (the chaos property suite does this).
+    pub fn new(id: u64, prompt: Vec<u8>, max_new: usize) -> (GenRequest, Receiver<GenResponse>) {
         let (reply, rx) = channel();
-        (GenRequest { id, prompt, max_new, enqueued: Instant::now(), reply }, rx)
+        (
+            GenRequest { id, prompt, max_new, deadline: None, enqueued: Instant::now(), reply },
+            rx,
+        )
     }
+
+    /// [`Self::new`] with a serve-by deadline.
+    pub fn with_deadline(
+        id: u64,
+        prompt: Vec<u8>,
+        max_new: usize,
+        deadline: Instant,
+    ) -> (GenRequest, Receiver<GenResponse>) {
+        let (req, rx) = Self::new(id, prompt, max_new);
+        (GenRequest { deadline: Some(deadline), ..req }, rx)
+    }
+
+    pub(crate) fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// How a request terminated. Every submitted request reaches exactly
+/// one of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GenStatus {
+    /// Served to completion; `tokens` is the full output.
+    Ok,
+    /// Refused — backpressure (bounded queue overflow, unservable
+    /// size), shutdown drain, or a dead worker. `tokens` is empty.
+    Rejected,
+    /// Deadline passed before completion. `tokens` holds whatever was
+    /// generated before cancellation (a bit-exact prefix of the full
+    /// output), possibly nothing.
+    Expired,
+    /// Lost to an engine failure: the request was quarantined by panic
+    /// isolation, or was in flight when the engine died.
+    Failed,
 }
 
 /// A generation response.
@@ -31,43 +85,154 @@ pub struct GenResponse {
     pub tokens: Vec<u8>,
     pub latency: std::time::Duration,
     pub batch_size: usize,
-    /// Refused by backpressure (bounded queue overflow, or a request the
-    /// engine can never serve); `tokens` is empty.
-    pub rejected: bool,
+    /// Terminal state; see [`GenStatus`].
+    pub status: GenStatus,
 }
 
-/// Client handle + worker thread. Dropping the handle (or calling
-/// [`Coordinator::shutdown`]) stops the worker after the queue drains.
+impl GenResponse {
+    pub fn is_ok(&self) -> bool {
+        self.status == GenStatus::Ok
+    }
+
+    /// Refused without serving (see [`GenStatus::Rejected`]).
+    pub fn rejected(&self) -> bool {
+        self.status == GenStatus::Rejected
+    }
+}
+
+pub(crate) fn respond(req: &GenRequest, tokens: Vec<u8>, batch_size: usize, status: GenStatus) {
+    let _ = req.reply.send(GenResponse {
+        id: req.id,
+        tokens,
+        latency: req.enqueued.elapsed(),
+        batch_size,
+        status,
+    });
+}
+
+/// Client handle + worker thread. [`Coordinator::shutdown`] (and drop)
+/// drains gracefully: admission stops, queued requests get terminal
+/// rejections, in-flight sequences run to completion (or deadline), and
+/// the worker is joined.
 pub struct Coordinator {
     tx: Option<Sender<GenRequest>>,
     worker: Option<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     metrics: Arc<Mutex<ServeMetrics>>,
+    /// Raised by shutdown/drop; the worker switches to drain mode.
+    drain: Arc<AtomicBool>,
 }
+
+/// Bisecting panic isolation for the static batch path: run
+/// `generate_batch` under `catch_unwind`; on a panic, respawn the
+/// engine (after the current backoff, which doubles, capped) and split
+/// the chunk until the offender is alone — it fails, the rest serve.
+/// `None` entries mark failed prompts; order matches `prompts`.
+fn gen_isolated(
+    engine: &mut Box<dyn GenEngine>,
+    make: &mut dyn FnMut() -> Box<dyn GenEngine>,
+    prompts: &[Vec<u8>],
+    max_new: usize,
+    backoff: &mut Duration,
+    backoff_cap: Duration,
+    respawns: &mut u64,
+) -> Vec<Option<Vec<u8>>> {
+    match catch_unwind(AssertUnwindSafe(|| engine.generate_batch(prompts, max_new))) {
+        Ok(Ok(outs)) => outs.into_iter().map(Some).collect(),
+        Ok(Err(e)) => {
+            eprintln!("generation failed: {e:#}");
+            vec![None; prompts.len()]
+        }
+        Err(_) => {
+            // The engine's internal state is unknown — replace it.
+            std::thread::sleep(*backoff);
+            *backoff = (*backoff * 2).min(backoff_cap);
+            *engine = make();
+            *respawns += 1;
+            if prompts.len() == 1 {
+                return vec![None];
+            }
+            let mid = prompts.len() / 2;
+            let mut left = gen_isolated(
+                engine,
+                make,
+                &prompts[..mid],
+                max_new,
+                backoff,
+                backoff_cap,
+                respawns,
+            );
+            left.extend(gen_isolated(
+                engine,
+                make,
+                &prompts[mid..],
+                max_new,
+                backoff,
+                backoff_cap,
+                respawns,
+            ));
+            left
+        }
+    }
+}
+
+const STATIC_RESPAWN_BACKOFF: Duration = Duration::from_millis(5);
+const STATIC_RESPAWN_BACKOFF_CAP: Duration = Duration::from_millis(500);
 
 impl Coordinator {
     /// Start the serving loop on a worker thread.
     ///
     /// Takes a *factory* rather than an engine: PJRT handles are not
     /// `Send`, so the engine is constructed on the worker thread and
-    /// never crosses a thread boundary. Production factories should
-    /// restore prebuilt quantization state via the artifact constructors
+    /// never crosses a thread boundary. The factory is `FnMut` because
+    /// supervision calls it again to respawn the engine after a
+    /// contained panic. Production factories should restore prebuilt
+    /// quantization state via the artifact constructors
     /// ([`super::NativeGenerator::quant_from_artifact`] /
     /// [`super::PjrtGenerator::quant_from_artifact`]) — loading packed
     /// codes is milliseconds, so worker (re)starts don't re-run
     /// calibration or GPTQ.
-    pub fn start<F>(make_engine: F, cfg: BatcherCfg) -> Coordinator
+    pub fn start<F>(mut make_engine: F, cfg: BatcherCfg) -> Coordinator
     where
-        F: FnOnce() -> Box<dyn GenEngine> + Send + 'static,
+        F: FnMut() -> Box<dyn GenEngine> + Send + 'static,
     {
         let (tx, rx) = channel::<GenRequest>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
+        let drain = Arc::new(AtomicBool::new(false));
+        let drain2 = drain.clone();
         let worker = std::thread::spawn(move || {
             let mut engine = make_engine();
             let started = Instant::now();
+            let mut backoff = STATIC_RESPAWN_BACKOFF;
             let batcher = DynamicBatcher::new(rx, cfg);
-            while let Some(mut batch) = batcher.next_batch() {
+            while let Some(batch) = batcher.next_batch() {
+                // Drain mode (shutdown/drop raised the flag): whatever is
+                // still queued gets a terminal rejection, not service.
+                if drain2.load(Ordering::SeqCst) {
+                    let mut met = lock_recover(&m2);
+                    met.rejected += batch.len() as u64;
+                    for req in &batch {
+                        respond(req, Vec::new(), 0, GenStatus::Rejected);
+                    }
+                    continue;
+                }
+                // Deadline shedding: a batch member whose serve-by time
+                // already passed is expired up front, not generated for.
+                let now = Instant::now();
+                let (expired, mut batch): (Vec<_>, Vec<_>) =
+                    batch.into_iter().partition(|r| r.expired(now));
+                if !expired.is_empty() {
+                    let mut met = lock_recover(&m2);
+                    met.expired += expired.len() as u64;
+                    for req in &expired {
+                        met.shed_wait.record(now - req.enqueued);
+                        respond(req, Vec::new(), 0, GenStatus::Expired);
+                    }
+                }
+                if batch.is_empty() {
+                    continue;
+                }
                 let bsz = batch.len();
                 let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
                 // Move the prompts out — requests only carry them in, so
@@ -80,26 +245,38 @@ impl Coordinator {
                 // (which includes earlier chunks' full generation) plus
                 // that chunk's prefill — not a summed batch prefill.
                 let chunk = engine.max_batch();
-                let mut outputs: Vec<Vec<u8>> = Vec::with_capacity(bsz);
+                let mut outputs: Vec<Option<Vec<u8>>> = Vec::with_capacity(bsz);
                 let mut chunk_stats: Vec<(Instant, super::EngineStats)> = Vec::new();
+                let mut respawns = 0u64;
                 for c in prompts.chunks(chunk) {
                     let c_start = Instant::now();
-                    match engine.generate_batch(c, max_new) {
-                        Ok(mut o) => outputs.append(&mut o),
-                        Err(e) => {
-                            eprintln!("generation failed: {e:#}");
-                            outputs.extend(std::iter::repeat_with(Vec::new).take(c.len()));
-                        }
-                    }
+                    outputs.extend(gen_isolated(
+                        &mut engine,
+                        &mut make_engine,
+                        c,
+                        max_new,
+                        &mut backoff,
+                        STATIC_RESPAWN_BACKOFF_CAP,
+                        &mut respawns,
+                    ));
                     chunk_stats.push((c_start, engine.take_stats()));
                 }
+                if respawns == 0 {
+                    backoff = STATIC_RESPAWN_BACKOFF;
+                }
                 let now = Instant::now();
-                let mut met = m2.lock().unwrap();
+                let mut met = lock_recover(&m2);
+                met.respawns += respawns;
                 met.batch_sizes.push(bsz);
                 for (_, s) in &chunk_stats {
                     met.engine.accumulate(s);
                 }
                 for (ri, (req, tokens)) in batch.into_iter().zip(outputs).enumerate() {
+                    let Some(tokens) = tokens else {
+                        met.failed += 1;
+                        respond(&req, Vec::new(), bsz, GenStatus::Failed);
+                        continue;
+                    };
                     let latency = now - req.enqueued;
                     met.requests += 1;
                     met.tokens_out += tokens.len().min(req.max_new) as u64;
@@ -115,7 +292,7 @@ impl Coordinator {
                         tokens: tokens.into_iter().take(req.max_new).collect(),
                         latency,
                         batch_size: bsz,
-                        rejected: false,
+                        status: GenStatus::Ok,
                     });
                 }
                 met.elapsed = now - started;
@@ -126,6 +303,7 @@ impl Coordinator {
             worker: Some(worker),
             next_id: std::sync::atomic::AtomicU64::new(0),
             metrics,
+            drain,
         }
     }
 
@@ -136,19 +314,36 @@ impl Coordinator {
     /// channel into a [`Scheduler`] and ticks it — sequences join the
     /// running batch mid-decode and leave individually at their own
     /// `max_new`. Backpressure (bounded queue + page-pool admission
-    /// watermark) can refuse requests; check [`GenResponse::rejected`].
-    pub fn start_continuous<F>(make_engine: F, cfg: ContinuousCfg) -> Coordinator
+    /// watermark) can refuse requests; check [`GenResponse::status`].
+    ///
+    /// Supervision: a tick that loses the engine (a panic that escaped
+    /// the engine's own isolation, or a step error) fails the in-flight
+    /// sequences, then the factory is called again to respawn the
+    /// engine after a capped exponential backoff
+    /// ([`ContinuousCfg::respawn_backoff`]); queued requests survive and
+    /// are served by the replacement.
+    pub fn start_continuous<F>(mut make_engine: F, cfg: ContinuousCfg) -> Coordinator
     where
-        F: FnOnce() -> Box<dyn StepEngine> + Send + 'static,
+        F: FnMut() -> Box<dyn StepEngine> + Send + 'static,
     {
         let (tx, rx) = channel::<GenRequest>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
+        let drain = Arc::new(AtomicBool::new(false));
+        let drain2 = drain.clone();
         let worker = std::thread::spawn(move || {
+            let m3 = m2.clone();
             let mut sched = Scheduler::new(make_engine(), cfg, m2);
             let mut open = true;
-            while open || !sched.idle() {
-                if open && sched.idle() {
+            let mut backoff = cfg.respawn_backoff;
+            loop {
+                if drain2.load(Ordering::SeqCst) {
+                    sched.begin_drain(); // idempotent
+                }
+                if !open && sched.idle() {
+                    break;
+                }
+                if open && sched.idle() && !drain2.load(Ordering::SeqCst) {
                     // Nothing to do: block for the next request instead
                     // of spinning.
                     match rx.recv() {
@@ -166,11 +361,29 @@ impl Coordinator {
                     }
                 }
                 if sched.idle() {
+                    if !open {
+                        break;
+                    }
                     continue;
                 }
-                if let Err(e) = sched.tick() {
-                    eprintln!("continuous serving failed: {e:#}");
-                    break;
+                match sched.tick() {
+                    Ok(Tick::Ok) => backoff = cfg.respawn_backoff,
+                    Ok(Tick::EngineFailed) => {
+                        // In-flight state died with the engine (tick
+                        // already failed those requests); queued work
+                        // survives for the replacement.
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(cfg.respawn_backoff_cap);
+                        sched.replace_engine(make_engine());
+                        lock_recover(&m3).respawns += 1;
+                    }
+                    Err(e) => {
+                        // Non-recoverable scheduler error: terminate
+                        // everything cleanly rather than hanging clients.
+                        eprintln!("continuous serving failed: {e:#}");
+                        sched.abort();
+                        break;
+                    }
                 }
             }
         });
@@ -179,35 +392,71 @@ impl Coordinator {
             worker: Some(worker),
             next_id: std::sync::atomic::AtomicU64::new(0),
             metrics,
+            drain,
         }
     }
 
     /// Submit a request; the receiver yields the response when served.
+    /// After shutdown — or if the worker died — the response is an
+    /// immediate clean rejection, never a panic.
     pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> Receiver<GenResponse> {
+        self.submit_with_deadline(prompt, max_new, None)
+    }
+
+    /// [`Self::submit`] with a serve-by deadline relative to now. The
+    /// scheduler sheds the request if it is still queued at the
+    /// deadline, and cancels it at the next tick if it is mid-decode
+    /// (returning the tokens generated so far).
+    pub fn submit_with_deadline(
+        &self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        deadline: Option<Duration>,
+    ) -> Receiver<GenResponse> {
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = GenRequest { id, prompt, max_new, enqueued: Instant::now(), reply };
-        self.tx.as_ref().expect("coordinator running").send(req).expect("worker alive");
+        let now = Instant::now();
+        let req = GenRequest {
+            id,
+            prompt,
+            max_new,
+            deadline: deadline.map(|d| now + d),
+            enqueued: now,
+            reply,
+        };
+        let undeliverable = match &self.tx {
+            Some(tx) => tx.send(req).err().map(|e| e.0),
+            None => Some(req),
+        };
+        if let Some(req) = undeliverable {
+            lock_recover(&self.metrics).rejected += 1;
+            respond(&req, Vec::new(), 0, GenStatus::Rejected);
+        }
         rx
     }
 
     /// Snapshot of the metrics.
     pub fn metrics(&self) -> ServeMetrics {
-        self.metrics.lock().unwrap().clone()
+        lock_recover(&self.metrics).clone()
     }
 
-    /// Drain and stop the worker.
-    pub fn shutdown(mut self) -> ServeMetrics {
+    /// Graceful drain: stop admission, give queued-but-unadmitted
+    /// requests terminal rejections, let in-flight sequences run to
+    /// completion (or their deadline), and join the worker. Subsequent
+    /// [`Self::submit`] calls are cleanly rejected.
+    pub fn shutdown(&mut self) -> ServeMetrics {
+        self.drain.store(true, Ordering::SeqCst);
         self.tx.take(); // close the queue
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        self.metrics.lock().unwrap().clone()
+        lock_recover(&self.metrics).clone()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
+        self.drain.store(true, Ordering::SeqCst);
         self.tx.take();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
@@ -243,11 +492,14 @@ mod tests {
     #[test]
     fn serves_and_answers() {
         let calls = Arc::new(Mutex::new(Vec::new()));
-        let engine = EchoEngine { batch: 4, calls: calls.clone() };
-        let coord = Coordinator::start(move || Box::new(engine) as Box<dyn GenEngine>, BatcherCfg::default());
+        let mut coord = Coordinator::start(
+            move || Box::new(EchoEngine { batch: 4, calls: calls.clone() }) as Box<dyn GenEngine>,
+            BatcherCfg::default(),
+        );
         let rx = coord.submit(vec![1, 2, 3], 2);
         let resp = rx.recv().unwrap();
         assert_eq!(resp.tokens, vec![3, 2]);
+        assert!(resp.is_ok());
         let met = coord.shutdown();
         assert_eq!(met.requests, 1);
         assert_eq!(met.tokens_out, 2);
@@ -256,9 +508,8 @@ mod tests {
     #[test]
     fn batches_concurrent_requests() {
         let calls = Arc::new(Mutex::new(Vec::new()));
-        let engine = EchoEngine { batch: 8, calls: calls.clone() };
-        let coord = Coordinator::start(
-            move || Box::new(engine) as Box<dyn GenEngine>,
+        let mut coord = Coordinator::start(
+            move || Box::new(EchoEngine { batch: 8, calls: calls.clone() }) as Box<dyn GenEngine>,
             BatcherCfg { max_batch: 8, max_wait: std::time::Duration::from_millis(50) },
         );
         let rxs: Vec<_> = (0..6).map(|i| coord.submit(vec![i as u8], 1)).collect();
@@ -273,9 +524,9 @@ mod tests {
     #[test]
     fn oversize_batches_chunked_to_engine_width() {
         let calls = Arc::new(Mutex::new(Vec::new()));
-        let engine = EchoEngine { batch: 2, calls: calls.clone() };
-        let coord = Coordinator::start(
-            move || Box::new(engine) as Box<dyn GenEngine>,
+        let c2 = calls.clone();
+        let mut coord = Coordinator::start(
+            move || Box::new(EchoEngine { batch: 2, calls: c2.clone() }) as Box<dyn GenEngine>,
             BatcherCfg { max_batch: 5, max_wait: std::time::Duration::from_millis(60) },
         );
         let rxs: Vec<_> = (0..5).map(|i| coord.submit(vec![i as u8; 3], 3)).collect();
@@ -323,8 +574,8 @@ mod tests {
 
         let calls = Arc::new(Mutex::new(0usize));
         let c2 = calls.clone();
-        let coord = Coordinator::start(
-            move || Box::new(StatEngine { calls: c2 }) as Box<dyn GenEngine>,
+        let mut coord = Coordinator::start(
+            move || Box::new(StatEngine { calls: c2.clone() }) as Box<dyn GenEngine>,
             BatcherCfg::default(),
         );
         let rxs: Vec<_> = (0..3).map(|_| coord.submit(vec![1, 2], 2)).collect();
@@ -346,80 +597,19 @@ mod tests {
 
     #[test]
     fn continuous_serves_and_answers() {
-        use crate::coordinator::{AdmitOutcome, ContinuousCfg, PoolStats, StepEngine};
-
-        /// Step engine echoing prompt bytes back one per step, 2 slots.
-        struct StepEcho {
-            seqs: std::collections::HashMap<u64, (Vec<u8>, Vec<u8>, usize)>,
-            running: Vec<u64>,
-            next_id: u64,
-        }
-        impl StepEngine for StepEcho {
-            fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
-                if self.running.len() >= self.max_concurrent() {
-                    return Ok(AdmitOutcome::NoCapacity(prompt));
-                }
-                let id = self.next_id;
-                self.next_id += 1;
-                let mut remaining = prompt;
-                remaining.reverse();
-                let first = remaining.pop().unwrap_or(0);
-                self.seqs.insert(id, (remaining, vec![first], max_new.max(1)));
-                self.running.push(id);
-                Ok(AdmitOutcome::Admitted(id))
-            }
-            fn step(&mut self) -> Result<Vec<u64>> {
-                let mut fin = Vec::new();
-                for &id in &self.running {
-                    let (rem, out, max_new) = self.seqs.get_mut(&id).unwrap();
-                    if out.len() < *max_new {
-                        out.push(rem.pop().unwrap_or(0));
-                    }
-                    if out.len() >= *max_new {
-                        fin.push(id);
-                    }
-                }
-                self.running.retain(|id| !fin.contains(id));
-                Ok(fin)
-            }
-            fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
-                self.running.retain(|&r| r != id);
-                self.seqs.remove(&id).map(|(_, out, _)| out)
-            }
-            fn take_preempted(&mut self) -> Vec<u64> {
-                Vec::new()
-            }
-            fn resume(&mut self, _id: u64) -> Result<bool> {
-                Ok(false)
-            }
-            fn running(&self) -> usize {
-                self.running.len()
-            }
-            fn max_concurrent(&self) -> usize {
-                2
-            }
-            fn pool_stats(&self) -> PoolStats {
-                PoolStats::default()
-            }
-        }
+        use crate::coordinator::ContinuousCfg;
 
         let coord = Coordinator::start_continuous(
-            || {
-                Box::new(StepEcho {
-                    seqs: Default::default(),
-                    running: Vec::new(),
-                    next_id: 0,
-                }) as Box<dyn StepEngine>
-            },
+            || Box::new(StepEcho::new(2)) as Box<dyn StepEngine>,
             ContinuousCfg::default(),
         );
         // 4 requests through 2 slots: the scheduler queues the overflow
         // and admits as slots free, mid-decode of whoever is running.
-        let rxs: Vec<_> =
-            (0..4u8).map(|i| coord.submit(vec![10 + i, 20 + i, 30], 2)).collect();
+        let rxs: Vec<_> = (0..4u8).map(|i| coord.submit(vec![10 + i, 20 + i, 30], 2)).collect();
+        let mut coord = coord;
         for (i, rx) in rxs.into_iter().enumerate() {
             let resp = rx.recv().unwrap();
-            assert!(!resp.rejected);
+            assert!(resp.is_ok());
             assert_eq!(resp.tokens, vec![10 + i as u8, 20 + i as u8]);
         }
         let met = coord.shutdown();
@@ -429,16 +619,237 @@ mod tests {
         assert!(!met.queue_depth.is_empty());
     }
 
+    /// Step engine echoing prompt bytes back one per step.
+    struct StepEcho {
+        seqs: std::collections::HashMap<u64, (Vec<u8>, Vec<u8>, usize)>,
+        running: Vec<u64>,
+        next_id: u64,
+        slots: usize,
+    }
+
+    impl StepEcho {
+        fn new(slots: usize) -> StepEcho {
+            StepEcho { seqs: Default::default(), running: Vec::new(), next_id: 0, slots }
+        }
+    }
+
+    impl StepEngine for StepEcho {
+        fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<super::super::AdmitOutcome> {
+            use super::super::AdmitOutcome;
+            if self.running.len() >= self.max_concurrent() {
+                return Ok(AdmitOutcome::NoCapacity(prompt));
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            let mut remaining = prompt;
+            remaining.reverse();
+            let first = remaining.pop().unwrap_or(0);
+            self.seqs.insert(id, (remaining, vec![first], max_new.max(1)));
+            self.running.push(id);
+            Ok(AdmitOutcome::Admitted(id))
+        }
+        fn step(&mut self) -> Result<Vec<u64>> {
+            let mut fin = Vec::new();
+            for &id in &self.running {
+                let (rem, out, max_new) = self.seqs.get_mut(&id).unwrap();
+                if out.len() < *max_new {
+                    out.push(rem.pop().unwrap_or(0));
+                }
+                if out.len() >= *max_new {
+                    fin.push(id);
+                }
+            }
+            self.running.retain(|id| !fin.contains(id));
+            Ok(fin)
+        }
+        fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+            self.running.retain(|&r| r != id);
+            self.seqs.remove(&id).map(|(_, out, _)| out)
+        }
+        fn take_preempted(&mut self) -> Vec<u64> {
+            Vec::new()
+        }
+        fn resume(&mut self, _id: u64) -> Result<bool> {
+            Ok(false)
+        }
+        fn running(&self) -> usize {
+            self.running.len()
+        }
+        fn max_concurrent(&self) -> usize {
+            self.slots
+        }
+        fn pool_stats(&self) -> super::super::PoolStats {
+            super::super::PoolStats::default()
+        }
+    }
+
     #[test]
     fn shutdown_drains() {
+        // Every submitted request gets exactly one terminal response
+        // across a shutdown race: either served (bit-exact echo) or a
+        // clean rejection from the drain — never a hang or a panic.
         let calls = Arc::new(Mutex::new(Vec::new()));
-        let engine = EchoEngine { batch: 4, calls };
-        let coord = Coordinator::start(move || Box::new(engine) as Box<dyn GenEngine>, BatcherCfg::default());
+        let mut coord = Coordinator::start(
+            move || Box::new(EchoEngine { batch: 4, calls: calls.clone() }) as Box<dyn GenEngine>,
+            BatcherCfg::default(),
+        );
         let rxs: Vec<_> = (0..3).map(|_| coord.submit(vec![9, 9], 1)).collect();
         let met = coord.shutdown();
-        assert_eq!(met.requests, 3);
+        let mut served = 0u64;
+        let mut rejected = 0u64;
         for rx in rxs {
-            assert!(rx.recv().is_ok());
+            let resp = rx.recv().expect("exactly one terminal response");
+            match resp.status {
+                GenStatus::Ok => {
+                    assert_eq!(resp.tokens, vec![9]);
+                    served += 1;
+                }
+                GenStatus::Rejected => {
+                    assert!(resp.tokens.is_empty());
+                    rejected += 1;
+                }
+                other => panic!("unexpected terminal state {other:?}"),
+            }
         }
+        assert_eq!(served + rejected, 3);
+        assert_eq!(met.requests, served);
+        assert_eq!(met.rejected, rejected);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_cleanly_rejected() {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let mut coord = Coordinator::start(
+            move || Box::new(EchoEngine { batch: 4, calls: calls.clone() }) as Box<dyn GenEngine>,
+            BatcherCfg::default(),
+        );
+        coord.shutdown();
+        let rx = coord.submit(vec![1, 2, 3], 2);
+        let resp = rx.recv().expect("rejection must still be delivered");
+        assert_eq!(resp.status, GenStatus::Rejected);
+        assert!(resp.tokens.is_empty());
+        assert!(coord.metrics().rejected >= 1);
+    }
+
+    #[test]
+    fn static_panic_quarantines_offender_and_respawns() {
+        /// Panics whenever a poison prompt is in the batch.
+        struct PoisonEngine {
+            calls: Arc<Mutex<Vec<usize>>>,
+        }
+        impl GenEngine for PoisonEngine {
+            fn generate_batch(
+                &mut self,
+                prompts: &[Vec<u8>],
+                max_new: usize,
+            ) -> Result<Vec<Vec<u8>>> {
+                self.calls.lock().unwrap().push(prompts.len());
+                if prompts.iter().any(|p| p == &[66u8]) {
+                    panic!("poison prompt");
+                }
+                Ok(prompts.iter().map(|p| p.iter().cloned().take(max_new).collect()).collect())
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+        }
+
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let spawned = Arc::new(Mutex::new(0usize));
+        let (c2, s2) = (calls.clone(), spawned.clone());
+        let mut coord = Coordinator::start(
+            move || {
+                *s2.lock().unwrap() += 1;
+                Box::new(PoisonEngine { calls: c2.clone() }) as Box<dyn GenEngine>
+            },
+            BatcherCfg { max_batch: 8, max_wait: std::time::Duration::from_millis(50) },
+        );
+        let prompts: Vec<Vec<u8>> = vec![vec![1], vec![66], vec![2], vec![3]];
+        let rxs: Vec<_> = prompts.iter().map(|p| coord.submit(p.clone(), 4)).collect();
+        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        for (p, resp) in prompts.iter().zip(&resps) {
+            if p == &[66u8] {
+                assert_eq!(resp.status, GenStatus::Failed, "poison request must fail");
+                assert!(resp.tokens.is_empty());
+            } else {
+                assert!(resp.is_ok(), "batch-mates must be served: {:?}", resp.status);
+                assert_eq!(&resp.tokens, p);
+            }
+        }
+        let met = coord.shutdown();
+        assert_eq!(met.failed, 1);
+        assert!(met.respawns >= 1, "a panicked engine must be respawned");
+        assert!(*spawned.lock().unwrap() >= 2, "factory must be called again");
+    }
+
+    #[test]
+    fn continuous_engine_loss_fails_inflight_and_respawn_serves_queue() {
+        /// First engine instance panics on its first step; replacements
+        /// behave (StepEcho).
+        struct PanicStep;
+        impl StepEngine for PanicStep {
+            fn admit(
+                &mut self,
+                _prompt: Vec<u8>,
+                _max_new: usize,
+            ) -> Result<super::super::AdmitOutcome> {
+                Ok(super::super::AdmitOutcome::Admitted(0))
+            }
+            fn step(&mut self) -> Result<Vec<u64>> {
+                panic!("engine lost");
+            }
+            fn take_output(&mut self, _id: u64) -> Option<Vec<u8>> {
+                None
+            }
+            fn take_preempted(&mut self) -> Vec<u64> {
+                Vec::new()
+            }
+            fn resume(&mut self, _id: u64) -> Result<bool> {
+                Ok(false)
+            }
+            fn running(&self) -> usize {
+                1
+            }
+            fn max_concurrent(&self) -> usize {
+                1
+            }
+            fn pool_stats(&self) -> super::super::PoolStats {
+                super::super::PoolStats::default()
+            }
+        }
+
+        let spawned = Arc::new(Mutex::new(0usize));
+        let s2 = spawned.clone();
+        let coord = Coordinator::start_continuous(
+            move || {
+                let n = {
+                    let mut g = s2.lock().unwrap();
+                    *g += 1;
+                    *g
+                };
+                if n == 1 {
+                    Box::new(PanicStep) as Box<dyn StepEngine>
+                } else {
+                    Box::new(StepEcho::new(2)) as Box<dyn StepEngine>
+                }
+            },
+            ContinuousCfg {
+                respawn_backoff: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let rx0 = coord.submit(vec![1, 2, 3], 2);
+        let r0 = rx0.recv().unwrap();
+        assert_eq!(r0.status, GenStatus::Failed, "in-flight at engine loss fails");
+        // The respawned engine serves new work.
+        let rx1 = coord.submit(vec![7, 8, 9], 2);
+        let r1 = rx1.recv().unwrap();
+        assert!(r1.is_ok(), "respawned engine must serve: {:?}", r1.status);
+        assert_eq!(r1.tokens, vec![7, 8]);
+        let mut coord = coord;
+        let met = coord.shutdown();
+        assert_eq!(met.failed, 1);
+        assert_eq!(met.respawns, 1);
+        assert!(*spawned.lock().unwrap() >= 2);
     }
 }

@@ -7,6 +7,7 @@
 //! catquant eval --model small --transform cat [--wquant rtn] [--windows N]
 //! catquant serve --model small --mode fp|cat-w4a4 [--engine pjrt|native] [--artifact DIR] [--requests N] [--max-new N]
 //!                [--continuous] [--kv-budget-mb N] [--page-rows N] [--prefix-sharing true|false] [--max-queue N] [--admit-watermark F]
+//!                [--deadline-ms N] [--chaos SPEC]
 //! ```
 //!
 //! Argument parsing is hand-rolled: the offline vendor set has no clap.
@@ -17,11 +18,11 @@ use catquant::coordinator::{
     BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, PjrtGenerator,
     SamplingCfg, StepEngine,
 };
-use catquant::model::KvPoolCfg;
 use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits};
 use catquant::experiments as exp;
+use catquant::model::KvPoolCfg;
 use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{load_artifact, save_artifact, Manifest, PjrtEngine};
+use catquant::runtime::{load_artifact_retry, save_artifact, Chaos, Manifest, PjrtEngine};
 use catquant::transforms::TransformKind;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -267,18 +268,22 @@ fn report_eval(model: &str, label: &str, ppl: f64, tasks: &[catquant::eval::Task
 /// Quantization state for native serving: a prebuilt artifact boots in
 /// milliseconds; a missing/stale one falls back to a fresh cat-block
 /// W4A4 build (saved back when an artifact dir was given and empty). The
-/// on-disk artifact is the user's — never overwritten.
+/// on-disk artifact is the user's — never overwritten. Crash-only boot:
+/// a transiently unreadable artifact is retried with backoff before the
+/// recalibration fallback kicks in.
 fn native_quant_config(
     manifest: &Manifest,
     model: &str,
     native: &catquant::model::NativeModel,
     artifact: Option<&std::path::Path>,
     seed: u64,
+    chaos: &Chaos,
 ) -> catquant::model::QuantConfig {
     if let Some(dir) = artifact {
         if dir.join("artifact.json").exists() {
             let t0 = std::time::Instant::now();
-            match load_artifact(dir, native) {
+            match load_artifact_retry(dir, native, 3, std::time::Duration::from_millis(50), chaos)
+            {
                 Ok(qc) => {
                     eprintln!(
                         "[serve] loaded artifact {} in {:.0} ms (no calibration run)",
@@ -333,6 +338,16 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     let max_queue = args.usize_flag("max-queue", 256);
     let admit_watermark: f64 =
         args.flag("admit-watermark").and_then(|v| v.parse().ok()).unwrap_or(0.9);
+    // Per-request serve-by deadline (0/absent = none).
+    let deadline = match args.u64_flag("deadline-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    // Deterministic fault injection: --chaos SPEC wins over CATQUANT_CHAOS.
+    let chaos = match args.flag("chaos") {
+        Some(spec) => Chaos::parse(spec)?,
+        None => Chaos::from_env()?,
+    };
     anyhow::ensure!(
         engine_kind == "pjrt" || engine_kind == "native",
         "unknown --engine {engine_kind} (expected pjrt or native)"
@@ -351,9 +366,10 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     let mode2 = mode.clone();
     let batcher_cfg = BatcherCfg::default();
     let max_batch = batcher_cfg.max_batch;
-    let coord = if continuous {
+    let mut coord = if continuous {
         let pool_cfg = KvPoolCfg { page_rows, budget_bytes: kv_budget_mb << 20 };
         let artifact2 = artifact.clone();
+        let chaos2 = chaos.clone();
         Coordinator::start_continuous(
             move || {
                 let sampling = SamplingCfg { temperature, seed };
@@ -367,14 +383,17 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                         &native,
                         artifact2.as_deref(),
                         seed,
+                        &chaos2,
                     );
                     NativeGenerator::quant(native, qc, max_batch, sampling)
                 };
-                Box::new(g.with_serve_pool(pool_cfg, prefix_sharing)) as Box<dyn StepEngine>
+                Box::new(g.with_serve_pool(pool_cfg, prefix_sharing).with_chaos(chaos2.clone()))
+                    as Box<dyn StepEngine>
             },
-            ContinuousCfg { max_queue, admit_watermark },
+            ContinuousCfg { max_queue, admit_watermark, ..Default::default() },
         )
     } else {
+        let chaos2 = chaos.clone();
         Coordinator::start(
             move || {
                 let sampling = SamplingCfg { temperature, seed };
@@ -393,6 +412,7 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                             &native,
                             artifact.as_deref(),
                             seed,
+                            &chaos2,
                         );
                         Box::new(NativeGenerator::quant(native, qc, max_batch, sampling))
                     }
@@ -413,6 +433,7 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                             &native,
                             artifact.as_deref(),
                             seed,
+                            &chaos2,
                         );
                         Box::new(
                             PjrtGenerator::quant(engine, &model2, &native.params, &qc, sampling)
@@ -434,13 +455,29 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
         "serving {n_requests} requests (model={model} mode={mode} max_new={max_new} scheduler={sched}) ..."
     );
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = prompts.into_iter().map(|p| coord.submit(p, max_new)).collect();
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .map(|p| coord.submit_with_deadline(p, max_new, deadline))
+        .collect();
     let mut rejected = 0usize;
+    let mut expired = 0usize;
+    let mut failed = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
-        if resp.rejected {
-            rejected += 1;
-            continue;
+        match resp.status {
+            catquant::coordinator::GenStatus::Ok => {}
+            catquant::coordinator::GenStatus::Rejected => {
+                rejected += 1;
+                continue;
+            }
+            catquant::coordinator::GenStatus::Expired => {
+                expired += 1;
+                continue;
+            }
+            catquant::coordinator::GenStatus::Failed => {
+                failed += 1;
+                continue;
+            }
         }
         if i < 3 {
             println!(
@@ -454,6 +491,12 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     }
     if rejected > 0 {
         println!("  {rejected} requests rejected by backpressure");
+    }
+    if expired > 0 {
+        println!("  {expired} requests expired at their deadline");
+    }
+    if failed > 0 {
+        println!("  {failed} requests lost to engine failures");
     }
     let wall = t0.elapsed();
     let metrics = coord.shutdown();

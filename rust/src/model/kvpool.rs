@@ -20,6 +20,7 @@
 //! reference it.
 
 use crate::quant::{QScheme, QuantizedTensor};
+use crate::runtime::chaos::Chaos;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -150,12 +151,22 @@ pub(crate) struct PoolState {
     live: AtomicUsize,
     peak: AtomicUsize,
     failed: AtomicU64,
+    /// Fault-injection seam: a planned chaos schedule can refuse an
+    /// allocation exactly as a budget miss would. `Chaos::off()` in
+    /// production — one null check per charge.
+    chaos: Chaos,
 }
 
 impl PoolState {
     /// Atomically charge `bytes` against the budget; false if it would
-    /// overflow the cap (the caller must not allocate).
+    /// overflow the cap (the caller must not allocate). A chaos plan
+    /// can refuse the charge first — callers cannot tell the two
+    /// failure modes apart, which is the point.
     fn try_charge(&self, bytes: usize) -> bool {
+        if self.chaos.fail_this_alloc() {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         let ok = self
             .live
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
@@ -193,6 +204,23 @@ impl KvPagePool {
                 live: AtomicUsize::new(0),
                 peak: AtomicUsize::new(0),
                 failed: AtomicU64::new(0),
+                chaos: Chaos::off(),
+            }),
+        }
+    }
+
+    /// A fresh pool with the same config and a chaos schedule wired
+    /// into every allocation. Must be installed before any page is
+    /// allocated (the returned pool starts with zeroed accounting).
+    pub fn with_chaos(&self, chaos: Chaos) -> KvPagePool {
+        assert_eq!(self.live_bytes(), 0, "chaos must be installed before pages exist");
+        KvPagePool {
+            state: Arc::new(PoolState {
+                cfg: self.state.cfg,
+                live: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                failed: AtomicU64::new(0),
+                chaos,
             }),
         }
     }

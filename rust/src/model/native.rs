@@ -50,6 +50,7 @@ impl ProbeCapture {
 }
 
 /// The native model: config + f64 parameter matrices.
+#[derive(Clone)]
 pub struct NativeModel {
     pub cfg: ModelConfig,
     pub params: HashMap<String, Mat>,

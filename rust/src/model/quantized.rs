@@ -210,6 +210,7 @@ impl QuantizedLinear {
 /// precision plans (e.g. attention W8A8 / MLP W4A4) flow through. The
 /// KV cache keeps its own grid (`kv_act`), which a uniform plan pins to
 /// the shared activation config, preserving the historical behavior.
+#[derive(Clone)]
 pub struct QuantConfig {
     /// Per-group activation quantization (the group input's dynamic grid).
     pub acts: HashMap<LayerGroup, ActQuantCfg>,

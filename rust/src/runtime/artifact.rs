@@ -29,6 +29,7 @@ use crate::linalg::Mat;
 use crate::model::{LinearId, NativeModel, QuantConfig, QuantizedLinear, ALL_GROUPS};
 use crate::pipeline::PipelineReport;
 use crate::quant::{ActQuantCfg, QScheme, QuantizedTensor};
+use crate::runtime::chaos::{ArtifactFault, Chaos};
 use crate::runtime::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -215,9 +216,58 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// `QPanels` are rebuilt per linear, so the returned config serves at
 /// full speed immediately.
 pub fn load_artifact(dir: &Path, model: &NativeModel) -> Result<QuantConfig> {
+    load_artifact_with(dir, model, &Chaos::off())
+}
+
+/// Crash-only boot: retry [`load_artifact_with`] up to `attempts` times
+/// with doubling backoff (capped at 5 s). A worker racing a deployer's
+/// atomic rename, or reading through flaky storage, self-heals here;
+/// a genuinely corrupt artifact still returns the last typed error so
+/// the caller can fall back to recalibration.
+pub fn load_artifact_retry(
+    dir: &Path,
+    model: &NativeModel,
+    attempts: usize,
+    backoff: std::time::Duration,
+    chaos: &Chaos,
+) -> Result<QuantConfig> {
+    let attempts = attempts.max(1);
+    let mut wait = backoff;
+    let mut last = None;
+    for attempt in 1..=attempts {
+        match load_artifact_with(dir, model, chaos) {
+            Ok(qc) => return Ok(qc),
+            Err(e) => {
+                if attempt < attempts {
+                    eprintln!("artifact load attempt {attempt}/{attempts} failed ({e:#}); retrying in {wait:?}");
+                    std::thread::sleep(wait);
+                    wait = (wait * 2).min(std::time::Duration::from_secs(5));
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last.expect("at least one attempt ran").context(format!(
+        "artifact at {} unreadable after {attempts} attempts",
+        dir.display()
+    )))
+}
+
+/// [`load_artifact`] with a chaos seam: a planned [`ArtifactFault`]
+/// mangles the freshly read bytes *before* validation, exactly as disk
+/// corruption would. With `Chaos::off()` this is `load_artifact`.
+pub fn load_artifact_with(dir: &Path, model: &NativeModel, chaos: &Chaos) -> Result<QuantConfig> {
+    let fault = chaos.artifact_fault();
     let mpath = dir.join(MANIFEST_FILE);
-    let text = std::fs::read_to_string(&mpath)
+    let mut mbytes = std::fs::read(&mpath)
         .with_context(|| format!("reading artifact manifest {}", mpath.display()))?;
+    if let Some(ArtifactFault::FlipManifestByte(p)) = fault {
+        if !mbytes.is_empty() {
+            let p = p % mbytes.len();
+            mbytes[p] ^= 0xFF;
+        }
+    }
+    let text = String::from_utf8(mbytes).context("artifact manifest is not valid UTF-8")?;
     let mut j = Json::parse(&text).context("parsing artifact manifest")?;
 
     let format = j.at("format")?.as_str()?;
@@ -246,8 +296,17 @@ pub fn load_artifact(dir: &Path, model: &NativeModel) -> Result<QuantConfig> {
 
     let codes_meta = j.at("codes")?;
     let blob_path = dir.join(codes_meta.at("file")?.as_str()?);
-    let blob = std::fs::read(&blob_path)
+    let mut blob = std::fs::read(&blob_path)
         .with_context(|| format!("reading artifact blob {}", blob_path.display()))?;
+    match fault {
+        Some(ArtifactFault::FlipBlobByte(p)) if !blob.is_empty() => {
+            let p = p % blob.len();
+            blob[p] ^= 0xFF;
+        }
+        Some(ArtifactFault::TruncateBlob(len)) => blob.truncate(len.min(blob.len())),
+        _ => {}
+    }
+    let blob = blob;
     let want_bytes = codes_meta.at("bytes")?.as_usize()?;
     anyhow::ensure!(
         blob.len() == want_bytes,

@@ -1,0 +1,280 @@
+//! Deterministic chaos injection for the serving stack.
+//!
+//! A [`ChaosPlan`] names faults by *count*, not by chance: fail the Nth
+//! KV page allocation, panic during decode step K, corrupt the first N
+//! artifact loads, sleep on every Mth step. Because every trigger is an
+//! atomic counter against a fixed plan, a fault schedule replays
+//! identically run after run — the property tests in
+//! `chaos_serve_props` rely on that to pin recovery paths bit-exactly.
+//!
+//! The [`Chaos`] handle is an `Option<Arc<state>>`: a disabled handle
+//! (the default everywhere) costs one pointer-null check per seam and
+//! allocates nothing. Seams live in `KvPagePool` (allocation failure),
+//! `NativeGenerator::step` (panic + slow step), and
+//! [`load_artifact_with`](crate::runtime::load_artifact_with) (byte
+//! corruption). Production binaries opt in with `--chaos SPEC` or
+//! `CATQUANT_CHAOS=SPEC`.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// One artifact-load fault. Positions are taken modulo the file length,
+/// so a plan built from a seed never misses the buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactFault {
+    /// XOR `0xFF` into the manifest byte at this position.
+    FlipManifestByte(usize),
+    /// XOR `0xFF` into the code-blob byte at this position.
+    FlipBlobByte(usize),
+    /// Truncate the code blob to this length.
+    TruncateBlob(usize),
+}
+
+/// A deterministic fault schedule. All counters are 0-based and global
+/// per handle (cloned handles share state).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// Fail these page allocations (0-based allocation index).
+    pub fail_allocs: Vec<u64>,
+    /// Additionally fail every Nth allocation (1 = every allocation).
+    pub fail_alloc_every: Option<u64>,
+    /// Panic once inside decode at each of these engine steps. Each
+    /// entry fires exactly once — the retry after recovery proceeds —
+    /// so these model *transient* faults.
+    pub panic_steps: Vec<u64>,
+    /// Panic whenever this engine-local sequence id is in the decode
+    /// group — a *persistent* fault that only quarantine can clear.
+    pub panic_seq: Option<u64>,
+    /// Sleep on every Nth engine step.
+    pub slow_step_every: Option<u64>,
+    /// How long a slow step sleeps, in milliseconds.
+    pub slow_step_ms: u64,
+    /// Corrupt artifact bytes at load time.
+    pub artifact_fault: Option<ArtifactFault>,
+    /// How many load attempts the artifact fault applies to (the
+    /// retry-then-succeed boot path is testable with a finite count).
+    pub artifact_fault_loads: u64,
+}
+
+#[derive(Debug, Default)]
+struct ChaosState {
+    plan: ChaosPlan,
+    allocs: AtomicU64,
+    steps: AtomicU64,
+    loads: AtomicU64,
+    /// `panic_steps` entries that already fired (one-shot semantics).
+    fired_steps: Mutex<Vec<u64>>,
+}
+
+/// Shareable handle to a fault schedule; `Chaos::off()` (the default)
+/// injects nothing and costs one branch per seam.
+#[derive(Clone, Debug, Default)]
+pub struct Chaos {
+    state: Option<Arc<ChaosState>>,
+}
+
+impl Chaos {
+    /// The no-fault handle every production path starts from.
+    pub fn off() -> Chaos {
+        Chaos::default()
+    }
+
+    pub fn new(plan: ChaosPlan) -> Chaos {
+        Chaos { state: Some(Arc::new(ChaosState { plan, ..Default::default() })) }
+    }
+
+    /// Build from `CATQUANT_CHAOS` (absent or empty → off).
+    pub fn from_env() -> Result<Chaos> {
+        match std::env::var("CATQUANT_CHAOS") {
+            Ok(s) if !s.trim().is_empty() => Chaos::parse(&s),
+            _ => Ok(Chaos::off()),
+        }
+    }
+
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `fail_alloc=3,fail_alloc=9,panic_step=2,slow_every=4,slow_ms=2`.
+    ///
+    /// Keys: `fail_alloc` (repeatable), `fail_alloc_every`,
+    /// `panic_step` (repeatable), `panic_seq`, `slow_every`, `slow_ms`,
+    /// `flip_manifest`, `flip_blob`, `trunc_blob`, `fault_loads`.
+    pub fn parse(spec: &str) -> Result<Chaos> {
+        let mut plan = ChaosPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("chaos spec entry `{part}` is not key=value"),
+            };
+            let n: u64 = match val.trim().parse() {
+                Ok(n) => n,
+                Err(_) => bail!("chaos spec `{key}` value `{val}` is not an integer"),
+            };
+            match key.trim() {
+                "fail_alloc" => plan.fail_allocs.push(n),
+                "fail_alloc_every" => plan.fail_alloc_every = Some(n.max(1)),
+                "panic_step" => plan.panic_steps.push(n),
+                "panic_seq" => plan.panic_seq = Some(n),
+                "slow_every" => plan.slow_step_every = Some(n.max(1)),
+                "slow_ms" => plan.slow_step_ms = n,
+                "flip_manifest" => {
+                    plan.artifact_fault = Some(ArtifactFault::FlipManifestByte(n as usize))
+                }
+                "flip_blob" => plan.artifact_fault = Some(ArtifactFault::FlipBlobByte(n as usize)),
+                "trunc_blob" => plan.artifact_fault = Some(ArtifactFault::TruncateBlob(n as usize)),
+                "fault_loads" => plan.artifact_fault_loads = n,
+                other => bail!("unknown chaos spec key `{other}`"),
+            }
+        }
+        if plan.artifact_fault.is_some() && plan.artifact_fault_loads == 0 {
+            plan.artifact_fault_loads = 1;
+        }
+        Ok(Chaos::new(plan))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Called by the pool on every page allocation attempt; `true`
+    /// means the allocation must be refused (counted as a failed
+    /// alloc by the pool, like a budget miss).
+    pub fn fail_this_alloc(&self) -> bool {
+        let Some(st) = &self.state else { return false };
+        let n = st.allocs.fetch_add(1, Ordering::Relaxed);
+        if st.plan.fail_allocs.contains(&n) {
+            return true;
+        }
+        match st.plan.fail_alloc_every {
+            Some(k) => (n + 1) % k == 0,
+            None => false,
+        }
+    }
+
+    /// Called once per top-level engine step; returns the 0-based step
+    /// index this handle has seen (bisect retries reuse the index, so
+    /// per-step faults key off the *scheduler* tick, not the retry).
+    pub fn next_step(&self) -> u64 {
+        match &self.state {
+            Some(st) => st.steps.fetch_add(1, Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Decode-time injection point: sleeps on slow steps, panics per
+    /// plan. Must be called *inside* the engine's `catch_unwind` region
+    /// with the ids of the decode group.
+    pub fn on_decode(&self, step: u64, ids: &[u64]) {
+        let Some(st) = &self.state else { return };
+        if let Some(every) = st.plan.slow_step_every {
+            if step % every == 0 && st.plan.slow_step_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(st.plan.slow_step_ms));
+            }
+        }
+        if let Some(seq) = st.plan.panic_seq {
+            if ids.contains(&seq) {
+                panic!("chaos: injected panic for sequence {seq}");
+            }
+        }
+        if st.plan.panic_steps.contains(&step) {
+            let mut fired = st.fired_steps.lock().unwrap_or_else(PoisonError::into_inner);
+            if !fired.contains(&step) {
+                fired.push(step);
+                drop(fired);
+                panic!("chaos: injected panic at step {step}");
+            }
+        }
+    }
+
+    /// Artifact-load injection point: counts the attempt and returns
+    /// the fault to apply to it, if any.
+    pub fn artifact_fault(&self) -> Option<ArtifactFault> {
+        let st = self.state.as_ref()?;
+        let n = st.loads.fetch_add(1, Ordering::Relaxed);
+        if n < st.plan.artifact_fault_loads {
+            st.plan.artifact_fault
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_injects_nothing() {
+        let c = Chaos::off();
+        assert!(!c.enabled());
+        for _ in 0..32 {
+            assert!(!c.fail_this_alloc());
+        }
+        c.on_decode(c.next_step(), &[0, 1, 2]);
+        assert_eq!(c.artifact_fault(), None);
+    }
+
+    #[test]
+    fn alloc_faults_fire_at_planned_indices() {
+        let c = Chaos::new(ChaosPlan {
+            fail_allocs: vec![1, 4],
+            fail_alloc_every: Some(10),
+            ..Default::default()
+        });
+        let fails: Vec<bool> = (0..12).map(|_| c.fail_this_alloc()).collect();
+        let want: Vec<bool> = (0..12u64).map(|n| n == 1 || n == 4 || (n + 1) % 10 == 0).collect();
+        assert_eq!(fails, want);
+    }
+
+    #[test]
+    fn panic_step_fires_exactly_once() {
+        let c = Chaos::new(ChaosPlan { panic_steps: vec![1], ..Default::default() });
+        let s0 = c.next_step();
+        c.on_decode(s0, &[0]); // step 0: nothing
+        let s1 = c.next_step();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.on_decode(s1, &[0])));
+        assert!(r.is_err(), "step 1 must panic");
+        // Retry at the same step index (the bisect path) proceeds.
+        c.on_decode(s1, &[0]);
+    }
+
+    #[test]
+    fn panic_seq_is_persistent() {
+        let c = Chaos::new(ChaosPlan { panic_seq: Some(7), ..Default::default() });
+        for _ in 0..3 {
+            let s = c.next_step();
+            let r =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.on_decode(s, &[3, 7])));
+            assert!(r.is_err(), "seq 7 in group must always panic");
+            c.on_decode(s, &[3]); // group without 7 is fine
+        }
+    }
+
+    #[test]
+    fn artifact_fault_applies_to_first_n_loads() {
+        let c = Chaos::new(ChaosPlan {
+            artifact_fault: Some(ArtifactFault::FlipBlobByte(5)),
+            artifact_fault_loads: 2,
+            ..Default::default()
+        });
+        assert_eq!(c.artifact_fault(), Some(ArtifactFault::FlipBlobByte(5)));
+        assert_eq!(c.artifact_fault(), Some(ArtifactFault::FlipBlobByte(5)));
+        assert_eq!(c.artifact_fault(), None);
+    }
+
+    #[test]
+    fn spec_round_trips_and_rejects_garbage() {
+        let c = Chaos::parse("fail_alloc=3, panic_step=2,slow_every=4,slow_ms=1").unwrap();
+        assert!(c.enabled());
+        assert!(Chaos::parse("bogus_key=1").is_err());
+        assert!(Chaos::parse("fail_alloc").is_err());
+        assert!(Chaos::parse("fail_alloc=x").is_err());
+        // A lone artifact fault defaults to faulting the first load.
+        let c = Chaos::parse("flip_blob=9").unwrap();
+        assert_eq!(c.artifact_fault(), Some(ArtifactFault::FlipBlobByte(9)));
+        assert_eq!(c.artifact_fault(), None);
+    }
+}

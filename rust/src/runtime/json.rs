@@ -260,6 +260,9 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape at byte {}", self.i);
+                            }
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let code = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
@@ -272,6 +275,9 @@ impl<'a> Parser<'a> {
                     // Collect the full UTF-8 sequence.
                     let start = self.i - 1;
                     let len = utf8_len(c);
+                    if start + len > self.b.len() {
+                        bail!("truncated UTF-8 sequence at byte {start}");
+                    }
                     self.i = start + len;
                     s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
                 }

@@ -13,10 +13,14 @@
 //! re-running calibration and GPTQ at boot.
 
 mod artifact;
+pub mod chaos;
 mod engine;
 pub mod json;
 mod manifest;
 
-pub use artifact::{load_artifact, save_artifact, ARTIFACT_VERSION};
+pub use artifact::{
+    load_artifact, load_artifact_retry, load_artifact_with, save_artifact, ARTIFACT_VERSION,
+};
+pub use chaos::{ArtifactFault, Chaos, ChaosPlan};
 pub use engine::{literal_to_mat, token_literal, ArgPack, DevicePack, PjrtEngine};
 pub use manifest::{GraphEntry, Manifest, ModelEntry};

@@ -13,7 +13,7 @@ use catquant::coordinator::{GenEngine, NativeGenerator, SamplingCfg};
 use catquant::model::{LayerGroup, ModelConfig, NativeModel, QuantConfig};
 use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
 use catquant::quant::{ActQuantCfg, QScheme};
-use catquant::runtime::{load_artifact, save_artifact};
+use catquant::runtime::{load_artifact, load_artifact_retry, save_artifact, Chaos};
 use std::path::PathBuf;
 
 fn tiny_cfg() -> ModelConfig {
@@ -223,6 +223,85 @@ fn wrong_model_is_rejected() {
     other_cfg.ff = 128;
     let other = NativeModel::init_random(other_cfg, 17);
     assert!(load_artifact(&dir, &other).is_err(), "shape mismatch must be rejected");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn byte_level_corruption_never_panics() {
+    // Hardening sweep: flip or truncate bytes at seeded positions across
+    // BOTH artifact files. Every single corruption must surface as a
+    // typed `Err` from `load_artifact` — a panic (e.g. a slice index in
+    // the JSON parser) fails this test even though the load "failed".
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let (model, _) = setup(20);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("sweep");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let files = ["artifact.json", "codes.bin"];
+    let clean: Vec<Vec<u8>> =
+        files.iter().map(|f| std::fs::read(dir.join(f)).unwrap()).collect();
+
+    let mut state = 0x9E37_79B9_7F4A_7C15u64; // fixed seed → reproducible sweep
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let check = |dir: &std::path::Path, what: &str| {
+        match catch_unwind(AssertUnwindSafe(|| load_artifact(dir, &model))) {
+            Ok(Ok(_)) => panic!("{what}: corrupted artifact loaded successfully"),
+            Ok(Err(_)) => {} // typed error — the only acceptable outcome
+            Err(_) => panic!("{what}: load panicked instead of returning an error"),
+        }
+    };
+    for (f, bytes) in files.iter().zip(&clean) {
+        let path = dir.join(f);
+        // Byte flips, including the very first and last bytes.
+        let mut positions: Vec<usize> = (0..24).map(|_| next() as usize % bytes.len()).collect();
+        positions.push(0);
+        positions.push(bytes.len() - 1);
+        for p in positions {
+            let mut mangled = bytes.clone();
+            mangled[p] ^= 0xFF;
+            std::fs::write(&path, &mangled).unwrap();
+            check(&dir, &format!("{f} flip@{p}"));
+        }
+        // Truncations, including to zero length.
+        let mut lengths: Vec<usize> = (0..8).map(|_| next() as usize % bytes.len()).collect();
+        lengths.push(0);
+        for len in lengths {
+            std::fs::write(&path, &bytes[..len]).unwrap();
+            check(&dir, &format!("{f} trunc@{len}"));
+        }
+        std::fs::write(&path, bytes).unwrap(); // restore for the next file
+    }
+    // The clean artifact still loads after the sweep (restores worked).
+    assert!(load_artifact(&dir, &model).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn transient_corruption_heals_through_retry_boot() {
+    // Crash-only boot: the chaos plan corrupts only the first load
+    // attempt, so `load_artifact_retry` fails once, backs off, and boots
+    // cleanly on the second attempt.
+    let (model, _) = setup(21);
+    let qc = QuantConfig::identity_for_test(&model, 4);
+    let dir = scratch("retry-boot");
+    save_artifact(&qc, &catquant::pipeline::PipelineReport::default(), &dir).expect("save");
+    let chaos = Chaos::parse("flip_blob=11").unwrap(); // faults load #1 only
+    let loaded = load_artifact_retry(&dir, &model, 3, std::time::Duration::from_millis(1), &chaos)
+        .expect("second attempt must succeed");
+    let toks = toks();
+    let a = model.forward_quant(&toks, &qc);
+    let b = model.forward_quant(&toks, &loaded);
+    assert_eq!(a.max_abs_diff(&b), 0.0, "healed boot must serve bit-exactly");
+
+    // A persistent fault exhausts the retries with a typed error.
+    let chaos = Chaos::parse("flip_blob=11,fault_loads=99").unwrap();
+    let err = load_artifact_retry(&dir, &model, 2, std::time::Duration::from_millis(1), &chaos);
+    assert!(err.is_err(), "persistently corrupt artifact must not load");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,375 @@
+//! Chaos-injection properties for the fault-tolerant serving stack.
+//!
+//! A seeded [`ChaosPlan`] replays the same fault schedule every run —
+//! failed KV page allocations, decode panics (transient and persistent),
+//! slow steps, deadline pressure — and these tests pin the recovery
+//! invariants:
+//!
+//! 1. **Exactly one terminal state.** Under any fault schedule, every
+//!    submitted request receives exactly one terminal [`GenResponse`] —
+//!    served, rejected, expired, or failed. Never zero, never two.
+//! 2. **The KV byte budget is never exceeded**, fault or no fault, and
+//!    every page returns to the pool once the scheduler drains.
+//! 3. **Fault-free runs are bit-identical** to serving without the chaos
+//!    layer: a disabled handle (and an empty plan) cannot move a bit.
+//! 4. **Blast radius is one request.** A persistent per-sequence panic
+//!    quarantines exactly the offending sequence; its batch-mates serve
+//!    bit-exactly. A transient panic costs only a retry.
+//!
+//! CI runs this suite under `CATQUANT_THREADS=1` and `=8` with scalar
+//! SIMD: fault schedules key off deterministic counters, so worker count
+//! must not change a single outcome.
+
+use catquant::coordinator::{
+    ContinuousCfg, Coordinator, GenEngine, GenRequest, GenResponse, GenStatus, NativeGenerator,
+    SamplingCfg, Scheduler, ServeMetrics, StepEngine, Tick,
+};
+use catquant::model::{KvPagePool, KvPoolCfg, ModelConfig, NativeModel};
+use catquant::runtime::{Chaos, ChaosPlan};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 24, vocab: 256 }
+}
+
+fn model() -> NativeModel {
+    NativeModel::init_random(tiny_cfg(), 31)
+}
+
+fn workload() -> (Vec<Vec<u8>>, Vec<usize>) {
+    let prompts = vec![
+        vec![3u8, 1, 4, 1, 5],
+        vec![9u8, 2, 6],
+        vec![3u8, 1, 4, 1, 5, 9, 2],
+        vec![8u8],
+        vec![2u8, 7, 1, 8, 2, 8],
+        vec![5u8, 5],
+    ];
+    let max_news = vec![6usize, 2, 4, 8, 3, 5];
+    (prompts, max_news)
+}
+
+/// Per-sequence greedy reference: each prompt decoded alone, no chaos.
+fn reference() -> Vec<Vec<u8>> {
+    let (prompts, max_news) = workload();
+    prompts
+        .iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| {
+            let mut g = NativeGenerator::fp(model(), 1, SamplingCfg::default());
+            g.generate_batch(&[p.clone()], mn).unwrap().remove(0)
+        })
+        .collect()
+}
+
+/// A chaos-armed engine plus an outside handle onto its page pool.
+fn chaos_engine(slots: usize, pool: KvPoolCfg, chaos: Chaos) -> (NativeGenerator, KvPagePool) {
+    let g = NativeGenerator::fp(model(), slots, SamplingCfg::default())
+        .with_serve_pool(pool, false)
+        .with_chaos(chaos);
+    let handle = g.serve_pool();
+    (g, handle)
+}
+
+/// The terminal-state invariant: exactly one response, already delivered.
+fn exactly_one_terminal(rx: &Receiver<GenResponse>, who: usize) -> GenResponse {
+    let first = rx.try_recv().unwrap_or_else(|_| panic!("request {who}: no terminal response"));
+    assert!(rx.try_recv().is_err(), "request {who}: more than one terminal response");
+    first
+}
+
+/// Drive a scheduler to idle, asserting the pool budget every tick and
+/// that planned faults never escalate to an engine loss.
+fn drive(sched: &mut Scheduler, pool: &KvPagePool) {
+    let mut guard = 0;
+    while !sched.idle() {
+        assert_eq!(sched.tick().unwrap(), Tick::Ok, "planned faults must be contained");
+        assert!(
+            pool.live_bytes() <= pool.budget_bytes(),
+            "KV budget exceeded: {} > {}",
+            pool.live_bytes(),
+            pool.budget_bytes()
+        );
+        guard += 1;
+        assert!(guard < 4000, "scheduler failed to drain under chaos");
+    }
+}
+
+/// Run the standard workload through a `Scheduler` over a chaos-armed
+/// engine; returns each request's single terminal response.
+fn serve_with_chaos(slots: usize, pool_cfg: KvPoolCfg, chaos: Chaos) -> Vec<GenResponse> {
+    let (prompts, max_news) = workload();
+    let (engine, pool) = chaos_engine(slots, pool_cfg, chaos);
+    let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+    let mut sched = Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics);
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .zip(&max_news)
+        .enumerate()
+        .map(|(i, (p, &mn))| {
+            let (req, rx) = GenRequest::new(i as u64, p, mn);
+            sched.enqueue(req);
+            rx
+        })
+        .collect();
+    drive(&mut sched, &pool);
+    assert_eq!(pool.live_bytes(), 0, "pages leaked after drain");
+    rxs.iter().enumerate().map(|(i, rx)| exactly_one_terminal(rx, i)).collect()
+}
+
+#[test]
+fn fault_free_chaos_layer_is_bit_invisible() {
+    // The PR-7 baseline gate: serving with no chaos handle at all, with a
+    // disabled handle, and with an enabled-but-empty plan must produce
+    // identical bits.
+    let want = reference();
+    let pool = KvPoolCfg::default();
+    for chaos in [Chaos::off(), Chaos::new(ChaosPlan::default())] {
+        let resps = serve_with_chaos(3, pool, chaos);
+        for (i, (resp, w)) in resps.iter().zip(&want).enumerate() {
+            assert_eq!(resp.status, GenStatus::Ok, "request {i} must serve fault-free");
+            assert_eq!(&resp.tokens, w, "request {i} diverged from the no-chaos baseline");
+        }
+    }
+}
+
+#[test]
+fn seeded_alloc_fault_schedules_keep_every_invariant() {
+    // Several seeded schedules of planned allocation failures against a
+    // bounded pool. Faults may force preemption, admission retries, or
+    // forced rejections — but every request terminates exactly once, the
+    // budget holds every tick, and the pool drains to zero.
+    let want = reference();
+    let pool_cfg = KvPoolCfg { page_rows: 4, budget_bytes: 40 * 1024 };
+    let mut seed = 0xC4A05_u64;
+    for round in 0..4 {
+        // xorshift-seeded fault indices: deterministic, varied per round.
+        let mut fails = Vec::new();
+        for _ in 0..6 {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            fails.push(seed % 96);
+        }
+        let chaos = Chaos::new(ChaosPlan { fail_allocs: fails.clone(), ..Default::default() });
+        let resps = serve_with_chaos(3, pool_cfg, chaos);
+        for (i, resp) in resps.iter().enumerate() {
+            // Whatever terminal state a request reaches — served, forcibly
+            // retired after preemption (still `Ok`, partial), or rejected —
+            // its tokens must be a bit-exact prefix of the solo reference:
+            // alloc faults may shorten output, never corrupt it.
+            assert!(
+                want[i].starts_with(&resp.tokens),
+                "round {round} request {i} ({:?}): output is not a bit-exact prefix \
+                 (plan {fails:?})",
+                resp.status
+            );
+            if resp.status == GenStatus::Ok {
+                assert!(!resp.tokens.is_empty(), "round {round} request {i}: served empty");
+            }
+        }
+    }
+}
+
+#[test]
+fn alloc_fault_storm_terminates_everything_cleanly() {
+    // Every allocation fails: nothing can ever be admitted. The
+    // scheduler's liveness rule must retire the whole queue as clean
+    // rejections — no hang, no panic, no leaked page.
+    let chaos = Chaos::new(ChaosPlan { fail_alloc_every: Some(1), ..Default::default() });
+    let resps =
+        serve_with_chaos(3, KvPoolCfg { page_rows: 4, budget_bytes: 40 * 1024 }, chaos);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, GenStatus::Rejected, "request {i} must be cleanly rejected");
+        assert!(resp.tokens.is_empty());
+    }
+}
+
+#[test]
+fn persistent_panic_quarantines_only_the_offender() {
+    // Sequence 1 panics whenever it is in the decode group — a poisoned
+    // request. Bisect isolation must quarantine exactly it; batch-mates
+    // decode bit-exactly (their caches rebuilt after each poisoned
+    // group's caches were dropped).
+    let want = reference();
+    let chaos = Chaos::new(ChaosPlan { panic_seq: Some(1), ..Default::default() });
+    let resps = serve_with_chaos(6, KvPoolCfg::default(), chaos);
+    for (i, resp) in resps.iter().enumerate() {
+        if i == 1 {
+            assert_eq!(resp.status, GenStatus::Failed, "poisoned request must fail");
+            assert!(
+                want[i].starts_with(&resp.tokens),
+                "quarantined partial output is not a prefix"
+            );
+        } else {
+            assert_eq!(resp.status, GenStatus::Ok, "batch-mate {i} must serve");
+            assert_eq!(resp.tokens, want[i], "batch-mate {i} diverged after quarantine");
+        }
+    }
+}
+
+#[test]
+fn transient_panics_recover_bit_exactly() {
+    // One-shot panics at steps 1 and 3 model transient faults (a bad
+    // read, a cosmic ray): the bisect retry re-runs the same step —
+    // which consumed no RNG — so every request still serves bit-exactly.
+    let want = reference();
+    let chaos = Chaos::new(ChaosPlan { panic_steps: vec![1, 3], ..Default::default() });
+    let resps = serve_with_chaos(3, KvPoolCfg::default(), chaos);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, GenStatus::Ok, "request {i} must survive transient panics");
+        assert_eq!(resp.tokens, want[i], "request {i} diverged across a transient panic");
+    }
+}
+
+#[test]
+fn slow_steps_change_latency_not_bits() {
+    let want = reference();
+    let chaos = Chaos::new(ChaosPlan {
+        slow_step_every: Some(2),
+        slow_step_ms: 1,
+        ..Default::default()
+    });
+    let resps = serve_with_chaos(3, KvPoolCfg::default(), chaos);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, GenStatus::Ok);
+        assert_eq!(resp.tokens, want[i], "slow steps must not move a bit");
+    }
+}
+
+#[test]
+fn deadline_cancellation_returns_a_bit_exact_prefix() {
+    // Slow steps stretch decode so a mid-flight deadline reliably lands;
+    // the cancelled request must come back Expired with a bit-exact
+    // prefix of its reference output, and its pages must free.
+    let prompt = vec![3u8, 1, 4, 1, 5];
+    let max_new = 16;
+    let want = NativeGenerator::fp(model(), 1, SamplingCfg::default())
+        .generate_batch(&[prompt.clone()], max_new)
+        .unwrap()
+        .remove(0);
+    let chaos = Chaos::new(ChaosPlan {
+        slow_step_every: Some(1),
+        slow_step_ms: 10,
+        ..Default::default()
+    });
+    let (engine, pool) = chaos_engine(2, KvPoolCfg::default(), chaos);
+    let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+    let mut sched = Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics.clone());
+    let (req, rx) = GenRequest::with_deadline(
+        0,
+        prompt,
+        max_new,
+        Instant::now() + Duration::from_millis(35),
+    );
+    sched.enqueue(req);
+    let mut guard = 0;
+    while !sched.idle() {
+        assert_eq!(sched.tick().unwrap(), Tick::Ok);
+        guard += 1;
+        assert!(guard < 1000);
+    }
+    assert_eq!(pool.live_bytes(), 0, "cancelled sequence leaked pages");
+    let resp = exactly_one_terminal(&rx, 0);
+    assert_eq!(resp.status, GenStatus::Expired, "deadline must cancel mid-decode");
+    assert!(!resp.tokens.is_empty(), "tokens generated before the deadline are returned");
+    assert!(resp.tokens.len() < want.len(), "cancellation must land mid-decode");
+    assert!(want.starts_with(&resp.tokens), "partial output is not a bit-exact prefix");
+    let met = metrics.lock().unwrap();
+    assert_eq!(met.cancelled, 1);
+    assert_eq!(met.shed_wait.count(), 1);
+}
+
+#[test]
+fn drain_completes_inflight_bit_exactly_and_rejects_queued() {
+    // Graceful drain mid-serve: 2 engine slots, 4 requests, one tick (so
+    // two are in flight, two queued), then drain. The in-flight pair
+    // must finish bit-identically to a free-running serve; the queued
+    // pair gets terminal rejections; no page survives.
+    let want = reference();
+    let (prompts, max_news) = workload();
+    let (engine, pool) = chaos_engine(2, KvPoolCfg::default(), Chaos::off());
+    let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+    let mut sched = Scheduler::new(Box::new(engine), ContinuousCfg::default(), metrics);
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .zip(&max_news)
+        .take(4)
+        .enumerate()
+        .map(|(i, (p, &mn))| {
+            let (req, rx) = GenRequest::new(i as u64, p, mn);
+            sched.enqueue(req);
+            rx
+        })
+        .collect();
+    sched.tick().unwrap(); // admits exactly the 2 slots
+    sched.begin_drain();
+    drive(&mut sched, &pool);
+    assert_eq!(pool.live_bytes(), 0, "drain leaked pages");
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = exactly_one_terminal(rx, i);
+        if i < 2 {
+            assert_eq!(resp.status, GenStatus::Ok, "in-flight request {i} must complete");
+            assert_eq!(resp.tokens, want[i], "drained in-flight output diverged");
+        } else {
+            assert_eq!(resp.status, GenStatus::Rejected, "queued request {i} must be rejected");
+            assert!(resp.tokens.is_empty());
+        }
+    }
+}
+
+#[test]
+fn coordinator_survives_chaos_end_to_end() {
+    // Full-stack smoke under combined faults (transient panic + alloc
+    // failures + slow steps) through the public Coordinator API: every
+    // request terminates exactly once, the worker joins cleanly on
+    // shutdown, and whatever served is bit-exact.
+    let want = reference();
+    let (prompts, max_news) = workload();
+    let mut coord = Coordinator::start_continuous(
+        || {
+            let chaos = Chaos::new(ChaosPlan {
+                panic_steps: vec![2],
+                fail_allocs: vec![7, 19],
+                slow_step_every: Some(3),
+                slow_step_ms: 1,
+                ..Default::default()
+            });
+            let g = NativeGenerator::fp(model(), 3, SamplingCfg::default())
+                .with_serve_pool(KvPoolCfg { page_rows: 4, budget_bytes: 64 * 1024 }, false)
+                .with_chaos(chaos);
+            Box::new(g) as Box<dyn StepEngine>
+        },
+        ContinuousCfg::default(),
+    );
+    let rxs: Vec<_> = prompts
+        .iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| coord.submit(p.clone(), mn))
+        .collect();
+    let mut served = 0usize;
+    let mut exact = 0usize;
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i}: channel died unserved"));
+        assert!(rx.try_recv().is_err(), "request {i}: more than one terminal response");
+        // Chaos may shorten an output (forced finish under alloc pressure)
+        // but must never corrupt one: every terminal state carries a
+        // bit-exact prefix of the solo reference.
+        assert!(want[i].starts_with(&resp.tokens), "request {i}: not a bit-exact prefix");
+        if resp.status == GenStatus::Ok {
+            assert!(!resp.tokens.is_empty(), "request {i}: served empty");
+            served += 1;
+            if resp.tokens == want[i] {
+                exact += 1;
+            }
+        }
+    }
+    assert!(served >= 4, "planned faults were survivable; most requests must serve");
+    // Two alloc faults can shorten at most two requests; the transient
+    // panic shortens none. Everything else must serve to full length.
+    assert!(exact >= 4, "too few full-length bit-exact completions: {exact}");
+    let met = coord.shutdown();
+    assert_eq!(met.requests, served as u64);
+}

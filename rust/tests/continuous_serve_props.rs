@@ -92,7 +92,7 @@ fn serve_continuous(quantized: bool, pool: KvPoolCfg, prefix: bool) -> Vec<Vec<u
     rxs.into_iter()
         .map(|rx| {
             let resp = rx.recv().unwrap();
-            assert!(!resp.rejected, "workload must fit this configuration");
+            assert!(resp.is_ok(), "workload must fit this configuration");
             resp.tokens
         })
         .collect()
@@ -176,7 +176,7 @@ fn bounded_queue_rejects_and_recovers() {
     // max_queue 1 with 3-slot engine: flood 8 requests instantly — the
     // worker may drain some before others arrive, but anything rejected
     // must say so and everything served must be exact.
-    let coord = Coordinator::start_continuous(
+    let mut coord = Coordinator::start_continuous(
         || {
             Box::new(NativeGenerator::fp(model(), 2, SamplingCfg::default()))
                 as Box<dyn StepEngine>
@@ -192,7 +192,7 @@ fn bounded_queue_rejects_and_recovers() {
     let mut served = 0;
     for rx in rxs {
         let resp = rx.recv().unwrap();
-        if resp.rejected {
+        if resp.rejected() {
             assert!(resp.tokens.is_empty());
         } else {
             assert_eq!(resp.tokens, want);
