@@ -15,13 +15,13 @@
 
 use catquant::calib::calibrate;
 use catquant::coordinator::{
-    BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, SamplingCfg,
-    ServeMetrics, StepEngine,
+    BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, ReplicaCfg, ReplicaPool,
+    SamplingCfg, ServeMetrics, StepEngine,
 };
 use catquant::model::{KvCache, KvPoolCfg, ModelConfig, NativeModel, QuantConfig};
 use catquant::pipeline::{build_quant_config, QuantPlan, WeightQuantizer};
-use catquant::runtime::{load_artifact, save_artifact};
-use std::time::Instant;
+use catquant::runtime::{load_artifact, save_artifact, Chaos, ChaosPlan};
+use std::time::{Duration, Instant};
 
 fn bench_cfg(quick: bool) -> ModelConfig {
     if quick {
@@ -267,6 +267,79 @@ fn open_loop_poisson(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
     ))
 }
 
+/// §Hedging A/B: one replica of two is a chaos-injected straggler
+/// (every decode step sleeps), inflating the latency tail for whatever
+/// lands on it. The same workload runs unhedged and hedged; hedging
+/// must claw the p99 back — the CI gate — and, because outputs are
+/// key-seeded and schedule-independent, must not move a bit. Returns
+/// the `BENCH_serve.json` record.
+fn hedging_ab(cfg: &ModelConfig, quick: bool) -> anyhow::Result<String> {
+    let (n_req, plen, max_new) = if quick { (12usize, 8usize, 6usize) } else { (24, 16, 12) };
+    let slow_ms: u64 = if quick { 15 } else { 25 };
+    let hedge_ms: u64 = 5;
+    let sampling = SamplingCfg { temperature: 0.0, seed: 3 };
+
+    let run = |hedge: Option<Duration>| -> anyhow::Result<(ServeMetrics, Vec<Vec<u8>>)> {
+        let model = NativeModel::init_random(cfg.clone(), 7);
+        // Fresh chaos per run so the straggler schedule is identical in
+        // both arms: replica 0 sleeps every decode step, replica 1 is
+        // healthy.
+        let chaos = [
+            Chaos::new(ChaosPlan {
+                slow_step_every: Some(1),
+                slow_step_ms: slow_ms,
+                ..Default::default()
+            }),
+            Chaos::off(),
+        ];
+        let mut pool = ReplicaPool::start(
+            move |r, _plan| {
+                Box::new(
+                    NativeGenerator::fp(model.clone(), 4, sampling)
+                        .with_serve_pool(KvPoolCfg::default(), false)
+                        .with_chaos(chaos[r].clone()),
+                ) as Box<dyn StepEngine>
+            },
+            ReplicaCfg { replicas: 2, hedge_after: hedge, ..Default::default() },
+        );
+        let rxs: Vec<_> = (0..n_req).map(|i| pool.submit(tokens(plen, 80 + i), max_new)).collect();
+        let outs: Result<Vec<Vec<u8>>, _> =
+            rxs.into_iter().map(|rx| rx.recv().map(|r| r.tokens)).collect();
+        Ok((pool.shutdown(), outs?))
+    };
+
+    let (plain, plain_outs) = run(None)?;
+    let (hedged, hedged_outs) = run(Some(Duration::from_millis(hedge_ms)))?;
+    assert_eq!(plain_outs, hedged_outs, "hedging must not move a bit");
+    let p_p99 = plain.request_latency.quantile(0.99);
+    let h_p99 = hedged.request_latency.quantile(0.99);
+    println!(
+        "hedging a/b ({n_req} reqs, straggler {slow_ms} ms/step, hedge {hedge_ms} ms):\n\
+           unhedged p50 {:?} p99 {p_p99:?}\n\
+           hedged   p50 {:?} p99 {h_p99:?}  \
+         (fired {}, won {}, bit-exact)",
+        plain.request_latency.quantile(0.5),
+        hedged.request_latency.quantile(0.5),
+        hedged.hedges_fired,
+        hedged.hedges_won,
+    );
+    assert!(hedged.hedges_fired >= 1, "the straggler must trigger hedges");
+    // The CI gate: duplicating stragglers onto the healthy replica must
+    // beat riding out the slow one on tail latency.
+    assert!(h_p99 < p_p99, "hedging must beat no-hedging on p99: {h_p99:?} vs {p_p99:?}");
+    Ok(format!(
+        "  {{\"section\": \"hedging_ab\", \"quick\": {quick}, \"requests\": {n_req}, \
+         \"straggler_slow_ms\": {slow_ms}, \"hedge_after_ms\": {hedge_ms}, \
+         \"unhedged_p99_ms\": {:.3}, \"hedged_p99_ms\": {:.3}, \"p99_speedup\": {:.2}, \
+         \"hedges_fired\": {}, \"hedges_won\": {}, \"bit_exact\": true}}",
+        p_p99.as_secs_f64() * 1e3,
+        h_p99.as_secs_f64() * 1e3,
+        p_p99.as_secs_f64() / h_p99.as_secs_f64().max(1e-9),
+        hedged.hedges_fired,
+        hedged.hedges_won,
+    ))
+}
+
 /// §Artifacts: what a serving process pays at boot — re-running
 /// calibration + the pipeline vs loading the saved artifact. Asserts the
 /// loaded config is bit-exact, reports both wall-clocks, and returns the
@@ -434,11 +507,15 @@ fn main() -> anyhow::Result<()> {
     //    the continuous-beats-static gate and bit-exactness assertion.
     let open_record = open_loop_poisson(&cfg, quick)?;
 
-    // 4. Server boot: artifact load vs calibration rebuild (bit-exact).
-    let boot_record = artifact_vs_rebuild(&cfg, quick)?;
-    write_bench_json(&[boot_record, open_record]);
+    // 4. Replicated serving: hedging vs riding out a straggler replica,
+    //    with the hedging-beats-p99 gate and bit-exactness assertion.
+    let hedge_record = hedging_ab(&cfg, quick)?;
 
-    // 5. PJRT device-pack A/B when a compiled manifest exists.
+    // 5. Server boot: artifact load vs calibration rebuild (bit-exact).
+    let boot_record = artifact_vs_rebuild(&cfg, quick)?;
+    write_bench_json(&[boot_record, open_record, hedge_record]);
+
+    // 6. PJRT device-pack A/B when a compiled manifest exists.
     if !quick {
         pjrt_pack_upload_ab()?;
     }

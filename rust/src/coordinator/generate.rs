@@ -95,7 +95,14 @@ pub enum AdmitOutcome {
 pub trait StepEngine {
     /// Try to admit a sequence: prefill its prompt (possibly reusing
     /// shared prefix pages) and sample its first token.
-    fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome>;
+    ///
+    /// `key` is the request's stable sampling-stream key: engines that
+    /// sample must seed the sequence's RNG from it (never from an
+    /// engine-local slot index), so the same request admitted on *any*
+    /// replica — including a hedged duplicate — draws the identical
+    /// stream. Together with schedule-independent draws this makes
+    /// replicated outputs bit-exact regardless of routing.
+    fn admit(&mut self, prompt: Vec<u8>, max_new: usize, key: u64) -> Result<AdmitOutcome>;
 
     /// One batched decode step over every running sequence. Returns the
     /// ids that finished (their own `max_new` or positional capacity) —

@@ -46,6 +46,20 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold another histogram into this one. All histograms share the
+    /// same constructed bucket layout, so merging is element-wise — the
+    /// per-replica metrics path merges into a fleet view without ever
+    /// sharing (or contending on) a single lock.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        for (c, oc) in self.counts.iter_mut().zip(&other.counts) {
+            *c += oc;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     pub fn count(&self) -> u64 {
         self.total
     }
@@ -133,9 +147,62 @@ pub struct ServeMetrics {
     /// Prompt-prefix cache counters.
     pub prefix_hits: u64,
     pub prefix_lookups: u64,
+    /// Straggler requests duplicated onto a second replica by the
+    /// replicated router's hedging policy.
+    pub hedges_fired: u64,
+    /// Hedged requests whose *duplicate* finished first (the primary was
+    /// cancelled). Bit-exactness makes either winner equivalent.
+    pub hedges_won: u64,
+    /// Requests served by a degraded (lower-bit) brownout plan.
+    pub brownout_served: u64,
+    /// Replica circuit-breaker transitions to open (K consecutive
+    /// failed/overdue ticks).
+    pub breaker_opens: u64,
 }
 
 impl ServeMetrics {
+    /// Fold another replica's metrics into this one, producing a
+    /// fleet-wide view. Each replica records into its own
+    /// `Arc<Mutex<ServeMetrics>>`; aggregation happens only at report
+    /// time, so N replicas never contend on one lock.
+    ///
+    /// Counters and histograms add; pool gauges add too (each replica
+    /// owns a disjoint pool, so fleet live/peak/budget are sums, with
+    /// any unbounded pool making the fleet budget unbounded); `elapsed`
+    /// takes the max (replicas run concurrently, not back to back).
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.request_latency.merge(&other.request_latency);
+        self.ttft.merge(&other.ttft);
+        self.shed_wait.merge(&other.shed_wait);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.queue_depth.extend_from_slice(&other.queue_depth);
+        self.tokens_out += other.tokens_out;
+        self.requests += other.requests;
+        self.elapsed = self.elapsed.max(other.elapsed);
+        self.engine.accumulate(&other.engine);
+        self.rejected += other.rejected;
+        self.expired += other.expired;
+        self.cancelled += other.cancelled;
+        self.failed += other.failed;
+        self.respawns += other.respawns;
+        self.preemptions += other.preemptions;
+        self.kv_live_bytes += other.kv_live_bytes;
+        self.kv_peak_bytes = self.kv_peak_bytes.saturating_add(other.kv_peak_bytes);
+        self.kv_budget_bytes = if self.kv_budget_bytes == usize::MAX
+            || other.kv_budget_bytes == usize::MAX
+        {
+            usize::MAX
+        } else {
+            self.kv_budget_bytes.saturating_add(other.kv_budget_bytes)
+        };
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_lookups += other.prefix_lookups;
+        self.hedges_fired += other.hedges_fired;
+        self.hedges_won += other.hedges_won;
+        self.brownout_served += other.brownout_served;
+        self.breaker_opens += other.breaker_opens;
+    }
+
     pub fn throughput_tok_s(&self) -> f64 {
         if self.elapsed.is_zero() {
             return 0.0;
@@ -205,7 +272,8 @@ impl ServeMetrics {
              mean_batch={:.2} ttft_p50={:?} p50={:?} p95={:?} p99={:?} mean={:?}\n\
              queue_mean={:.2} queue_max={} kv_live={}B kv_peak={}B kv_budget={}B \
              kv_occupancy={:.1}% prefix_hit_rate={:.1}% preemptions={} rejected={} truncated={} \
-             expired={} cancelled={} failed={} respawns={} shed_wait_p50={:?}",
+             expired={} cancelled={} failed={} respawns={} shed_wait_p50={:?} \
+             hedges_fired={} hedges_won={} brownout_served={} breaker_opens={}",
             self.requests,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -232,6 +300,10 @@ impl ServeMetrics {
             self.failed,
             self.respawns,
             self.shed_wait.quantile(0.5),
+            self.hedges_fired,
+            self.hedges_won,
+            self.brownout_served,
+            self.breaker_opens,
         )
     }
 }
@@ -285,6 +357,80 @@ mod tests {
         h.record(big);
         assert_eq!(h.quantile(1.0), big);
         assert!(h.quantile(0.25) <= Duration::from_micros(4));
+    }
+
+    #[test]
+    fn histogram_merge_matches_recording_into_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut one = Histogram::new();
+        for ms in 1..=60u64 {
+            a.record(Duration::from_millis(ms));
+            one.record(Duration::from_millis(ms));
+        }
+        for ms in 40..=100u64 {
+            b.record(Duration::from_millis(ms));
+            one.record(Duration::from_millis(ms));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), one.count());
+        assert_eq!(a.mean(), one.mean());
+        assert_eq!(a.max(), one.max());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), one.quantile(q), "q={q} diverged after merge");
+        }
+    }
+
+    #[test]
+    fn serve_metrics_merge_aggregates_fleet_view() {
+        let mut r0 = ServeMetrics {
+            requests: 3,
+            tokens_out: 30,
+            rejected: 1,
+            hedges_fired: 2,
+            hedges_won: 1,
+            kv_live_bytes: 100,
+            kv_budget_bytes: 1000,
+            elapsed: Duration::from_secs(2),
+            queue_depth: vec![1, 2],
+            ..Default::default()
+        };
+        r0.request_latency.record(Duration::from_millis(5));
+        let mut r1 = ServeMetrics {
+            requests: 4,
+            tokens_out: 40,
+            brownout_served: 2,
+            breaker_opens: 1,
+            kv_live_bytes: 200,
+            kv_budget_bytes: 1000,
+            elapsed: Duration::from_secs(3),
+            queue_depth: vec![4],
+            ..Default::default()
+        };
+        r1.request_latency.record(Duration::from_millis(9));
+        r0.merge(&r1);
+        assert_eq!(r0.requests, 7);
+        assert_eq!(r0.tokens_out, 70);
+        assert_eq!(r0.rejected, 1);
+        assert_eq!(r0.hedges_fired, 2);
+        assert_eq!(r0.hedges_won, 1);
+        assert_eq!(r0.brownout_served, 2);
+        assert_eq!(r0.breaker_opens, 1);
+        assert_eq!(r0.kv_live_bytes, 300);
+        assert_eq!(r0.kv_budget_bytes, 2000);
+        assert_eq!(r0.elapsed, Duration::from_secs(3), "elapsed is max, not sum");
+        assert_eq!(r0.request_latency.count(), 2);
+        assert_eq!(r0.max_queue_depth(), 4);
+        // Any unbounded member pool makes the fleet budget unbounded.
+        let unbounded = ServeMetrics { kv_budget_bytes: usize::MAX, ..Default::default() };
+        r0.merge(&unbounded);
+        assert_eq!(r0.kv_budget_bytes, usize::MAX);
+        let s = r0.summary();
+        for needle in
+            ["hedges_fired=2", "hedges_won=1", "brownout_served=2", "breaker_opens=1"]
+        {
+            assert!(s.contains(needle), "summary missing {needle}: {s}");
+        }
     }
 
     #[test]

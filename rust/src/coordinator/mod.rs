@@ -20,6 +20,7 @@ mod batcher;
 mod generate;
 mod metrics;
 mod native_gen;
+mod replica;
 mod scheduler;
 mod server;
 
@@ -29,5 +30,6 @@ pub use generate::{
 };
 pub use metrics::{Histogram, ServeMetrics};
 pub use native_gen::NativeGenerator;
+pub use replica::{BrownoutCfg, ReplicaCfg, ReplicaPool};
 pub use scheduler::{ContinuousCfg, Scheduler, Tick};
-pub use server::{Coordinator, GenRequest, GenResponse, GenStatus};
+pub use server::{Coordinator, GenRequest, GenResponse, GenStatus, ServePlan};

@@ -185,8 +185,11 @@ impl NativeGenerator {
         }
     }
 
-    fn seq_rng(&self, id: u64) -> Rng {
-        Rng::new(self.sampling.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5A117)
+    /// Per-sequence sampling stream, seeded from the engine seed and the
+    /// request's stable key — not the engine-local slot index — so the
+    /// same request admitted on any replica draws identically.
+    fn seq_rng(&self, key: u64) -> Rng {
+        Rng::new(self.sampling.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5A117)
     }
 
     /// Build a cache holding `toks` (prefix-hit pages + prefill of the
@@ -393,7 +396,7 @@ impl GenEngine for NativeGenerator {
 }
 
 impl StepEngine for NativeGenerator {
-    fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
+    fn admit(&mut self, prompt: Vec<u8>, max_new: usize, key: u64) -> Result<AdmitOutcome> {
         if self.running.len() >= self.max_batch {
             return Ok(AdmitOutcome::NoCapacity(prompt));
         }
@@ -408,7 +411,7 @@ impl StepEngine for NativeGenerator {
             trie.insert(&fitted, |s, c| cache.stream_page(s, c));
         }
         let id = self.seqs.len() as u64;
-        let mut rng = self.seq_rng(id);
+        let mut rng = self.seq_rng(key);
         let tok = sample_index(logits.row(0), self.sampling.temperature, &mut rng) as u8;
         let done = max_new <= 1 || !cache.has_room();
         self.seqs.push(StepSeq {
@@ -633,14 +636,14 @@ mod tests {
         }
         let mut g = NativeGenerator::fp(tiny(), 4, sampling)
             .with_serve_pool(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX }, true);
-        assert!(matches!(g.admit(prompts[0].to_vec(), max_news[0]).unwrap(), AdmitOutcome::Admitted(0)));
-        assert!(matches!(g.admit(prompts[1].to_vec(), max_news[1]).unwrap(), AdmitOutcome::Admitted(1)));
+        assert!(matches!(g.admit(prompts[0].to_vec(), max_news[0], 0).unwrap(), AdmitOutcome::Admitted(0)));
+        assert!(matches!(g.admit(prompts[1].to_vec(), max_news[1], 1).unwrap(), AdmitOutcome::Admitted(1)));
         let mut outs: Vec<Option<Vec<u8>>> = vec![None; 3];
         for step in 0..32 {
             if step == 1 {
                 // Joins while the first two are mid-decode.
                 assert!(matches!(
-                    g.admit(prompts[2].to_vec(), max_news[2]).unwrap(),
+                    g.admit(prompts[2].to_vec(), max_news[2], 2).unwrap(),
                     AdmitOutcome::Admitted(2)
                 ));
             }
@@ -675,8 +678,8 @@ mod tests {
         // but cannot hold both fully grown — preemption must kick in.
         let cfgp = KvPoolCfg { page_rows: 4, budget_bytes: 20 * 1024 };
         let mut g = NativeGenerator::fp(tiny(), 4, sampling).with_serve_pool(cfgp, false);
-        assert!(matches!(g.admit(p0.clone(), mn).unwrap(), AdmitOutcome::Admitted(0)));
-        assert!(matches!(g.admit(p1.clone(), mn).unwrap(), AdmitOutcome::Admitted(1)));
+        assert!(matches!(g.admit(p0.clone(), mn, 0).unwrap(), AdmitOutcome::Admitted(0)));
+        assert!(matches!(g.admit(p1.clone(), mn, 1).unwrap(), AdmitOutcome::Admitted(1)));
         let mut outs: [Option<Vec<u8>>; 2] = [None, None];
         let mut waiting: Vec<u64> = Vec::new();
         let mut preemptions = 0usize;
@@ -710,9 +713,9 @@ mod tests {
         b.push(17);
         let mut g = NativeGenerator::fp(tiny(), 4, sampling)
             .with_serve_pool(KvPoolCfg { page_rows: 4, budget_bytes: usize::MAX }, true);
-        assert!(matches!(g.admit(a, 2).unwrap(), AdmitOutcome::Admitted(0)));
+        assert!(matches!(g.admit(a, 2, 0).unwrap(), AdmitOutcome::Admitted(0)));
         assert_eq!(StepEngine::take_stats(&mut g).prefill_tokens, 9);
-        assert!(matches!(g.admit(b.clone(), 2).unwrap(), AdmitOutcome::Admitted(1)));
+        assert!(matches!(g.admit(b.clone(), 2, 1).unwrap(), AdmitOutcome::Admitted(1)));
         // 8 shared tokens (two full 4-row chunks) come from the trie;
         // only the divergent tail prefills.
         assert_eq!(StepEngine::take_stats(&mut g).prefill_tokens, 1);

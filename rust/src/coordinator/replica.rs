@@ -1,0 +1,1251 @@
+//! Replicated serving: N independent engine replicas behind one router.
+//!
+//! Each replica is a worker thread owning its own [`Scheduler`] (and KV
+//! budget); the router thread load-balances admissions round-robin and
+//! tracks per-replica health with a circuit breaker — K consecutive
+//! failed or overdue ticks open it, queued work is handed back and
+//! rerouted to healthy replicas, and a half-open probe (one real
+//! request) closes it again under capped exponential backoff. This
+//! generalizes the single-engine factory-respawn of PR 8: the worker
+//! still respawns its own engine locally, while the router steers
+//! traffic away until a probe proves the replacement healthy.
+//!
+//! Two policies ride on top:
+//!
+//! **Hedged requests** — a request still unfinished `hedge_after` after
+//! submission is duplicated onto a second healthy replica with the same
+//! sampling-stream key. First terminal response wins and is forwarded to
+//! the client; the loser is cancelled (its pages freed) without a second
+//! terminal. This is safe *because* outputs are bit-exact and
+//! schedule-independent (per-sequence RNG is keyed by the request, not
+//! the engine slot): winner and loser compute identical tokens, so which
+//! arm wins is unobservable in the payload.
+//!
+//! **Precision brownout** — when a replica's queue depth or KV occupancy
+//! stays above a watermark for `engage_ticks` consecutive ticks, new
+//! admissions route to a second scheduler running a degraded lower-bit
+//! plan from the same artifact directory; responses record the serving
+//! plan ([`ServePlan`]). Hysteresis (`release_ticks` below the
+//! watermark) restores full precision. Under overload the paper's
+//! concentration/alignment SQNR budget becomes the shed valve: quality
+//! degrades measurably instead of requests being rejected.
+//!
+//! Exactly-one-terminal is preserved end to end: every client submission
+//! maps to a router *entry*; internal per-replica requests ("arms")
+//! report back over a private channel, and only the first terminal arm
+//! reaches the client. Failed/rejected arms are retried on another
+//! replica up to `max_retries` before the failure is forwarded.
+
+use super::metrics::lock_recover;
+use super::scheduler::Tick;
+use super::server::{respond_plan, ServePlan};
+use super::{
+    ContinuousCfg, GenRequest, GenResponse, GenStatus, Scheduler, ServeMetrics, StepEngine,
+};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Precision-brownout policy (off when [`ReplicaCfg::brownout`] is
+/// `None`).
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutCfg {
+    /// Pressure watermark in `[0, 1]`; pressure is the max of queue
+    /// depth / `max_queue` and KV pool occupancy.
+    pub watermark: f64,
+    /// Consecutive ticks at/above the watermark before new admissions
+    /// shift to the degraded plan.
+    pub engage_ticks: u32,
+    /// Consecutive ticks below the watermark before full precision is
+    /// restored (hysteresis — strictly more than a single good tick, so
+    /// the plan doesn't flap at the boundary).
+    pub release_ticks: u32,
+}
+
+impl Default for BrownoutCfg {
+    fn default() -> Self {
+        BrownoutCfg { watermark: 0.75, engage_ticks: 4, release_ticks: 8 }
+    }
+}
+
+/// Replicated-serving policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaCfg {
+    /// Number of engine replicas (worker threads), each with its own
+    /// scheduler and KV budget.
+    pub replicas: usize,
+    /// Per-replica scheduler policy (queue bound, admission watermark,
+    /// local respawn backoff).
+    pub scheduler: ContinuousCfg,
+    /// Consecutive failed/overdue ticks before the replica's circuit
+    /// breaker opens.
+    pub breaker_threshold: u32,
+    /// Initial open-breaker backoff before a half-open probe is allowed;
+    /// doubles per re-open up to [`Self::probe_backoff_cap`].
+    pub probe_backoff: Duration,
+    /// Upper bound on the probe backoff.
+    pub probe_backoff_cap: Duration,
+    /// A tick slower than this counts as a breaker strike (stragglers
+    /// and livelocks look identical to failures from the router's seat).
+    /// `None` disables timeout strikes.
+    pub tick_timeout: Option<Duration>,
+    /// Duplicate a request onto a second replica once it has been
+    /// outstanding this long (derive it from a measured p95/p99).
+    /// `None` disables hedging.
+    pub hedge_after: Option<Duration>,
+    /// How many times a failed/rejected arm is retried on another
+    /// replica before the failure is forwarded to the client.
+    pub max_retries: u32,
+    /// Precision-brownout policy; `None` serves the full plan always.
+    pub brownout: Option<BrownoutCfg>,
+}
+
+impl Default for ReplicaCfg {
+    fn default() -> Self {
+        ReplicaCfg {
+            replicas: 2,
+            scheduler: ContinuousCfg::default(),
+            breaker_threshold: 3,
+            probe_backoff: Duration::from_millis(10),
+            probe_backoff_cap: Duration::from_secs(1),
+            tick_timeout: None,
+            hedge_after: None,
+            max_retries: 1,
+            brownout: None,
+        }
+    }
+}
+
+/// Commands the router sends a replica worker.
+enum RepCmd {
+    /// Admit (or queue) an internal request.
+    Enqueue(GenRequest),
+    /// Silently drop an internal request by id (hedge loser): pages
+    /// freed, no response sent.
+    Cancel(u64),
+    /// Breaker opened: hand every queued-but-unadmitted request back for
+    /// rerouting ([`RouterMsg::GaveBack`]). In-flight work keeps ticking.
+    TakeQueue,
+    /// Stop admitting, reject the queue, finish in-flight work.
+    Drain,
+}
+
+/// Everything the router reacts to, over a single channel (std mpsc has
+/// no `select`, so completions are forwarded into this stream too).
+enum RouterMsg {
+    /// A client submission (reply sender goes to the client).
+    Submit(GenRequest),
+    /// An internal arm reached a terminal state (`resp.id` is the
+    /// internal arm id).
+    Done(GenResponse),
+    /// A replica tick failed or overran `tick_timeout`.
+    Strike { replica: usize },
+    /// First good tick after one or more strikes.
+    Healthy { replica: usize },
+    /// Queue handed back by a replica after [`RepCmd::TakeQueue`].
+    GaveBack(Vec<GenRequest>),
+    /// Begin pool-wide drain.
+    Drain,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    /// No traffic until `until`; then half-open.
+    Open { until: Instant },
+    /// One probe request allowed; its terminal decides open vs closed.
+    HalfOpen { probing: Option<u64> },
+}
+
+struct Breaker {
+    state: BreakerState,
+    strikes: u32,
+    backoff: Duration,
+}
+
+/// One in-flight arm of an entry: which replica holds which internal id.
+struct Arm {
+    replica: usize,
+    internal: u64,
+    hedge: bool,
+}
+
+/// Router-side record of one client request.
+struct Entry {
+    reply: Sender<GenResponse>,
+    prompt: Vec<u8>,
+    max_new: usize,
+    deadline: Option<Instant>,
+    /// Sampling-stream key shared by every arm — the bit-exactness
+    /// anchor that makes hedging and retries payload-invisible.
+    key: u64,
+    enqueued: Instant,
+    arms: Vec<Arm>,
+    retries_left: u32,
+    hedged: bool,
+}
+
+type EngineFactory = Arc<dyn Fn(usize, ServePlan) -> Box<dyn StepEngine> + Send + Sync>;
+
+/// Client handle to the replicated pool. [`ReplicaPool::shutdown`] (and
+/// drop) drains gracefully: in-flight requests finish, queued ones get
+/// terminal rejections, and all threads are joined.
+pub struct ReplicaPool {
+    router_tx: Option<Sender<RouterMsg>>,
+    router: Option<JoinHandle<()>>,
+    forwarder: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    replica_metrics: Vec<Arc<Mutex<ServeMetrics>>>,
+    router_metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+impl ReplicaPool {
+    /// Start `cfg.replicas` engine replicas plus the router.
+    ///
+    /// The factory runs on each worker thread (engines are not `Send`)
+    /// and is called again on local respawn after an engine loss; the
+    /// [`ServePlan`] argument selects the full or brownout plan.
+    pub fn start<F>(make_engine: F, cfg: ReplicaCfg) -> ReplicaPool
+    where
+        F: Fn(usize, ServePlan) -> Box<dyn StepEngine> + Send + Sync + 'static,
+    {
+        let n = cfg.replicas.max(1);
+        let make: EngineFactory = Arc::new(make_engine);
+        let (router_tx, router_rx) = channel::<RouterMsg>();
+        let (done_tx, done_rx) = channel::<GenResponse>();
+        let replica_metrics: Vec<Arc<Mutex<ServeMetrics>>> =
+            (0..n).map(|_| Arc::new(Mutex::new(ServeMetrics::default()))).collect();
+        let router_metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for r in 0..n {
+            let (cmd_tx, cmd_rx) = channel::<RepCmd>();
+            cmd_txs.push(cmd_tx);
+            let make = make.clone();
+            let rtx = router_tx.clone();
+            let met = replica_metrics[r].clone();
+            workers.push(std::thread::spawn(move || run_replica(r, cmd_rx, rtx, make, cfg, met)));
+        }
+
+        // Forwarder: pump internal completions into the router's single
+        // message stream (no `select` over two receivers in std mpsc).
+        let fwd_tx = router_tx.clone();
+        let forwarder = std::thread::spawn(move || {
+            while let Ok(resp) = done_rx.recv() {
+                if fwd_tx.send(RouterMsg::Done(resp)).is_err() {
+                    break;
+                }
+            }
+        });
+
+        let rm = router_metrics.clone();
+        let router = std::thread::spawn(move || {
+            Router {
+                cfg,
+                cmd_txs,
+                done_tx,
+                metrics: rm,
+                entries: HashMap::new(),
+                arm_owner: HashMap::new(),
+                breakers: (0..n)
+                    .map(|_| Breaker {
+                        state: BreakerState::Closed,
+                        strikes: 0,
+                        backoff: cfg.probe_backoff,
+                    })
+                    .collect(),
+                next_internal: 0,
+                rr: 0,
+                draining: false,
+            }
+            .run(router_rx);
+        });
+
+        ReplicaPool {
+            router_tx: Some(router_tx),
+            router: Some(router),
+            forwarder: Some(forwarder),
+            workers,
+            next_id: AtomicU64::new(0),
+            replica_metrics,
+            router_metrics,
+        }
+    }
+
+    /// Submit a request; the receiver yields exactly one terminal
+    /// [`GenResponse`]. After shutdown the response is an immediate
+    /// clean rejection.
+    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> Receiver<GenResponse> {
+        self.submit_with_deadline(prompt, max_new, None)
+    }
+
+    /// [`Self::submit`] with a serve-by deadline relative to now.
+    pub fn submit_with_deadline(
+        &self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        deadline: Option<Duration>,
+    ) -> Receiver<GenResponse> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let req = GenRequest {
+            id,
+            prompt,
+            max_new,
+            deadline: deadline.map(|d| now + d),
+            key: id,
+            enqueued: now,
+            reply,
+        };
+        let undeliverable = match &self.router_tx {
+            Some(tx) => tx.send(RouterMsg::Submit(req)).err().map(|e| match e.0 {
+                RouterMsg::Submit(r) => r,
+                _ => unreachable!("send returns what it was given"),
+            }),
+            None => Some(req),
+        };
+        if let Some(req) = undeliverable {
+            lock_recover(&self.router_metrics).rejected += 1;
+            respond_plan(&req, Vec::new(), 0, GenStatus::Rejected, ServePlan::Full);
+        }
+        rx
+    }
+
+    /// Per-replica metric snapshots, in replica order.
+    pub fn replica_metrics(&self) -> Vec<ServeMetrics> {
+        self.replica_metrics.iter().map(|m| lock_recover(m).clone()).collect()
+    }
+
+    /// Fleet-wide view: router counters (hedges, breaker opens, router
+    /// rejections) merged with every replica's metrics. Each replica
+    /// records into its own lock; aggregation happens only here, at
+    /// report time.
+    pub fn metrics(&self) -> ServeMetrics {
+        let mut fleet = lock_recover(&self.router_metrics).clone();
+        for m in &self.replica_metrics {
+            let snap = lock_recover(m).clone();
+            fleet.merge(&snap);
+        }
+        fleet
+    }
+
+    /// Per-replica summary lines plus the fleet roll-up.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for (r, m) in self.replica_metrics().into_iter().enumerate() {
+            s.push_str(&format!("r{r}: {}\n", m.summary()));
+        }
+        s.push_str(&format!("fleet: {}", self.metrics().summary()));
+        s
+    }
+
+    fn halt(&mut self) {
+        if let Some(tx) = self.router_tx.take() {
+            let _ = tx.send(RouterMsg::Drain);
+        }
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(f) = self.forwarder.take() {
+            let _ = f.join();
+        }
+    }
+
+    /// Graceful drain: stop admission, reject queued requests, let
+    /// in-flight sequences finish (or hit their deadline), join every
+    /// thread, and return the final fleet metrics.
+    pub fn shutdown(&mut self) -> ServeMetrics {
+        self.halt();
+        self.metrics()
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// The router: owns the entry table, the breakers, and all routing,
+/// hedging, and retry policy. Single-threaded over one message stream.
+struct Router {
+    cfg: ReplicaCfg,
+    cmd_txs: Vec<Sender<RepCmd>>,
+    /// Master clone source for internal arms' reply senders.
+    done_tx: Sender<GenResponse>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    /// Client id → entry.
+    entries: HashMap<u64, Entry>,
+    /// Internal arm id → client id.
+    arm_owner: HashMap<u64, u64>,
+    breakers: Vec<Breaker>,
+    next_internal: u64,
+    /// Round-robin cursor.
+    rr: usize,
+    draining: bool,
+}
+
+impl Router {
+    fn run(mut self, rx: Receiver<RouterMsg>) {
+        loop {
+            self.service_timers();
+            if self.draining && self.entries.is_empty() {
+                break;
+            }
+            let msg = match self.next_deadline() {
+                None => match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break,
+                },
+                Some(d) => {
+                    let wait = d.saturating_duration_since(Instant::now());
+                    match rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            };
+            if let Some(m) = msg {
+                self.handle(m);
+            }
+            // Drain whatever else is pending before recomputing timers.
+            while let Ok(m) = rx.try_recv() {
+                self.handle(m);
+            }
+        }
+        // Exiting drops cmd_txs: workers finish their drain and exit.
+    }
+
+    fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Submit(req) => self.submit(req),
+            RouterMsg::Done(resp) => self.done(resp),
+            RouterMsg::Strike { replica } => self.strike(replica),
+            RouterMsg::Healthy { replica } => self.healthy(replica),
+            RouterMsg::GaveBack(reqs) => self.gave_back(reqs),
+            RouterMsg::Drain => {
+                self.draining = true;
+                for tx in &self.cmd_txs {
+                    let _ = tx.send(RepCmd::Drain);
+                }
+            }
+        }
+    }
+
+    /// Next healthy replica, round-robin; falls back to probing one
+    /// half-open replica when nothing is closed (if `allow_probe`).
+    fn route(&mut self, avoid: Option<usize>, allow_probe: bool) -> Option<usize> {
+        let n = self.cmd_txs.len();
+        for i in 0..n {
+            let r = (self.rr + i) % n;
+            if Some(r) == avoid {
+                continue;
+            }
+            if self.breakers[r].state == BreakerState::Closed {
+                self.rr = (r + 1) % n;
+                return Some(r);
+            }
+        }
+        if allow_probe {
+            for r in 0..n {
+                if Some(r) == avoid {
+                    continue;
+                }
+                if self.breakers[r].state == (BreakerState::HalfOpen { probing: None }) {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Create a new internal arm for `client_id` on `replica` and send
+    /// it. Returns false (with all bookkeeping undone) if the worker is
+    /// gone.
+    fn spawn_arm(&mut self, client_id: u64, replica: usize, hedge: bool) -> bool {
+        let internal = self.next_internal;
+        self.next_internal += 1;
+        let req = {
+            let Some(e) = self.entries.get_mut(&client_id) else { return false };
+            e.arms.push(Arm { replica, internal, hedge });
+            GenRequest {
+                id: internal,
+                prompt: e.prompt.clone(),
+                max_new: e.max_new,
+                deadline: e.deadline,
+                key: e.key,
+                enqueued: e.enqueued,
+                reply: self.done_tx.clone(),
+            }
+        };
+        self.arm_owner.insert(internal, client_id);
+        if let BreakerState::HalfOpen { probing: probing @ None } =
+            &mut self.breakers[replica].state
+        {
+            *probing = Some(internal);
+        }
+        if self.cmd_txs[replica].send(RepCmd::Enqueue(req)).is_ok() {
+            return true;
+        }
+        // Worker thread is gone — undo and let the caller fall back.
+        self.arm_owner.remove(&internal);
+        if let Some(e) = self.entries.get_mut(&client_id) {
+            e.arms.retain(|a| a.internal != internal);
+        }
+        if let BreakerState::HalfOpen { probing } = &mut self.breakers[replica].state {
+            if *probing == Some(internal) {
+                *probing = None;
+            }
+        }
+        false
+    }
+
+    fn submit(&mut self, req: GenRequest) {
+        if self.draining {
+            lock_recover(&self.metrics).rejected += 1;
+            respond_plan(&req, Vec::new(), 0, GenStatus::Rejected, ServePlan::Full);
+            return;
+        }
+        let client_id = req.id;
+        let entry = Entry {
+            reply: req.reply,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            deadline: req.deadline,
+            key: req.key,
+            enqueued: req.enqueued,
+            arms: Vec::new(),
+            retries_left: self.cfg.max_retries,
+            hedged: false,
+        };
+        self.entries.insert(client_id, entry);
+        let routed = self.route(None, true);
+        let sent = match routed {
+            Some(r) => self.spawn_arm(client_id, r, false),
+            None => false,
+        };
+        if !sent {
+            // Whole fleet open (or dead): terminal rejection now rather
+            // than an unbounded router-side queue.
+            if let Some(entry) = self.entries.remove(&client_id) {
+                lock_recover(&self.metrics).rejected += 1;
+                let _ = entry.reply.send(GenResponse {
+                    id: client_id,
+                    tokens: Vec::new(),
+                    latency: entry.enqueued.elapsed(),
+                    batch_size: 0,
+                    status: GenStatus::Rejected,
+                    plan: ServePlan::Full,
+                });
+            }
+        }
+    }
+
+    fn done(&mut self, resp: GenResponse) {
+        let Some(&client_id) = self.arm_owner.get(&resp.id) else {
+            // A cancelled loser that raced its cancellation, or an
+            // already-resolved entry — nothing is waiting for it.
+            return;
+        };
+        // Probe verdict first: any terminal from the probing arm proves
+        // the scheduler answered; only Failed means the engine is still
+        // dying.
+        let replica = self
+            .entries
+            .get(&client_id)
+            .and_then(|e| e.arms.iter().find(|a| a.internal == resp.id))
+            .map(|a| a.replica);
+        if let Some(r) = replica {
+            if let BreakerState::HalfOpen { probing: Some(p) } = self.breakers[r].state {
+                if p == resp.id {
+                    if resp.status == GenStatus::Failed {
+                        self.open_breaker(r);
+                    } else {
+                        self.close_breaker(r);
+                    }
+                }
+            }
+        }
+        match resp.status {
+            GenStatus::Ok | GenStatus::Expired => self.win_arm(client_id, resp),
+            GenStatus::Rejected | GenStatus::Failed => {
+                let internal = resp.id;
+                self.fail_arm(client_id, internal, resp);
+            }
+        }
+    }
+
+    /// First terminal wins: forward to the client under the client id,
+    /// cancel every other arm silently.
+    fn win_arm(&mut self, client_id: u64, resp: GenResponse) {
+        self.arm_owner.remove(&resp.id);
+        let Some(mut entry) = self.entries.remove(&client_id) else { return };
+        let won_by_hedge =
+            entry.arms.iter().find(|a| a.internal == resp.id).is_some_and(|a| a.hedge);
+        if won_by_hedge && resp.status == GenStatus::Ok {
+            lock_recover(&self.metrics).hedges_won += 1;
+        }
+        for arm in entry.arms.drain(..) {
+            if arm.internal != resp.id {
+                self.arm_owner.remove(&arm.internal);
+                // A cancelled loser produces no terminal: if it was
+                // someone's probe, free the probe slot or the breaker
+                // wedges half-open forever.
+                self.clear_probe(arm.internal);
+                let _ = self.cmd_txs[arm.replica].send(RepCmd::Cancel(arm.internal));
+            }
+        }
+        let mut out = resp;
+        out.id = client_id;
+        let _ = entry.reply.send(out);
+    }
+
+    /// A failed/rejected arm: if a hedge sibling is still racing, drop
+    /// this arm quietly; otherwise retry on another replica while
+    /// retries remain, else forward the failure.
+    fn fail_arm(&mut self, client_id: u64, internal: u64, resp: GenResponse) {
+        self.arm_owner.remove(&internal);
+        // Arms synthesized dead (reroute failure) never reach `done`'s
+        // probe verdict — release any probe slot they held.
+        self.clear_probe(internal);
+        let arms_left = match self.entries.get_mut(&client_id) {
+            None => return,
+            Some(e) => {
+                e.arms.retain(|a| a.internal != internal);
+                e.arms.len()
+            }
+        };
+        if arms_left > 0 {
+            return;
+        }
+        let can_retry =
+            !self.draining && self.entries.get(&client_id).is_some_and(|e| e.retries_left > 0);
+        if can_retry {
+            if let Some(e) = self.entries.get_mut(&client_id) {
+                e.retries_left -= 1;
+            }
+            if let Some(r) = self.route(None, true) {
+                if self.spawn_arm(client_id, r, false) {
+                    return;
+                }
+            }
+        }
+        if let Some(entry) = self.entries.remove(&client_id) {
+            let mut out = resp;
+            out.id = client_id;
+            let _ = entry.reply.send(out);
+        }
+    }
+
+    fn strike(&mut self, replica: usize) {
+        match self.breakers[replica].state {
+            BreakerState::Closed => {
+                self.breakers[replica].strikes += 1;
+                if self.breakers[replica].strikes >= self.cfg.breaker_threshold {
+                    self.open_breaker(replica);
+                }
+            }
+            BreakerState::HalfOpen { .. } => self.open_breaker(replica),
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    fn healthy(&mut self, replica: usize) {
+        match self.breakers[replica].state {
+            BreakerState::Closed => {
+                self.breakers[replica].strikes = 0;
+                self.breakers[replica].backoff = self.cfg.probe_backoff;
+            }
+            BreakerState::HalfOpen { .. } => self.close_breaker(replica),
+            // Stale pre-open event; the probe decides reopening.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    fn open_breaker(&mut self, replica: usize) {
+        let b = &mut self.breakers[replica];
+        b.state = BreakerState::Open { until: Instant::now() + b.backoff };
+        b.backoff = (b.backoff * 2).min(self.cfg.probe_backoff_cap);
+        b.strikes = 0;
+        lock_recover(&self.metrics).breaker_opens += 1;
+        // Queued work must not starve behind a dead engine: the worker
+        // hands it back and `gave_back` reroutes it (no retry consumed).
+        let _ = self.cmd_txs[replica].send(RepCmd::TakeQueue);
+    }
+
+    /// Forget that `internal` was probing any breaker (the arm died
+    /// without a terminal), so the next request can probe instead.
+    fn clear_probe(&mut self, internal: u64) {
+        for b in &mut self.breakers {
+            if let BreakerState::HalfOpen { probing } = &mut b.state {
+                if *probing == Some(internal) {
+                    *probing = None;
+                }
+            }
+        }
+    }
+
+    fn close_breaker(&mut self, replica: usize) {
+        let b = &mut self.breakers[replica];
+        b.state = BreakerState::Closed;
+        b.strikes = 0;
+        b.backoff = self.cfg.probe_backoff;
+    }
+
+    /// Reroute queue contents handed back by an opened breaker. The
+    /// internal request moves replicas as-is (same internal id, same
+    /// reply sender) — this is a reroute, not a retry.
+    fn gave_back(&mut self, reqs: Vec<GenRequest>) {
+        for req in reqs {
+            let internal = req.id;
+            let Some(&client_id) = self.arm_owner.get(&internal) else { continue };
+            match self.route(None, true) {
+                Some(r) => {
+                    if let Some(e) = self.entries.get_mut(&client_id) {
+                        if let Some(a) = e.arms.iter_mut().find(|a| a.internal == internal) {
+                            a.replica = r;
+                        }
+                    }
+                    if let BreakerState::HalfOpen { probing: probing @ None } =
+                        &mut self.breakers[r].state
+                    {
+                        *probing = Some(internal);
+                    }
+                    if self.cmd_txs[r].send(RepCmd::Enqueue(req)).is_err() {
+                        let resp = GenResponse {
+                            id: internal,
+                            tokens: Vec::new(),
+                            latency: Duration::ZERO,
+                            batch_size: 0,
+                            status: GenStatus::Failed,
+                            plan: ServePlan::Full,
+                        };
+                        self.fail_arm(client_id, internal, resp);
+                    }
+                }
+                None => {
+                    let resp = GenResponse {
+                        id: internal,
+                        tokens: Vec::new(),
+                        latency: req.enqueued.elapsed(),
+                        batch_size: 0,
+                        status: GenStatus::Rejected,
+                        plan: ServePlan::Full,
+                    };
+                    self.fail_arm(client_id, internal, resp);
+                }
+            }
+        }
+    }
+
+    /// Time-driven transitions: open breakers whose backoff expired
+    /// become half-open, and overdue single-arm entries hedge.
+    fn service_timers(&mut self) {
+        let now = Instant::now();
+        for b in &mut self.breakers {
+            if let BreakerState::Open { until } = b.state {
+                if now >= until {
+                    b.state = BreakerState::HalfOpen { probing: None };
+                }
+            }
+        }
+        let Some(hedge_after) = self.cfg.hedge_after else { return };
+        if self.draining {
+            return;
+        }
+        let due: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.hedged && e.arms.len() == 1 && e.enqueued.elapsed() >= hedge_after)
+            .map(|(&id, _)| id)
+            .collect();
+        for client_id in due {
+            let avoid = self
+                .entries
+                .get(&client_id)
+                .and_then(|e| e.arms.first())
+                .map(|a| a.replica);
+            if let Some(e) = self.entries.get_mut(&client_id) {
+                // One hedge attempt per request, whether or not a second
+                // replica is available right now — never an unbounded
+                // duplicate storm.
+                e.hedged = true;
+            }
+            if let Some(r) = self.route(avoid, false) {
+                if self.spawn_arm(client_id, r, true) {
+                    lock_recover(&self.metrics).hedges_fired += 1;
+                }
+            }
+        }
+    }
+
+    /// Earliest instant something time-driven happens: a breaker probe
+    /// window opening or a hedge falling due.
+    fn next_deadline(&self) -> Option<Instant> {
+        let mut d: Option<Instant> = None;
+        for b in &self.breakers {
+            if let BreakerState::Open { until } = b.state {
+                d = Some(d.map_or(until, |cur| cur.min(until)));
+            }
+        }
+        if let Some(hedge_after) = self.cfg.hedge_after {
+            if !self.draining {
+                for e in self.entries.values() {
+                    if !e.hedged && e.arms.len() == 1 {
+                        let t = e.enqueued + hedge_after;
+                        d = Some(d.map_or(t, |cur| cur.min(t)));
+                    }
+                }
+            }
+        }
+        d
+    }
+}
+
+/// One replica worker: owns the primary scheduler (and, under brownout,
+/// a degraded-plan sibling), ticks them, reports health, and respawns
+/// its own engine locally on loss.
+fn run_replica(
+    replica: usize,
+    cmd_rx: Receiver<RepCmd>,
+    router_tx: Sender<RouterMsg>,
+    make: EngineFactory,
+    cfg: ReplicaCfg,
+    metrics: Arc<Mutex<ServeMetrics>>,
+) {
+    let mut primary =
+        Scheduler::new(make(replica, ServePlan::Full), cfg.scheduler, metrics.clone());
+    let mut degraded: Option<Scheduler> = None;
+    let mut open = true;
+    let mut draining = false;
+    let mut backoff = cfg.scheduler.respawn_backoff;
+    // Brownout hysteresis state.
+    let mut engaged = false;
+    let mut above = 0u32;
+    let mut below = 0u32;
+    // Health-event dedup: strikes every bad tick, one Healthy after.
+    let mut striking = false;
+    let both_idle = |p: &Scheduler, d: &Option<Scheduler>| {
+        p.idle()
+            && match d {
+                Some(d) => d.idle(),
+                None => true,
+            }
+    };
+    loop {
+        if draining {
+            primary.begin_drain();
+            if let Some(d) = degraded.as_mut() {
+                d.begin_drain();
+            }
+        }
+        let idle = both_idle(&primary, &degraded);
+        if !open && idle {
+            break;
+        }
+        let mut cmds: Vec<RepCmd> = Vec::new();
+        if open && idle {
+            // Nothing to tick: block for the next command.
+            match cmd_rx.recv() {
+                Ok(c) => cmds.push(c),
+                Err(_) => open = false,
+            }
+        }
+        while open {
+            match cmd_rx.try_recv() {
+                Ok(c) => cmds.push(c),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => open = false,
+            }
+        }
+        for cmd in cmds {
+            match cmd {
+                RepCmd::Enqueue(req) => {
+                    if engaged {
+                        if degraded.is_none() {
+                            degraded = Some(
+                                Scheduler::new(
+                                    make(replica, ServePlan::Degraded),
+                                    cfg.scheduler,
+                                    metrics.clone(),
+                                )
+                                .with_plan(ServePlan::Degraded),
+                            );
+                        }
+                        degraded.as_mut().expect("just created").enqueue(req);
+                    } else {
+                        primary.enqueue(req);
+                    }
+                }
+                RepCmd::Cancel(id) => {
+                    if !primary.cancel(id) {
+                        if let Some(d) = degraded.as_mut() {
+                            d.cancel(id);
+                        }
+                    }
+                }
+                RepCmd::TakeQueue => {
+                    let mut reqs = primary.take_queue();
+                    if let Some(d) = degraded.as_mut() {
+                        reqs.extend(d.take_queue());
+                    }
+                    let _ = router_tx.send(RouterMsg::GaveBack(reqs));
+                }
+                RepCmd::Drain => draining = true,
+            }
+        }
+        let idle = both_idle(&primary, &degraded);
+        if idle {
+            if !open {
+                break;
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        let mut tick_failed = false;
+        if !primary.idle() {
+            tick_failed |= tick_one(
+                &mut primary,
+                ServePlan::Full,
+                replica,
+                &make,
+                &cfg,
+                &metrics,
+                &mut backoff,
+            );
+        }
+        if let Some(d) = degraded.as_mut() {
+            if !d.idle() {
+                tick_failed |= tick_one(
+                    d,
+                    ServePlan::Degraded,
+                    replica,
+                    &make,
+                    &cfg,
+                    &metrics,
+                    &mut backoff,
+                );
+            }
+        }
+        let slow = cfg.tick_timeout.is_some_and(|t| t0.elapsed() > t);
+        if tick_failed || slow {
+            striking = true;
+            let _ = router_tx.send(RouterMsg::Strike { replica });
+        } else if striking {
+            striking = false;
+            let _ = router_tx.send(RouterMsg::Healthy { replica });
+        }
+        // Brownout pressure: max of queue fill and KV occupancy, with
+        // engage/release tick hysteresis.
+        if let Some(b) = cfg.brownout {
+            let qlen = primary.queue_len()
+                + degraded.as_ref().map_or(0, |d| d.queue_len());
+            let qfrac = if cfg.scheduler.max_queue == 0 {
+                0.0
+            } else {
+                qlen as f64 / cfg.scheduler.max_queue as f64
+            };
+            let occ = primary
+                .occupancy()
+                .max(degraded.as_ref().map_or(0.0, |d| d.occupancy()));
+            let pressure = qfrac.max(occ);
+            if pressure >= b.watermark {
+                above += 1;
+                below = 0;
+                if !engaged && above >= b.engage_ticks {
+                    engaged = true;
+                }
+            } else {
+                below += 1;
+                above = 0;
+                if engaged && below >= b.release_ticks {
+                    engaged = false;
+                }
+            }
+        }
+    }
+}
+
+/// Tick one scheduler, handling engine loss with local respawn under
+/// capped backoff (mirrors `Coordinator::start_continuous`). Returns
+/// true if the tick counts as a breaker strike.
+fn tick_one(
+    sched: &mut Scheduler,
+    plan: ServePlan,
+    replica: usize,
+    make: &EngineFactory,
+    cfg: &ReplicaCfg,
+    metrics: &Arc<Mutex<ServeMetrics>>,
+    backoff: &mut Duration,
+) -> bool {
+    match sched.tick() {
+        Ok(Tick::Ok) => {
+            *backoff = cfg.scheduler.respawn_backoff;
+            false
+        }
+        Ok(Tick::EngineFailed) => {
+            // The tick already failed in-flight requests; the queue
+            // survives for the replacement engine.
+            std::thread::sleep(*backoff);
+            *backoff = (*backoff * 2).min(cfg.scheduler.respawn_backoff_cap);
+            sched.replace_engine(make(replica, plan));
+            lock_recover(metrics).respawns += 1;
+            true
+        }
+        Err(e) => {
+            // Non-recoverable scheduler error: terminate everything with
+            // clean responses, then start over with a fresh engine.
+            eprintln!("replica {replica} scheduler failed: {e:#}");
+            sched.abort();
+            std::thread::sleep(*backoff);
+            *backoff = (*backoff * 2).min(cfg.scheduler.respawn_backoff_cap);
+            sched.replace_engine(make(replica, plan));
+            lock_recover(metrics).respawns += 1;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AdmitOutcome, PoolStats};
+    use anyhow::Result;
+
+    /// Deterministic step engine: emits `(key % 251) + step` bytes so
+    /// outputs depend only on the request key — replica- and
+    /// schedule-independent, like the real engine.
+    struct KeyedEcho {
+        slots: usize,
+        /// Fail the whole engine on the Nth step() call of this
+        /// *instance* (respawns get a fresh count).
+        die_on_step: Option<usize>,
+        steps: usize,
+        running: Vec<u64>,
+        seqs: HashMap<u64, (u64, Vec<u8>, usize)>,
+        next: u64,
+    }
+
+    impl KeyedEcho {
+        fn new(slots: usize) -> KeyedEcho {
+            KeyedEcho {
+                slots,
+                die_on_step: None,
+                steps: 0,
+                running: Vec::new(),
+                seqs: HashMap::new(),
+                next: 0,
+            }
+        }
+    }
+
+    impl StepEngine for KeyedEcho {
+        fn admit(&mut self, prompt: Vec<u8>, max_new: usize, key: u64) -> Result<AdmitOutcome> {
+            if self.running.len() >= self.slots {
+                return Ok(AdmitOutcome::NoCapacity(prompt));
+            }
+            let id = self.next;
+            self.next += 1;
+            self.seqs.insert(id, (key, vec![(key % 251) as u8], max_new.max(1)));
+            self.running.push(id);
+            Ok(AdmitOutcome::Admitted(id))
+        }
+
+        fn step(&mut self) -> Result<Vec<u64>> {
+            self.steps += 1;
+            if self.die_on_step == Some(self.steps) {
+                anyhow::bail!("scripted engine death");
+            }
+            let mut finished = Vec::new();
+            for &id in &self.running {
+                let (key, out, max_new) = self.seqs.get_mut(&id).unwrap();
+                if out.len() < *max_new {
+                    let step = out.len() as u64;
+                    out.push(((*key % 251) + step) as u8);
+                }
+                if out.len() >= *max_new {
+                    finished.push(id);
+                }
+            }
+            self.running.retain(|id| !finished.contains(id));
+            Ok(finished)
+        }
+
+        fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+            self.running.retain(|&r| r != id);
+            self.seqs.remove(&id).map(|(_, out, _)| out)
+        }
+
+        fn take_preempted(&mut self) -> Vec<u64> {
+            Vec::new()
+        }
+
+        fn take_failed(&mut self) -> Vec<u64> {
+            Vec::new()
+        }
+
+        fn resume(&mut self, _id: u64) -> Result<bool> {
+            Ok(false)
+        }
+
+        fn running(&self) -> usize {
+            self.running.len()
+        }
+
+        fn max_concurrent(&self) -> usize {
+            self.slots
+        }
+
+        fn pool_stats(&self) -> PoolStats {
+            PoolStats::default()
+        }
+    }
+
+    fn expected(key: u64, max_new: usize) -> Vec<u8> {
+        (0..max_new.max(1) as u64).map(|s| ((key % 251) + s) as u8).collect()
+    }
+
+    #[test]
+    fn replicated_pool_serves_and_aggregates() {
+        let mut pool = ReplicaPool::start(
+            |_r, _plan| Box::new(KeyedEcho::new(4)) as Box<dyn StepEngine>,
+            ReplicaCfg { replicas: 3, ..Default::default() },
+        );
+        let rxs: Vec<_> = (0..9).map(|_| pool.submit(vec![1, 2], 5)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok(), "request {i}: {:?}", resp.status);
+            assert_eq!(resp.plan, ServePlan::Full);
+            assert_eq!(resp.tokens, expected(i as u64, 5), "request {i} diverged");
+        }
+        let fleet = pool.shutdown();
+        assert_eq!(fleet.requests, 9);
+        assert_eq!(fleet.tokens_out, 45);
+        assert_eq!(fleet.failed, 0);
+        assert_eq!(fleet.breaker_opens, 0);
+    }
+
+    #[test]
+    fn engine_death_retries_on_another_replica() {
+        // Replica 0's first engine dies on its first step; every request
+        // must still reach Ok (local respawn + router retry), and the
+        // payload is key-determined so the retry is bit-identical.
+        let died = Arc::new(AtomicU64::new(0));
+        let d2 = died.clone();
+        let mut pool = ReplicaPool::start(
+            move |r, _plan| {
+                let mut e = KeyedEcho::new(4);
+                if r == 0 && d2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    e.die_on_step = Some(1);
+                }
+                Box::new(e) as Box<dyn StepEngine>
+            },
+            ReplicaCfg { replicas: 2, breaker_threshold: 1, ..Default::default() },
+        );
+        let rxs: Vec<_> = (0..6).map(|_| pool.submit(vec![7], 4)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok(), "request {i}: {:?}", resp.status);
+            assert_eq!(resp.tokens, expected(i as u64, 4), "request {i} diverged");
+        }
+        let fleet = pool.shutdown();
+        assert_eq!(fleet.requests, 6);
+        assert!(fleet.respawns >= 1, "dead engine must respawn locally");
+    }
+
+    #[test]
+    fn submit_after_shutdown_rejects_cleanly() {
+        let mut pool = ReplicaPool::start(
+            |_r, _plan| Box::new(KeyedEcho::new(2)) as Box<dyn StepEngine>,
+            ReplicaCfg { replicas: 2, ..Default::default() },
+        );
+        pool.shutdown();
+        let rx = pool.submit(vec![1], 3);
+        let resp = rx.recv().unwrap();
+        assert!(resp.rejected());
+    }
+
+    #[test]
+    fn hedge_duplicates_straggler_and_first_terminal_wins() {
+        // Replica 0 is slow (sleeps every step); with a tiny hedge delay
+        // every request routed there gets duplicated onto replica 1 and
+        // the client still sees exactly one Ok with the key-determined
+        // payload.
+        let mut pool = ReplicaPool::start(
+            |r, _plan| {
+                let delay_ms = if r == 0 { 30 } else { 0 };
+                Box::new(SlowEcho { inner: KeyedEcho::new(4), delay_ms }) as Box<dyn StepEngine>
+            },
+            ReplicaCfg {
+                replicas: 2,
+                hedge_after: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = (0..4).map(|_| pool.submit(vec![3], 3)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok(), "request {i}: {:?}", resp.status);
+            assert_eq!(resp.tokens, expected(i as u64, 3), "hedged request {i} diverged");
+        }
+        let fleet = pool.shutdown();
+        assert!(fleet.hedges_fired >= 1, "slow replica must trigger hedging");
+    }
+
+    /// KeyedEcho with a per-step sleep — a straggler replica.
+    struct SlowEcho {
+        inner: KeyedEcho,
+        delay_ms: u64,
+    }
+
+    impl StepEngine for SlowEcho {
+        fn admit(&mut self, prompt: Vec<u8>, max_new: usize, key: u64) -> Result<AdmitOutcome> {
+            self.inner.admit(prompt, max_new, key)
+        }
+
+        fn step(&mut self) -> Result<Vec<u64>> {
+            if self.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.delay_ms));
+            }
+            self.inner.step()
+        }
+
+        fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+            self.inner.take_output(id)
+        }
+
+        fn take_preempted(&mut self) -> Vec<u64> {
+            self.inner.take_preempted()
+        }
+
+        fn take_failed(&mut self) -> Vec<u64> {
+            self.inner.take_failed()
+        }
+
+        fn resume(&mut self, id: u64) -> Result<bool> {
+            self.inner.resume(id)
+        }
+
+        fn running(&self) -> usize {
+            self.inner.running()
+        }
+
+        fn max_concurrent(&self) -> usize {
+            self.inner.max_concurrent()
+        }
+
+        fn pool_stats(&self) -> PoolStats {
+            self.inner.pool_stats()
+        }
+    }
+}

@@ -28,7 +28,7 @@
 //! can respawn via [`Scheduler::replace_engine`] — the queue survives.
 
 use super::metrics::lock_recover;
-use super::server::respond;
+use super::server::{respond_plan, ServePlan};
 use super::{AdmitOutcome, GenRequest, GenStatus, ServeMetrics, StepEngine};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
@@ -88,6 +88,9 @@ pub struct Scheduler {
     metrics: Arc<Mutex<ServeMetrics>>,
     started: Instant,
     draining: bool,
+    /// Serving plan stamped on every response this scheduler produces
+    /// (a brownout pool runs a second scheduler with a degraded plan).
+    plan: ServePlan,
 }
 
 impl Scheduler {
@@ -105,7 +108,14 @@ impl Scheduler {
             metrics,
             started: Instant::now(),
             draining: false,
+            plan: ServePlan::Full,
         }
+    }
+
+    /// Label every response from this scheduler with `plan`.
+    pub fn with_plan(mut self, plan: ServePlan) -> Scheduler {
+        self.plan = plan;
+        self
     }
 
     /// Accept or reject an incoming request (bounded-queue backpressure,
@@ -116,12 +126,12 @@ impl Scheduler {
             let mut met = lock_recover(&self.metrics);
             met.expired += 1;
             met.shed_wait.record(now - req.enqueued);
-            respond(&req, Vec::new(), 0, GenStatus::Expired);
+            respond_plan(&req, Vec::new(), 0, GenStatus::Expired, self.plan);
             return;
         }
         if self.draining || self.queue.len() >= self.cfg.max_queue {
             lock_recover(&self.metrics).rejected += 1;
-            respond(&req, Vec::new(), 0, GenStatus::Rejected);
+            respond_plan(&req, Vec::new(), 0, GenStatus::Rejected, self.plan);
             return;
         }
         self.queue.push_back(req);
@@ -143,7 +153,7 @@ impl Scheduler {
         let mut met = lock_recover(&self.metrics);
         for req in self.queue.drain(..) {
             met.rejected += 1;
-            respond(&req, Vec::new(), 0, GenStatus::Rejected);
+            respond_plan(&req, Vec::new(), 0, GenStatus::Rejected, self.plan);
         }
     }
 
@@ -169,13 +179,48 @@ impl Scheduler {
     fn fail_inflight(&mut self) -> u64 {
         let n = self.inflight.len() as u64;
         for (_, req) in self.inflight.drain() {
-            respond(&req, Vec::new(), 0, GenStatus::Failed);
+            respond_plan(&req, Vec::new(), 0, GenStatus::Failed, self.plan);
         }
         self.preempted.clear();
         n
     }
 
-    fn occupancy(&self) -> f64 {
+    /// Silently drop a request by its *request* id: no response is sent
+    /// and no metric recorded. Used by the replica router to cancel the
+    /// losing arm of a hedged request — the winner already answered the
+    /// client, so the loser must vanish without a second terminal.
+    /// Returns false if the id is unknown (already finished or never
+    /// routed here).
+    pub fn cancel(&mut self, req_id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == req_id) {
+            self.queue.remove(pos);
+            return true;
+        }
+        let eid = self.inflight.iter().find(|(_, r)| r.id == req_id).map(|(&id, _)| id);
+        if let Some(id) = eid {
+            self.inflight.remove(&id);
+            // Frees the sequence's pages; the tokens are discarded.
+            let _ = self.engine.take_output(id);
+            self.preempted.retain(|&p| p != id);
+            return true;
+        }
+        false
+    }
+
+    /// Hand back every queued-but-unadmitted request so the caller can
+    /// reroute it (circuit-breaker open: the queue must not starve
+    /// behind a dead engine). In-flight work is untouched.
+    pub fn take_queue(&mut self) -> Vec<GenRequest> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Queued-but-unadmitted depth (excludes in-flight).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Page-pool occupancy in [0, 1]; 0 when the budget is unbounded.
+    pub fn occupancy(&self) -> f64 {
         let ps = self.engine.pool_stats();
         if ps.budget_bytes == 0 || ps.budget_bytes == usize::MAX {
             return 0.0;
@@ -237,7 +282,7 @@ impl Scheduler {
         {
             let mut req = self.queue.pop_front().expect("queue non-empty");
             let prompt = std::mem::take(&mut req.prompt);
-            match self.engine.admit(prompt, req.max_new)? {
+            match self.engine.admit(prompt, req.max_new, req.key)? {
                 AdmitOutcome::Admitted(id) => {
                     // TTFT: queueing wait + this request's own prefill +
                     // first sample, all inside `admit`.
@@ -311,14 +356,14 @@ impl Scheduler {
                 }
             } else if let Some(req) = self.queue.pop_front() {
                 forced_rejects = 1;
-                respond(&req, Vec::new(), 0, GenStatus::Rejected);
+                respond_plan(&req, Vec::new(), 0, GenStatus::Rejected, self.plan);
             }
         }
 
         let ps = self.engine.pool_stats();
         let stats = self.engine.take_stats();
         let mut met = lock_recover(&self.metrics);
-        Self::record_shed(&mut met, &shed, &cancelled, now);
+        Self::record_shed(&mut met, &shed, &cancelled, now, self.plan);
         for t in ttfts {
             met.ttft.record(t);
         }
@@ -328,18 +373,22 @@ impl Scheduler {
             met.requests += 1;
             met.tokens_out += tokens.len() as u64;
             met.request_latency.record(latency);
+            if self.plan == ServePlan::Degraded {
+                met.brownout_served += 1;
+            }
             let _ = req.reply.send(super::GenResponse {
                 id: req.id,
                 tokens,
                 latency,
                 batch_size: bsz,
                 status: GenStatus::Ok,
+                plan: self.plan,
             });
         }
         for (req, tokens) in failed {
             met.failed += 1;
             let tokens: Vec<u8> = tokens.into_iter().take(req.max_new).collect();
-            respond(&req, tokens, bsz, GenStatus::Failed);
+            respond_plan(&req, tokens, bsz, GenStatus::Failed, self.plan);
         }
         met.preemptions += n_preempted;
         met.rejected += forced_rejects;
@@ -367,7 +416,7 @@ impl Scheduler {
     ) -> Result<Tick> {
         let n_failed = self.fail_inflight();
         let mut met = lock_recover(&self.metrics);
-        Self::record_shed(&mut met, &shed, &cancelled, now);
+        Self::record_shed(&mut met, &shed, &cancelled, now, self.plan);
         met.failed += n_failed;
         met.elapsed = self.started.elapsed();
         Ok(Tick::EngineFailed)
@@ -380,18 +429,19 @@ impl Scheduler {
         shed: &[GenRequest],
         cancelled: &[(GenRequest, Vec<u8>)],
         now: Instant,
+        plan: ServePlan,
     ) {
         for req in shed {
             met.expired += 1;
             met.shed_wait.record(now - req.enqueued);
-            respond(req, Vec::new(), 0, GenStatus::Expired);
+            respond_plan(req, Vec::new(), 0, GenStatus::Expired, plan);
         }
         for (req, tokens) in cancelled {
             met.cancelled += 1;
             met.shed_wait.record(now - req.enqueued);
             let tokens: Vec<u8> = tokens.iter().cloned().take(req.max_new).collect();
             met.tokens_out += tokens.len() as u64;
-            respond(req, tokens, 0, GenStatus::Expired);
+            respond_plan(req, tokens, 0, GenStatus::Expired, plan);
         }
     }
 }
@@ -445,7 +495,7 @@ mod tests {
     }
 
     impl StepEngine for MockEngine {
-        fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<AdmitOutcome> {
+        fn admit(&mut self, prompt: Vec<u8>, max_new: usize, _key: u64) -> Result<AdmitOutcome> {
             if self.running.len() >= self.slots || prompt.len() > self.admit_cap {
                 return Ok(AdmitOutcome::NoCapacity(prompt));
             }

@@ -28,6 +28,12 @@ pub struct GenRequest {
     /// Serve-by time: queued requests past it are shed before admission,
     /// running sequences past it are cancelled at tick granularity.
     pub deadline: Option<Instant>,
+    /// Stable sampling-stream key (defaults to `id`). Engines seed a
+    /// request's per-sequence RNG from this — never from an engine-local
+    /// slot index — so a request replayed or hedged onto a *different*
+    /// replica samples the identical token stream. The replicated router
+    /// gives a hedge duplicate its primary's key for exactly that reason.
+    pub(crate) key: u64,
     pub(crate) enqueued: Instant,
     pub(crate) reply: Sender<GenResponse>,
 }
@@ -39,7 +45,15 @@ impl GenRequest {
     pub fn new(id: u64, prompt: Vec<u8>, max_new: usize) -> (GenRequest, Receiver<GenResponse>) {
         let (reply, rx) = channel();
         (
-            GenRequest { id, prompt, max_new, deadline: None, enqueued: Instant::now(), reply },
+            GenRequest {
+                id,
+                prompt,
+                max_new,
+                deadline: None,
+                key: id,
+                enqueued: Instant::now(),
+                reply,
+            },
             rx,
         )
     }
@@ -78,6 +92,30 @@ pub enum GenStatus {
     Failed,
 }
 
+/// Which precision plan served a request. Under sustained overload the
+/// replicated serving layer routes new admissions to a degraded
+/// lower-bit plan built from the same artifact directory (precision
+/// brownout) instead of shedding them; every response records which plan
+/// produced its tokens so clients and benchmarks can account for the
+/// quality trade.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServePlan {
+    /// The full-precision (configured) plan.
+    #[default]
+    Full,
+    /// The lower-bit brownout fallback plan.
+    Degraded,
+}
+
+impl ServePlan {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServePlan::Full => "full",
+            ServePlan::Degraded => "degraded",
+        }
+    }
+}
+
 /// A generation response.
 #[derive(Clone, Debug)]
 pub struct GenResponse {
@@ -87,6 +125,8 @@ pub struct GenResponse {
     pub batch_size: usize,
     /// Terminal state; see [`GenStatus`].
     pub status: GenStatus,
+    /// Which precision plan served this request (see [`ServePlan`]).
+    pub plan: ServePlan,
 }
 
 impl GenResponse {
@@ -101,12 +141,23 @@ impl GenResponse {
 }
 
 pub(crate) fn respond(req: &GenRequest, tokens: Vec<u8>, batch_size: usize, status: GenStatus) {
+    respond_plan(req, tokens, batch_size, status, ServePlan::Full);
+}
+
+pub(crate) fn respond_plan(
+    req: &GenRequest,
+    tokens: Vec<u8>,
+    batch_size: usize,
+    status: GenStatus,
+    plan: ServePlan,
+) {
     let _ = req.reply.send(GenResponse {
         id: req.id,
         tokens,
         latency: req.enqueued.elapsed(),
         batch_size,
         status,
+        plan,
     });
 }
 
@@ -293,6 +344,7 @@ impl Coordinator {
                         latency,
                         batch_size: bsz,
                         status: GenStatus::Ok,
+                        plan: ServePlan::Full,
                     });
                 }
                 met.elapsed = now - started;
@@ -421,6 +473,7 @@ impl Coordinator {
             prompt,
             max_new,
             deadline: deadline.map(|d| now + d),
+            key: id,
             enqueued: now,
             reply,
         };
@@ -634,7 +687,12 @@ mod tests {
     }
 
     impl StepEngine for StepEcho {
-        fn admit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<super::super::AdmitOutcome> {
+        fn admit(
+            &mut self,
+            prompt: Vec<u8>,
+            max_new: usize,
+            _key: u64,
+        ) -> Result<super::super::AdmitOutcome> {
             use super::super::AdmitOutcome;
             if self.running.len() >= self.max_concurrent() {
                 return Ok(AdmitOutcome::NoCapacity(prompt));
@@ -792,6 +850,7 @@ mod tests {
                 &mut self,
                 _prompt: Vec<u8>,
                 _max_new: usize,
+                _key: u64,
             ) -> Result<super::super::AdmitOutcome> {
                 Ok(super::super::AdmitOutcome::Admitted(0))
             }

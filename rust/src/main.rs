@@ -8,6 +8,7 @@
 //! catquant serve --model small --mode fp|cat-w4a4 [--engine pjrt|native] [--artifact DIR] [--requests N] [--max-new N]
 //!                [--continuous] [--kv-budget-mb N] [--page-rows N] [--prefix-sharing true|false] [--max-queue N] [--admit-watermark F]
 //!                [--deadline-ms N] [--chaos SPEC]
+//!                [--replicas N] [--hedge-ms N] [--brownout-bits B] [--brownout-watermark F]
 //! ```
 //!
 //! Argument parsing is hand-rolled: the offline vendor set has no clap.
@@ -15,14 +16,16 @@
 use anyhow::{bail, Context, Result};
 use catquant::calib::Corpus;
 use catquant::coordinator::{
-    BatcherCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator, PjrtGenerator,
-    SamplingCfg, StepEngine,
+    BatcherCfg, BrownoutCfg, ContinuousCfg, Coordinator, GenEngine, NativeGenerator,
+    PjrtGenerator, ReplicaCfg, ReplicaPool, SamplingCfg, ServePlan, StepEngine,
 };
 use catquant::eval::{perplexity, zero_shot_suite, PjrtLogits};
 use catquant::experiments as exp;
 use catquant::model::KvPoolCfg;
 use catquant::pipeline::{build_quant_config, PipelineCfg, WeightQuantizer};
-use catquant::runtime::{load_artifact_retry, save_artifact, Chaos, Manifest, PjrtEngine};
+use catquant::runtime::{
+    brownout_dir, load_artifact_retry, save_artifact, Chaos, Manifest, PjrtEngine,
+};
 use catquant::transforms::TransformKind;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -278,7 +281,13 @@ fn native_quant_config(
     artifact: Option<&std::path::Path>,
     seed: u64,
     chaos: &Chaos,
+    bits: Option<u32>,
 ) -> catquant::model::QuantConfig {
+    // A brownout (degraded) plan lives in a bit-width-keyed subdirectory
+    // of the same artifact dir, so full and degraded builds share one
+    // location and neither clobbers the other.
+    let degraded_dir = bits.and_then(|b| artifact.map(|d| brownout_dir(d, b)));
+    let artifact = degraded_dir.as_deref().or(artifact);
     if let Some(dir) = artifact {
         if dir.join("artifact.json").exists() {
             let t0 = std::time::Instant::now();
@@ -303,12 +312,12 @@ fn native_quant_config(
         }
     }
     let zoo = exp::load_zoo(manifest, model, seed).expect("zoo");
-    let (qc, rep) = build_quant_config(
-        &zoo.model,
-        &zoo.calib,
-        &PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed).plan(),
-    )
-    .expect("pipeline");
+    let mut cfg = PipelineCfg::w4a4(TransformKind::CatBlock, WeightQuantizer::Rtn, seed);
+    if let Some(b) = bits {
+        cfg.bits_w = b;
+        cfg.bits_a = b;
+    }
+    let (qc, rep) = build_quant_config(&zoo.model, &zoo.calib, &cfg.plan()).expect("pipeline");
     if let Some(dir) = artifact {
         if !dir.join("artifact.json").exists() {
             save_artifact(&qc, &rep, dir).expect("save artifact");
@@ -361,6 +370,56 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
         "--continuous requires --engine native (the step-granular path)"
     );
 
+    // Replicated-serving knobs: N health-checked replicas, hedged
+    // stragglers, precision brownout under overload. Any of them routes
+    // through the replica pool (native step engines only).
+    let replicas = args.usize_flag("replicas", 1);
+    let hedge_after = match args.u64_flag("hedge-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let brownout_bits = args.usize_flag("brownout-bits", 0) as u32;
+    let brownout_watermark: f64 =
+        args.flag("brownout-watermark").and_then(|v| v.parse().ok()).unwrap_or(0.75);
+    let replicated = replicas > 1 || hedge_after.is_some() || brownout_bits > 0;
+    anyhow::ensure!(
+        !replicated || engine_kind == "native",
+        "--replicas/--hedge-ms/--brownout-bits require --engine native"
+    );
+    anyhow::ensure!(
+        brownout_bits == 0 || (1..=8).contains(&brownout_bits),
+        "--brownout-bits must be 1..=8"
+    );
+    anyhow::ensure!(
+        brownout_bits == 0 || mode != "fp",
+        "--brownout-bits needs a quantized --mode (fp has no lower-precision fallback)"
+    );
+    if replicated {
+        return serve_replicated(
+            manifest,
+            args,
+            ServeReplicatedCfg {
+                model,
+                mode,
+                artifact,
+                n_requests,
+                max_new,
+                temperature,
+                seed,
+                page_rows,
+                kv_budget_mb,
+                prefix_sharing,
+                max_queue,
+                admit_watermark,
+                deadline,
+                replicas,
+                hedge_after,
+                brownout_bits,
+                brownout_watermark,
+            },
+        );
+    }
+
     let manifest2 = manifest.clone();
     let model2 = model.clone();
     let mode2 = mode.clone();
@@ -384,6 +443,7 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                         artifact2.as_deref(),
                         seed,
                         &chaos2,
+                        None,
                     );
                     NativeGenerator::quant(native, qc, max_batch, sampling)
                 };
@@ -413,6 +473,7 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                             artifact.as_deref(),
                             seed,
                             &chaos2,
+                            None,
                         );
                         Box::new(NativeGenerator::quant(native, qc, max_batch, sampling))
                     }
@@ -434,6 +495,7 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
                             artifact.as_deref(),
                             seed,
                             &chaos2,
+                            None,
                         );
                         Box::new(
                             PjrtGenerator::quant(engine, &model2, &native.params, &qc, sampling)
@@ -502,5 +564,151 @@ fn cmd_serve(manifest: &Manifest, args: &Args) -> Result<()> {
     let metrics = coord.shutdown();
     println!("wall time: {wall:?}");
     println!("{}", metrics.summary());
+    Ok(())
+}
+
+/// Parsed knobs for the replicated serve path (one struct so the
+/// hand-rolled CLI doesn't thread seventeen positional parameters).
+struct ServeReplicatedCfg {
+    model: String,
+    mode: String,
+    artifact: Option<std::path::PathBuf>,
+    n_requests: usize,
+    max_new: usize,
+    temperature: f64,
+    seed: u64,
+    page_rows: usize,
+    kv_budget_mb: usize,
+    prefix_sharing: bool,
+    max_queue: usize,
+    admit_watermark: f64,
+    deadline: Option<std::time::Duration>,
+    replicas: usize,
+    hedge_after: Option<std::time::Duration>,
+    brownout_bits: u32,
+    brownout_watermark: f64,
+}
+
+/// Serve through the replicated pool: health-checked replicas, hedged
+/// stragglers, precision brownout. Native step engines only.
+fn serve_replicated(manifest: &Manifest, args: &Args, cfg: ServeReplicatedCfg) -> Result<()> {
+    let ServeReplicatedCfg {
+        model,
+        mode,
+        artifact,
+        n_requests,
+        max_new,
+        temperature,
+        seed,
+        page_rows,
+        kv_budget_mb,
+        prefix_sharing,
+        max_queue,
+        admit_watermark,
+        deadline,
+        replicas,
+        hedge_after,
+        brownout_bits,
+        brownout_watermark,
+    } = cfg;
+    // One chaos handle per replica, created up front and shared across
+    // that replica's respawns (one-shot faults stay one-shot). Scoped
+    // clauses (`panic_seq@r1=...`) bind to their replica here; `--chaos`
+    // parses strictly, the env var leniently (warn + skip bad clauses).
+    let chaos_handles: Vec<Chaos> = (0..replicas.max(1))
+        .map(|r| match args.flag("chaos") {
+            Some(spec) => Chaos::parse_scoped(spec, Some(r)),
+            None => match std::env::var("CATQUANT_CHAOS") {
+                Ok(s) if !s.trim().is_empty() => Ok(Chaos::parse_lenient(&s, Some(r))),
+                _ => Ok(Chaos::off()),
+            },
+        })
+        .collect::<Result<_>>()?;
+
+    let pool_cfg = KvPoolCfg { page_rows, budget_bytes: kv_budget_mb << 20 };
+    let max_batch = BatcherCfg::default().max_batch;
+    let rep_cfg = ReplicaCfg {
+        replicas,
+        scheduler: ContinuousCfg { max_queue, admit_watermark, ..Default::default() },
+        hedge_after,
+        brownout: (brownout_bits > 0).then(|| BrownoutCfg {
+            watermark: brownout_watermark,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let manifest2 = manifest.clone();
+    let model2 = model.clone();
+    let mode2 = mode.clone();
+    let mut pool = ReplicaPool::start(
+        move |r, plan| {
+            let sampling = SamplingCfg { temperature, seed };
+            let native = exp::load_model(&manifest2, &model2).expect("model");
+            let chaos = chaos_handles[r].clone();
+            let g = if mode2 == "fp" {
+                NativeGenerator::fp(native, max_batch, sampling)
+            } else {
+                let bits = match plan {
+                    ServePlan::Degraded => Some(brownout_bits),
+                    ServePlan::Full => None,
+                };
+                let qc = native_quant_config(
+                    &manifest2,
+                    &model2,
+                    &native,
+                    artifact.as_deref(),
+                    seed,
+                    &chaos,
+                    bits,
+                );
+                NativeGenerator::quant(native, qc, max_batch, sampling)
+            };
+            Box::new(g.with_serve_pool(pool_cfg, prefix_sharing).with_chaos(chaos))
+                as Box<dyn StepEngine>
+        },
+        rep_cfg,
+    );
+
+    let corpus = Corpus::load(&manifest.corpus_eval)?;
+    let prompts = corpus.sample_sequences(n_requests, manifest.prompt_len, seed ^ 0xC11E17);
+    println!(
+        "serving {n_requests} requests (model={model} mode={mode} max_new={max_new} \
+         replicas={replicas} hedge_ms={} brownout_bits={brownout_bits}) ...",
+        hedge_after.map_or(0, |d| d.as_millis())
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .map(|p| pool.submit_with_deadline(p, max_new, deadline))
+        .collect();
+    let (mut rejected, mut expired, mut failed, mut degraded) = (0usize, 0usize, 0usize, 0usize);
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if resp.is_ok() && resp.plan == ServePlan::Degraded {
+            degraded += 1;
+        }
+        match resp.status {
+            catquant::coordinator::GenStatus::Ok => {}
+            catquant::coordinator::GenStatus::Rejected => rejected += 1,
+            catquant::coordinator::GenStatus::Expired => expired += 1,
+            catquant::coordinator::GenStatus::Failed => failed += 1,
+        }
+    }
+    if rejected > 0 {
+        println!("  {rejected} requests rejected by backpressure");
+    }
+    if expired > 0 {
+        println!("  {expired} requests expired at their deadline");
+    }
+    if failed > 0 {
+        println!("  {failed} requests lost to engine failures");
+    }
+    if degraded > 0 {
+        println!("  {degraded} requests served on the brownout plan");
+    }
+    let wall = t0.elapsed();
+    pool.shutdown();
+    println!("wall time: {wall:?}");
+    println!("{}", pool.summary());
     Ok(())
 }

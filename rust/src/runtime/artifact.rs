@@ -99,6 +99,15 @@ fn parse_f64_arr(j: &Json, want_len: usize, what: &str) -> Result<Vec<f64>> {
     a.iter().map(|v| v.as_f64()).collect()
 }
 
+/// Where the precision-brownout fallback plan lives relative to the
+/// primary artifact: a `brownout-wNaN` subdirectory, so one artifact
+/// directory ships both the configured plan and its degraded sibling
+/// and replicated serving can swap plans without a second `--artifact`
+/// path.
+pub fn brownout_dir(dir: &Path, bits: u32) -> std::path::PathBuf {
+    dir.join(format!("brownout-w{bits}a{bits}"))
+}
+
 /// Persist `qc` (+ the build report / plan echo) under `dir`.
 pub fn save_artifact(qc: &QuantConfig, report: &PipelineReport, dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)

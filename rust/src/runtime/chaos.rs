@@ -84,10 +84,14 @@ impl Chaos {
         Chaos { state: Some(Arc::new(ChaosState { plan, ..Default::default() })) }
     }
 
-    /// Build from `CATQUANT_CHAOS` (absent or empty → off).
+    /// Build from `CATQUANT_CHAOS` (absent or empty → off). Lenient:
+    /// malformed or out-of-context clauses are *warned to stderr and
+    /// skipped* — a typo in the environment must not silently disarm the
+    /// whole plan, nor crash a production boot. (The `Result` is kept
+    /// for call-site stability; this never errors.)
     pub fn from_env() -> Result<Chaos> {
         match std::env::var("CATQUANT_CHAOS") {
-            Ok(s) if !s.trim().is_empty() => Chaos::parse(&s),
+            Ok(s) if !s.trim().is_empty() => Ok(Chaos::parse_lenient(&s, None)),
             _ => Ok(Chaos::off()),
         }
     }
@@ -98,41 +102,103 @@ impl Chaos {
     /// Keys: `fail_alloc` (repeatable), `fail_alloc_every`,
     /// `panic_step` (repeatable), `panic_seq`, `slow_every`, `slow_ms`,
     /// `flip_manifest`, `flip_blob`, `trunc_blob`, `fault_loads`.
+    ///
+    /// Strict and unscoped: any malformed clause is an error, and
+    /// replica-scoped keys (`panic_seq@r1`) are rejected — use
+    /// [`Chaos::parse_scoped`] when building per-replica plans.
     pub fn parse(spec: &str) -> Result<Chaos> {
+        Chaos::parse_scoped(spec, None)
+    }
+
+    /// [`Chaos::parse`] with a replica scope: a key may carry an `@rN`
+    /// suffix (`panic_seq@r1`, `slow_every@r0`) and then applies only
+    /// when parsing for replica `N` — one spec arms a whole fleet, each
+    /// replica extracting its own plan. Out-of-scope clauses are still
+    /// fully validated (a typo'd key never hides behind a scope).
+    /// Scoped keys with `replica == None` are an error: there is no
+    /// replica for them to name.
+    pub fn parse_scoped(spec: &str, replica: Option<usize>) -> Result<Chaos> {
         let mut plan = ChaosPlan::default();
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 continue;
             }
-            let (key, val) = match part.split_once('=') {
-                Some(kv) => kv,
-                None => bail!("chaos spec entry `{part}` is not key=value"),
-            };
-            let n: u64 = match val.trim().parse() {
-                Ok(n) => n,
-                Err(_) => bail!("chaos spec `{key}` value `{val}` is not an integer"),
-            };
-            match key.trim() {
-                "fail_alloc" => plan.fail_allocs.push(n),
-                "fail_alloc_every" => plan.fail_alloc_every = Some(n.max(1)),
-                "panic_step" => plan.panic_steps.push(n),
-                "panic_seq" => plan.panic_seq = Some(n),
-                "slow_every" => plan.slow_step_every = Some(n.max(1)),
-                "slow_ms" => plan.slow_step_ms = n,
-                "flip_manifest" => {
-                    plan.artifact_fault = Some(ArtifactFault::FlipManifestByte(n as usize))
-                }
-                "flip_blob" => plan.artifact_fault = Some(ArtifactFault::FlipBlobByte(n as usize)),
-                "trunc_blob" => plan.artifact_fault = Some(ArtifactFault::TruncateBlob(n as usize)),
-                "fault_loads" => plan.artifact_fault_loads = n,
-                other => bail!("unknown chaos spec key `{other}`"),
-            }
+            Chaos::apply_clause(&mut plan, part, replica)?;
         }
         if plan.artifact_fault.is_some() && plan.artifact_fault_loads == 0 {
             plan.artifact_fault_loads = 1;
         }
         Ok(Chaos::new(plan))
+    }
+
+    /// [`Chaos::parse_scoped`] that warns to stderr and skips bad
+    /// clauses instead of failing — the environment-variable path, where
+    /// an error would otherwise silently disable every fault.
+    pub fn parse_lenient(spec: &str, replica: Option<usize>) -> Chaos {
+        let mut plan = ChaosPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Err(e) = Chaos::apply_clause(&mut plan, part, replica) {
+                eprintln!("warning: ignoring CATQUANT_CHAOS clause `{part}`: {e}");
+            }
+        }
+        if plan.artifact_fault.is_some() && plan.artifact_fault_loads == 0 {
+            plan.artifact_fault_loads = 1;
+        }
+        Chaos::new(plan)
+    }
+
+    /// Validate one `key[@rN]=value` clause and apply it to `plan` if it
+    /// is in scope for `replica` (out-of-scope clauses are validated
+    /// against a scratch plan and dropped).
+    fn apply_clause(plan: &mut ChaosPlan, part: &str, replica: Option<usize>) -> Result<()> {
+        let (key, val) = match part.split_once('=') {
+            Some(kv) => kv,
+            None => bail!("chaos spec entry `{part}` is not key=value"),
+        };
+        let (key, scope) = match key.trim().split_once('@') {
+            Some((k, s)) => {
+                let r: usize = match s.trim().strip_prefix('r').and_then(|d| d.parse().ok()) {
+                    Some(r) => r,
+                    None => bail!("chaos scope `@{s}` is not `@rN`"),
+                };
+                (k.trim(), Some(r))
+            }
+            None => (key.trim(), None),
+        };
+        let n: u64 = match val.trim().parse() {
+            Ok(n) => n,
+            Err(_) => bail!("chaos spec `{key}` value `{val}` is not an integer"),
+        };
+        let mut scratch = ChaosPlan::default();
+        let plan = match scope {
+            None => plan,
+            Some(r) => match replica {
+                None => bail!("replica-scoped chaos key `{key}@r{r}` outside replicated serving"),
+                Some(me) if me == r => plan,
+                Some(_) => &mut scratch,
+            },
+        };
+        match key {
+            "fail_alloc" => plan.fail_allocs.push(n),
+            "fail_alloc_every" => plan.fail_alloc_every = Some(n.max(1)),
+            "panic_step" => plan.panic_steps.push(n),
+            "panic_seq" => plan.panic_seq = Some(n),
+            "slow_every" => plan.slow_step_every = Some(n.max(1)),
+            "slow_ms" => plan.slow_step_ms = n,
+            "flip_manifest" => {
+                plan.artifact_fault = Some(ArtifactFault::FlipManifestByte(n as usize))
+            }
+            "flip_blob" => plan.artifact_fault = Some(ArtifactFault::FlipBlobByte(n as usize)),
+            "trunc_blob" => plan.artifact_fault = Some(ArtifactFault::TruncateBlob(n as usize)),
+            "fault_loads" => plan.artifact_fault_loads = n,
+            other => bail!("unknown chaos spec key `{other}`"),
+        }
+        Ok(())
     }
 
     pub fn enabled(&self) -> bool {
@@ -276,5 +342,42 @@ mod tests {
         let c = Chaos::parse("flip_blob=9").unwrap();
         assert_eq!(c.artifact_fault(), Some(ArtifactFault::FlipBlobByte(9)));
         assert_eq!(c.artifact_fault(), None);
+    }
+
+    #[test]
+    fn scoped_clauses_apply_only_to_their_replica() {
+        let spec = "panic_seq@r1=7, fail_alloc@r0=0, slow_ms=2";
+        // Replica 1 gets the persistent panic but not replica 0's alloc
+        // fault; the unscoped clause reaches everyone.
+        let c1 = Chaos::parse_scoped(spec, Some(1)).unwrap();
+        let s = c1.next_step();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c1.on_decode(s, &[7])));
+        assert!(r.is_err(), "scoped panic_seq must fire on replica 1");
+        assert!(!c1.fail_this_alloc(), "replica 0's alloc fault leaked to replica 1");
+        let c0 = Chaos::parse_scoped(spec, Some(0)).unwrap();
+        let s = c0.next_step();
+        c0.on_decode(s, &[7]); // no panic: the seq fault is r1-only
+        assert!(c0.fail_this_alloc());
+    }
+
+    #[test]
+    fn scoped_clause_validation_is_strict() {
+        // Scoped keys outside replicated serving are an error, as are
+        // malformed scopes and typo'd keys hiding behind a scope.
+        assert!(Chaos::parse("panic_seq@r1=7").is_err());
+        assert!(Chaos::parse_scoped("panic_seq@x1=7", Some(0)).is_err());
+        assert!(Chaos::parse_scoped("bogus_key@r1=7", Some(0)).is_err(), "out-of-scope clauses must still be validated");
+    }
+
+    #[test]
+    fn lenient_parse_keeps_good_clauses_and_drops_bad_ones() {
+        // The env path: a typo warns (to stderr) and is skipped; the
+        // rest of the plan still arms.
+        let c = Chaos::parse_lenient("bogus_key=1, panic_seq=7, fail_alloc=oops", None);
+        assert!(c.enabled());
+        let s = c.next_step();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.on_decode(s, &[7])));
+        assert!(r.is_err(), "valid clause must survive lenient parsing");
+        assert!(!c.fail_this_alloc(), "malformed clause must be dropped");
     }
 }

@@ -19,7 +19,8 @@ pub mod json;
 mod manifest;
 
 pub use artifact::{
-    load_artifact, load_artifact_retry, load_artifact_with, save_artifact, ARTIFACT_VERSION,
+    brownout_dir, load_artifact, load_artifact_retry, load_artifact_with, save_artifact,
+    ARTIFACT_VERSION,
 };
 pub use chaos::{ArtifactFault, Chaos, ChaosPlan};
 pub use engine::{literal_to_mat, token_literal, ArgPack, DevicePack, PjrtEngine};

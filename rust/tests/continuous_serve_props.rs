@@ -146,8 +146,8 @@ fn budget_is_never_exceeded_and_preemption_reported() {
         .generate_batch(&[p1.clone()], 8)
         .unwrap()
         .remove(0);
-    assert!(matches!(g.admit(p0, 8).unwrap(), AdmitOutcome::Admitted(0)));
-    assert!(matches!(g.admit(p1, 8).unwrap(), AdmitOutcome::Admitted(1)));
+    assert!(matches!(g.admit(p0, 8, 0).unwrap(), AdmitOutcome::Admitted(0)));
+    assert!(matches!(g.admit(p1, 8, 1).unwrap(), AdmitOutcome::Admitted(1)));
     let mut outs: [Option<Vec<u8>>; 2] = [None, None];
     let mut waiting: Vec<u64> = Vec::new();
     let mut preempted = 0usize;

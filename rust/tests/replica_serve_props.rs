@@ -1,0 +1,361 @@
+//! Replicated-serving properties: health-checked replicas, hedged
+//! requests, precision brownout.
+//!
+//! The invariants this suite pins, on top of the single-scheduler chaos
+//! suite (`chaos_serve_props`):
+//!
+//! 1. **Replication is bit-invisible.** A fault-free replicated run
+//!    returns exactly the bits a single PR-8 scheduler (equivalently,
+//!    the per-prompt solo reference) produces — routing must never
+//!    influence tokens.
+//! 2. **Hedging is payload-invisible.** A hedged duplicate races the
+//!    primary on another replica; whichever arm wins, the client sees
+//!    one terminal response whose tokens equal the solo reference —
+//!    the winner and loser computed the same bits (key-seeded RNG,
+//!    schedule-independent decode), so the race is unobservable.
+//! 3. **Exactly one terminal state survives hedging.** Duplicated
+//!    arms never produce a second client response.
+//! 4. **Replica loss is survivable and leak-free.** A whole-engine
+//!    panic on one replica mid-decode reroutes its work (router retry +
+//!    breaker queue handback); every request still reaches exactly one
+//!    terminal state, survivors are bit-identical to the undisturbed
+//!    run, and every KV page on *both* replicas — including the dead
+//!    engine's — returns to its pool.
+//! 5. **Brownout engages and releases with hysteresis.** Sustained
+//!    queue pressure shifts new admissions to the degraded-plan
+//!    scheduler (responses say so via [`ServePlan`]); once pressure
+//!    drains, full precision returns.
+//!
+//! CI runs this suite under `CATQUANT_THREADS=1` and `=8` with scalar
+//! SIMD: replica count and worker threads must not move a bit.
+
+use catquant::coordinator::{
+    AdmitOutcome, BrownoutCfg, ContinuousCfg, EngineStats, GenResponse, GenStatus,
+    NativeGenerator, PoolStats, ReplicaCfg, ReplicaPool, SamplingCfg, ServePlan, StepEngine,
+};
+use catquant::model::{KvPagePool, KvPoolCfg, ModelConfig, NativeModel};
+use catquant::runtime::{Chaos, ChaosPlan};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 4, ff: 64, seq: 24, vocab: 256 }
+}
+
+fn model() -> NativeModel {
+    NativeModel::init_random(tiny_cfg(), 31)
+}
+
+fn workload() -> (Vec<Vec<u8>>, Vec<usize>) {
+    let prompts = vec![
+        vec![3u8, 1, 4, 1, 5],
+        vec![9u8, 2, 6],
+        vec![3u8, 1, 4, 1, 5, 9, 2],
+        vec![8u8],
+        vec![2u8, 7, 1, 8, 2, 8],
+        vec![5u8, 5],
+    ];
+    let max_news = vec![6usize, 2, 4, 8, 3, 5];
+    (prompts, max_news)
+}
+
+/// Per-sequence greedy reference: each prompt decoded alone, no chaos,
+/// no replication — the bits every replicated path must reproduce.
+fn reference() -> Vec<Vec<u8>> {
+    let (prompts, max_news) = workload();
+    prompts
+        .iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| {
+            let mut g = NativeGenerator::fp(model(), 1, SamplingCfg::default());
+            g.generate_batch(&[p.clone()], mn).unwrap().remove(0)
+        })
+        .collect()
+}
+
+/// Shared registry of every KV pool any factory call created, so tests
+/// can assert zero leaks across replicas *and* respawns.
+type PoolLog = Arc<Mutex<Vec<KvPagePool>>>;
+
+/// A chaos-armed native engine whose pool handle lands in `pools`.
+fn engine(slots: usize, pool_cfg: KvPoolCfg, chaos: Chaos, pools: &PoolLog) -> NativeGenerator {
+    let g = NativeGenerator::fp(model(), slots, SamplingCfg::default())
+        .with_serve_pool(pool_cfg, false)
+        .with_chaos(chaos);
+    pools.lock().unwrap().push(g.serve_pool());
+    g
+}
+
+/// Block for this request's terminal response. The exactly-one half of
+/// the invariant is asserted after shutdown via [`no_second_terminal`],
+/// when every arm has resolved and a stray duplicate would already have
+/// landed in the channel.
+fn terminal(rx: &Receiver<GenResponse>, who: usize) -> GenResponse {
+    rx.recv().unwrap_or_else(|_| panic!("request {who}: channel died unserved"))
+}
+
+fn no_second_terminal(rxs: &[Receiver<GenResponse>]) {
+    for (i, rx) in rxs.iter().enumerate() {
+        assert!(rx.try_recv().is_err(), "request {i}: more than one terminal response");
+    }
+}
+
+fn assert_no_leaks(pools: &PoolLog) {
+    for (i, pool) in pools.lock().unwrap().iter().enumerate() {
+        assert_eq!(pool.live_bytes(), 0, "pool {i} leaked pages after shutdown");
+    }
+}
+
+#[test]
+fn fault_free_replicated_run_is_bit_identical_to_single_scheduler() {
+    let want = reference();
+    let (prompts, max_news) = workload();
+    let pools: PoolLog = Arc::new(Mutex::new(Vec::new()));
+    let p2 = pools.clone();
+    let mut pool = ReplicaPool::start(
+        move |_r, _plan| {
+            Box::new(engine(3, KvPoolCfg::default(), Chaos::off(), &p2)) as Box<dyn StepEngine>
+        },
+        ReplicaCfg { replicas: 2, ..Default::default() },
+    );
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| pool.submit(p, mn))
+        .collect();
+    let resps: Vec<GenResponse> = rxs.iter().enumerate().map(|(i, rx)| terminal(rx, i)).collect();
+    let fleet = pool.shutdown();
+    no_second_terminal(&rxs);
+    assert_no_leaks(&pools);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, GenStatus::Ok, "request {i} must serve fault-free");
+        assert_eq!(resp.plan, ServePlan::Full, "no brownout configured");
+        assert_eq!(resp.tokens, want[i], "request {i}: replication moved a bit");
+    }
+    assert_eq!(fleet.requests, 6);
+    assert_eq!(fleet.failed, 0);
+    assert_eq!(fleet.breaker_opens, 0);
+    assert_eq!(fleet.hedges_fired, 0);
+}
+
+#[test]
+fn hedged_requests_serve_bit_identically_with_one_terminal() {
+    // Replica 0 is a straggler (every decode step sleeps); a short hedge
+    // delay duplicates its requests onto replica 1. Whichever arm wins,
+    // the client must see exactly one response with the reference bits —
+    // the winner and the cancelled loser computed identical tokens.
+    let want = reference();
+    let (prompts, max_news) = workload();
+    let pools: PoolLog = Arc::new(Mutex::new(Vec::new()));
+    let p2 = pools.clone();
+    let chaos: Vec<Chaos> = (0..2)
+        .map(|r| {
+            Chaos::parse_scoped("slow_every@r0=1, slow_ms@r0=20", Some(r))
+                .expect("scoped chaos spec")
+        })
+        .collect();
+    let mut pool = ReplicaPool::start(
+        move |r, _plan| {
+            Box::new(engine(3, KvPoolCfg::default(), chaos[r].clone(), &p2))
+                as Box<dyn StepEngine>
+        },
+        ReplicaCfg {
+            replicas: 2,
+            hedge_after: Some(Duration::from_millis(5)),
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| pool.submit(p, mn))
+        .collect();
+    let resps: Vec<GenResponse> = rxs.iter().enumerate().map(|(i, rx)| terminal(rx, i)).collect();
+    let fleet = pool.shutdown();
+    no_second_terminal(&rxs);
+    assert_no_leaks(&pools);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, GenStatus::Ok, "request {i} must serve under hedging");
+        assert_eq!(resp.tokens, want[i], "request {i}: hedged bits diverged from reference");
+    }
+    assert!(
+        fleet.hedges_fired >= 1,
+        "a straggling replica must fire hedges (fired {})",
+        fleet.hedges_fired
+    );
+}
+
+/// Wraps a healthy engine with a chaos handle whose planned panic
+/// escapes *outside* the engine's own isolation — modelling the loss of
+/// the whole engine (OOM, poisoned weights, dead accelerator), which
+/// the scheduler's `catch_unwind` converts to `Tick::EngineFailed`.
+struct FrailEngine {
+    inner: NativeGenerator,
+    chaos: Chaos,
+}
+
+impl StepEngine for FrailEngine {
+    fn admit(&mut self, prompt: Vec<u8>, max_new: usize, key: u64) -> anyhow::Result<AdmitOutcome> {
+        self.inner.admit(prompt, max_new, key)
+    }
+
+    fn step(&mut self) -> anyhow::Result<Vec<u64>> {
+        // Deliberately NOT inside any isolation: a planned panic here
+        // kills the whole engine, not one sequence.
+        self.chaos.on_decode(self.chaos.next_step(), &[]);
+        self.inner.step()
+    }
+
+    fn take_output(&mut self, id: u64) -> Option<Vec<u8>> {
+        self.inner.take_output(id)
+    }
+
+    fn take_preempted(&mut self) -> Vec<u64> {
+        self.inner.take_preempted()
+    }
+
+    fn take_failed(&mut self) -> Vec<u64> {
+        self.inner.take_failed()
+    }
+
+    fn resume(&mut self, id: u64) -> anyhow::Result<bool> {
+        self.inner.resume(id)
+    }
+
+    fn running(&self) -> usize {
+        self.inner.running()
+    }
+
+    fn max_concurrent(&self) -> usize {
+        self.inner.max_concurrent()
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.inner.pool_stats()
+    }
+
+    fn take_stats(&mut self) -> EngineStats {
+        self.inner.take_stats()
+    }
+}
+
+#[test]
+fn replica_loss_mid_decode_reroutes_with_zero_page_leaks() {
+    // Replica 0's engine dies (whole-engine panic) on its second step,
+    // mid-decode. In-flight requests there fail over to replica 1 via
+    // router retry; the opened breaker hands the queue back for reroute;
+    // replica 0 respawns locally. Every request must reach exactly one
+    // terminal Ok with the reference bits, and no page may leak on
+    // either replica — including inside the dead engine, whose pages
+    // free when it drops.
+    let want = reference();
+    let (prompts, max_news) = workload();
+    let pools: PoolLog = Arc::new(Mutex::new(Vec::new()));
+    let p2 = pools.clone();
+    // One chaos handle per replica, created once OUTSIDE the factory and
+    // shared across respawns — the one-shot panic fires exactly once,
+    // so the respawned engine is healthy.
+    let chaos = [
+        Chaos::new(ChaosPlan { panic_steps: vec![2], ..Default::default() }),
+        Chaos::off(),
+    ];
+    let mut pool = ReplicaPool::start(
+        move |r, _plan| {
+            Box::new(FrailEngine {
+                inner: engine(3, KvPoolCfg::default(), Chaos::off(), &p2),
+                chaos: chaos[r].clone(),
+            }) as Box<dyn StepEngine>
+        },
+        ReplicaCfg { replicas: 2, breaker_threshold: 1, ..Default::default() },
+    );
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .zip(&max_news)
+        .map(|(p, &mn)| pool.submit(p, mn))
+        .collect();
+    let resps: Vec<GenResponse> = rxs.iter().enumerate().map(|(i, rx)| terminal(rx, i)).collect();
+    let fleet = pool.shutdown();
+    no_second_terminal(&rxs);
+    assert_no_leaks(&pools);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(
+            resp.status,
+            GenStatus::Ok,
+            "request {i} must survive the replica loss (got {:?})",
+            resp.status
+        );
+        assert_eq!(resp.tokens, want[i], "request {i}: failover moved a bit");
+    }
+    assert_eq!(fleet.requests, 6, "every request serves exactly once");
+    assert!(fleet.respawns >= 1, "the dead engine must respawn locally");
+    assert!(fleet.breaker_opens >= 1, "threshold 1 must open the breaker on the failed tick");
+}
+
+#[test]
+fn brownout_engages_under_pressure_and_releases_with_hysteresis() {
+    // One replica, slowed decode, low watermark: a burst fills the queue
+    // long enough to engage brownout, so a second wave lands on the
+    // degraded-plan scheduler (and says so in its responses). As the
+    // queues drain, sustained low pressure releases brownout, and a
+    // final request serves at full precision again.
+    let pools: PoolLog = Arc::new(Mutex::new(Vec::new()));
+    let p2 = pools.clone();
+    // Both plans use the same FP engine here: the property under test is
+    // pressure-driven routing + honest labelling, not the degraded
+    // plan's numerics (quant-plan bits are exercised in the pipeline
+    // suites). Every decode step sleeps so the burst outlives the waves.
+    let chaos = Chaos::new(ChaosPlan {
+        slow_step_every: Some(1),
+        slow_step_ms: 5,
+        ..Default::default()
+    });
+    let mut pool = ReplicaPool::start(
+        move |_r, _plan| {
+            Box::new(engine(1, KvPoolCfg::default(), chaos.clone(), &p2)) as Box<dyn StepEngine>
+        },
+        ReplicaCfg {
+            replicas: 1,
+            scheduler: ContinuousCfg { max_queue: 64, ..Default::default() },
+            brownout: Some(BrownoutCfg { watermark: 0.05, engage_ticks: 2, release_ticks: 2 }),
+            ..Default::default()
+        },
+    );
+    // Wave 1: a 16-deep burst (~64 slowed ticks of backlog) that holds
+    // queue pressure above the watermark well past the engage threshold.
+    let wave1: Vec<_> = (0..16).map(|_| pool.submit(vec![3, 1, 4], 4)).collect();
+    std::thread::sleep(Duration::from_millis(80));
+    // Wave 2 arrives with the queue still deep: brownout must be engaged
+    // by now, so these route to the degraded-plan scheduler.
+    let wave2: Vec<_> = (0..4).map(|_| pool.submit(vec![9, 2, 6], 4)).collect();
+    let mut degraded_served = 0usize;
+    for (i, rx) in wave2.iter().enumerate() {
+        let resp = terminal(rx, 100 + i);
+        assert_eq!(resp.status, GenStatus::Ok, "wave-2 request {i} must serve");
+        if resp.plan == ServePlan::Degraded {
+            degraded_served += 1;
+        }
+    }
+    assert!(
+        degraded_served >= 1,
+        "sustained pressure past engage_ticks must brown out new admissions"
+    );
+    // Drain both waves; the emptying queue yields well over release_ticks
+    // consecutive low-pressure ticks, so brownout must release.
+    for (i, rx) in wave1.iter().enumerate() {
+        let resp = terminal(rx, i);
+        assert_eq!(resp.status, GenStatus::Ok, "wave-1 request {i} must serve");
+        assert_eq!(resp.plan, ServePlan::Full, "wave-1 admitted before brownout engaged");
+    }
+    // Wave 3 after the burst fully drained: full precision is restored.
+    let rx3 = pool.submit(vec![8], 4);
+    let resp3 = terminal(&rx3, 999);
+    assert_eq!(resp3.status, GenStatus::Ok);
+    assert_eq!(resp3.plan, ServePlan::Full, "brownout must release once pressure drains");
+    let fleet = pool.shutdown();
+    no_second_terminal(&wave1);
+    no_second_terminal(&wave2);
+    assert_no_leaks(&pools);
+    assert_eq!(fleet.brownout_served, degraded_served as u64);
+    assert_eq!(fleet.requests, 21);
+}
