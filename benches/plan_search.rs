@@ -1,0 +1,224 @@
+//! Planner search: searched-vs-uniform SQNR under an equal byte budget,
+//! plus the wall-clock cost of the search itself.
+//!
+//! Run: `cargo bench --bench plan_search` (full: sweeps the uniform
+//! bit grid for the identity and cat-block baselines alongside the
+//! searched plan) or `cargo bench --bench plan_search -- --quick` (CI
+//! perf smoke: searched vs best uniform only, and exits nonzero if the
+//! searched plan does not achieve strictly higher measured SQNR than the
+//! best uniform-identity plan at the same budget, or overruns it).
+//!
+//! Both modes write `BENCH_plan.json` — a `meta` header plus one record
+//! per plan row (`plan`, `recipe`, `w_bits`, `bytes`, `approx_db`,
+//! `measured_db`, `search_ms`); CI uploads the file as an artifact.
+
+use catquant::calib::calibrate;
+use catquant::linalg::{par, simd, Rng};
+use catquant::model::{ModelConfig, NativeModel};
+use catquant::pipeline::{
+    best_uniform_plan, build_quant_config, measured_plan_sqnr_db, plan_bytes, search_plan, Budget,
+    PlannerCfg, QuantPlan,
+};
+use std::time::Instant;
+
+struct Rec {
+    plan: String,
+    recipe: String,
+    /// "mixed" for the searched plan, the uniform width otherwise.
+    w_bits: String,
+    bytes: usize,
+    /// Mean per-group approx SQNR (Theorem 2.4), dB.
+    approx_db: f64,
+    /// Measured mean SQNR over the calibration sample, dB.
+    measured_db: f64,
+    /// Search wall-clock (0 for uniform baselines — there is no search).
+    search_ms: f64,
+}
+
+fn meta_json(bench: &str) -> String {
+    let env_or = |k: &str| std::env::var(k).unwrap_or_else(|_| "unset".into());
+    format!(
+        "{{\"bench\": \"{bench}\", \"isa_detected\": \"{}\", \"isa_active\": \"{}\", \
+         \"catquant_simd\": \"{}\", \"catquant_threads\": \"{}\", \"workers\": {}}}",
+        simd::detected().name(),
+        simd::active().name(),
+        env_or("CATQUANT_SIMD"),
+        env_or("CATQUANT_THREADS"),
+        par::num_threads()
+    )
+}
+
+fn write_json(path: &str, recs: &[Rec]) {
+    let mut s = format!("{{\"meta\": {},\n \"records\": [\n", meta_json("plan_search"));
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"plan\": \"{}\", \"recipe\": \"{}\", \"w_bits\": \"{}\", \"bytes\": {}, \
+             \"approx_db\": {:.4}, \"measured_db\": {:.4}, \"search_ms\": {:.3}}}{}\n",
+            r.plan,
+            r.recipe,
+            r.w_bits,
+            r.bytes,
+            r.approx_db,
+            r.measured_db,
+            r.search_ms,
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// The fixture the pipeline tests use: a tiny random model plus a seeded
+/// synthetic calibration set — big enough for the group structure to
+/// matter, small enough for CI.
+fn setup() -> (NativeModel, catquant::calib::CalibStats) {
+    let cfg = ModelConfig {
+        name: "bench".into(),
+        d: 32,
+        n_layers: 2,
+        n_heads: 4,
+        ff: 64,
+        seq: 16,
+        vocab: 256,
+    };
+    let model = NativeModel::init_random(cfg, 11);
+    let mut rng = Rng::new(5);
+    let seqs: Vec<Vec<u8>> =
+        (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+    let calib = calibrate(&model, &seqs, 256, 0);
+    (model, calib)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut recs: Vec<Rec> = Vec::new();
+    println!("== planner search: searched vs uniform at equal bytes ==\n");
+
+    let (model, calib) = setup();
+    // Equal-bytes comparison point: what uniform W4 costs.
+    let budget = plan_bytes(&model, &QuantPlan::new()).unwrap();
+    let mut cfg = PlannerCfg::new(Budget::Size { max_bytes: budget });
+    cfg.cat_block = 8;
+    // Skip spinquant (its seed search dominates wall-clock at this size)
+    // but keep both adaptive recipes in the pool.
+    cfg.recipes =
+        ["identity", "quarot", "cat-block", "cat-block-permuted", "wush-adaptive", "fpt-merged"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+
+    let t0 = Instant::now();
+    let planned = search_plan(&model, &calib, &cfg).expect("search failed");
+    let search_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (qc, _rep) = planned.build(&model, &calib).expect("build failed");
+    let searched_bytes = qc.packed_bytes();
+    let searched_measured = measured_plan_sqnr_db(&model, &calib, &qc);
+    println!(
+        "searched: {} B of {} B budget, approx {:.2} dB/group, measured {:.2} dB, {:.0} ms",
+        searched_bytes,
+        budget,
+        planned.score_db / planned.decisions.len() as f64,
+        searched_measured,
+        search_ms
+    );
+    for d in &planned.decisions {
+        println!("  {:<8} {}", d.group.key(), d.cell.summary());
+    }
+    recs.push(Rec {
+        plan: "searched".into(),
+        recipe: "searched".into(),
+        w_bits: "mixed".into(),
+        bytes: searched_bytes,
+        approx_db: planned.score_db / planned.decisions.len() as f64,
+        measured_db: searched_measured,
+        search_ms,
+    });
+
+    // Uniform baselines at the same budget: largest uniform width that
+    // fits, per recipe.
+    let mut identity_measured = f64::NEG_INFINITY;
+    for recipe in ["identity", "cat-block"] {
+        let Some((b, up)) = best_uniform_plan(&model, &cfg, recipe) else {
+            println!("uniform {recipe}: nothing fits the budget");
+            continue;
+        };
+        let (uqc, urep) = build_quant_config(&model, &calib, &up).expect("uniform build");
+        let measured = measured_plan_sqnr_db(&model, &calib, &uqc);
+        if recipe == "identity" {
+            identity_measured = measured;
+        }
+        println!(
+            "uniform {recipe} W{b}: {} B, approx {:.2} dB, measured {:.2} dB",
+            uqc.packed_bytes(),
+            urep.mean_sqnr_db,
+            measured
+        );
+        recs.push(Rec {
+            plan: format!("uniform-{recipe}"),
+            recipe: recipe.into(),
+            w_bits: b.to_string(),
+            bytes: uqc.packed_bytes(),
+            approx_db: urep.mean_sqnr_db,
+            measured_db: measured,
+            search_ms: 0.0,
+        });
+    }
+
+    if !quick {
+        // Full mode: the uniform bit trajectory for both baselines, so
+        // BENCH_plan.json carries the whole frontier, not just the
+        // budget-feasible points.
+        for recipe in ["identity", "cat-block"] {
+            for b in [2u32, 3, 4, 6, 8] {
+                let up = QuantPlan::new()
+                    .transform(recipe)
+                    .bits(b, b.max(cfg.min_act_bits))
+                    .cat_block(cfg.cat_block)
+                    .seed(cfg.seed);
+                let (uqc, urep) = build_quant_config(&model, &calib, &up).expect("build");
+                let measured = measured_plan_sqnr_db(&model, &calib, &uqc);
+                println!(
+                    "grid    {recipe} W{b}: {} B, approx {:.2} dB, measured {:.2} dB",
+                    uqc.packed_bytes(),
+                    urep.mean_sqnr_db,
+                    measured
+                );
+                recs.push(Rec {
+                    plan: format!("grid-{recipe}-w{b}"),
+                    recipe: recipe.into(),
+                    w_bits: b.to_string(),
+                    bytes: uqc.packed_bytes(),
+                    approx_db: urep.mean_sqnr_db,
+                    measured_db: measured,
+                    search_ms: 0.0,
+                });
+            }
+        }
+    }
+
+    write_json("BENCH_plan.json", &recs);
+
+    // The PR 10 acceptance gate: under the equal byte budget the searched
+    // plan must beat the best uniform plan on *measured* SQNR, and must
+    // actually fit.
+    if searched_bytes > budget {
+        eprintln!(
+            "PLAN REGRESSION: searched plan is {searched_bytes} B, over the {budget} B budget"
+        );
+        std::process::exit(1);
+    }
+    if searched_measured <= identity_measured {
+        eprintln!(
+            "PLAN REGRESSION: searched plan measured {searched_measured:.2} dB does not beat \
+             the best uniform-identity plan ({identity_measured:.2} dB) at equal bytes"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "\nplan gate OK: searched {searched_measured:.2} dB > uniform identity \
+         {identity_measured:.2} dB at {searched_bytes}/{budget} B"
+    );
+}

@@ -14,7 +14,7 @@ mod fig6;
 mod table1;
 
 pub use ablations::run_ablations;
-pub use common::{load_layers, load_model, load_zoo, LayerData, ZooModel};
+pub use common::{load_layers, load_model, load_zoo, print_table, LayerData, ZooModel};
 pub use fig2::{run_fig2, Fig2Point};
 pub use fig3::run_fig3;
 pub use fig4::{run_fig4, Fig4Row};

@@ -4,6 +4,9 @@
 //! catquant info
 //! catquant exp fig2|fig3|fig4|fig5|fig6|table1|ablations [--models tiny,small] [--seed N] [--seeds N] [--quick]
 //! catquant quantize --model small --transform cat [--wquant gptq] [--save-artifact DIR]
+//! catquant plan --budget-mb N | --budget-kb N | --latency-us F
+//!               [--objective sqnr|ppl-proxy] [--bits 2,3,4,6,8] [--recipes a,b,c] [--wquant rtn|gptq]
+//!               [--model small | --synthetic] [--cat-block K] [--seed N] [--save-artifact DIR]
 //! catquant eval --model small --transform cat [--wquant rtn] [--windows N]
 //! catquant serve --model small --mode fp|cat-w4a4 [--engine pjrt|native] [--artifact DIR] [--requests N] [--max-new N]
 //!                [--continuous] [--kv-budget-mb N] [--page-rows N] [--prefix-sharing true|false] [--max-queue N] [--admit-watermark F]
@@ -93,6 +96,12 @@ fn parse_wquant(name: &str) -> Result<WeightQuantizer> {
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // `plan --synthetic` must run without prebuilt artifacts (it is the
+    // hermetic CI smoke), so the plan command loads the manifest lazily
+    // itself instead of relying on the eager load below.
+    if args.positional.first().map(|s| s.as_str()) == Some("plan") {
+        return cmd_plan(&args);
+    }
     let manifest = Manifest::load(&Manifest::default_dir()).context(
         "loading artifact manifest (run `make artifacts` to build corpus/weights/graphs)",
     )?;
@@ -104,11 +113,140 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&manifest, &args),
         _ => {
             eprintln!(
-                "usage: catquant <info|exp|quantize|eval|serve> [...]\n(see README / crate docs)"
+                "usage: catquant <info|exp|quantize|plan|eval|serve> [...]\n(see README / crate docs)"
             );
             Ok(())
         }
     }
+}
+
+/// `catquant plan`: search for the best per-group (recipe, bits) plan
+/// under a byte or latency budget, print the decision table and the
+/// searched-vs-uniform comparison, optionally save the built artifact.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use catquant::pipeline::{
+        best_uniform_plan, measured_plan_sqnr_db, search_plan, Budget, Objective, PlannerCfg,
+    };
+
+    let budget = if let Some(mb) = args.flag("budget-mb") {
+        let mb: f64 = mb.parse().context("parsing --budget-mb")?;
+        Budget::Size { max_bytes: (mb * 1024.0 * 1024.0) as usize }
+    } else if let Some(kb) = args.flag("budget-kb") {
+        let kb: f64 = kb.parse().context("parsing --budget-kb")?;
+        Budget::Size { max_bytes: (kb * 1024.0) as usize }
+    } else if let Some(us) = args.flag("latency-us") {
+        let us: f64 = us.parse().context("parsing --latency-us")?;
+        Budget::Latency { max_us_per_tok: us }
+    } else {
+        bail!("plan needs a budget: --budget-mb N, --budget-kb N, or --latency-us F");
+    };
+    let mut cfg = PlannerCfg::new(budget);
+    cfg.seed = args.u64_flag("seed", 0);
+    cfg.quantizer = parse_wquant(args.flag("wquant").unwrap_or("rtn"))?;
+    cfg.cat_block = args.usize_flag("cat-block", cfg.cat_block);
+    if let Some(o) = args.flag("objective") {
+        cfg.objective = Objective::from_name(o)
+            .with_context(|| format!("unknown --objective {o} (want sqnr or ppl-proxy)"))?;
+    }
+    if let Some(b) = args.flag("bits") {
+        cfg.weight_bits = b
+            .split(',')
+            .map(|s| s.trim().parse::<u32>().with_context(|| format!("parsing --bits item {s:?}")))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(r) = args.flag("recipes") {
+        cfg.recipes = r.split(',').map(|s| s.trim().to_string()).collect();
+    }
+
+    // Model + calibration: --synthetic builds a tiny random model with a
+    // seeded calibration set (the hermetic CI path); otherwise load the
+    // zoo model from the artifact manifest.
+    let (model, calib) = if args.flag("synthetic").is_some() {
+        let mcfg = catquant::model::ModelConfig {
+            name: "synthetic".into(),
+            d: 32,
+            n_layers: 2,
+            n_heads: 4,
+            ff: 64,
+            seq: 16,
+            vocab: 256,
+        };
+        let model = catquant::model::NativeModel::init_random(mcfg, cfg.seed ^ 0x51);
+        let mut rng = catquant::linalg::Rng::new(cfg.seed ^ 5);
+        let seqs: Vec<Vec<u8>> =
+            (0..8).map(|_| (0..16).map(|_| rng.below(256) as u8).collect()).collect();
+        let calib = catquant::calib::calibrate(&model, &seqs, 256, cfg.seed);
+        (model, calib)
+    } else {
+        let manifest = Manifest::load(&Manifest::default_dir()).context(
+            "loading artifact manifest (run `make artifacts`, or use --synthetic)",
+        )?;
+        let zoo = exp::load_zoo(&manifest, args.flag("model").unwrap_or("small"), cfg.seed)?;
+        (zoo.model, zoo.calib)
+    };
+
+    let t0 = std::time::Instant::now();
+    let planned = search_plan(&model, &calib, &cfg)?;
+    let search_s = t0.elapsed().as_secs_f64();
+    println!(
+        "searched {} recipes x {} bit-widths over {} groups in {search_s:.1}s (objective={})",
+        if cfg.recipes.is_empty() {
+            catquant::transforms::recipe_names().len()
+        } else {
+            cfg.recipes.len()
+        },
+        cfg.weight_bits.len(),
+        planned.decisions.len(),
+        cfg.objective.name(),
+    );
+    let rows: Vec<Vec<String>> = planned
+        .decisions
+        .iter()
+        .map(|d| {
+            vec![
+                d.group.key().to_string(),
+                d.cell.recipe.clone(),
+                format!("W{}A{}", d.cell.w_bits, d.cell.a_bits),
+                d.cell.bytes.to_string(),
+                format!("{:.1}", d.cell.score_db),
+            ]
+        })
+        .collect();
+    exp::print_table(&["group", "recipe", "bits", "bytes", "approx dB"], &rows);
+    println!(
+        "  budget: {} B, planned: {} B, total approx: {:.1} dB",
+        planned.budget_bytes, planned.total_bytes, planned.score_db
+    );
+
+    // Searched vs uniform, on *measured* SQNR over the calibration set.
+    let (qc, rep) = planned.build(&model, &calib)?;
+    let mut cmp = vec![vec![
+        "searched".to_string(),
+        qc.packed_bytes().to_string(),
+        format!("{:.2}", measured_plan_sqnr_db(&model, &calib, &qc)),
+    ]];
+    for base in ["identity", "cat-block"] {
+        if let Some((b, up)) = best_uniform_plan(&model, &cfg, base) {
+            let (uqc, _) = build_quant_config(&model, &calib, &up)?;
+            cmp.push(vec![
+                format!("uniform {base} W{b}"),
+                uqc.packed_bytes().to_string(),
+                format!("{:.2}", measured_plan_sqnr_db(&model, &calib, &uqc)),
+            ]);
+        }
+    }
+    exp::print_table(&["plan", "packed bytes", "measured dB"], &cmp);
+
+    if let Some(dir) = args.flag("save-artifact") {
+        let dir = std::path::Path::new(dir);
+        save_artifact(&qc, &rep, dir)?;
+        println!(
+            "  artifact saved to {} (search provenance echoed in the manifest; \
+             serve with `catquant serve --engine native --artifact ...`)",
+            dir.display()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_info(manifest: &Manifest) -> Result<()> {

@@ -64,8 +64,9 @@ pub fn group_transform(
     })
 }
 
-/// `Σ WᵀW` over the group's weights.
-fn sum_gram(d: usize, ws: &[&Mat]) -> Mat {
+/// `Σ WᵀW` over the group's weights (shared with the planner's scorer,
+/// so search-time and build-time recipe fits see identical stats).
+pub(crate) fn sum_gram(d: usize, ws: &[&Mat]) -> Mat {
     let mut s = Mat::zeros(d, d);
     for w in ws {
         s.add_in_place(&syrk_at_a(w));

@@ -8,10 +8,20 @@
 //! quantizers, and bit-widths; the legacy [`PipelineCfg`] lowers into a
 //! uniform plan via [`PipelineCfg::plan`].
 
+//! Since PR 10 the pipeline also *searches*: [`search_plan`] scores
+//! every `(group × bit-width × recipe)` cell with the paper's SQNR
+//! decomposition and solves the budgeted allocation, emitting a plain
+//! [`QuantPlan`] that flows through the same build path.
+
 mod build;
 mod plan;
+mod planner;
 
 pub use build::{build_quant_config, group_transform, PipelineReport};
 pub use plan::{
     GroupCfg, GroupPlan, PipelineCfg, PlanError, QuantPlan, ResolvedPlan, WeightQuantizer,
+};
+pub use planner::{
+    best_uniform_plan, measured_plan_sqnr_db, plan_bytes, search_plan, Budget, Objective, PlanCell,
+    PlanDecision, PlannedQuant, PlannerCfg, Solver,
 };

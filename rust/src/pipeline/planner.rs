@@ -1,0 +1,716 @@
+//! SQNR-driven quantization planner: search over `(group × bit-width ×
+//! recipe)` cells under a byte or latency budget.
+//!
+//! The paper's Theorem 2.4 decomposes a layer's SQNR into concentration
+//! and alignment terms that depend only on calibration statistics — no
+//! forward passes, no quantized eval. That makes it cheap enough to
+//! *score every candidate cell* of a search space the rest of the repo
+//! already exposes:
+//!
+//! * the **recipe axis** — every name in the open transform registry
+//!   ([`crate::transforms::recipe`]), including externally registered
+//!   recipes, which participate in search automatically;
+//! * the **bit axis** — a candidate weight bit grid, with activation
+//!   bits riding along as `max(w_bits, min_act_bits)`;
+//! * the **group axis** — the four layer groups a
+//!   [`QuantPlan`](super::QuantPlan) resolves independently.
+//!
+//! Scoring reuses the group covariance from calibration (the same
+//! [`sum_gram`](super::build) + [`CalibStats`] pair the build consumes)
+//! and the shared [`SqnrTerms`] assembly from `sqnr/measures.rs`, so the
+//! planner's numbers are bit-identical to what
+//! [`build_quant_config`](super::build_quant_config) reports for the
+//! winning plan. One transform fit per `(block, group, recipe)` is the
+//! expensive axis; alignment is computed once per linear and the bit
+//! grid reuses it.
+//!
+//! Allocation solves "maximize Σ per-group utility s.t. Σ bytes ≤
+//! budget". Per group, cells collapse to a byte **frontier** (best
+//! utility per distinct byte cost — the packed nibble/byte/wide storage
+//! gives ≤ 3 byte tiers per group), so exact enumeration over 4 groups
+//! is ≤ `tiers⁴` combos — [`Solver::Exact`], the default, is optimal and
+//! budget-monotone by construction. [`Solver::Greedy`] (marginal utility
+//! per byte) is kept as the scalable fallback and is property-tested to
+//! never beat the exact optimum.
+//!
+//! The winner is emitted as a plain [`QuantPlan`], so searched plans
+//! flow through the existing `build_quant_config` → `save_artifact`
+//! path and serve with **zero new serving code**; search provenance is
+//! appended to the [`PipelineReport`] plan echo and lands in the
+//! artifact manifest.
+
+use super::build::{build_quant_config, sum_gram, PipelineReport};
+use super::plan::{PlanError, QuantPlan, WeightQuantizer};
+use crate::calib::CalibStats;
+use crate::linalg::{matmul_a_bt, par, Mat};
+use crate::model::{LayerGroup, LinearId, NativeModel, QuantConfig, ALL_GROUPS};
+use crate::quant::{
+    quantize_activations_per_token, ActQuantCfg, QScheme, QuantizedTensor, WeightQuantCfg,
+};
+use crate::sqnr::{alignment_data, concentration_act, concentration_weights, db, SqnrTerms};
+use crate::transforms::{self, RecipeCtx};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// What the planner is allowed to spend.
+#[derive(Clone, Copy, Debug)]
+pub enum Budget {
+    /// Total packed weight bytes (codes + per-row metadata) across every
+    /// quantized linear — exactly what
+    /// [`QuantConfig::packed_bytes`](crate::model::QuantConfig::packed_bytes)
+    /// reports for the built config.
+    Size { max_bytes: usize },
+    /// Decode-latency target per token. Quantized decode is
+    /// weight-bandwidth bound (PERF.md §Quantized kernels), so this
+    /// converts to a byte budget via [`PlannerCfg::bytes_per_us`].
+    Latency { max_us_per_tok: f64 },
+}
+
+impl Budget {
+    /// The byte budget this resolves to.
+    pub fn to_bytes(self, bytes_per_us: f64) -> usize {
+        match self {
+            Budget::Size { max_bytes } => max_bytes,
+            Budget::Latency { max_us_per_tok } => (max_us_per_tok * bytes_per_us) as usize,
+        }
+    }
+}
+
+/// What the search maximizes. Both are additive over groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Σ per-group mean approx SQNR in dB (Theorem 2.4) — the paper's
+    /// Table-1 metric.
+    Sqnr,
+    /// Minimize Σ per-group mean relative noise power `1/SQNR` — a
+    /// perplexity proxy (output noise degrades logits roughly linearly,
+    /// so total noise power tracks ppl better than mean dB, which can
+    /// hide one catastrophic group behind three good ones).
+    PplProxy,
+}
+
+impl Objective {
+    /// Canonical CLI/provenance name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Sqnr => "sqnr",
+            Objective::PplProxy => "ppl-proxy",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(name: &str) -> Option<Objective> {
+        [Objective::Sqnr, Objective::PplProxy].into_iter().find(|o| o.name() == name)
+    }
+}
+
+/// Which allocator turns scored cells into a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Exact enumeration over the per-group byte frontiers — optimal and
+    /// budget-monotone; the default (4 groups × ≤3 byte tiers is tiny).
+    Exact,
+    /// Marginal-utility-per-byte greedy upgrades from the cheapest
+    /// feasible plan — the scalable fallback, property-tested against
+    /// the exact optimum.
+    Greedy,
+}
+
+impl Solver {
+    /// Canonical provenance name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Exact => "exact",
+            Solver::Greedy => "greedy",
+        }
+    }
+}
+
+/// Planner configuration: budget, objective, and the search space.
+#[derive(Clone, Debug)]
+pub struct PlannerCfg {
+    pub budget: Budget,
+    pub objective: Objective,
+    pub solver: Solver,
+    /// Candidate weight bit-widths (sorted + deduped at search time).
+    pub weight_bits: Vec<u32>,
+    /// Candidate recipe names; empty means *every registered recipe*
+    /// (externally registered ones included), in sorted-name order.
+    pub recipes: Vec<String>,
+    /// Weight quantizer for the emitted plan (scoring is quantizer-
+    /// agnostic: Theorem 2.4 bounds the rounding grid, not the rounder).
+    pub quantizer: WeightQuantizer,
+    /// CAT block size `k` handed to block recipes.
+    pub cat_block: usize,
+    /// Activation bits floor: each cell's act bits are
+    /// `max(w_bits, min_act_bits)` (activations are free in the byte
+    /// model — they're quantized dynamically — so never starve them
+    /// below the floor).
+    pub min_act_bits: u32,
+    /// Plan seed (rotation draws; matches the build's per-block tweak).
+    pub seed: u64,
+    /// Bytes streamed per µs for [`Budget::Latency`]; default ≈ 1 GiB/s.
+    pub bytes_per_us: f64,
+}
+
+impl PlannerCfg {
+    pub fn new(budget: Budget) -> PlannerCfg {
+        PlannerCfg {
+            budget,
+            objective: Objective::Sqnr,
+            solver: Solver::Exact,
+            weight_bits: vec![2, 3, 4, 6, 8],
+            recipes: Vec::new(),
+            quantizer: WeightQuantizer::Rtn,
+            cat_block: 128,
+            min_act_bits: 4,
+            seed: 0,
+            bytes_per_us: 1074.0,
+        }
+    }
+}
+
+/// One scored search cell: a `(recipe, bits)` choice for one group.
+#[derive(Clone, Debug)]
+pub struct PlanCell {
+    pub recipe: String,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    /// Packed bytes this choice costs for the whole group, all blocks.
+    pub bytes: usize,
+    /// Mean per-linear approx SQNR in dB (Theorem 2.4).
+    pub score_db: f64,
+    /// Mean per-linear relative noise power `1/SQNR` (the ppl proxy).
+    pub noise: f64,
+}
+
+impl PlanCell {
+    fn utility(&self, obj: Objective) -> f64 {
+        match obj {
+            Objective::Sqnr => self.score_db,
+            Objective::PplProxy => -self.noise,
+        }
+    }
+
+    /// One-line summary (decision tables, artifact provenance).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} W{}A{} {:.2}dB {}B",
+            self.recipe, self.w_bits, self.a_bits, self.score_db, self.bytes
+        )
+    }
+}
+
+/// The chosen cell for one group, in `ALL_GROUPS` order.
+#[derive(Clone, Debug)]
+pub struct PlanDecision {
+    pub group: LayerGroup,
+    pub cell: PlanCell,
+}
+
+/// A searched plan: the winning [`QuantPlan`] plus everything the search
+/// knew when it chose it.
+#[derive(Clone, Debug)]
+pub struct PlannedQuant {
+    /// The emitted plan — feed it to [`build_quant_config`] (or
+    /// [`Self::build`], which also echoes provenance).
+    pub plan: QuantPlan,
+    /// Per-group winning cells, `ALL_GROUPS` order.
+    pub decisions: Vec<PlanDecision>,
+    /// Σ decision bytes — equals `QuantConfig::packed_bytes` post-build.
+    pub total_bytes: usize,
+    /// The resolved byte budget the search ran under.
+    pub budget_bytes: usize,
+    pub objective: Objective,
+    /// Σ per-group utility under `objective`.
+    pub utility: f64,
+    /// Σ per-group mean approx dB (reported regardless of objective).
+    pub score_db: f64,
+    /// `planner.*` key/value pairs echoed into the artifact manifest.
+    pub provenance: Vec<(String, String)>,
+}
+
+impl PlannedQuant {
+    /// Build the searched plan and append the search provenance to the
+    /// report's plan echo, so `save_artifact` records *why* the artifact
+    /// looks the way it does.
+    pub fn build(
+        &self,
+        model: &NativeModel,
+        calib: &CalibStats,
+    ) -> Result<(QuantConfig, PipelineReport)> {
+        let (qc, mut rep) = build_quant_config(model, calib, &self.plan)?;
+        rep.plan.extend(self.provenance.iter().cloned());
+        Ok((qc, rep))
+    }
+}
+
+/// Packed bytes of one group at `w_bits`, summed over every block's
+/// linears — the exact [`QuantizedTensor::packed_bytes`] the built
+/// config will report (codes + per-row scale/zero/sum metadata).
+fn group_bytes(model: &NativeModel, g: LayerGroup, w_bits: u32) -> usize {
+    let scheme = QScheme::sym(w_bits);
+    let mut total = 0;
+    for block in 0..model.cfg.n_layers {
+        for &lin in g.linears() {
+            let w = &model.params[&LinearId::new(block, lin).to_string()];
+            total += QuantizedTensor::code_bytes_len(w.rows(), w.cols(), scheme)
+                + w.rows() * (8 + 4 + 8);
+        }
+    }
+    total
+}
+
+/// Byte cost of an arbitrary plan under the planner's byte model —
+/// equals `QuantConfig::packed_bytes` after building it.
+pub fn plan_bytes(model: &NativeModel, plan: &QuantPlan) -> Result<usize, PlanError> {
+    let r = plan.resolve()?;
+    Ok(ALL_GROUPS
+        .iter()
+        .map(|&g| group_bytes(model, g, r.group(g).weights.scheme.bits))
+        .sum())
+}
+
+/// The best uniform-bits baseline under the same byte budget: the
+/// largest candidate bit-width whose uniform plan fits, with `recipe` on
+/// every group (the Table-1 comparison row). `None` if nothing fits.
+pub fn best_uniform_plan(
+    model: &NativeModel,
+    cfg: &PlannerCfg,
+    recipe: &str,
+) -> Option<(u32, QuantPlan)> {
+    let budget = cfg.budget.to_bytes(cfg.bytes_per_us);
+    let mut bits = cfg.weight_bits.clone();
+    bits.sort_unstable();
+    bits.dedup();
+    let total =
+        |b: u32| ALL_GROUPS.iter().map(|&g| group_bytes(model, g, b)).sum::<usize>();
+    let best = bits.into_iter().rev().find(|&b| total(b) <= budget)?;
+    Some((
+        best,
+        QuantPlan::new()
+            .transform(recipe)
+            .quantizer(cfg.quantizer)
+            .bits(best, best.max(cfg.min_act_bits))
+            .cat_block(cfg.cat_block)
+            .seed(cfg.seed),
+    ))
+}
+
+/// Measured mean SQNR (dB) of a built config over the calibration
+/// sample — the ground truth the approx scores predict. Runs the actual
+/// per-token activation quantizer and the packed dequantized weights per
+/// linear; zero-noise linears clamp at 300 dB so means stay finite.
+pub fn measured_plan_sqnr_db(model: &NativeModel, calib: &CalibStats, qc: &QuantConfig) -> f64 {
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for block in 0..model.cfg.n_layers {
+        for g in ALL_GROUPS {
+            let t_name = g.t_name(block);
+            let x = calib.sigma(&t_name).sample();
+            let xt = matmul_a_bt(&x, &qc.transforms[&t_name]);
+            let act = qc.act_for(g);
+            let (xq, _) = quantize_activations_per_token(&xt, act.scheme, act.clip_ratio);
+            for &lin in g.linears() {
+                let id = LinearId::new(block, lin);
+                let w = &model.params[&id.to_string()];
+                let y = matmul_a_bt(&x, w);
+                let yq = matmul_a_bt(&xq, &qc.linears[&id].deq());
+                let noise = y.sub(&yq).fro_norm2();
+                acc += if noise == 0.0 { 300.0 } else { db(y.fro_norm2() / noise) };
+                n += 1;
+            }
+        }
+    }
+    acc / n.max(1) as f64
+}
+
+/// Search for the best plan under `cfg`. Deterministic for a fixed
+/// config: scoring fans out over the worker pool but merges in job
+/// order, the frontier keeps the first-seen cell on utility ties, and
+/// both solvers break ties toward the earlier enumeration point — so
+/// re-runs and different `CATQUANT_THREADS` emit bit-identical plans.
+pub fn search_plan(
+    model: &NativeModel,
+    calib: &CalibStats,
+    cfg: &PlannerCfg,
+) -> Result<PlannedQuant> {
+    let mut bits = cfg.weight_bits.clone();
+    bits.sort_unstable();
+    bits.dedup();
+    if bits.is_empty() {
+        bail!("planner: weight_bits grid is empty");
+    }
+    for &b in &bits {
+        if !(1..=16).contains(&b) {
+            bail!("planner: weight bits {b} out of range (want 1..=16)");
+        }
+    }
+    let recipes: Vec<String> = if cfg.recipes.is_empty() {
+        transforms::recipe_names()
+    } else {
+        let mut r = cfg.recipes.clone();
+        r.sort();
+        r.dedup();
+        for name in &r {
+            if !transforms::has_recipe(name) {
+                bail!(
+                    "planner: transform recipe {name:?} is not registered (known: {})",
+                    transforms::recipe_names().join(", ")
+                );
+            }
+        }
+        r
+    };
+    let budget_bytes = cfg.budget.to_bytes(cfg.bytes_per_us);
+
+    // ---- Score every (block, group, recipe) cell family. -------------
+    // One fit per family (the expensive axis); the bit grid reuses the
+    // fitted transform, the per-linear alignment, and the per-act-bits
+    // activation concentration. Recipes whose fit inspects the judged
+    // quantizer (spinquant) are fitted once at the reference cfg below —
+    // a deliberate approximation documented in PERF.md §Planner.
+    let ref_act = ActQuantCfg { scheme: QScheme::asym(cfg.min_act_bits), clip_ratio: 1.0 };
+    let ref_wq = WeightQuantCfg::rtn_default(4);
+    let a_bits_of = |wb: u32| wb.max(cfg.min_act_bits);
+
+    struct FamilyScore {
+        g: LayerGroup,
+        recipe_idx: usize,
+        /// Per bits-grid index: (Σ per-linear dB, Σ per-linear 1/SQNR).
+        per_bits: Vec<(f64, f64)>,
+        linears: usize,
+    }
+
+    let n_recipes = recipes.len();
+    let jobs: Vec<(usize, LayerGroup, usize)> = (0..model.cfg.n_layers)
+        .flat_map(|block| {
+            ALL_GROUPS
+                .into_iter()
+                .flat_map(move |g| (0..n_recipes).map(move |ri| (block, g, ri)))
+        })
+        .collect();
+
+    let scored: Vec<FamilyScore> = par::par_map(jobs, par::num_threads(), |(block, g, ri)| {
+        let t_name = g.t_name(block);
+        let stats = calib.sigma(&t_name);
+        let sigma_x = stats.sigma();
+        let x_sample = stats.sample();
+        let ids: Vec<LinearId> =
+            g.linears().iter().map(|&lin| LinearId::new(block, lin)).collect();
+        let ws: Vec<&Mat> = ids.iter().map(|id| &model.params[&id.to_string()]).collect();
+        let sigma_w = sum_gram(sigma_x.rows(), &ws);
+        let recipe = transforms::recipe(&recipes[ri])
+            .unwrap_or_else(|| panic!("recipe {} vanished after validation", recipes[ri]));
+        // Same per-block seed tweak as build_quant_config, so the built
+        // artifact reuses exactly the transforms the search scored.
+        let t = recipe.fit(&RecipeCtx {
+            x_sample: &x_sample,
+            sigma_x: &sigma_x,
+            ws: &ws,
+            sigma_w: &sigma_w,
+            act: ref_act,
+            wq: ref_wq,
+            cat_block: cfg.cat_block,
+            seed: cfg.seed.wrapping_add((block * 13) as u64),
+        });
+        let xt = t.apply_acts(&x_sample);
+        // Activation concentration per distinct act bit-width.
+        let mut c_acts: HashMap<u32, f64> = HashMap::new();
+        for &wb in &bits {
+            let ab = a_bits_of(wb);
+            c_acts.entry(ab).or_insert_with(|| {
+                concentration_act(
+                    &xt,
+                    ActQuantCfg { scheme: QScheme::asym(ab), clip_ratio: 1.0 },
+                )
+            });
+        }
+        let mut per_bits = vec![(0.0f64, 0.0f64); bits.len()];
+        for w in &ws {
+            let wf = t.fuse_weights(w);
+            let align = alignment_data(&xt, &wf);
+            for (bi, &wb) in bits.iter().enumerate() {
+                let ab = a_bits_of(wb);
+                let wqc = WeightQuantCfg::rtn_default(wb);
+                let terms = SqnrTerms {
+                    c_act: c_acts[&ab],
+                    c_w: concentration_weights(&wf, wqc),
+                    align,
+                };
+                let s = terms.joint(QScheme::asym(ab), wqc.scheme);
+                per_bits[bi].0 += db(s);
+                per_bits[bi].1 += 1.0 / s.max(1e-300);
+            }
+        }
+        FamilyScore { g, recipe_idx: ri, per_bits, linears: ws.len() }
+    });
+
+    // Merge across blocks (job-ordered, so thread count can't matter).
+    let gi_of = |g: LayerGroup| ALL_GROUPS.iter().position(|&x| x == g).unwrap();
+    let mut sums = vec![vec![vec![(0.0f64, 0.0f64); bits.len()]; recipes.len()]; ALL_GROUPS.len()];
+    let mut counts = vec![vec![0usize; recipes.len()]; ALL_GROUPS.len()];
+    for fs in scored {
+        let gi = gi_of(fs.g);
+        for (bi, (s_db, s_noise)) in fs.per_bits.iter().enumerate() {
+            sums[gi][fs.recipe_idx][bi].0 += s_db;
+            sums[gi][fs.recipe_idx][bi].1 += s_noise;
+        }
+        counts[gi][fs.recipe_idx] += fs.linears;
+    }
+
+    // ---- Per-group byte frontiers: best cell per distinct byte cost. --
+    let mut frontiers: Vec<Vec<PlanCell>> = Vec::with_capacity(ALL_GROUPS.len());
+    for (gi, &g) in ALL_GROUPS.iter().enumerate() {
+        let mut frontier: Vec<PlanCell> = Vec::new();
+        for (bi, &wb) in bits.iter().enumerate() {
+            let bytes = group_bytes(model, g, wb);
+            for (ri, recipe) in recipes.iter().enumerate() {
+                let n = counts[gi][ri].max(1) as f64;
+                let cell = PlanCell {
+                    recipe: recipe.clone(),
+                    w_bits: wb,
+                    a_bits: a_bits_of(wb),
+                    bytes,
+                    score_db: sums[gi][ri][bi].0 / n,
+                    noise: sums[gi][ri][bi].1 / n,
+                };
+                match frontier.iter_mut().find(|c| c.bytes == bytes) {
+                    Some(best) => {
+                        // Strict > keeps the earliest (bits, recipe) on
+                        // ties — deterministic across runs.
+                        if cell.utility(cfg.objective) > best.utility(cfg.objective) {
+                            *best = cell;
+                        }
+                    }
+                    None => frontier.push(cell),
+                }
+            }
+        }
+        frontier.sort_by_key(|c| c.bytes);
+        frontiers.push(frontier);
+    }
+
+    // ---- Allocate. ----------------------------------------------------
+    let min_bytes: usize = frontiers.iter().map(|f| f[0].bytes).sum();
+    let chosen = match cfg.solver {
+        Solver::Exact => solve_exact(&frontiers, budget_bytes, cfg.objective),
+        Solver::Greedy => solve_greedy(&frontiers, budget_bytes, cfg.objective),
+    };
+    let Some(chosen) = chosen else {
+        bail!(
+            "planner: budget {budget_bytes} B is below the cheapest feasible plan \
+             ({min_bytes} B at W{} everywhere)",
+            bits[0]
+        );
+    };
+
+    let decisions: Vec<PlanDecision> = ALL_GROUPS
+        .iter()
+        .enumerate()
+        .map(|(gi, &g)| PlanDecision { group: g, cell: frontiers[gi][chosen[gi]].clone() })
+        .collect();
+    let total_bytes: usize = decisions.iter().map(|d| d.cell.bytes).sum();
+    let utility: f64 = decisions.iter().map(|d| d.cell.utility(cfg.objective)).sum();
+    let score_db: f64 = decisions.iter().map(|d| d.cell.score_db).sum();
+
+    // ---- Emit the winning QuantPlan + provenance. ---------------------
+    let max_a_bits = decisions.iter().map(|d| d.cell.a_bits).max().unwrap();
+    let mut plan = QuantPlan::new()
+        .quantizer(cfg.quantizer)
+        .cat_block(cfg.cat_block)
+        .seed(cfg.seed)
+        .kv_acts(ActQuantCfg { scheme: QScheme::asym(max_a_bits), clip_ratio: 1.0 });
+    for d in &decisions {
+        let (recipe, wb, ab) = (d.cell.recipe.clone(), d.cell.w_bits, d.cell.a_bits);
+        plan = plan.for_group(d.group, |gc| gc.transform(recipe).bits(wb, ab));
+    }
+
+    let mut provenance = vec![
+        ("planner.objective".to_string(), cfg.objective.name().to_string()),
+        ("planner.solver".to_string(), cfg.solver.name().to_string()),
+        ("planner.budget_bytes".to_string(), budget_bytes.to_string()),
+        ("planner.total_bytes".to_string(), total_bytes.to_string()),
+        ("planner.score_db".to_string(), format!("{score_db:.3}")),
+        (
+            "planner.bits_grid".to_string(),
+            bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(","),
+        ),
+        ("planner.recipes".to_string(), recipes.join(",")),
+        ("planner.seed".to_string(), cfg.seed.to_string()),
+    ];
+    for d in &decisions {
+        provenance.push((format!("planner.{}", d.group.key()), d.cell.summary()));
+    }
+
+    Ok(PlannedQuant {
+        plan,
+        decisions,
+        total_bytes,
+        budget_bytes,
+        objective: cfg.objective,
+        utility,
+        score_db,
+        provenance,
+    })
+}
+
+/// Exact enumeration over the frontier product. Optimal within budget;
+/// monotone in budget (the feasible set only grows); ties break toward
+/// the earliest enumeration point (strict `>`), so results are
+/// deterministic.
+fn solve_exact(frontiers: &[Vec<PlanCell>], budget: usize, obj: Objective) -> Option<Vec<usize>> {
+    let n = frontiers.len();
+    let mut idx = vec![0usize; n];
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    loop {
+        let bytes: usize = idx.iter().enumerate().map(|(gi, &i)| frontiers[gi][i].bytes).sum();
+        if bytes <= budget {
+            let u: f64 =
+                idx.iter().enumerate().map(|(gi, &i)| frontiers[gi][i].utility(obj)).sum();
+            if best.as_ref().is_none_or(|(bu, _)| u > *bu) {
+                best = Some((u, idx.clone()));
+            }
+        }
+        // Odometer increment over the frontier product.
+        let mut g = 0;
+        loop {
+            if g == n {
+                return best.map(|(_, i)| i);
+            }
+            idx[g] += 1;
+            if idx[g] < frontiers[g].len() {
+                break;
+            }
+            idx[g] = 0;
+            g += 1;
+        }
+    }
+}
+
+/// Greedy marginal-utility-per-byte: start every group at its cheapest
+/// tier, repeatedly apply the in-budget upgrade with the best
+/// `Δutility/Δbytes` until none improves. Feasible whenever the exact
+/// solver is; never better than it (property-tested).
+fn solve_greedy(frontiers: &[Vec<PlanCell>], budget: usize, obj: Objective) -> Option<Vec<usize>> {
+    let n = frontiers.len();
+    let mut idx = vec![0usize; n];
+    let total = |idx: &[usize]| -> usize {
+        idx.iter().enumerate().map(|(gi, &i)| frontiers[gi][i].bytes).sum()
+    };
+    if total(&idx) > budget {
+        return None;
+    }
+    loop {
+        let cur = total(&idx);
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (gi, frontier) in frontiers.iter().enumerate() {
+            let i = idx[gi];
+            for j in (i + 1)..frontier.len() {
+                let extra = frontier[j].bytes - frontier[i].bytes;
+                if cur + extra > budget {
+                    break; // frontier is byte-sorted
+                }
+                let gain = frontier[j].utility(obj) - frontier[i].utility(obj);
+                if gain <= 0.0 {
+                    continue;
+                }
+                let rate = gain / extra.max(1) as f64;
+                if best.as_ref().is_none_or(|(br, _, _)| rate > *br) {
+                    best = Some((rate, gi, j));
+                }
+            }
+        }
+        match best {
+            Some((_, gi, j)) => idx[gi] = j,
+            None => return Some(idx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(bytes: usize, score_db: f64) -> PlanCell {
+        PlanCell {
+            recipe: "identity".into(),
+            w_bits: 4,
+            a_bits: 4,
+            bytes,
+            score_db,
+            noise: 1.0 / crate::sqnr::from_db(score_db),
+        }
+    }
+
+    /// Two groups, three byte tiers each, with utilities shaped so the
+    /// optimum is a *mixed* allocation.
+    fn frontiers() -> Vec<Vec<PlanCell>> {
+        vec![
+            vec![cell(100, 10.0), cell(200, 30.0), cell(400, 34.0)],
+            vec![cell(100, 12.0), cell(200, 14.0), cell(400, 15.0)],
+        ]
+    }
+
+    #[test]
+    fn exact_finds_the_mixed_optimum() {
+        // Budget 300: best is upgrade group 0 (Δ20 dB) not group 1 (Δ2).
+        let sol = solve_exact(&frontiers(), 300, Objective::Sqnr).unwrap();
+        assert_eq!(sol, vec![1, 0]);
+        // Budget 500: 400+100 (44 dB) beats 200+200 (44 dB)? Equal sums
+        // tie — the earlier enumeration point wins deterministically.
+        let sol = solve_exact(&frontiers(), 500, Objective::Sqnr).unwrap();
+        let u: f64 = sol
+            .iter()
+            .enumerate()
+            .map(|(gi, &i)| frontiers()[gi][i].utility(Objective::Sqnr))
+            .sum();
+        assert!((u - 44.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_is_budget_monotone() {
+        let f = frontiers();
+        let mut prev = f64::NEG_INFINITY;
+        for budget in [200, 300, 400, 500, 600, 800, 1000] {
+            let Some(sol) = solve_exact(&f, budget, Objective::Sqnr) else {
+                continue;
+            };
+            let u: f64 =
+                sol.iter().enumerate().map(|(gi, &i)| f[gi][i].utility(Objective::Sqnr)).sum();
+            assert!(u >= prev - 1e-12, "budget {budget}: {u} < {prev}");
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn greedy_is_feasible_and_never_beats_exact() {
+        let f = frontiers();
+        for budget in [200, 300, 400, 500, 600, 800] {
+            let g = solve_greedy(&f, budget, Objective::Sqnr).unwrap();
+            let e = solve_exact(&f, budget, Objective::Sqnr).unwrap();
+            let bytes = |s: &[usize]| -> usize {
+                s.iter().enumerate().map(|(gi, &i)| f[gi][i].bytes).sum()
+            };
+            let util = |s: &[usize]| -> f64 {
+                s.iter().enumerate().map(|(gi, &i)| f[gi][i].utility(Objective::Sqnr)).sum()
+            };
+            assert!(bytes(&g) <= budget);
+            assert!(util(&g) <= util(&e) + 1e-12, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_is_none() {
+        assert!(solve_exact(&frontiers(), 150, Objective::Sqnr).is_none());
+        assert!(solve_greedy(&frontiers(), 150, Objective::Sqnr).is_none());
+    }
+
+    #[test]
+    fn objective_names_round_trip() {
+        for o in [Objective::Sqnr, Objective::PplProxy] {
+            assert_eq!(Objective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::from_name("nope"), None);
+    }
+}

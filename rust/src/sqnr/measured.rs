@@ -70,12 +70,11 @@ impl LayerSqnrReport {
         wq: WeightQuantCfg,
         use_gptq: bool,
     ) -> LayerSqnrReport {
-        use crate::linalg::syrk_at_a;
         use crate::sqnr::{
-            alignment_data, concentration_act, concentration_weights, max_alignment,
+            alignment_data, concentration_act, concentration_weights, max_alignment, sample_sigma,
         };
         let measured = if use_gptq {
-            let sigma = syrk_at_a(x).scale(1.0 / x.rows() as f64);
+            let sigma = sample_sigma(x);
             let wq_m = gptq_quantize(w, &sigma, wq, GptqConfig::default());
             let (xq, _) = quantize_activations_per_token(x, act.scheme, act.clip_ratio);
             let y = matmul_a_bt(x, w);
@@ -84,7 +83,7 @@ impl LayerSqnrReport {
         } else {
             measured_sqnr_joint(x, w, act, wq)
         };
-        let sigma_x = syrk_at_a(x).scale(1.0 / x.rows() as f64);
+        let sigma_x = sample_sigma(x);
         LayerSqnrReport {
             name: name.to_string(),
             measured_db: db(measured),

@@ -1,9 +1,7 @@
 //! Concentration, alignment, and the Theorem 2.4 approximation.
 
-use crate::linalg::{matmul, matmul_a_bt, spd_sqrt, Mat};
-use crate::quant::{
-    quantize_activations_per_token, ActQuantCfg, WeightQuantCfg,
-};
+use crate::linalg::{matmul, matmul_a_bt, spd_sqrt, syrk_at_a, Mat};
+use crate::quant::{quantize_activations_per_token, ActQuantCfg, QScheme, WeightQuantCfg};
 
 /// Harmonic sum ("parallel") operator: `a ∥ b = (1/a + 1/b)⁻¹` (Lemma 2.1).
 #[inline]
@@ -85,13 +83,56 @@ pub fn approx_sqnr_weight(x: &Mat, w: &Mat, cfg: WeightQuantCfg) -> f64 {
     12.0 * n * n * concentration_weights(w, cfg) * alignment_data(x, w)
 }
 
+/// Sample autocorrelation `Σ̂ = xᵀx / tokens` from a `tokens × d` row
+/// sample — the one covariance estimator every SQNR consumer shares
+/// (the figure reports in [`LayerSqnrReport`](super::LayerSqnrReport),
+/// GPTQ's Hessian, and the planner's scoring path), so they provably
+/// measure against identical second-order statistics.
+pub fn sample_sigma(x: &Mat) -> Mat {
+    syrk_at_a(x).scale(1.0 / x.rows() as f64)
+}
+
+/// The three data-dependent terms of Theorem 2.4, computed once per
+/// `(x, W)` pair and reusable across bit-widths.
+///
+/// Alignment is bit-width independent, and the concentrations only
+/// change when the quantizer *scheme* changes — so a planner sweeping a
+/// bit grid measures the terms once per cell family and assembles the
+/// joint SQNR per bit-width with [`SqnrTerms::joint`], which is the
+/// same float-op sequence as [`approx_sqnr_joint`] (that function is
+/// now a thin wrapper over this type).
+#[derive(Clone, Copy, Debug)]
+pub struct SqnrTerms {
+    /// Activation concentration `C(x)` under the act scheme (Lemma 2.2).
+    pub c_act: f64,
+    /// Weight concentration `C(W)` under the weight scheme (Lemma 2.3).
+    pub c_w: f64,
+    /// Alignment `A(x, W)` (bit-width independent).
+    pub align: f64,
+}
+
+impl SqnrTerms {
+    /// Measure all three terms from calibration data.
+    pub fn measure(x: &Mat, w: &Mat, act: ActQuantCfg, wq: WeightQuantCfg) -> SqnrTerms {
+        SqnrTerms {
+            c_act: concentration_act(x, act),
+            c_w: concentration_weights(w, wq),
+            align: alignment_data(x, w),
+        }
+    }
+
+    /// Assemble Theorem 2.4 from the stored terms:
+    /// `12·(N(b_x)²·C(x) ∥ N(b_w)²·C(W))·A`.
+    pub fn joint(&self, act: QScheme, wq: QScheme) -> f64 {
+        let na = act.n_intervals();
+        let nw = wq.n_intervals();
+        12.0 * parallel(na * na * self.c_act, nw * nw * self.c_w) * self.align
+    }
+}
+
 /// Theorem 2.4: the joint approximation.
 pub fn approx_sqnr_joint(x: &Mat, w: &Mat, act: ActQuantCfg, wq: WeightQuantCfg) -> f64 {
-    let na = act.scheme.n_intervals();
-    let nw = wq.scheme.n_intervals();
-    let ca = concentration_act(x, act);
-    let cw = concentration_weights(w, wq);
-    12.0 * parallel(na * na * ca, nw * nw * cw) * alignment_data(x, w)
+    SqnrTerms::measure(x, w, act, wq).joint(act.scheme, wq.scheme)
 }
 
 #[cfg(test)]
@@ -222,6 +263,34 @@ mod tests {
         );
         assert!((c_asym - 1.0).abs() < 1e-9 || c_asym >= 0.5); // r = max-min = 5 ⇒ 25/25
         assert!((c_sym - 0.25).abs() < 1e-9, "sym floor: {c_sym}");
+    }
+
+    #[test]
+    fn terms_assemble_bit_identically_to_joint() {
+        // The planner scores through SqnrTerms; the figure reports score
+        // through approx_sqnr_joint. Same math, bit for bit.
+        let x = gaussian_x(256, 24, 20);
+        let mut rng = Rng::new(21);
+        let w = Mat::from_fn(12, 24, |_, _| rng.normal() * 0.2);
+        for (bx, bw) in [(4u32, 2u32), (4, 4), (8, 4), (8, 8)] {
+            let act = ActQuantCfg { scheme: QScheme::asym(bx), clip_ratio: 1.0 };
+            let wq = WeightQuantCfg::rtn_default(bw);
+            let via_terms = SqnrTerms::measure(&x, &w, act, wq).joint(act.scheme, wq.scheme);
+            let direct = approx_sqnr_joint(&x, &w, act, wq);
+            assert_eq!(via_terms.to_bits(), direct.to_bits());
+        }
+    }
+
+    #[test]
+    fn sample_sigma_is_normalized_gram() {
+        let x = gaussian_x(64, 8, 22);
+        let s = sample_sigma(&x);
+        let g = syrk_at_a(&x);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(s[(i, j)].to_bits(), (g[(i, j)] * (1.0 / 64.0)).to_bits());
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ mod reference;
 
 pub use measures::{
     alignment_data, alignment_stats, approx_sqnr_act, approx_sqnr_joint, approx_sqnr_weight,
-    concentration_act, concentration_weights, max_alignment, parallel,
+    concentration_act, concentration_weights, max_alignment, parallel, sample_sigma, SqnrTerms,
 };
 pub use measured::{
     measured_sqnr_act_only, measured_sqnr_joint, measured_sqnr_weight_only, LayerSqnrReport,

@@ -1,0 +1,199 @@
+//! Adaptive transform recipes from the post-CAT literature, registered
+//! as planner search candidates.
+//!
+//! * [`wush_adaptive`] — a WUSH-style near-optimal adaptive transform:
+//!   per-block alignment-optimal `M̂` (the same calibration-covariance
+//!   geometric mean CAT uses) composed with a **per-block randomized**
+//!   concentration rotation drawn from the calibration seed. Where
+//!   CAT (block) applies one fixed global Hadamard, this keeps the whole
+//!   transform block-diagonal and adapts the rotation per block — each
+//!   block gets its own sign-randomized Hadamard (Haar rotation on
+//!   non-power-of-two tails), so worst-case activation directions can't
+//!   line up with the fixed Hadamard rows across blocks.
+//! * [`fpt_merged`] — an FPTQuant-style merged function-preserving
+//!   transform: a channel permutation composed with a diagonal alignment
+//!   scale. Both factors fold into the adjacent linear ops exactly
+//!   (one nonzero per row), so the merged transform costs nothing at
+//!   inference while still buying alignment from second-order stats.
+//!
+//! Both fit from `(Σ_x, Σ_w)` only — no extra calibration forwards —
+//! and are registered in the builtin recipe registry as
+//! `wush-adaptive` and `fpt-merged`, which makes them visible to the
+//! planner's search over `(group × bits × recipe)` cells.
+
+use super::cat::cat_m_hat;
+use super::permuted::permutation_matrix;
+use super::{correlation_ordering, diag_align_scale, Transform};
+use crate::linalg::{is_pow2, matmul, random_orthogonal, randomized_hadamard, spd_inv, Mat, Rng};
+
+/// WUSH-style adaptive block transform: `Diag(R_1·M̂_1, …, R_n·M̂_n)`
+/// with per-block geometric-mean optima `M̂_b` and per-block seeded
+/// randomized rotations `R_b`.
+///
+/// The inverse is assembled analytically per block (`M̂_b⁻¹·R_bᵀ`), so
+/// fusing into weights never inverts the full `d × d` matrix.
+pub fn wush_adaptive(sigma_x: &Mat, sigma_w: &Mat, k: usize, seed: u64) -> Transform {
+    let d = sigma_x.rows();
+    assert_eq!(sigma_w.rows(), d, "Σ_w / Σ_x dim mismatch");
+    let k = k.clamp(1, d);
+    let mut m = Mat::zeros(d, d);
+    let mut m_inv = Mat::zeros(d, d);
+    let mut rng = Rng::new(seed ^ 0x5755_5348); // "WUSH"
+    let mut start = 0;
+    while start < d {
+        let kb = k.min(d - start);
+        let sx_b = sigma_x.block(start, start, kb, kb);
+        let sw_b = sigma_w.block(start, start, kb, kb);
+        let mb = cat_m_hat(&sx_b, &sw_b);
+        let r = if is_pow2(kb) {
+            randomized_hadamard(kb, &mut rng)
+        } else {
+            random_orthogonal(kb, &mut rng)
+        };
+        m.set_block(start, start, &matmul(&r, &mb));
+        m_inv.set_block(start, start, &matmul(&spd_inv(&mb), &r.transpose()));
+        start += kb;
+    }
+    Transform::new(format!("wush-adaptive(k={k})"), m, m_inv)
+}
+
+/// FPTQuant-style merged function-preserving transform:
+/// `T = D_align · P` — correlation-seriation permutation, then the
+/// diagonal `(Σ_w,ii / Σ_x,ii)^{1/4}` alignment scale in the permuted
+/// basis. `T` has exactly one nonzero per row, so it merges into the
+/// surrounding weights with zero runtime cost.
+pub fn fpt_merged(sigma_x: &Mat, sigma_w: &Mat) -> Transform {
+    let perm = correlation_ordering(sigma_x, sigma_w);
+    let p = Transform::orthogonal("P", permutation_matrix(&perm));
+    let sx_p = p.conjugate_sigma(sigma_x);
+    let sw_p = p.conjugate_sigma(sigma_w);
+    let scale = diag_align_scale(&sx_p, &sw_p);
+    let t = p.then(&scale);
+    Transform::new("fpt-merged", t.matrix().clone(), t.inverse_matrix().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::syrk_at_a;
+    use crate::sqnr::{alignment_data, max_alignment, sample_sigma};
+
+    /// Anisotropic, correlated activations + weights with mismatched
+    /// principal directions (same regime as the CAT tests).
+    fn hard_layer(d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let tokens = 40 * d;
+        let a = Mat::from_fn(d, d, |i, j| {
+            rng.normal() * (6.0_f64).powf(-(((i + j) % d) as f64) / d as f64)
+        });
+        let z = Mat::from_fn(tokens, d, |_, _| rng.normal());
+        let x = matmul(&z, &a.transpose());
+        let w = Mat::from_fn(d / 2, d, |i, j| {
+            rng.normal() * (5.0_f64).powf(((i + 2 * j) % d) as f64 / d as f64) * 0.01
+        });
+        (x, w)
+    }
+
+    fn stats(x: &Mat, w: &Mat) -> (Mat, Mat) {
+        (sample_sigma(x), syrk_at_a(w))
+    }
+
+    #[test]
+    fn wush_preserves_function() {
+        let (x, w) = hard_layer(16, 31);
+        let (sx, sw) = stats(&x, &w);
+        let t = wush_adaptive(&sx, &sw, 4, 7);
+        let y = matmul(&x, &w.transpose());
+        let yt = matmul(&t.apply_acts(&x), &t.fuse_weights(&w).transpose());
+        let diff = y.sub(&yt).fro_norm2().sqrt() / y.fro_norm2().sqrt();
+        assert!(diff < 1e-8, "wush must be function-preserving, diff {diff}");
+    }
+
+    #[test]
+    fn wush_full_block_achieves_max_alignment() {
+        // At k = d the per-block M̂ is the global optimum and the rotation
+        // is alignment-free, so A(t) ≈ A_max (paper eq. 9).
+        let (x, w) = hard_layer(16, 32);
+        let (sx, sw) = stats(&x, &w);
+        let t = wush_adaptive(&sx, &sw, 16, 0);
+        let a_t = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        let a_max = max_alignment(&sx, &w);
+        assert!(
+            (a_t - a_max).abs() / a_max < 0.02,
+            "wush(k=d) alignment {a_t} vs max {a_max}"
+        );
+    }
+
+    #[test]
+    fn wush_improves_alignment_over_identity_at_small_k() {
+        let (x, w) = hard_layer(16, 33);
+        let (sx, sw) = stats(&x, &w);
+        let a0 = alignment_data(&x, &w);
+        let t = wush_adaptive(&sx, &sw, 4, 0);
+        let a_t = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(a_t > a0, "wush(k=4) alignment {a_t} must beat identity {a0}");
+    }
+
+    #[test]
+    fn wush_is_seeded_and_block_diagonal() {
+        let (x, w) = hard_layer(16, 34);
+        let (sx, sw) = stats(&x, &w);
+        let t0 = wush_adaptive(&sx, &sw, 4, 0);
+        let t0b = wush_adaptive(&sx, &sw, 4, 0);
+        let t1 = wush_adaptive(&sx, &sw, 4, 1);
+        // Deterministic per seed…
+        assert_eq!(t0.matrix().sub(t0b.matrix()).fro_norm2(), 0.0);
+        // …different across seeds (the per-block rotation is randomized)…
+        assert!(t0.matrix().sub(t1.matrix()).fro_norm2() > 1e-12);
+        // …and block-diagonal: no mass outside the 4×4 diagonal blocks.
+        let m = t0.matrix();
+        for i in 0..16 {
+            for j in 0..16 {
+                if i / 4 != j / 4 {
+                    assert_eq!(m[(i, j)], 0.0, "off-block mass at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fpt_preserves_function() {
+        let (x, w) = hard_layer(12, 35);
+        let (sx, sw) = stats(&x, &w);
+        let t = fpt_merged(&sx, &sw);
+        let y = matmul(&x, &w.transpose());
+        let yt = matmul(&t.apply_acts(&x), &t.fuse_weights(&w).transpose());
+        let diff = y.sub(&yt).fro_norm2().sqrt() / y.fro_norm2().sqrt();
+        assert!(diff < 1e-8, "fpt must be function-preserving, diff {diff}");
+    }
+
+    #[test]
+    fn fpt_is_mergeable_one_nonzero_per_row() {
+        // The zero-runtime-cost claim: T = D·P has exactly one nonzero
+        // per row (and per column), so it folds into adjacent weights.
+        let (x, w) = hard_layer(12, 36);
+        let (sx, sw) = stats(&x, &w);
+        let t = fpt_merged(&sx, &sw);
+        let m = t.matrix();
+        for i in 0..12 {
+            let nz = (0..12).filter(|&j| m[(i, j)] != 0.0).count();
+            assert_eq!(nz, 1, "row {i} has {nz} nonzeros");
+        }
+        for j in 0..12 {
+            let nz = (0..12).filter(|&i| m[(i, j)] != 0.0).count();
+            assert_eq!(nz, 1, "col {j} has {nz} nonzeros");
+        }
+    }
+
+    #[test]
+    fn fpt_improves_alignment_on_mismatched_scales() {
+        // Diagonal alignment scaling is the k=1 optimum: on data with
+        // mismatched per-channel scales it must improve alignment.
+        let (x, w) = hard_layer(12, 37);
+        let (sx, sw) = stats(&x, &w);
+        let a0 = alignment_data(&x, &w);
+        let t = fpt_merged(&sx, &sw);
+        let a_t = alignment_data(&t.apply_acts(&x), &t.fuse_weights(&w));
+        assert!(a_t > a0, "fpt alignment {a_t} must beat identity {a0}");
+    }
+}

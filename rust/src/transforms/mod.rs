@@ -12,7 +12,10 @@
 //! | [`cat_optimal`] | CAT, full-rank M̂ (eq. 7) | alignment (optimally) + concentration via H |
 //! | [`cat_block`] | **CAT (block)** — the paper's method | alignment + concentration at block-diagonal cost |
 //! | [`kronecker_cat`] | FlatQuant substitute (Sun et al.) | both, via Kronecker-factored transform |
+//! | [`wush_adaptive`] | WUSH substitute (adaptive per-block) | alignment + per-block randomized concentration |
+//! | [`fpt_merged`] | FPTQuant substitute (merged, zero-cost) | alignment via permutation + diagonal scale |
 
+mod adaptive;
 mod cat;
 mod kronecker;
 mod permuted;
@@ -21,6 +24,7 @@ mod rotation;
 mod scaling;
 mod transform;
 
+pub use adaptive::{fpt_merged, wush_adaptive};
 pub use cat::{cat_block, cat_block_raw, cat_m_hat, cat_optimal};
 pub use kronecker::{kronecker_cat, kronecker_factor_dims, partial_trace_factors};
 pub use permuted::{correlation_ordering, permuted_cat_block};
@@ -29,7 +33,7 @@ pub use recipe::{
     TransformRecipe,
 };
 pub use rotation::seed_search_rotation;
-pub use scaling::{smooth_quant_scale, diag_align_scale};
+pub use scaling::{diag_align_scale, smooth_quant_scale};
 pub use transform::Transform;
 
 /// The built-in transform families — the closed enum the experiment grid

@@ -39,7 +39,7 @@ pub fn correlation_ordering(sigma_x: &Mat, sigma_w: &Mat) -> Vec<usize> {
 }
 
 /// Dense permutation matrix `P` with `(Px)_i = x_{perm[i]}`.
-fn permutation_matrix(perm: &[usize]) -> Mat {
+pub(super) fn permutation_matrix(perm: &[usize]) -> Mat {
     let d = perm.len();
     let mut p = Mat::zeros(d, d);
     for (i, &src) in perm.iter().enumerate() {

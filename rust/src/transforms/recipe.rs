@@ -181,6 +181,21 @@ fn builtin_recipes() -> HashMap<String, RecipeRef> {
                 )
             },
         }),
+        Arc::new(FnRecipe {
+            name: "wush-adaptive".into(),
+            f: |ctx: &RecipeCtx| {
+                super::wush_adaptive(
+                    ctx.sigma_x,
+                    ctx.sigma_w,
+                    ctx.cat_block.min(ctx.dim()),
+                    ctx.seed,
+                )
+            },
+        }),
+        Arc::new(FnRecipe {
+            name: "fpt-merged".into(),
+            f: |ctx: &RecipeCtx| super::fpt_merged(ctx.sigma_x, ctx.sigma_w),
+        }),
     ];
     builtins.into_iter().map(|r| (r.name().to_string(), r)).collect()
 }
@@ -212,11 +227,13 @@ mod tests {
             "kronecker",
             "cat-optimal",
             "cat-block-permuted",
+            "wush-adaptive",
+            "fpt-merged",
         ] {
             assert!(has_recipe(name), "missing builtin {name}");
         }
         let names = recipe_names();
-        assert!(names.len() >= 9);
+        assert!(names.len() >= 11);
         assert!(names.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
     }
 
